@@ -1,0 +1,142 @@
+//! END-TO-END DRIVER: the full system on a real (synthetic) workload,
+//! proving all three layers compose:
+//!
+//!   datasets → cache-line traces → STREAMING coordinator (8 chip
+//!   workers, bounded queues = backpressure) → channel energy model →
+//!   receiver-side reconstruction → PJRT workloads (L2 JAX graphs with
+//!   L1 Pallas kernels inside) → quality metrics,
+//!
+//! for the paper's headline comparison: ZAC-DEST vs BD-Coder on all
+//! five workloads, plus a short training run on reconstructed data with
+//! the loss curve logged. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use zac_dest::coordinator::Pipeline;
+use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::runtime::Runtime;
+use zac_dest::trace::bytes_to_chip_words;
+use zac_dest::util::table::{f, pct, TextTable};
+use zac_dest::workloads::{cnn, Kind, Suite, SuiteBudget};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let seed = 42;
+    let budget = match std::env::var("ZAC_BUDGET").as_deref() {
+        Ok("full") => SuiteBudget::full(),
+        _ => SuiteBudget::quick(),
+    };
+
+    // ---- Phase 1: build + train everything on clean data (L2/L1 via PJRT).
+    eprintln!("[e2e] loading PJRT runtime + training workloads (clean data) ...");
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let suite = Suite::build(rt, seed, budget)?;
+    eprintln!(
+        "[e2e] suite ready in {:.1}s (resnet clean acc {:.3}, svm {:.3}, eigen {:.3})",
+        t0.elapsed().as_secs_f64(),
+        suite.resnet_clean_acc,
+        suite.svm_clean_acc,
+        suite.eigen_clean_acc
+    );
+
+    // ---- Phase 2: stream the test-image trace through the coordinator
+    // (demonstrates the bounded-queue streaming path explicitly).
+    let cfg = ZacConfig::zac(80);
+    let mut bytes = Vec::new();
+    for img in &suite.test_images {
+        bytes.extend_from_slice(&img.data);
+    }
+    let lines = bytes_to_chip_words(&bytes);
+    let ts = std::time::Instant::now();
+    let mut pipe = Pipeline::new(&cfg, 64);
+    for l in &lines {
+        pipe.push_line(*l, true);
+    }
+    let streamed = pipe.finish(bytes.len());
+    eprintln!(
+        "[e2e] streamed {} cache lines through 8 chip workers in {:.1} ms \
+         ({:.1} MB/s, termination 1s {})",
+        lines.len(),
+        ts.elapsed().as_secs_f64() * 1e3,
+        bytes.len() as f64 / ts.elapsed().as_secs_f64() / 1e6,
+        streamed.counts.termination_ones
+    );
+
+    // ---- Phase 3: the headline table — ZAC-DEST L80 vs BDE across all
+    // five workloads: energy savings + output quality.
+    println!("\n=== ZAC-DEST (L80) vs BD-Coder: energy & quality, all workloads ===\n");
+    let mut t = TextTable::new(&[
+        "workload",
+        "term savings",
+        "switch savings",
+        "quality",
+        "orig metric",
+        "approx metric",
+        "unencoded",
+    ]);
+    let mut mean_term = 0.0;
+    let mut mean_sw = 0.0;
+    let mut mean_q = 0.0;
+    for kind in Kind::all() {
+        let r = suite.eval(&cfg, kind)?;
+        // BDE baseline on the same trace for the savings columns.
+        let trace: Vec<u8> = match kind {
+            Kind::ImageNet | Kind::ResNet => bytes.clone(),
+            Kind::Quant => suite.kodak.iter().flat_map(|i| i.data.clone()).collect(),
+            Kind::Eigen => suite.faces_test.iter().flat_map(|i| i.data.clone()).collect(),
+            Kind::Svm => suite.fmnist_test.iter().flat_map(|i| i.data.clone()).collect(),
+        };
+        let base =
+            zac_dest::coordinator::simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &trace, true);
+        let term = r.run.counts.termination_savings_vs(&base.counts);
+        let sw = r.run.counts.switching_savings_vs(&base.counts);
+        mean_term += term / 5.0;
+        mean_sw += sw / 5.0;
+        mean_q += r.quality / 5.0;
+        t.row(vec![
+            kind.label().into(),
+            pct(term),
+            pct(sw),
+            f(r.quality, 3),
+            f(r.original_metric, 3),
+            f(r.approx_metric, 3),
+            pct(100.0 * r.run.stats.unencoded_fraction()),
+        ]);
+    }
+    t.row(vec![
+        "MEAN".into(),
+        pct(mean_term),
+        pct(mean_sw),
+        f(mean_q, 3),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+
+    // ---- Phase 4: short training run ON RECONSTRUCTED data, logging
+    // the loss curve (the paper's train-with-ZAC-DEST result).
+    eprintln!("[e2e] training on ZAC-DEST-reconstructed images, logging loss ...");
+    let (recon_train, _) = suite.reconstruct_images(&cfg, &suite.train_images);
+    let steps = suite.budget.train_steps;
+    let (params, losses) = cnn::train(&suite.rt, &recon_train, steps, suite.budget.lr, seed ^ 0xE2E)?;
+    println!("loss curve (train on reconstructed, {} steps):", losses.len());
+    for (i, chunk) in losses.chunks(8.max(losses.len() / 8)).enumerate() {
+        let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  steps {:>3}..{:>3}  mean loss {:.4}", i * chunk.len(), i * chunk.len() + chunk.len(), mean);
+    }
+    let (recon_test, _) = suite.reconstruct_images(&cfg, &suite.test_images);
+    let acc = cnn::accuracy(&suite.rt, &params, &recon_test)?;
+    println!(
+        "\ntrained-on-reconstructed accuracy on reconstructed test: {:.3} \
+         (clean-trained on clean: {:.3})",
+        acc, suite.resnet_clean_acc
+    );
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "training on reconstructed data must reduce the loss"
+    );
+
+    eprintln!("\n[e2e] total wall time {:.1}s — all layers composed OK", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Energy sweep: every (similarity limit × truncation × tolerance) knob
+//! combination over all five workload traces, as CSV on stdout — the
+//! data behind the paper's Fig. 14/15/16.
+//!
+//! Run: `cargo run --release --example energy_sweep > sweep.csv`
+
+use zac_dest::coordinator::simulate_bytes;
+use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::figures::FigureCtx;
+use zac_dest::workloads::{Kind, SuiteBudget};
+
+fn main() {
+    let ctx = FigureCtx::new(42, SuiteBudget::quick());
+    println!("workload,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac");
+    for kind in Kind::all() {
+        let bytes = ctx.workload_trace(kind);
+        let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+        for limit in [90u32, 80, 75, 70] {
+            for trunc in [0u32, 1, 2] {
+                for tol in [0u32, 1, 2] {
+                    let cfg = ZacConfig::zac_full(limit, trunc, tol);
+                    let out = simulate_bytes(&cfg, &bytes, true);
+                    println!(
+                        "{},{},{},{},{:.2},{:.2},{:.4},{:.4}",
+                        kind.label(),
+                        limit,
+                        trunc * 8,
+                        tol * 8,
+                        out.counts.termination_savings_vs(&base.counts),
+                        out.counts.switching_savings_vs(&base.counts),
+                        out.stats.fraction(zac_dest::encoding::Outcome::OheSkip),
+                        out.stats.unencoded_fraction(),
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! ImageNet-workload inference under approximation: train the CNN zoo
+//! on clean data, then serve inference over images reconstructed from
+//! ZAC-DEST channel traffic at each similarity limit (paper Fig. 11/13).
+//!
+//! Run: `make artifacts && cargo run --release --example imagenet_inference`
+
+use zac_dest::encoding::ZacConfig;
+use zac_dest::runtime::Runtime;
+use zac_dest::workloads::{Kind, Suite, SuiteBudget};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Runtime::default_dir())?;
+    eprintln!("training the CNN zoo on clean data ...");
+    let suite = Suite::build(rt, 42, SuiteBudget::quick())?;
+    println!(
+        "zoo of {} models, clean top-1: {:?}",
+        suite.zoo.len(),
+        suite
+            .zoo_clean_acc
+            .iter()
+            .map(|a| format!("{a:.3}"))
+            .collect::<Vec<_>>()
+    );
+    println!("\nlimit  quality  approx-top1  term-1s  ohe-skip%");
+    for limit in [90u32, 80, 75, 70] {
+        let r = suite.eval(&ZacConfig::zac(limit), Kind::ImageNet)?;
+        println!(
+            "L{limit:<4}  {:>6.3}  {:>10.3}  {:>8}  {:>7.1}",
+            r.quality,
+            r.approx_metric,
+            r.run.counts.termination_ones,
+            100.0 * r.run.stats.fraction(zac_dest::encoding::Outcome::OheSkip)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: encode a data stream with ZAC-DEST, compare the energy
+//! against the exact BD-Coder baseline, and inspect the approximation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use zac_dest::coordinator::simulate_bytes;
+use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::util::rng::Rng;
+
+fn main() {
+    // An image-like byte stream (slowly varying values — the data
+    // similarity ZAC-DEST exploits).
+    let mut r = Rng::new(1);
+    let mut v = 128i32;
+    let bytes: Vec<u8> = (0..256 * 1024)
+        .map(|_| {
+            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+            v as u8
+        })
+        .collect();
+
+    // Exact baseline: the paper's modified BD-Coder.
+    let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+    assert_eq!(bde.bytes, bytes, "exact schemes are lossless");
+
+    // ZAC-DEST at an 80% similarity limit: approximate, much cheaper.
+    let cfg = ZacConfig::zac(80);
+    let zac = simulate_bytes(&cfg, &bytes, true);
+
+    println!("stream: {} bytes ({} cache lines)\n", bytes.len(), bytes.len() / 64);
+    println!(
+        "BDE  (exact)  : termination 1s {:>9}  switching {:>9}",
+        bde.counts.termination_ones, bde.counts.switching_transitions
+    );
+    println!(
+        "ZAC-DEST L80  : termination 1s {:>9}  switching {:>9}",
+        zac.counts.termination_ones, zac.counts.switching_transitions
+    );
+    println!(
+        "savings vs BDE: termination {:.1}%  switching {:.1}%",
+        zac.counts.termination_savings_vs(&bde.counts),
+        zac.counts.switching_savings_vs(&bde.counts)
+    );
+
+    // The reconstruction is approximate, but bounded by the similarity
+    // envelope: every 64-bit *chip word* differs by < 13 bits (80% of
+    // 64). Note the envelope is per chip word — the channel interleaves
+    // bytes across chips, so we must compare in chip-word space.
+    let thr = cfg.dissimilar_threshold();
+    let orig_words = zac_dest::trace::bytes_to_chip_words(&bytes);
+    let recon_words = zac_dest::trace::bytes_to_chip_words(&zac.bytes);
+    let max_diff = orig_words
+        .iter()
+        .zip(&recon_words)
+        .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()))
+        .max()
+        .unwrap();
+    println!("\nmax per-word approximation: {max_diff} bits (envelope: < {thr})");
+    assert!(max_diff < thr);
+
+    // Per-outcome breakdown (cf. paper Fig. 22).
+    println!("\nencoding outcomes:");
+    for o in zac_dest::encoding::Outcome::all() {
+        println!("  {:<10} {:>6.1}%", o.label(), 100.0 * zac.stats.fraction(o));
+    }
+}

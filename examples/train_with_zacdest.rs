@@ -1,0 +1,37 @@
+//! The paper's headline training result (Fig. 18): training the model
+//! *on reconstructed images* recovers most of the quality lost to
+//! aggressive approximation, so ZAC-DEST can save energy during both
+//! training and inference.
+//!
+//! Run: `make artifacts && cargo run --release --example train_with_zacdest`
+
+use zac_dest::encoding::ZacConfig;
+use zac_dest::runtime::Runtime;
+use zac_dest::workloads::{Kind, Suite, SuiteBudget};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(Runtime::default_dir())?;
+    eprintln!("training the clean-baseline ResNet ...");
+    let suite = Suite::build(rt, 42, SuiteBudget::quick())?;
+    println!("clean test accuracy: {:.3}\n", suite.resnet_clean_acc);
+    println!("config      trained-on-clean  trained-on-recon  improvement");
+    for (limit, trunc) in [(80u32, 0u32), (70, 0), (70, 2)] {
+        let cfg = ZacConfig::zac_full(limit, trunc, 0);
+        let base = suite.eval(&cfg, Kind::ResNet)?;
+        eprintln!("retraining on reconstructed images (L{limit} T{}) ...", trunc * 8);
+        let retrained = suite.resnet_trained_on_recon(&cfg)?;
+        let imp = if base.quality > 0.0 {
+            retrained.quality / base.quality
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "L{limit} T{:<3}   {:>16.3}  {:>16.3}  {:>10.2}x",
+            trunc * 8,
+            base.quality,
+            retrained.quality,
+            imp
+        );
+    }
+    Ok(())
+}

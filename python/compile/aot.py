@@ -1,0 +1,163 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + a manifest.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is lowered with ``return_tuple=True`` so the rust side
+always unwraps a tuple, and ``artifacts/manifest.json`` records the exact
+positional argument shapes/dtypes plus output shapes so the rust runtime
+can type-check literals before execution.
+
+Usage:  python -m compile.aot --out ../artifacts [--only name[,name...]]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _cnn_param_specs():
+    return [spec(s) for _, s in M.CNN_PARAM_SHAPES]
+
+
+# name -> (fn, [arg specs], [arg names])
+ARTIFACTS = {
+    "cnn_infer": (
+        M.cnn_infer,
+        [spec((M.BATCH, M.IMG, M.IMG, 3))] + _cnn_param_specs(),
+        ["images"] + [n for n, _ in M.CNN_PARAM_SHAPES],
+    ),
+    "cnn_train_step": (
+        M.cnn_train_step,
+        [spec((M.BATCH, M.IMG, M.IMG, 3)), spec((M.BATCH,), I32), spec((1,))]
+        + _cnn_param_specs(),
+        ["images", "labels", "lr"] + [n for n, _ in M.CNN_PARAM_SHAPES],
+    ),
+    "kmeans_step": (
+        M.kmeans_step,
+        [spec((M.KMEANS_N, M.KMEANS_D)), spec((M.KMEANS_K, M.KMEANS_D))],
+        ["x", "c"],
+    ),
+    "kmeans_assign": (
+        M.kmeans_assign_model,
+        [spec((M.KMEANS_N, M.KMEANS_D)), spec((M.KMEANS_K, M.KMEANS_D))],
+        ["x", "c"],
+    ),
+    "pca_cov": (
+        M.pca_cov,
+        [spec((M.FACE_N, M.FACE_D))],
+        ["x"],
+    ),
+    "pca_power_iter": (
+        M.pca_power_iter,
+        [spec((M.FACE_D, M.FACE_D)), spec((M.FACE_D, M.PCA_K))],
+        ["cov", "v"],
+    ),
+    "pca_project": (
+        M.pca_project,
+        [spec((M.FACE_N, M.FACE_D)), spec((M.FACE_D,)), spec((M.FACE_D, M.PCA_K))],
+        ["x", "mean", "v"],
+    ),
+    "svm_train_step": (
+        M.svm_train_step,
+        [spec((M.SVM_D, M.SVM_C)), spec((M.SVM_B, M.SVM_D)), spec((M.SVM_B,), I32), spec((1,))],
+        ["w", "x", "y", "lr"],
+    ),
+    "svm_infer": (
+        M.svm_infer,
+        [spec((M.SVM_D, M.SVM_C)), spec((M.SVM_B, M.SVM_D))],
+        ["w", "x"],
+    ),
+    "trace_stats": (
+        M.trace_stats,
+        [spec((M.TRACE_N, 2), I32)],
+        ["words"],
+    ),
+    "trace_screen": (
+        M.trace_screen,
+        [spec((M.TRACE_N, 2), I32), spec((M.TABLE_T, 2), I32)],
+        ["words", "table"],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def build(out_dir: str, only: set[str] | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": {}}
+    for name, (fn, specs, arg_names) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "args": [
+                {"name": an, "shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for an, s in zip(arg_names, specs)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)} for o in outs
+            ],
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    # Merge with a pre-existing manifest when --only rebuilt a subset.
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  manifest -> {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact subset")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    build(args.out, only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run under ``interpret=True`` — the CPU PJRT client cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path and
+real-TPU performance is estimated analytically (see DESIGN.md §Perf).
+"""
+
+from .matmul import matmul  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
+from .kmeans import kmeans_assign  # noqa: F401
+from .popcount import popcount64, similarity_screen  # noqa: F401

@@ -1,0 +1,43 @@
+"""SAME-padding stride-1 conv2d as im2col + the Pallas matmul kernel.
+
+Hardware adaptation: on GPU this conv would be a warp-tiled implicit-GEMM;
+on TPU the idiomatic shape is explicit im2col (patch extraction is a pure
+data-movement op XLA fuses into the surrounding layout changes) feeding the
+128x128 MXU through the tiled Pallas matmul. The patch extraction is plain
+differentiable jnp, so autodiff flows through it and into
+``matmul``'s custom VJP.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """(N, H, W, C) -> (N*H*W, KH*KW*C) patch matrix, SAME padding."""
+    n, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(xp[:, di : di + h, dj : dj + w, :])
+    # (N, H, W, KH*KW*C) with the same (di, dj, c) ordering as a HWIO
+    # weight reshape, so patches @ w.reshape(-1, Cout) is exactly the conv.
+    patches = jnp.concatenate(cols, axis=-1)
+    return patches.reshape(n * h * w, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """NHWC conv, SAME padding, stride 1, via the Pallas matmul.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout) -> (N, H, W, Cout)
+    """
+    n, h, wd, _ = x.shape
+    kh, kw, _, cout = w.shape
+    patches = _im2col(x, kh, kw)
+    out = matmul(patches, w.reshape(-1, cout))
+    return out.reshape(n, h, wd, cout)

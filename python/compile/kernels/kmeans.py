@@ -1,0 +1,49 @@
+"""Pallas K-Means assignment kernel (the Quant workload hot-spot).
+
+The grid tiles the point set; each step stages a (bm, D) block of points
+plus the full (K, D) centroid table into VMEM (K=64, D=3 for colour
+quantization — the centroid table is tiny and stays resident), computes
+the (bm, K) squared-distance tile via the ||x||² - 2x·c + ||c||² expansion
+(one MXU matmul + VPU rank-1 updates), and reduces with an argmin along
+the centroid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...]  # (bm, D)
+    c = c_ref[...]  # (K, D)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32) + c2
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def kmeans_assign(x: jax.Array, c: jax.Array, bm: int = 4096) -> jax.Array:
+    """Nearest-centroid assignment. x: (N, D) f32, c: (K, D) f32 -> (N,) i32."""
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2
+    bm = min(bm, n)
+    pad = (-n) % bm
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    out = pl.pallas_call(
+        _assign_kernel,
+        grid=((n + pad) // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=True,
+    )(xp, c)
+    return out[:n]

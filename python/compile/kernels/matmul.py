@@ -1,0 +1,100 @@
+"""Tiled Pallas matmul — the MXU-shaped compute hot-spot of every L2 model.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks (M/bm,
+N/bn) output tiles; BlockSpec stages an (bm, K) x-stripe and a (K, bn)
+y-stripe HBM→VMEM per step and the body is a single f32-accumulating
+``jnp.dot`` that the TPU backend maps onto the 128x128 MXU systolic array.
+Block sizes default to 128 so a tile pair + accumulator fits comfortably
+in the ~16 MiB VMEM budget for every K used by the models in this repo
+(worst case K=2048: (128*2048 + 2048*128 + 128*128)*4 B ≈ 4.3 MiB).
+
+Autodiff: ``pallas_call`` has no automatic VJP, so ``matmul`` carries a
+``jax.custom_vjp`` whose backward pass is two more Pallas matmuls (dx =
+g @ y^T, dy = x^T @ g) — the training-step artifacts differentiate
+straight through the kernel.
+
+Runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # One (bm, bn) output tile: full-K contraction, f32 accumulation on
+    # the MXU. K is block-resident (see module docstring for the VMEM
+    # budget argument).
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# Default block sizes. On a real TPU these would be 128 (one MXU tile,
+# VMEM-resident — see the module docstring); under interpret=True each
+# grid step costs ~0.6 ms of interpreter overhead on CPU, so the default
+# M-block is large to keep the grid small (measured 216x on the conv1
+# matmul: 151 ms at bm=128 -> 0.7 ms at full-M blocks; EXPERIMENTS.md
+# §Perf). The BlockSpec structure is identical either way.
+BM_DEFAULT = 4096
+BN_DEFAULT = 128
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_raw(
+    x: jax.Array, y: jax.Array, bm: int = BM_DEFAULT, bn: int = BN_DEFAULT
+) -> jax.Array:
+    """Forward tiled matmul. Pads M/N up to the block grid, slices back."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    yp = jnp.pad(y, ((0, 0), (0, np_ - n))) if np_ != n else y
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y`` through the Pallas kernel, differentiable.
+
+    x: (M, K), y: (K, N) -> (M, N); f32 in, f32 accumulate.
+    """
+    return _matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dx = g @ y^T, dy = x^T @ g — both via the same Pallas kernel so the
+    # backward pass exercises identical MXU tiles.
+    dx = _matmul_raw(g, y.T)
+    dy = _matmul_raw(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,85 @@
+"""Pallas popcount / CAM-similarity-screen kernels.
+
+These are the *trace analytics* hot-spots: bulk hamming-weight of packed
+64-bit channel words (termination-energy estimation) and the batched
+BD-Coder CAM search (min hamming distance + argmin index against a table).
+64-bit words are carried as (N, 2) int32 (lo, hi) because PJRT-CPU
+literals and the TPU VPU are 32-bit-lane friendly; all bit math runs in
+uint32 with the classic SWAR popcount (shift-mask-multiply), which maps
+onto VPU lane ops — no per-lane scalar loops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcnt_u32(v):
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def _popcount_kernel(w_ref, o_ref):
+    v = w_ref[...].astype(jnp.uint32)  # (bm, 2)
+    p = _popcnt_u32(v).astype(jnp.int32)
+    o_ref[...] = jnp.sum(p, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def popcount64(words: jax.Array, bm: int = 8192) -> jax.Array:
+    """Per-word hamming weight. words: (N, 2) i32 -> (N,) i32."""
+    n = words.shape[0]
+    bm = min(bm, n)
+    pad = (-n) % bm
+    wp = jnp.pad(words, ((0, pad), (0, 0))) if pad else words
+    out = pl.pallas_call(
+        _popcount_kernel,
+        grid=((n + pad) // bm,),
+        in_specs=[pl.BlockSpec((bm, 2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=True,
+    )(wp)
+    return out[:n]
+
+
+def _screen_kernel(w_ref, t_ref, o_ref):
+    x = w_ref[...].astype(jnp.uint32)[:, None, :]  # (bm, 1, 2)
+    t = t_ref[...].astype(jnp.uint32)[None, :, :]  # (1, T, 2)
+    p = _popcnt_u32(jnp.bitwise_xor(x, t)).astype(jnp.int32)
+    d = jnp.sum(p, axis=2)  # (bm, T)
+    o_ref[...] = jnp.stack(
+        [jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)], axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def similarity_screen(words: jax.Array, table: jax.Array, bm: int = 2048) -> jax.Array:
+    """Batched CAM search: for each word the (min hamming distance, index)
+    against every table entry. Ties resolve to the lowest index.
+
+    words: (N, 2) i32, table: (T, 2) i32 -> (N, 2) i32 [min_dist, idx]
+    """
+    n = words.shape[0]
+    t = table.shape[0]
+    bm = min(bm, n)
+    pad = (-n) % bm
+    wp = jnp.pad(words, ((0, pad), (0, 0))) if pad else words
+    out = pl.pallas_call(
+        _screen_kernel,
+        grid=((n + pad) // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 2), lambda i: (i, 0)),
+            pl.BlockSpec((t, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, 2), jnp.int32),
+        interpret=True,
+    )(wp, table)
+    return out[:n]

@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` / ``jax.lax`` ops only. The pytest suite
+(``python/tests/``) sweeps shapes and dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))`` — this is the core correctness
+signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference matmul with f32 accumulation, matching kernels.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference NHWC conv with SAME padding, stride 1.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout) -> (N, H, W, Cout)
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def kmeans_assign_ref(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Reference K-Means assignment: nearest centroid index per row.
+
+    x: (N, D), c: (K, D) -> (N,) int32
+    """
+    # Squared euclidean distance via the expansion ||x||^2 - 2 x.c + ||c||^2.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (N, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    d = x2 - 2.0 * (x @ c.T) + c2  # (N, K)
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def popcount_ref(words: jax.Array) -> jax.Array:
+    """Reference per-word hamming weight for packed 64-bit words.
+
+    words: (N, 2) int32 — low/high halves of a 64-bit word -> (N,) int32.
+    """
+    v = words.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v * jnp.uint32(0x01010101)) >> 24
+    return jnp.sum(v.astype(jnp.int32), axis=1)
+
+
+def similarity_screen_ref(words: jax.Array, table: jax.Array) -> jax.Array:
+    """Reference most-similar-entry screen.
+
+    For each packed 64-bit word, the minimum hamming distance to any table
+    entry and the index achieving it (the BD-Coder CAM search, batched).
+    Ties resolve to the lowest index, matching the rust data table.
+
+    words: (N, 2) int32, table: (T, 2) int32 -> (N, 2) int32 [min_dist, idx]
+    """
+    x = words.astype(jnp.uint32)[:, None, :]  # (N, 1, 2)
+    t = table.astype(jnp.uint32)[None, :, :]  # (1, T, 2)
+    v = jnp.bitwise_xor(x, t)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v * jnp.uint32(0x01010101)) >> 24
+    d = jnp.sum(v.astype(jnp.int32), axis=2)  # (N, T)
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1).astype(jnp.int32)
+    return jnp.stack([mind, idx], axis=1)

@@ -1,0 +1,224 @@
+"""Layer-2 JAX compute graphs for the five ZAC-DEST workloads.
+
+Every graph is a pure function over fixed shapes, lowered once by
+``aot.py`` to HLO text and executed from the rust coordinator via PJRT.
+Anything matmul-shaped routes through the Layer-1 Pallas kernels
+(``kernels.matmul`` / ``kernels.conv2d`` / ...), so the kernels lower into
+the same HLO module as the surrounding model.
+
+Workload → graph map (see DESIGN.md §2):
+  ImageNet / ResNet   → ``cnn_infer`` / ``cnn_train_step`` (residual CNN)
+  Quant (K-Means)     → ``kmeans_step`` / ``kmeans_assign_model``
+  Eigen (PCA faces)   → ``pca_cov`` / ``pca_power_iter`` / ``pca_project``
+  SVM (sparse FMNIST) → ``svm_train_step`` / ``svm_infer``
+  trace analytics     → ``trace_stats`` / ``trace_screen``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, kmeans_assign, matmul, popcount64, similarity_screen
+
+# ---------------------------------------------------------------------------
+# Residual CNN (ImageNet-zoo analogue + ResNet analogue)
+#
+# 32x32x3 u8 images (normalized to [0,1] on the rust side):
+#   conv1 3->16 3x3 relu, maxpool2          -> 16x16x16
+#   res  block: relu(conv 16->16 3x3 + id)  -> 16x16x16, maxpool2 -> 8x8x16
+#   dense 1024 -> NUM_CLASSES
+# ---------------------------------------------------------------------------
+
+NUM_CLASSES = 10
+IMG = 32
+BATCH = 32
+FEAT = (IMG // 4) * (IMG // 4) * 16  # 1024
+
+CNN_PARAM_SHAPES = [
+    ("w1", (3, 3, 3, 16)),
+    ("b1", (16,)),
+    ("w2", (3, 3, 16, 16)),
+    ("b2", (16,)),
+    ("w3", (FEAT, NUM_CLASSES)),
+    ("b3", (NUM_CLASSES,)),
+]
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(images, w1, b1, w2, b2, w3, b3):
+    """images: (B, 32, 32, 3) f32 in [0,1] -> logits (B, NUM_CLASSES)."""
+    x = conv2d(images, w1) + b1
+    x = jax.nn.relu(x)
+    x = _maxpool2(x)  # (B, 16, 16, 16)
+    # Residual block — the "ResNet" structural ingredient the paper's
+    # CIFAR experiments rely on.
+    r = conv2d(x, w2) + b2
+    x = jax.nn.relu(x + r)
+    x = _maxpool2(x)  # (B, 8, 8, 16)
+    x = x.reshape(x.shape[0], -1)  # (B, FEAT)
+    return matmul(x, w3) + b3
+
+
+def cnn_infer(images, w1, b1, w2, b2, w3, b3):
+    logits = cnn_forward(images, w1, b1, w2, b2, w3, b3)
+    return (logits,)
+
+
+def _cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cnn_train_step(images, labels, lr, w1, b1, w2, b2, w3, b3):
+    """One SGD step. labels: (B,) i32, lr: (1,) f32.
+
+    Returns the updated parameters followed by the scalar loss (shaped
+    (1,) so the rust side never deals with rank-0 literals).
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+
+    def loss_fn(ps):
+        return _cross_entropy(cnn_forward(images, *ps), labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = tuple(p - lr[0] * g for p, g in zip(params, grads))
+    return new + (loss[None],)
+
+
+# ---------------------------------------------------------------------------
+# Quant: K-Means colour quantization
+# ---------------------------------------------------------------------------
+
+KMEANS_N = 4096  # pixels per step (one sampled block of an image)
+KMEANS_K = 64
+KMEANS_D = 3
+
+
+def kmeans_step(x, c):
+    """One Lloyd iteration. x: (N, 3) f32, c: (K, 3) f32.
+
+    Returns (new_centroids (K,3), counts (K,) f32, assign (N,) i32).
+    Empty clusters keep their previous centroid.
+    """
+    assign = kmeans_assign(x, c)
+    onehot = jax.nn.one_hot(assign, c.shape[0], dtype=jnp.float32)  # (N, K)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    sums = matmul(onehot.T, x)  # (K, 3)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
+    return new_c, counts, assign
+
+
+def kmeans_assign_model(x, c):
+    return (kmeans_assign(x, c),)
+
+
+# ---------------------------------------------------------------------------
+# Eigen: PCA face matching
+# ---------------------------------------------------------------------------
+
+FACE_D = 24 * 24
+FACE_N = 128
+PCA_K = 16
+
+
+def pca_cov(x):
+    """Mean-center and form the covariance. x: (N, D) f32 -> (cov (D,D), mean (D,))."""
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    cov = matmul(xc.T, xc) / jnp.float32(x.shape[0])
+    return cov, mean
+
+
+def _gram_schmidt(v):
+    """Column-wise modified Gram-Schmidt (no LAPACK custom-calls — the
+    PJRT-CPU 0.5.1 client cannot execute jax's lapack custom_call)."""
+    d, k = v.shape
+
+    def body(i, vv):
+        col = vv[:, i]
+
+        def inner(j, c):
+            prev = vv[:, j]
+            # Only subtract projections for j < i.
+            proj = jnp.where(j < i, jnp.dot(prev, c), 0.0)
+            return c - proj * prev
+
+        col = jax.lax.fori_loop(0, i, inner, col)
+        col = col / jnp.maximum(jnp.linalg.norm(col), 1e-8)
+        return vv.at[:, i].set(col)
+
+    return jax.lax.fori_loop(0, k, body, v)
+
+
+def pca_power_iter(cov, v):
+    """One blocked power-iteration step with re-orthonormalization.
+
+    cov: (D, D) f32, v: (D, K) f32 -> (v' (D, K),)
+    """
+    v = matmul(cov, v)
+    return (_gram_schmidt(v),)
+
+
+def pca_project(x, mean, v):
+    """Project faces into eigenspace. x: (N, D), mean: (D,), v: (D, K)."""
+    return (matmul(x - mean, v),)
+
+
+# ---------------------------------------------------------------------------
+# SVM: multi-class linear SVM on sparse u8 images (FMNIST analogue)
+# ---------------------------------------------------------------------------
+
+SVM_D = 28 * 28
+SVM_C = 10
+SVM_B = 64
+
+
+def svm_train_step(w, x, y, lr):
+    """One subgradient step of multiclass (Crammer-Singer) hinge loss.
+
+    w: (D, C) f32, x: (B, D) f32, y: (B,) i32, lr: (1,) f32
+    -> (w' (D, C), loss (1,))
+    """
+
+    def loss_fn(wm):
+        scores = matmul(x, wm)  # (B, C)
+        correct = jnp.take_along_axis(scores, y[:, None], axis=1)  # (B, 1)
+        margins = jnp.maximum(0.0, scores - correct + 1.0)
+        # The correct class contributes margin exactly 1; subtract it.
+        loss = jnp.mean(jnp.sum(margins, axis=1) - 1.0)
+        return loss + 1e-4 * jnp.sum(wm * wm)
+
+    loss, g = jax.value_and_grad(loss_fn)(w)
+    return w - lr[0] * g, loss[None]
+
+
+def svm_infer(w, x):
+    scores = matmul(x, w)
+    return (jnp.argmax(scores, axis=1).astype(jnp.int32),)
+
+
+# ---------------------------------------------------------------------------
+# Trace analytics: bulk hamming / CAM screen over packed channel words
+# ---------------------------------------------------------------------------
+
+TRACE_N = 8192
+TABLE_T = 64
+
+
+def trace_stats(words):
+    """words: (N, 2) i32 -> (per-word hamming (N,), total (1,))."""
+    h = popcount64(words)
+    return h, jnp.sum(h)[None]
+
+
+def trace_screen(words, table):
+    """Batched CAM search. words: (N, 2) i32, table: (T, 2) i32 ->
+    ((N, 2) i32 [min_dist, idx],)."""
+    return (similarity_screen(words, table),)

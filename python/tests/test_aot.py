@@ -1,0 +1,61 @@
+"""AOT pipeline tests: lowering determinism + manifest consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_all_artifacts_lower(tmp_path):
+    aot.build(str(tmp_path))
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(manifest["artifacts"]) == set(aot.ARTIFACTS)
+    for name, meta in manifest["artifacts"].items():
+        p = tmp_path / meta["file"]
+        assert p.exists(), name
+        text = p.read_text()
+        assert text.startswith("HloModule"), name
+        assert len(meta["args"]) == len(aot.ARTIFACTS[name][1])
+
+
+def test_lowering_is_deterministic(tmp_path):
+    a, b = tmp_path / "a", tmp_path / "b"
+    aot.build(str(a), only={"trace_stats"})
+    aot.build(str(b), only={"trace_stats"})
+    ma = json.loads((a / "manifest.json").read_text())
+    mb = json.loads((b / "manifest.json").read_text())
+    assert (
+        ma["artifacts"]["trace_stats"]["sha256"]
+        == mb["artifacts"]["trace_stats"]["sha256"]
+    )
+
+
+def test_manifest_shapes_match_model_constants(tmp_path):
+    aot.build(str(tmp_path), only={"cnn_train_step"})
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    args = m["artifacts"]["cnn_train_step"]["args"]
+    assert args[0]["shape"] == [M.BATCH, M.IMG, M.IMG, 3]
+    assert args[1] == {"name": "labels", "shape": [M.BATCH], "dtype": "i32"}
+    outs = m["artifacts"]["cnn_train_step"]["outputs"]
+    assert outs[-1]["shape"] == [1]  # loss
+    # params round-trip shapes
+    for (name, shape), a in zip(M.CNN_PARAM_SHAPES, args[3:]):
+        assert a["name"] == name and a["shape"] == list(shape)
+
+
+def test_hlo_has_no_serialized_proto_path(tmp_path):
+    # Guard: we must emit text, never the 64-bit-id serialized proto that
+    # xla_extension 0.5.1 rejects.
+    aot.build(str(tmp_path), only={"svm_infer"})
+    text = (tmp_path / "svm_infer.hlo.txt").read_text()
+    assert "HloModule" in text.splitlines()[0]
+
+
+def test_only_subset_merges_manifest(tmp_path):
+    aot.build(str(tmp_path), only={"svm_infer"})
+    aot.build(str(tmp_path), only={"trace_stats"})
+    m = json.loads((tmp_path / "manifest.json").read_text())
+    assert {"svm_infer", "trace_stats"} <= set(m["artifacts"])

@@ -1,0 +1,174 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is the core correctness signal for Layer 1 (kernels run interpret=True).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d,
+    kmeans_assign,
+    matmul,
+    popcount64,
+    similarity_screen,
+)
+from compile.kernels import ref
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def f32(rng, *shape):
+    return jnp.array(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = f32(rng, m, k), f32(rng, k, n)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SET)
+@given(
+    m=st.integers(2, 64),
+    k=st.integers(2, 48),
+    n=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_vjp_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = f32(rng, m, k), f32(rng, k, n)
+    gx, gy = jax.grad(lambda a, b: jnp.sum(jnp.sin(matmul(a, b))), argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(lambda a, b: jnp.sum(jnp.sin(a @ b)), argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_block_boundary_shapes():
+    # Exactly at / just off the 128 tile boundary.
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 128, 128), (129, 128, 127), (127, 64, 129), (1, 1, 1)]:
+        x, y = f32(rng, m, k), f32(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(1)
+    x = f32(rng, 33, 33)
+    np.testing.assert_allclose(matmul(x, jnp.eye(33)), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zeros():
+    z = jnp.zeros((17, 5), jnp.float32)
+    y = jnp.ones((5, 9), jnp.float32)
+    assert float(jnp.max(jnp.abs(matmul(z, y)))) == 0.0
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 4),
+    hw=st.integers(3, 16),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    kk=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, hw, cin, cout, kk, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng, n, hw, hw, cin)
+    w = f32(rng, kk, kk, cin, cout)
+    np.testing.assert_allclose(
+        conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_conv2d_grad_flows():
+    rng = np.random.default_rng(2)
+    x = f32(rng, 2, 8, 8, 3)
+    w = f32(rng, 3, 3, 3, 4)
+    g = jax.grad(lambda ww: jnp.sum(conv2d(x, ww) ** 2))(w)
+    gr = jax.grad(lambda ww: jnp.sum(ref.conv2d_ref(x, ww) ** 2))(w)
+    np.testing.assert_allclose(g, gr, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- kmeans
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 600),
+    k=st.integers(1, 64),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x, c = f32(rng, n, d), f32(rng, k, d)
+    np.testing.assert_array_equal(kmeans_assign(x, c), ref.kmeans_assign_ref(x, c))
+
+
+def test_kmeans_assign_exact_hits():
+    # Points equal to centroids must map to themselves.
+    c = jnp.array(np.random.default_rng(3).normal(size=(16, 3)).astype(np.float32))
+    assign = kmeans_assign(c, c)
+    np.testing.assert_array_equal(np.asarray(assign), np.arange(16))
+
+
+# ---------------------------------------------------------------- popcount
+
+
+@settings(**SET)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31 - 1))
+def test_popcount_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.array(rng.integers(-(2**31), 2**31, size=(n, 2)).astype(np.int32))
+    np.testing.assert_array_equal(popcount64(w), ref.popcount_ref(w))
+
+
+def test_popcount_known_values():
+    w = jnp.array([[0, 0], [-1, -1], [1, 0], [0, 1]], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(popcount64(w)), [0, 64, 1, 1])
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 512),
+    t=st.sampled_from([1, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_similarity_screen_matches_ref(n, t, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.array(rng.integers(-(2**31), 2**31, size=(n, 2)).astype(np.int32))
+    tab = jnp.array(rng.integers(-(2**31), 2**31, size=(t, 2)).astype(np.int32))
+    np.testing.assert_array_equal(
+        similarity_screen(w, tab), ref.similarity_screen_ref(w, tab)
+    )
+
+
+def test_similarity_screen_exact_match_is_zero():
+    rng = np.random.default_rng(4)
+    tab = jnp.array(rng.integers(-(2**31), 2**31, size=(64, 2)).astype(np.int32))
+    out = np.asarray(similarity_screen(tab, tab))
+    np.testing.assert_array_equal(out[:, 0], np.zeros(64))
+    np.testing.assert_array_equal(out[:, 1], np.arange(64))

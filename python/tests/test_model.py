@@ -1,0 +1,141 @@
+"""L2 semantic tests: shapes, learning behaviour, numerical sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
+
+
+def _init_cnn(rng):
+    ps = []
+    for name, shape in M.CNN_PARAM_SHAPES:
+        if name.startswith("w"):
+            fan_in = int(np.prod(shape[:-1]))
+            ps.append(
+                jnp.array(
+                    (rng.normal(size=shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+                )
+            )
+        else:
+            ps.append(jnp.zeros(shape, jnp.float32))
+    return ps
+
+
+def test_cnn_infer_shape(rng):
+    ps = _init_cnn(rng)
+    imgs = jnp.array(rng.random((M.BATCH, M.IMG, M.IMG, 3)).astype(np.float32))
+    (logits,) = M.cnn_infer(imgs, *ps)
+    assert logits.shape == (M.BATCH, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_cnn_train_step_reduces_loss(rng):
+    ps = _init_cnn(rng)
+    imgs = jnp.array(rng.random((M.BATCH, M.IMG, M.IMG, 3)).astype(np.float32))
+    labels = jnp.array(rng.integers(0, M.NUM_CLASSES, M.BATCH).astype(np.int32))
+    lr = jnp.array([0.05], jnp.float32)
+    losses = []
+    for _ in range(8):
+        *ps, loss = M.cnn_train_step(imgs, labels, lr, *ps)
+        losses.append(float(loss[0]))
+    # Overfitting a single fixed batch must reduce the loss.
+    assert losses[-1] < losses[0], losses
+
+
+def test_cnn_train_step_param_shapes(rng):
+    ps = _init_cnn(rng)
+    imgs = jnp.zeros((M.BATCH, M.IMG, M.IMG, 3), jnp.float32)
+    labels = jnp.zeros((M.BATCH,), jnp.int32)
+    out = M.cnn_train_step(imgs, labels, jnp.array([0.1], jnp.float32), *ps)
+    assert len(out) == len(ps) + 1
+    for p, o in zip(ps, out[:-1]):
+        assert p.shape == o.shape and p.dtype == o.dtype
+
+
+def test_kmeans_step_reduces_inertia(rng):
+    x = jnp.array(rng.random((M.KMEANS_N, 3)).astype(np.float32))
+    c = jnp.array(rng.random((M.KMEANS_K, 3)).astype(np.float32))
+
+    def inertia(x, c):
+        d = jnp.sum((x[:, None, :] - c[None, :, :]) ** 2, axis=2)
+        return float(jnp.mean(jnp.min(d, axis=1)))
+
+    i0 = inertia(x, c)
+    for _ in range(3):
+        c, counts, assign = M.kmeans_step(x, c)
+    i1 = inertia(x, c)
+    assert i1 < i0
+    assert int(jnp.sum(counts)) == M.KMEANS_N
+    assert assign.shape == (M.KMEANS_N,)
+
+
+def test_kmeans_step_empty_cluster_keeps_centroid(rng):
+    x = jnp.ones((M.KMEANS_N, 3), jnp.float32)
+    c = jnp.array(rng.random((M.KMEANS_K, 3)).astype(np.float32))
+    far = c.at[5].set(jnp.array([100.0, 100.0, 100.0]))
+    c2, counts, _ = M.kmeans_step(x, far)
+    assert float(counts[5]) == 0.0
+    np.testing.assert_allclose(np.asarray(c2[5]), [100.0, 100.0, 100.0])
+
+
+def test_pca_pipeline_orthonormal_and_projects(rng):
+    x = jnp.array(rng.normal(size=(M.FACE_N, M.FACE_D)).astype(np.float32))
+    cov, mean = M.pca_cov(x)
+    assert cov.shape == (M.FACE_D, M.FACE_D)
+    np.testing.assert_allclose(np.asarray(cov), np.asarray(cov).T, atol=1e-3)
+    v = jnp.array(rng.normal(size=(M.FACE_D, M.PCA_K)).astype(np.float32))
+    for _ in range(5):
+        (v,) = M.pca_power_iter(cov, v)
+    vtv = np.asarray(v.T @ v)
+    np.testing.assert_allclose(vtv, np.eye(M.PCA_K), atol=1e-3)
+    (proj,) = M.pca_project(x, mean, v)
+    assert proj.shape == (M.FACE_N, M.PCA_K)
+
+
+def test_pca_power_iter_finds_dominant_direction(rng):
+    # Covariance with a planted dominant axis.
+    d = M.FACE_D
+    u = np.zeros(d, np.float32)
+    u[7] = 1.0
+    cov = jnp.array(10.0 * np.outer(u, u) + 0.01 * np.eye(d), jnp.float32)
+    v = jnp.array(rng.normal(size=(d, M.PCA_K)).astype(np.float32))
+    for _ in range(20):
+        (v,) = M.pca_power_iter(cov, v)
+    lead = np.abs(np.asarray(v[:, 0]))
+    assert lead[7] > 0.99
+
+
+def test_svm_learns_separable_data(rng):
+    # Two well-separated class blobs embedded in SVM_D dims.
+    w = jnp.zeros((M.SVM_D, M.SVM_C), jnp.float32)
+    xs = rng.normal(size=(M.SVM_B, M.SVM_D)).astype(np.float32) * 0.1
+    ys = rng.integers(0, 2, M.SVM_B).astype(np.int32)
+    xs[:, 0] += np.where(ys == 0, -3.0, 3.0)
+    x, y = jnp.array(xs), jnp.array(ys)
+    lr = jnp.array([0.05], jnp.float32)
+    for _ in range(30):
+        w, loss = M.svm_train_step(w, x, y, lr)
+    (pred,) = M.svm_infer(w, x)
+    acc = float(jnp.mean((pred == y).astype(jnp.float32)))
+    assert acc > 0.95, acc
+
+
+def test_trace_stats_totals(rng):
+    w = jnp.array(rng.integers(-(2**31), 2**31, (M.TRACE_N, 2)).astype(np.int32))
+    h, total = M.trace_stats(w)
+    assert h.shape == (M.TRACE_N,)
+    assert int(total[0]) == int(np.sum(np.asarray(h)))
+
+
+def test_trace_screen_self_table(rng):
+    tab = jnp.array(rng.integers(-(2**31), 2**31, (M.TABLE_T, 2)).astype(np.int32))
+    words = jnp.tile(tab, (M.TRACE_N // M.TABLE_T, 1))
+    (out,) = M.trace_screen(words, tab)
+    assert int(jnp.max(out[:, 0])) == 0

@@ -1,0 +1,46 @@
+//! Encoder throughput per scheme (the cost side of every paper table):
+//! bytes/s through the full 8-chip encode → wire → decode path.
+
+use zac_dest::coordinator::simulate_bytes;
+use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::util::bench::Bencher;
+use zac_dest::util::rng::Rng;
+
+fn image_like(n: usize, seed: u64) -> Vec<u8> {
+    let mut r = Rng::new(seed);
+    let mut v = 128i32;
+    (0..n)
+        .map(|_| {
+            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+            v as u8
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let bytes = image_like(1 << 20, 42);
+    for scheme in Scheme::all() {
+        let cfg = ZacConfig::scheme(scheme);
+        b.bench_with_units(
+            &format!("simulate_1MiB/{}", scheme.label()),
+            bytes.len() as u64,
+            "B",
+            || simulate_bytes(&cfg, &bytes, true),
+        );
+    }
+    for limit in [90u32, 80, 70] {
+        let cfg = ZacConfig::zac(limit);
+        b.bench_with_units(
+            &format!("simulate_1MiB/ZAC_L{limit}"),
+            bytes.len() as u64,
+            "B",
+            || simulate_bytes(&cfg, &bytes, true),
+        );
+    }
+    // Knobbed variant (truncation+tolerance active).
+    let cfg = ZacConfig::zac_full(75, 2, 1);
+    b.bench_with_units("simulate_1MiB/ZAC_L75_T16_O8", bytes.len() as u64, "B", || {
+        simulate_bytes(&cfg, &bytes, true)
+    });
+}

@@ -1,0 +1,19 @@
+//! Figure regeneration benches: time to recompute the energy series
+//! behind each paper table/figure (quality figures need the trained
+//! suite and are exercised by `zac-dest figures`, not here).
+
+use zac_dest::figures::{self, FigureCtx};
+use zac_dest::util::bench::Bencher;
+use zac_dest::workloads::SuiteBudget;
+
+fn main() {
+    let mut b = Bencher::new();
+    let ctx = FigureCtx::new(42, SuiteBudget::quick());
+    for id in ["fig1", "fig2", "fig10", "fig14", "fig19", "fig22", "table1"] {
+        b.bench(&format!("render/{id}"), || figures::render(&ctx, id).unwrap());
+    }
+    // The §VI circuit activity run, at reduced vector count.
+    b.bench("circuits/evaluate_1k_vectors", || {
+        zac_dest::circuits::evaluate(1000, 42)
+    });
+}

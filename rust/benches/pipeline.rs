@@ -1,0 +1,57 @@
+//! End-to-end pipeline benches: streaming (bounded queues) vs batch
+//! coordination, plus the PJRT inference path (requires artifacts).
+
+use zac_dest::coordinator::{simulate_bytes, Pipeline};
+use zac_dest::encoding::ZacConfig;
+use zac_dest::runtime::{pack_words_i32, Runtime, Tensor};
+use zac_dest::trace::bytes_to_chip_words;
+use zac_dest::util::bench::Bencher;
+use zac_dest::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut r = Rng::new(9);
+    let mut v = 100i32;
+    let bytes: Vec<u8> = (0..1 << 19)
+        .map(|_| {
+            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+            v as u8
+        })
+        .collect();
+    let cfg = ZacConfig::zac(80);
+
+    b.bench_with_units("batch_512KiB", bytes.len() as u64, "B", || {
+        simulate_bytes(&cfg, &bytes, true)
+    });
+
+    let lines = bytes_to_chip_words(&bytes);
+    b.bench_with_units("streaming_512KiB_cap64", bytes.len() as u64, "B", || {
+        let mut p = Pipeline::new(&cfg, 64);
+        for l in &lines {
+            p.push_line(*l, true);
+        }
+        p.finish(bytes.len())
+    });
+
+    // PJRT path: bulk trace analytics + CNN inference per batch.
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => {
+            let words: Vec<u64> = (0..8192).map(|_| r.next_u64()).collect();
+            let t = Tensor::i32(pack_words_i32(&words), &[8192, 2]);
+            rt.precompile(&["trace_stats"]).unwrap();
+            b.bench_with_units("pjrt_trace_stats_8192w", 8192, "word", || {
+                rt.exec("trace_stats", &[t.clone()]).unwrap()
+            });
+            if rt.precompile(&["cnn_infer"]).is_ok() {
+                let imgs = Tensor::f32(vec![0.5; 32 * 32 * 32 * 3], &[32, 32, 32, 3]);
+                let params = zac_dest::workloads::cnn::CnnParams::init(1);
+                let mut args = vec![imgs];
+                args.extend(params.0.iter().cloned());
+                b.bench_with_units("pjrt_cnn_infer_batch32", 32, "img", || {
+                    rt.exec("cnn_infer", &args).unwrap()
+                });
+            }
+        }
+        Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e}"),
+    }
+}

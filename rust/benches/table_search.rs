@@ -1,0 +1,48 @@
+//! CAM-search microbenchmark: the L3 hot path (64-entry XOR+popcount
+//! argmin per word per chip). Compares table sizes as in [14]'s table
+//! sweep discussion (§VIII-A).
+
+use zac_dest::channel::ChipChannel;
+use zac_dest::encoding::{make_codec, DataTable, EncodeStats, ZacConfig};
+use zac_dest::util::bench::Bencher;
+use zac_dest::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut r = Rng::new(7);
+    let queries: Vec<u64> = (0..4096).map(|_| r.next_u64()).collect();
+    for size in [16usize, 32, 64] {
+        let mut table = DataTable::new(size);
+        for _ in 0..size {
+            table.push(r.next_u64());
+        }
+        let mut i = 0;
+        b.bench_with_units(&format!("most_similar/table{size}"), 1, "search", || {
+            i = (i + 1) & 4095;
+            table.most_similar(queries[i])
+        });
+    }
+    // Early-exit case: query present in the table.
+    let mut table = DataTable::new(64);
+    for q in queries.iter().take(64) {
+        table.push(*q);
+    }
+    let mut i = 0;
+    b.bench_with_units("most_similar/exact_hit", 1, "search", || {
+        i = (i + 1) & 63;
+        table.most_similar(queries[i])
+    });
+    // Full encode+decode step per word.
+    let cfg = ZacConfig::zac(80);
+    let (mut enc, mut dec) = make_codec(&cfg);
+    let mut chan = ChipChannel::new();
+    let mut stats = EncodeStats::default();
+    let mut i = 0;
+    b.bench_with_units("encode_decode_word/ZAC_L80", 1, "word", || {
+        i = (i + 1) & 4095;
+        let wire = enc.encode(queries[i], true);
+        chan.transmit(&wire);
+        stats.record(&wire, queries[i]);
+        dec.decode(&wire)
+    });
+}

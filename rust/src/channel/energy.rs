@@ -1,0 +1,154 @@
+//! Energy bookkeeping: counts → picojoules, plus the DDR4 breakdown
+//! constants behind Fig. 2.
+
+/// Raw event counts accumulated by the channel model. The paper reports
+/// results as *relative* termination/switching energy, so the counts are
+/// the primary quantities; [`EnergyModel`] converts to pJ when absolute
+/// numbers are wanted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EnergyCounts {
+    /// 1s driven on any line (termination-energy events, POD §III).
+    pub termination_ones: u64,
+    /// 1→0 transitions on any line (switching-energy events).
+    pub switching_transitions: u64,
+    /// Word transfers serialized.
+    pub transfers: u64,
+}
+
+impl EnergyCounts {
+    pub fn merge(&mut self, o: &EnergyCounts) {
+        self.termination_ones += o.termination_ones;
+        self.switching_transitions += o.switching_transitions;
+        self.transfers += o.transfers;
+    }
+
+    /// Percent reduction of `self` relative to a baseline (positive =
+    /// savings), for the termination metric.
+    pub fn termination_savings_vs(&self, base: &EnergyCounts) -> f64 {
+        savings(self.termination_ones, base.termination_ones)
+    }
+
+    /// Same for switching.
+    pub fn switching_savings_vs(&self, base: &EnergyCounts) -> f64 {
+        savings(self.switching_transitions, base.switching_transitions)
+    }
+}
+
+fn savings(ours: u64, base: u64) -> f64 {
+    if base == 0 {
+        0.0
+    } else {
+        100.0 * (1.0 - ours as f64 / base as f64)
+    }
+}
+
+/// Physical constants (DDR4-2400, §III and [9], [14]).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Extra termination current while driving a 1 (A) — POD15: 13.75 mA.
+    pub i_term: f64,
+    /// Beat time (s) — DDR4-2400: 0.833 ns per beat.
+    pub t_beat: f64,
+    /// Line capacitance (F) — 15 pF per channel line [14].
+    pub c_line: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            vdd: 1.2,
+            i_term: 13.75e-3,
+            t_beat: 0.833e-9,
+            c_line: 15e-12,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Termination energy per driven 1 (J): V_dd · I_term · t_beat.
+    pub fn term_energy_per_one(&self) -> f64 {
+        self.vdd * self.i_term * self.t_beat
+    }
+
+    /// Switching energy per 1→0 transition (J): C · V_dd² .
+    pub fn switch_energy_per_transition(&self) -> f64 {
+        self.c_line * self.vdd * self.vdd
+    }
+
+    /// Convert counts to (termination pJ, switching pJ).
+    pub fn to_picojoules(&self, c: &EnergyCounts) -> (f64, f64) {
+        (
+            c.termination_ones as f64 * self.term_energy_per_one() * 1e12,
+            c.switching_transitions as f64 * self.switch_energy_per_transition() * 1e12,
+        )
+    }
+}
+
+/// DDR4 DRAM sub-system energy breakdown (Fig. 2, after Seol et al. [14]).
+/// Percent of total DRAM energy.
+#[derive(Clone, Copy, Debug)]
+pub struct Ddr4Breakdown {
+    pub io_termination_pct: f64,
+    pub io_switching_pct: f64,
+    pub core_pct: f64,
+    pub background_pct: f64,
+}
+
+impl Ddr4Breakdown {
+    /// The paper's cited numbers: DRAM I/O = 21% of DRAM energy, of which
+    /// termination is 67%.
+    pub fn paper() -> Self {
+        let io = 21.0;
+        let term = io * 0.67;
+        Ddr4Breakdown {
+            io_termination_pct: term,
+            io_switching_pct: io - term,
+            core_pct: 49.0,
+            background_pct: 100.0 - io - 49.0,
+        }
+    }
+
+    pub fn io_total_pct(&self) -> f64 {
+        self.io_termination_pct + self.io_switching_pct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_math() {
+        let a = EnergyCounts {
+            termination_ones: 60,
+            switching_transitions: 80,
+            transfers: 1,
+        };
+        let b = EnergyCounts {
+            termination_ones: 100,
+            switching_transitions: 100,
+            transfers: 1,
+        };
+        assert!((a.termination_savings_vs(&b) - 40.0).abs() < 1e-9);
+        assert!((a.switching_savings_vs(&b) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn picojoule_conversion_magnitudes() {
+        let m = EnergyModel::default();
+        // 13.75 mA * 1.2 V * 0.833 ns ≈ 13.7 pJ per driven 1.
+        assert!((m.term_energy_per_one() * 1e12 - 13.74).abs() < 0.1);
+        // 15 pF * 1.44 V² = 21.6 pJ per transition.
+        assert!((m.switch_energy_per_transition() * 1e12 - 21.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn breakdown_sums_to_100() {
+        let b = Ddr4Breakdown::paper();
+        let total = b.io_termination_pct + b.io_switching_pct + b.core_pct + b.background_pct;
+        assert!((total - 100.0).abs() < 1e-9);
+        assert!((b.io_total_pct() - 21.0).abs() < 1e-9);
+    }
+}

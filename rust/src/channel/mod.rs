@@ -1,0 +1,178 @@
+//! DRAM channel substrate: burst serialization + energy accounting.
+//!
+//! Transfer granularity (§III): a 64 B cache line moves as 8 beats of
+//! 64 bits; each of the 8 x8 chips drives 8 data lines, so one chip
+//! contributes one 64-bit word per cache line (byte *b* of the word on
+//! beat *b*). Termination energy (POD) is proportional to the 1s driven;
+//! switching energy to 1→0 transitions per line, with line state
+//! persisting across transfers.
+
+pub mod energy;
+
+pub use energy::{EnergyCounts, EnergyModel};
+
+use crate::encoding::WireWord;
+use crate::util::bits::{falling_edges, transpose8x8};
+
+/// Number of x8 chips on the channel (§VIII-A: 8-chip DRAMs).
+pub const CHIPS: usize = 8;
+/// Data lines per chip.
+pub const LINES_PER_CHIP: usize = 8;
+/// Beats per burst.
+pub const BEATS: usize = 8;
+
+/// One chip's share of the channel: 8 data lines + DBI + index + flag
+/// sidebands, with per-line persistent state for switching energy.
+#[derive(Clone, Debug)]
+pub struct ChipChannel {
+    /// Last driven level of each data line, packed one line per byte
+    /// (byte `l` ∈ {0, 1}) so all 8 lines update in one SWAR step.
+    data_state: u64,
+    dbi_state: bool,
+    index_state: bool,
+    flag_state: bool,
+    counts: EnergyCounts,
+}
+
+impl Default for ChipChannel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChipChannel {
+    /// Lines idle low (POD idles terminated at V_dd = logic 0).
+    pub fn new() -> Self {
+        ChipChannel {
+            data_state: 0,
+            dbi_state: false,
+            index_state: false,
+            flag_state: false,
+            counts: EnergyCounts::default(),
+        }
+    }
+
+    /// Serialize one wire word over the burst, accumulating termination
+    /// ones and per-line 1→0 switching transitions.
+    pub fn transmit(&mut self, wire: &WireWord) {
+        // Termination: every 1 driven on any line costs I_term for a beat.
+        self.counts.termination_ones += wire.total_ones() as u64;
+
+        // Switching on the 8 data lines, all at once: transpose the
+        // (beat × line) bit matrix so byte `l` of `lanes` is line l's
+        // per-beat sequence, then count falling edges of every lane with
+        // one shift/mask/POPCNT (the per-lane loop this replaces cost
+        // ~40 ns/word — EXPERIMENTS.md §Perf).
+        let lanes = transpose8x8(wire.data);
+        let shifted = ((lanes << 1) & 0xFEFE_FEFE_FEFE_FEFE) | self.data_state;
+        self.counts.switching_transitions += (shifted & !lanes).count_ones() as u64;
+        self.data_state = (lanes >> 7) & 0x0101_0101_0101_0101;
+
+        // DBI line.
+        let (falls, last) = falling_edges(wire.dbi_mask, self.dbi_state);
+        self.counts.switching_transitions += falls as u64;
+        self.dbi_state = last;
+
+        // Index line (driven low when unused).
+        let seq = if wire.index_used { wire.index_line } else { 0 };
+        let (falls, last) = falling_edges(seq, self.index_state);
+        self.counts.switching_transitions += falls as u64;
+        self.index_state = last;
+
+        // Flag line: single pulse at beat 0 for encoded modes.
+        let seq = if wire.flag_ones() > 0 { 1u8 } else { 0 };
+        let (falls, last) = falling_edges(seq, self.flag_state);
+        self.counts.switching_transitions += falls as u64;
+        self.flag_state = last;
+
+        self.counts.transfers += 1;
+    }
+
+    /// Accumulated counts.
+    pub fn energy(&self) -> &EnergyCounts {
+        &self.counts
+    }
+
+    /// Reset counts and line state.
+    pub fn reset(&mut self) {
+        *self = ChipChannel::new();
+    }
+}
+
+/// The full 8-chip channel: one [`ChipChannel`] per chip.
+#[derive(Clone, Debug, Default)]
+pub struct Channel {
+    chips: Vec<ChipChannel>,
+}
+
+impl Channel {
+    pub fn new() -> Self {
+        Channel {
+            chips: (0..CHIPS).map(|_| ChipChannel::new()).collect(),
+        }
+    }
+
+    pub fn chip_mut(&mut self, i: usize) -> &mut ChipChannel {
+        &mut self.chips[i]
+    }
+
+    pub fn chips(&self) -> &[ChipChannel] {
+        &self.chips
+    }
+
+    /// Channel-wide energy counts (sum over chips).
+    pub fn total(&self) -> EnergyCounts {
+        let mut t = EnergyCounts::default();
+        for c in &self.chips {
+            t.merge(c.energy());
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::WireWord;
+
+    #[test]
+    fn termination_counts_ones() {
+        let mut ch = ChipChannel::new();
+        ch.transmit(&WireWord::raw(0xFF));
+        assert_eq!(ch.energy().termination_ones, 8);
+        ch.transmit(&WireWord::raw(0));
+        assert_eq!(ch.energy().termination_ones, 8);
+    }
+
+    #[test]
+    fn switching_counts_falling_edges_across_transfers() {
+        let mut ch = ChipChannel::new();
+        // Beat 7 (MSByte) leaves all 8 data lines high...
+        ch.transmit(&WireWord::raw(0xFF00_0000_0000_0000));
+        let s0 = ch.energy().switching_transitions;
+        // ...so an all-zero transfer costs 8 falls at entry.
+        ch.transmit(&WireWord::raw(0));
+        assert_eq!(ch.energy().switching_transitions - s0, 8);
+    }
+
+    #[test]
+    fn alternating_pattern_switches_per_line() {
+        let mut ch = ChipChannel::new();
+        // Line 0 alternates 1,0,1,0,... across beats: bytes 0x01, 0x00, ...
+        let word = 0x0001_0001_0001_0001u64; // beats 0,2,4,6 have line0=1? bytes: b0=01,b1=00,...
+        ch.transmit(&WireWord::raw(word));
+        // Line 0 sequence = 1,0,1,0,1,0,1,0 -> 4 falling edges.
+        assert_eq!(ch.energy().switching_transitions, 4);
+    }
+
+    #[test]
+    fn full_channel_aggregates() {
+        let mut ch = Channel::new();
+        for i in 0..CHIPS {
+            ch.chip_mut(i).transmit(&WireWord::raw(0x0F));
+        }
+        let t = ch.total();
+        assert_eq!(t.termination_ones, 4 * CHIPS as u64);
+        assert_eq!(t.transfers, CHIPS as u64);
+    }
+}

@@ -1,0 +1,373 @@
+//! Levelized combinational gate netlist with toggle counting.
+//!
+//! Gates use standard static-CMOS transistor counts. Evaluation walks
+//! nodes in creation order (inputs precede uses), and an attached toggle
+//! counter accumulates per-node switching activity across vectors — the
+//! SAIF methodology of §VI in miniature.
+
+/// Gate kinds with CMOS transistor costs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    Input,
+    Not(usize),
+    And(usize, usize),
+    Or(usize, usize),
+    Nand(usize, usize),
+    Nor(usize, usize),
+    Xor(usize, usize),
+    Mux(usize, usize, usize), // sel, a (sel=0), b (sel=1)
+}
+
+impl Gate {
+    pub fn transistors(&self) -> u64 {
+        match self {
+            Gate::Input => 0,
+            Gate::Not(_) => 2,
+            Gate::Nand(..) | Gate::Nor(..) => 4,
+            Gate::And(..) | Gate::Or(..) => 6,
+            Gate::Xor(..) => 8, // transmission-gate XOR
+            Gate::Mux(..) => 12,
+        }
+    }
+}
+
+/// A combinational netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    gates: Vec<Gate>,
+    level: Vec<u32>,
+    /// Current node values.
+    value: Vec<bool>,
+    /// Previous values (for toggle counting).
+    prev: Vec<bool>,
+    /// Total node toggles accumulated.
+    pub toggles: u64,
+    /// Evaluations run.
+    pub evals: u64,
+    inputs: Vec<usize>,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Netlist::default()
+    }
+
+    pub fn input(&mut self) -> usize {
+        let id = self.push(Gate::Input, 0);
+        self.inputs.push(id);
+        id
+    }
+
+    pub fn inputs(&mut self, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    fn push(&mut self, g: Gate, level: u32) -> usize {
+        self.gates.push(g);
+        self.level.push(level);
+        self.value.push(false);
+        self.prev.push(false);
+        self.gates.len() - 1
+    }
+
+    fn lvl(&self, a: usize) -> u32 {
+        self.level[a]
+    }
+
+    pub fn not(&mut self, a: usize) -> usize {
+        let l = self.lvl(a) + 1;
+        self.push(Gate::Not(a), l)
+    }
+
+    pub fn and(&mut self, a: usize, b: usize) -> usize {
+        let l = self.lvl(a).max(self.lvl(b)) + 1;
+        self.push(Gate::And(a, b), l)
+    }
+
+    pub fn or(&mut self, a: usize, b: usize) -> usize {
+        let l = self.lvl(a).max(self.lvl(b)) + 1;
+        self.push(Gate::Or(a, b), l)
+    }
+
+    pub fn nand(&mut self, a: usize, b: usize) -> usize {
+        let l = self.lvl(a).max(self.lvl(b)) + 1;
+        self.push(Gate::Nand(a, b), l)
+    }
+
+    pub fn nor(&mut self, a: usize, b: usize) -> usize {
+        let l = self.lvl(a).max(self.lvl(b)) + 1;
+        self.push(Gate::Nor(a, b), l)
+    }
+
+    pub fn xor(&mut self, a: usize, b: usize) -> usize {
+        let l = self.lvl(a).max(self.lvl(b)) + 1;
+        self.push(Gate::Xor(a, b), l)
+    }
+
+    pub fn mux(&mut self, sel: usize, a: usize, b: usize) -> usize {
+        let l = self.lvl(sel).max(self.lvl(a)).max(self.lvl(b)) + 1;
+        self.push(Gate::Mux(sel, a, b), l)
+    }
+
+    /// Wide NOR via a balanced NOR/NAND tree (returns 1 iff all inputs 0).
+    pub fn nor_tree(&mut self, xs: &[usize]) -> usize {
+        assert!(!xs.is_empty());
+        // OR-reduce then invert; balanced for realistic depth.
+        let or = self.or_tree(xs);
+        self.not(or)
+    }
+
+    /// Balanced OR reduction.
+    pub fn or_tree(&mut self, xs: &[usize]) -> usize {
+        let mut layer: Vec<usize> = xs.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.or(pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// Balanced AND reduction.
+    pub fn and_tree(&mut self, xs: &[usize]) -> usize {
+        let mut layer: Vec<usize> = xs.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    self.and(pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// Full adder; returns (sum, carry).
+    pub fn full_adder(&mut self, a: usize, b: usize, c: usize) -> (usize, usize) {
+        let ab = self.xor(a, b);
+        let sum = self.xor(ab, c);
+        let t1 = self.and(a, b);
+        let t2 = self.and(ab, c);
+        let carry = self.or(t1, t2);
+        (sum, carry)
+    }
+
+    /// Population count of `bits` as a ripple adder tree (Fig. 7(2)'s
+    /// "sums up the count of dissimilar bits"). Returns LSB-first sum bits.
+    pub fn popcount(&mut self, bits: &[usize]) -> Vec<usize> {
+        // Reduce vectors of equal-weight bits with full adders (CSA tree).
+        let mut columns: Vec<Vec<usize>> = vec![bits.to_vec()];
+        loop {
+            let mut done = true;
+            let mut next: Vec<Vec<usize>> = vec![Vec::new(); columns.len() + 1];
+            for (w, col) in columns.iter().enumerate() {
+                let mut i = 0;
+                while i + 3 <= col.len() {
+                    let (s, c) = self.full_adder(col[i], col[i + 1], col[i + 2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    i += 3;
+                    done = false;
+                }
+                if i + 2 == col.len() {
+                    // Half adder.
+                    let s = self.xor(col[i], col[i + 1]);
+                    let c = self.and(col[i], col[i + 1]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    done = false;
+                } else if i + 1 == col.len() {
+                    next[w].push(col[i]);
+                }
+            }
+            while next.last().is_some_and(|c| c.is_empty()) {
+                next.pop();
+            }
+            columns = next;
+            if done {
+                break;
+            }
+        }
+        columns.into_iter().map(|c| c[0]).collect()
+    }
+
+    /// Comparator: popcount-sum-bits < constant. Builds a ripple borrow.
+    pub fn less_than_const(&mut self, sum_bits: &[usize], k: u32) -> usize {
+        // a < k  ==  NOT (a >= k). Compute a >= k by scanning from MSB.
+        // ge = 1 if at the first differing bit a has 1 where k has 0.
+        let mut ge: Option<usize> = None; // a > prefix
+        let mut eq: Option<usize> = None; // prefix equal so far
+        for i in (0..sum_bits.len()).rev() {
+            let kb = (k >> i) & 1 == 1;
+            let a = sum_bits[i];
+            let (gt_here, eq_here) = if kb {
+                // a_i must be 1 to stay equal; can't be greater at this bit.
+                let e = a;
+                (None, e)
+            } else {
+                // a_i = 1 makes a greater; a_i = 0 stays equal.
+                let na = self.not(a);
+                (Some(a), na)
+            };
+            let eq_in = eq;
+            // gt accumulates: gt || (eq_so_far && gt_here)
+            if let Some(g) = gt_here {
+                let term = match eq_in {
+                    Some(e) => self.and(e, g),
+                    None => g,
+                };
+                ge = Some(match ge {
+                    Some(prev) => self.or(prev, term),
+                    None => term,
+                });
+            }
+            eq = Some(match eq_in {
+                Some(e) => self.and(e, eq_here),
+                None => eq_here,
+            });
+        }
+        // a >= k == gt || eq
+        let e = eq.expect("nonempty");
+        let ge_node = match ge {
+            Some(g) => self.or(g, e),
+            None => e,
+        };
+        self.not(ge_node)
+    }
+
+    /// Evaluate with the given input values, accumulating toggles.
+    pub fn eval(&mut self, input_values: &[bool]) -> &[bool] {
+        assert_eq!(input_values.len(), self.inputs.len());
+        std::mem::swap(&mut self.value, &mut self.prev);
+        for (&id, &v) in self.inputs.iter().zip(input_values) {
+            self.value[id] = v;
+        }
+        for i in 0..self.gates.len() {
+            let v = match self.gates[i] {
+                Gate::Input => self.value[i],
+                Gate::Not(a) => !self.value[a],
+                Gate::And(a, b) => self.value[a] & self.value[b],
+                Gate::Or(a, b) => self.value[a] | self.value[b],
+                Gate::Nand(a, b) => !(self.value[a] & self.value[b]),
+                Gate::Nor(a, b) => !(self.value[a] | self.value[b]),
+                Gate::Xor(a, b) => self.value[a] ^ self.value[b],
+                Gate::Mux(s, a, b) => {
+                    if self.value[s] {
+                        self.value[b]
+                    } else {
+                        self.value[a]
+                    }
+                }
+            };
+            self.value[i] = v;
+            if v != self.prev[i] {
+                self.toggles += 1;
+            }
+        }
+        self.evals += 1;
+        &self.value
+    }
+
+    pub fn get(&self, node: usize) -> bool {
+        self.value[node]
+    }
+
+    pub fn transistors(&self) -> u64 {
+        self.gates.iter().map(|g| g.transistors()).sum()
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.level.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn popcount_matches_software() {
+        let mut n = Netlist::new();
+        let ins = n.inputs(16);
+        let sum = n.popcount(&ins);
+        let mut r = Rng::new(101);
+        for _ in 0..200 {
+            let x = r.next_u32() as u16;
+            let bits: Vec<bool> = (0..16).map(|i| (x >> i) & 1 == 1).collect();
+            n.eval(&bits);
+            let mut got = 0u32;
+            for (i, &s) in sum.iter().enumerate() {
+                got |= (n.get(s) as u32) << i;
+            }
+            assert_eq!(got, x.count_ones(), "x={x:016b}");
+        }
+    }
+
+    #[test]
+    fn less_than_const_matches() {
+        let mut n = Netlist::new();
+        let ins = n.inputs(8);
+        let sum = n.popcount(&ins);
+        let lt = n.less_than_const(&sum, 5);
+        for x in 0u16..256 {
+            let bits: Vec<bool> = (0..8).map(|i| (x >> i) & 1 == 1).collect();
+            n.eval(&bits);
+            assert_eq!(n.get(lt), (x as u8).count_ones() < 5, "x={x:08b}");
+        }
+    }
+
+    #[test]
+    fn nor_tree_detects_zero() {
+        let mut n = Netlist::new();
+        let ins = n.inputs(64);
+        let z = n.nor_tree(&ins);
+        let mut r = Rng::new(102);
+        let zero = vec![false; 64];
+        n.eval(&zero);
+        assert!(n.get(z));
+        for _ in 0..50 {
+            let x = r.next_u64() | 1;
+            let bits: Vec<bool> = (0..64).map(|i| (x >> i) & 1 == 1).collect();
+            n.eval(&bits);
+            assert!(!n.get(z));
+        }
+    }
+
+    #[test]
+    fn toggles_accumulate_only_on_change() {
+        let mut n = Netlist::new();
+        let a = n.input();
+        let _ = n.not(a);
+        n.eval(&[false]);
+        let t0 = n.toggles;
+        n.eval(&[false]); // no change
+        assert_eq!(n.toggles, t0);
+        n.eval(&[true]); // both nodes flip
+        assert_eq!(n.toggles, t0 + 2);
+    }
+
+    #[test]
+    fn transistor_counts() {
+        let mut n = Netlist::new();
+        let a = n.input();
+        let b = n.input();
+        n.xor(a, b);
+        n.nand(a, b);
+        assert_eq!(n.transistors(), 8 + 4);
+        assert_eq!(n.depth(), 1);
+    }
+}

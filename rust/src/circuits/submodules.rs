@@ -1,0 +1,206 @@
+//! The Fig. 7a ZAC-DEST sub-modules as explicit gate netlists:
+//!
+//! 1. **Zero checker** — 64-input NOR (output 1 iff all data bits 0).
+//! 2. **Similarity checker** — popcount of the 64 bitwise-difference
+//!    bits + a `< threshold` comparator (threshold muxed over the four
+//!    §V-B limits 7/13/16/20).
+//! 3. **Tolerance checker** — NOR over the masked difference bits
+//!    (mask muxed over the supported tolerance patterns).
+//! 4. **Truncation gating** — per-bit AND with the truncation line
+//!    (the CAM-side series NMOS lives in the CAM model).
+//! 5. Final AND of similarity & tolerance (the ZAC-DEST condition).
+
+use super::netlist::Netlist;
+use crate::util::rng::Rng;
+
+/// The built sub-module block.
+pub struct SubModules {
+    pub net: Netlist,
+    /// Input node ids: 64 data bits then 64 difference bits, then 2
+    /// threshold-select bits, then 2 mask-select bits.
+    pub data_in: Vec<usize>,
+    pub diff_in: Vec<usize>,
+    pub sel_in: Vec<usize>,
+    /// Outputs.
+    pub zero_out: usize,
+    pub similar_out: usize,
+    pub tolerance_out: usize,
+    pub zac_out: usize,
+}
+
+/// Build the full Fig. 7 sub-module block.
+pub fn build_zac_submodules() -> SubModules {
+    let mut n = Netlist::new();
+    let data_in = n.inputs(64);
+    let diff_in = n.inputs(64);
+    let sel_in = n.inputs(4); // threshold select (2) + tolerance select (2)
+
+    // (1) Zero checker.
+    let zero_out = n.nor_tree(&data_in.clone());
+
+    // (2) Similarity checker: popcount(diff) < threshold, threshold in
+    // {7, 13, 16, 20} selected by sel[0..2].
+    let sum = n.popcount(&diff_in.clone());
+    let lt: Vec<usize> = [7u32, 13, 16, 20]
+        .iter()
+        .map(|&k| n.less_than_const(&sum, k))
+        .collect();
+    let m0 = n.mux(sel_in[0], lt[0], lt[1]);
+    let m1 = n.mux(sel_in[0], lt[2], lt[3]);
+    let similar_out = n.mux(sel_in[1], m0, m1);
+
+    // (3) Tolerance checker: masked diff bits must all be 0. Mask
+    // patterns: none / 1 MSB per byte / 2 MSB per byte, selected by
+    // sel[2..4]; a masked bit contributes diff AND mask.
+    let mask1: u64 = 0x8080_8080_8080_8080;
+    let mask2: u64 = 0xC0C0_C0C0_C0C0_C0C0;
+    let mut masked = Vec::with_capacity(64);
+    for (i, &d) in diff_in.iter().enumerate() {
+        let in1 = (mask1 >> i) & 1 == 1;
+        let in2 = (mask2 >> i) & 1 == 1;
+        if in2 {
+            // Bit participates when sel2 (1-bit) or sel3 (2-bit) chosen.
+            let sel = if in1 {
+                n.or(sel_in[2], sel_in[3])
+            } else {
+                sel_in[3]
+            };
+            masked.push(n.and(d, sel));
+        }
+    }
+    let any_viol = n.or_tree(&masked);
+    let tolerance_out = n.not(any_viol);
+
+    // (5) ZAC condition.
+    let zac_out = n.and(similar_out, tolerance_out);
+
+    SubModules {
+        net: n,
+        data_in,
+        diff_in,
+        sel_in,
+        zero_out,
+        similar_out,
+        tolerance_out,
+        zac_out,
+    }
+}
+
+/// Activity-run output for the sub-modules.
+#[derive(Clone, Copy, Debug)]
+pub struct SubActivity {
+    pub toggles_per_access: f64,
+    pub transistors: u64,
+    pub depth: u32,
+}
+
+/// Drive `vectors` random input vectors (the §VI SAIF methodology) and
+/// report mean toggles per access.
+pub fn activity(subs: &mut SubModules, vectors: usize, rng: &mut Rng) -> SubActivity {
+    let start_toggles = subs.net.toggles;
+    let mut bits = vec![false; subs.net.num_inputs()];
+    for i in 0..vectors {
+        let data = rng.next_u64();
+        // Difference bits are sparse for similar traffic.
+        let diff = rng.next_u64() & rng.next_u64() & rng.next_u64();
+        for b in 0..64 {
+            bits[b] = (data >> b) & 1 == 1;
+            bits[64 + b] = (diff >> b) & 1 == 1;
+        }
+        for s in 0..4 {
+            bits[128 + s] = (i >> s) & 1 == 1;
+        }
+        subs.net.eval(&bits);
+    }
+    SubActivity {
+        toggles_per_access: (subs.net.toggles - start_toggles) as f64 / vectors.max(1) as f64,
+        transistors: subs.net.transistors(),
+        depth: subs.net.depth(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set_word(bits: &mut [bool], offset: usize, w: u64) {
+        for b in 0..64 {
+            bits[offset + b] = (w >> b) & 1 == 1;
+        }
+    }
+
+    fn drive(subs: &mut SubModules, data: u64, diff: u64, sel: [bool; 4]) {
+        let mut bits = vec![false; subs.net.num_inputs()];
+        set_word(&mut bits, 0, data);
+        set_word(&mut bits, 64, diff);
+        bits[128..132].copy_from_slice(&sel);
+        subs.net.eval(&bits);
+    }
+
+    #[test]
+    fn zero_checker_fires_only_on_zero() {
+        let mut s = build_zac_submodules();
+        drive(&mut s, 0, 0, [false; 4]);
+        assert!(s.net.get(s.zero_out));
+        drive(&mut s, 1, 0, [false; 4]);
+        assert!(!s.net.get(s.zero_out));
+    }
+
+    #[test]
+    fn similarity_thresholds_select() {
+        let mut s = build_zac_submodules();
+        // diff with 10 ones: < 13 yes (sel=01 -> threshold 13), < 7 no.
+        let diff = (1u64 << 10) - 1 | (1 << 63); // 10 ones? (2^10-1 has 10 ones) plus bit63 = 11
+        let diff = diff & !(1 << 63); // keep exactly 10 ones
+        assert_eq!(diff.count_ones(), 10);
+        drive(&mut s, 0, diff, [false, false, false, false]); // threshold 7
+        assert!(!s.net.get(s.similar_out));
+        drive(&mut s, 0, diff, [true, false, false, false]); // threshold 13
+        assert!(s.net.get(s.similar_out));
+        // 17 ones: threshold 16 (sel=[0,1]) no, threshold 20 ([1,1]) yes.
+        let diff17 = (1u64 << 17) - 1;
+        drive(&mut s, 0, diff17, [false, true, false, false]);
+        assert!(!s.net.get(s.similar_out));
+        drive(&mut s, 0, diff17, [true, true, false, false]);
+        assert!(s.net.get(s.similar_out));
+    }
+
+    #[test]
+    fn tolerance_masks_select() {
+        let mut s = build_zac_submodules();
+        let msb_diff = 0x8000_0000_0000_0000u64; // MSB of top byte differs
+        // No tolerance: ok.
+        drive(&mut s, 0, msb_diff, [false, false, false, false]);
+        assert!(s.net.get(s.tolerance_out));
+        // 1-MSB-per-byte tolerance: violation.
+        drive(&mut s, 0, msb_diff, [false, false, true, false]);
+        assert!(!s.net.get(s.tolerance_out));
+        // Second-MSB differs: only the 2-bit mask catches it.
+        let bit62 = 1u64 << 62;
+        drive(&mut s, 0, bit62, [false, false, true, false]);
+        assert!(s.net.get(s.tolerance_out));
+        drive(&mut s, 0, bit62, [false, false, false, true]);
+        assert!(!s.net.get(s.tolerance_out));
+    }
+
+    #[test]
+    fn zac_condition_is_and_of_both() {
+        let mut s = build_zac_submodules();
+        let small_diff = 0b11u64; // 2 ones, passes any threshold
+        drive(&mut s, 0, small_diff, [false, false, false, false]);
+        assert!(s.net.get(s.zac_out));
+        // Small diff but in a tolerance-bit position with mask on -> veto.
+        drive(&mut s, 0, 0x80, [false, false, true, false]);
+        assert!(!s.net.get(s.zac_out));
+    }
+
+    #[test]
+    fn submodule_size_is_modest_vs_cam() {
+        let s = build_zac_submodules();
+        let cam = super::super::cam::CamModel::bd_coder(64, 64).transistors();
+        let ratio = s.net.transistors() as f64 / cam as f64;
+        // Fig. 7 submodules are a fraction of the 64x64 CAM (~15% area
+        // overhead per §VI).
+        assert!(ratio < 0.35, "submodules/CAM transistor ratio {ratio}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Run configuration: a TOML file (or CLI flags) describing the encoder
+//! knobs and workload parameters for one simulation run.
+
+use crate::encoding::{Scheme, ZacConfig};
+use crate::util::json_lite::Json;
+use crate::util::toml_lite;
+
+/// Full run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub seed: u64,
+    pub encoder: ZacConfig,
+    /// Workloads to run (imagenet / resnet / quant / eigen / svm).
+    pub workloads: Vec<String>,
+    /// Images per workload evaluation.
+    pub eval_images: usize,
+    /// Training steps for trainable workloads.
+    pub train_steps: usize,
+    /// Learning rate.
+    pub lr: f32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "default".into(),
+            seed: 42,
+            encoder: ZacConfig::default(),
+            workloads: vec![
+                "imagenet".into(),
+                "resnet".into(),
+                "quant".into(),
+                "eigen".into(),
+                "svm".into(),
+            ],
+            eval_images: 64,
+            train_steps: 60,
+            lr: 0.05,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text. Unknown keys are rejected to catch typos.
+    pub fn from_toml(text: &str) -> anyhow::Result<RunConfig> {
+        let doc = toml_lite::parse(text)?;
+        let mut cfg = RunConfig::default();
+        let root = doc.as_obj()?;
+        for (k, v) in root {
+            match k.as_str() {
+                "name" => cfg.name = v.as_str()?.to_string(),
+                "seed" => cfg.seed = v.as_f64()? as u64,
+                "encoder" => cfg.encoder = parse_encoder(v)?,
+                "workload" => parse_workload(v, &mut cfg)?,
+                other => anyhow::bail!("unknown top-level key {other:?}"),
+            }
+        }
+        cfg.encoder.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+}
+
+fn parse_encoder(v: &Json) -> anyhow::Result<ZacConfig> {
+    let mut cfg = ZacConfig::default();
+    for (k, val) in v.as_obj()? {
+        match k.as_str() {
+            "scheme" => {
+                let s = val.as_str()?;
+                cfg.scheme = Scheme::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown scheme {s:?}"))?;
+            }
+            "similarity_limit" => cfg.similarity_limit_pct = val.as_f64()? as u32,
+            "chunk_width" => cfg.chunk_width = val.as_f64()? as u32,
+            "tolerance" => cfg.tolerance_bits = val.as_f64()? as u32,
+            "truncation" => cfg.truncation_bits = val.as_f64()? as u32,
+            "table_size" => cfg.table_size = val.as_usize()?,
+            "weights_mode" => {
+                if matches!(val, Json::Bool(true)) {
+                    cfg.chunk_width = 32;
+                    cfg.tolerance_mask_override =
+                        Some(crate::trace::float_layout::weight_tolerance_mask());
+                }
+            }
+            other => anyhow::bail!("unknown [encoder] key {other:?}"),
+        }
+    }
+    Ok(cfg)
+}
+
+fn parse_workload(v: &Json, cfg: &mut RunConfig) -> anyhow::Result<()> {
+    for (k, val) in v.as_obj()? {
+        match k.as_str() {
+            "kinds" => {
+                cfg.workloads = val
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "eval_images" => cfg.eval_images = val.as_usize()?,
+            "train_steps" => cfg.train_steps = val.as_usize()?,
+            "lr" => cfg.lr = val.as_f64()? as f32,
+            other => anyhow::bail!("unknown [workload] key {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            name = "fig15-cell"
+            seed = 7
+            [encoder]
+            scheme = "ZAC-DEST"
+            similarity_limit = 75
+            truncation = 2
+            tolerance = 0
+            table_size = 64
+            [workload]
+            kinds = ["quant", "svm"]
+            eval_images = 32
+            train_steps = 10
+            lr = 0.1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig15-cell");
+        assert_eq!(cfg.encoder.similarity_limit_pct, 75);
+        assert_eq!(cfg.encoder.truncation_bits, 2);
+        assert_eq!(cfg.workloads, vec!["quant", "svm"]);
+        assert_eq!(cfg.train_steps, 10);
+    }
+
+    #[test]
+    fn weights_mode_sets_mask() {
+        let cfg = RunConfig::from_toml(
+            "[encoder]\nscheme = \"OHE\"\nsimilarity_limit = 60\nweights_mode = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.encoder.chunk_width, 32);
+        assert_eq!(
+            cfg.encoder.tolerance_mask_override,
+            Some(0xFF80_0000_FF80_0000)
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_scheme() {
+        assert!(RunConfig::from_toml("bogus = 1\n").is_err());
+        assert!(RunConfig::from_toml("[encoder]\nscheme = \"WAT\"\n").is_err());
+        assert!(RunConfig::from_toml("[encoder]\nsimilarity_limit = 10\n").is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().encoder.validate().unwrap();
+    }
+}

@@ -1,0 +1,290 @@
+//! The streaming coordinator: drives whole byte/float traces through the
+//! 8-chip channel (encode → wire → decode), aggregating energy and
+//! encoding statistics, and reassembling the receiver-side (possibly
+//! approximate) stream for the workloads.
+//!
+//! Two drivers:
+//! * [`simulate_bytes`] — batch mode: one worker per DRAM chip via
+//!   [`par_map`] (chips are architecturally independent: separate
+//!   tables, lines and sidebands).
+//! * [`Pipeline`] — streaming mode with bounded per-chip queues
+//!   (`sync_channel`), giving real backpressure when a producer outruns
+//!   the encoder workers; used by the e2e example and the service loop.
+
+pub mod config;
+
+pub use config::RunConfig;
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::channel::{ChipChannel, EnergyCounts, CHIPS};
+use crate::encoding::{make_codec, EncodeStats, ZacConfig};
+use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, ChipWords};
+
+/// Result of a trace simulation.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// The receiver-side byte stream (exact or approximate).
+    pub bytes: Vec<u8>,
+    /// Channel-wide energy counts (summed over chips).
+    pub counts: EnergyCounts,
+    /// Encoding outcome statistics (summed over chips).
+    pub stats: EncodeStats,
+}
+
+/// Batch simulation of a byte stream under one encoder configuration.
+/// `approx` marks the whole stream as error-resilient (the paper
+/// approximates only accesses known resilient a priori; instruction-like
+/// traffic passes `false` and is never approximated).
+pub fn simulate_bytes(cfg: &ZacConfig, bytes: &[u8], approx: bool) -> RunOutput {
+    let lines = bytes_to_chip_words(bytes);
+    simulate_lines(cfg, &lines, approx, bytes.len())
+}
+
+/// Batch simulation over pre-split cache lines.
+pub fn simulate_lines(
+    cfg: &ZacConfig,
+    lines: &[ChipWords],
+    approx: bool,
+    byte_len: usize,
+) -> RunOutput {
+    let cfgs: Vec<ZacConfig> = (0..CHIPS).map(|_| cfg.clone()).collect();
+    simulate_lines_per_chip(&cfgs, lines, approx, byte_len)
+}
+
+/// Batch simulation with a distinct configuration per chip. The DRAM
+/// layout interleaves bytes across chips (chip *j* carries byte `j % 4`
+/// of every f32, see [`crate::trace`]), so field-aware knobs — e.g. the
+/// weights-mode tolerance over sign+exponent — must be expressed
+/// per chip. See [`weight_chip_configs`].
+pub fn simulate_lines_per_chip(
+    cfgs: &[ZacConfig],
+    lines: &[ChipWords],
+    approx: bool,
+    byte_len: usize,
+) -> RunOutput {
+    assert_eq!(cfgs.len(), CHIPS);
+    let per_chip: Vec<(ZacConfig, Vec<u64>)> = (0..CHIPS)
+        .map(|j| (cfgs[j].clone(), lines.iter().map(|l| l[j]).collect()))
+        .collect();
+    let results = crate::util::par::par_map(per_chip, CHIPS, |(cfg, words)| {
+        let mut chan = ChipChannel::new();
+        let mut stats = EncodeStats::default();
+        let approx_flags = vec![approx; words.len()];
+        let decoded =
+            crate::encoding::run_chip_stream(&cfg, &words, &approx_flags, &mut chan, &mut stats);
+        (decoded, *chan.energy(), stats)
+    });
+    assemble(results, lines.len(), byte_len)
+}
+
+/// Derive the per-chip configurations that realize a 32-bit-lane
+/// tolerance/truncation mask on the byte-interleaved channel: chip *j*
+/// sees byte `j % 4` of every float, so its 64-bit word gets that byte
+/// of the lane mask replicated across all 8 beats. For the IEEE-754
+/// sign+exponent mask (0xFF80_0000) this pins chips 3/7 entirely (sign +
+/// exp[7:1]) and bit 7 of every byte on chips 2/6 (exp[0]).
+pub fn weight_chip_configs(base: &ZacConfig) -> Vec<ZacConfig> {
+    let lane_mask: u32 = match base.tolerance_mask_override {
+        Some(m) => (m & 0xFFFF_FFFF) as u32,
+        None => 0xFF80_0000, // default weights mode: sign + exponent
+    };
+    (0..CHIPS)
+        .map(|j| {
+            let byte = ((lane_mask >> (8 * (j % 4))) & 0xFF) as u64;
+            let mut chip_mask = 0u64;
+            for beat in 0..8 {
+                chip_mask |= byte << (beat * 8);
+            }
+            let mut cfg = base.clone();
+            cfg.chunk_width = 8;
+            cfg.tolerance_bits = 0;
+            cfg.truncation_bits = 0;
+            cfg.tolerance_mask_override = Some(chip_mask);
+            cfg
+        })
+        .collect()
+}
+
+fn assemble(
+    results: Vec<(Vec<u64>, EnergyCounts, EncodeStats)>,
+    nlines: usize,
+    byte_len: usize,
+) -> RunOutput {
+    let mut counts = EnergyCounts::default();
+    let mut stats = EncodeStats::default();
+    let mut out_lines = vec![[0u64; CHIPS]; nlines];
+    for (j, (decoded, c, s)) in results.into_iter().enumerate() {
+        counts.merge(&c);
+        stats.merge(&s);
+        for (l, w) in decoded.into_iter().enumerate() {
+            out_lines[l][j] = w;
+        }
+    }
+    RunOutput {
+        bytes: chip_words_to_bytes(&out_lines, byte_len),
+        counts,
+        stats,
+    }
+}
+
+/// Simulate an f32 (weight) stream; returns the reconstructed floats.
+/// When the config carries a tolerance-mask override (weights mode), it
+/// is projected onto the byte-interleaved chips via
+/// [`weight_chip_configs`] so sign/exponent protection actually lands on
+/// the bytes that hold those fields.
+pub fn simulate_f32s(cfg: &ZacConfig, xs: &[f32], approx: bool) -> (Vec<f32>, RunOutput) {
+    let bytes = crate::trace::f32s_to_bytes(xs);
+    let lines = bytes_to_chip_words(&bytes);
+    let out = if cfg.tolerance_mask_override.is_some() {
+        let cfgs = weight_chip_configs(cfg);
+        simulate_lines_per_chip(&cfgs, &lines, approx, bytes.len())
+    } else {
+        simulate_lines(cfg, &lines, approx, bytes.len())
+    };
+    let floats = crate::trace::bytes_to_f32s(&out.bytes);
+    (floats, out)
+}
+
+/// Streaming pipeline: one worker thread per chip behind a bounded queue.
+///
+/// `push_line` blocks when a queue is full — backpressure toward the
+/// producer, exactly what a memory controller's write queue does.
+pub struct Pipeline {
+    senders: Vec<SyncSender<(u64, bool)>>,
+    workers: Vec<JoinHandle<(Vec<u64>, EnergyCounts, EncodeStats)>>,
+    lines_pushed: usize,
+}
+
+impl Pipeline {
+    /// Spawn the per-chip workers with queue `capacity` (lines).
+    pub fn new(cfg: &ZacConfig, capacity: usize) -> Pipeline {
+        let mut senders = Vec::with_capacity(CHIPS);
+        let mut workers = Vec::with_capacity(CHIPS);
+        for _ in 0..CHIPS {
+            let (tx, rx): (SyncSender<(u64, bool)>, Receiver<(u64, bool)>) =
+                sync_channel(capacity.max(1));
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                let (mut enc, mut dec) = make_codec(&cfg);
+                let mut chan = ChipChannel::new();
+                let mut stats = EncodeStats::default();
+                let mut decoded = Vec::new();
+                while let Ok((word, approx)) = rx.recv() {
+                    let wire = enc.encode(word, approx);
+                    chan.transmit(&wire);
+                    stats.record(&wire, word);
+                    decoded.push(dec.decode(&wire));
+                }
+                (decoded, *chan.energy(), stats)
+            }));
+            senders.push(tx);
+        }
+        Pipeline {
+            senders,
+            workers,
+            lines_pushed: 0,
+        }
+    }
+
+    /// Enqueue one cache line (blocks when workers are behind).
+    pub fn push_line(&mut self, line: ChipWords, approx: bool) {
+        for (j, tx) in self.senders.iter().enumerate() {
+            tx.send((line[j], approx)).expect("worker died");
+        }
+        self.lines_pushed += 1;
+    }
+
+    /// Number of lines accepted so far.
+    pub fn lines_pushed(&self) -> usize {
+        self.lines_pushed
+    }
+
+    /// Close the queues, join the workers, reassemble the output.
+    pub fn finish(self, byte_len: usize) -> RunOutput {
+        drop(self.senders);
+        let results: Vec<_> = self
+            .workers
+            .into_iter()
+            .map(|w| w.join().expect("worker panicked"))
+            .collect();
+        assemble(results, self.lines_pushed, byte_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Scheme;
+    use crate::util::rng::Rng;
+
+    fn bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut r = Rng::new(seed);
+        // Image-like: slowly varying values.
+        let mut v = 128i32;
+        (0..n)
+            .map(|_| {
+                v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+                v as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_schemes_preserve_bytes_end_to_end() {
+        let data = bytes(4096, 3);
+        for scheme in [Scheme::Org, Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde] {
+            let out = simulate_bytes(&ZacConfig::scheme(scheme), &data, true);
+            assert_eq!(out.bytes, data, "{scheme:?}");
+            assert_eq!(out.stats.total(), (data.len() / 8) as u64);
+        }
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let data = bytes(8192, 5);
+        let cfg = ZacConfig::zac(80);
+        let batch = simulate_bytes(&cfg, &data, true);
+        let lines = bytes_to_chip_words(&data);
+        let mut p = Pipeline::new(&cfg, 4);
+        for l in &lines {
+            p.push_line(*l, true);
+        }
+        let streamed = p.finish(data.len());
+        assert_eq!(streamed.bytes, batch.bytes);
+        assert_eq!(streamed.counts, batch.counts);
+        assert_eq!(streamed.stats.total(), batch.stats.total());
+    }
+
+    #[test]
+    fn zac_saves_energy_vs_bde_on_image_like_stream() {
+        let data = bytes(65536, 7);
+        let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &data, true);
+        let zac = simulate_bytes(&ZacConfig::zac(70), &data, true);
+        let t = zac.counts.termination_savings_vs(&bde.counts);
+        assert!(t > 0.0, "zac should save termination energy, got {t}%");
+    }
+
+    #[test]
+    fn f32_round_trip_exact_scheme() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f32> = (0..2048).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let (got, _) = simulate_f32s(&ZacConfig::scheme(Scheme::Bde), &xs, true);
+        assert_eq!(got, xs);
+    }
+
+    #[test]
+    fn weights_config_bounds_relative_error() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f32> = (0..4096).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        let (got, out) = simulate_f32s(&ZacConfig::zac_weights(50), &xs, true);
+        // Sign+exponent pinned => worst case is a full-mantissa error,
+        // i.e. strictly less than 2x in magnitude, never sign flips.
+        for (a, b) in xs.iter().zip(&got) {
+            assert!(a.signum() == b.signum() || *b == 0.0, "{a} -> {b}");
+            assert!(b.abs() < a.abs() * 2.0 + 1e-12, "{a} -> {b}");
+        }
+        assert!(out.stats.total() > 0);
+    }
+}

@@ -1,0 +1,433 @@
+//! Synthetic dataset generators — the sandbox has no network, GPUs, or
+//! pretrained models, so each of the paper's corpora is replaced by a
+//! procedurally generated equivalent that preserves the property the
+//! experiment measures (see DESIGN.md §5 for the substitution table):
+//!
+//! * [`synth_images`] — ImageNet/CIFAR stand-in: 10-class 32×32 RGB,
+//!   class = shape family × palette, with texture and noise.
+//! * [`kodak_like`] — photographic statistics (smooth gradients, blobs,
+//!   edges) for the K-Means colour-quantization workload.
+//! * [`faces`] — Yale-faces stand-in: per-identity deformed base face.
+//! * [`fmnist_like`] — sparse 28×28 silhouettes (most pixels zero — the
+//!   property the paper picked Fashion-MNIST for, §VII-A5).
+
+use crate::util::rng::Rng;
+
+/// An interleaved 8-bit image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub w: usize,
+    pub h: usize,
+    pub channels: usize,
+    pub data: Vec<u8>,
+    /// Ground-truth class / identity.
+    pub label: i32,
+}
+
+impl Image {
+    pub fn new(w: usize, h: usize, channels: usize, label: i32) -> Self {
+        Image {
+            w,
+            h,
+            channels,
+            data: vec![0; w * h * channels],
+            label,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize, c: usize) -> u8 {
+        self.data[(y * self.w + x) * self.channels + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, c: usize, v: u8) {
+        self.data[(y * self.w + x) * self.channels + c] = v;
+    }
+
+    /// Replace the pixel payload (e.g. with a reconstructed trace),
+    /// keeping geometry + label.
+    pub fn with_data(&self, data: Vec<u8>) -> Image {
+        assert_eq!(data.len(), self.data.len());
+        Image {
+            data,
+            ..self.clone()
+        }
+    }
+
+    /// Normalized f32 pixels in [0,1] (NHWC order, what `cnn_*` expects).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&b| b as f32 / 255.0).collect()
+    }
+
+    /// Dump as a binary PGM/PPM (for eyeballing Fig. 12-style output).
+    pub fn to_pnm(&self) -> Vec<u8> {
+        let magic = if self.channels == 3 { "P6" } else { "P5" };
+        let mut out = format!("{magic}\n{} {}\n255\n", self.w, self.h).into_bytes();
+        out.extend_from_slice(&self.data);
+        out
+    }
+}
+
+/// Number of classes in the synthetic classification corpus.
+pub const NUM_CLASSES: usize = 10;
+
+/// 10-class 32×32×3 corpus (ImageNet/CIFAR-100 stand-in). Class encodes
+/// a shape family (0-4) × palette (0-1); textured background + noise
+/// keeps LSBs informative so bit-level approximation has a measurable
+/// effect, as in the paper's image experiments.
+pub fn synth_images(n: usize, seed: u64) -> Vec<Image> {
+    let mut r = Rng::new(seed ^ 0x5397_1a2b);
+    (0..n)
+        .map(|i| {
+            let label = (i % NUM_CLASSES) as i32;
+            synth_image(label, &mut r)
+        })
+        .collect()
+}
+
+fn palette(p: i32, r: &mut Rng) -> ([f32; 3], [f32; 3]) {
+    // Two palettes: warm fg / cool bg and the reverse.
+    let jitter = |base: f32, r: &mut Rng| (base + r.normal_f32(0.0, 0.05)).clamp(0.0, 1.0);
+    if p == 0 {
+        (
+            [jitter(0.85, r), jitter(0.35, r), jitter(0.2, r)],
+            [jitter(0.15, r), jitter(0.3, r), jitter(0.6, r)],
+        )
+    } else {
+        (
+            [jitter(0.2, r), jitter(0.55, r), jitter(0.85, r)],
+            [jitter(0.7, r), jitter(0.5, r), jitter(0.25, r)],
+        )
+    }
+}
+
+fn synth_image(label: i32, r: &mut Rng) -> Image {
+    let (w, h) = (32usize, 32usize);
+    let mut img = Image::new(w, h, 3, label);
+    let shape = label % 5;
+    let (fg, bg) = palette(label / 5, r);
+    let cx = 16.0 + r.normal_f32(0.0, 2.5) as f64;
+    let cy = 16.0 + r.normal_f32(0.0, 2.5) as f64;
+    let size = 7.0 + r.f64() * 4.0;
+    let angle = r.f64() * std::f64::consts::TAU;
+    for y in 0..h {
+        for x in 0..w {
+            // Textured background gradient.
+            let gx = x as f64 / w as f64;
+            let gy = y as f64 / h as f64;
+            let tex = 0.08 * ((x as f64 * 0.9).sin() * (y as f64 * 0.7).cos());
+            let inside = shape_test(shape, x as f64 - cx, y as f64 - cy, size, angle);
+            let base = if inside { fg } else { bg };
+            let shade = if inside { 1.0 } else { 0.55 + 0.45 * (gx * 0.5 + gy * 0.5) };
+            for c in 0..3 {
+                let v = (base[c] as f64 * shade + tex + r.normal() * 0.02).clamp(0.0, 1.0);
+                img.set(x, y, c, (v * 255.0) as u8);
+            }
+        }
+    }
+    img
+}
+
+fn shape_test(shape: i32, dx: f64, dy: f64, size: f64, angle: f64) -> bool {
+    let (s, c) = angle.sin_cos();
+    let rx = dx * c - dy * s;
+    let ry = dx * s + dy * c;
+    match shape {
+        0 => rx * rx + ry * ry < size * size, // disc
+        1 => rx.abs() < size && ry.abs() < size * 0.7, // rectangle
+        2 => rx.abs() + ry.abs() < size * 1.2, // diamond
+        3 => ry > -size * 0.8 && ry < size * 0.8 && (rx / 3.0).sin() > 0.0, // stripes
+        _ => (rx * rx + ry * ry).sqrt() < size && ry < 0.25 * size, // half disc
+    }
+}
+
+/// Photographic-statistics images for Quant (Kodak stand-in): smooth
+/// background gradients + soft colour blobs + a few hard edges + noise.
+pub fn kodak_like(n: usize, w: usize, h: usize, seed: u64) -> Vec<Image> {
+    let mut r = Rng::new(seed ^ 0x0dacbeef);
+    (0..n)
+        .map(|i| {
+            let mut img = Image::new(w, h, 3, i as i32);
+            // Background gradient anchors.
+            let c0: Vec<f64> = (0..3).map(|_| r.f64()).collect();
+            let c1: Vec<f64> = (0..3).map(|_| r.f64()).collect();
+            // 6 colour blobs.
+            let blobs: Vec<(f64, f64, f64, [f64; 3])> = (0..6)
+                .map(|_| {
+                    (
+                        r.f64() * w as f64,
+                        r.f64() * h as f64,
+                        (0.08 + 0.2 * r.f64()) * w as f64,
+                        [r.f64(), r.f64(), r.f64()],
+                    )
+                })
+                .collect();
+            // One hard vertical edge.
+            let edge_x = (0.3 + 0.4 * r.f64()) * w as f64;
+            for y in 0..h {
+                for x in 0..w {
+                    let t = (x as f64 / w as f64 + y as f64 / h as f64) / 2.0;
+                    for c in 0..3 {
+                        let mut v = c0[c] * (1.0 - t) + c1[c] * t;
+                        for (bx, by, br, col) in &blobs {
+                            let d2 = (x as f64 - bx).powi(2) + (y as f64 - by).powi(2);
+                            let wgt = (-d2 / (2.0 * br * br)).exp();
+                            v = v * (1.0 - wgt) + col[c] * wgt;
+                        }
+                        if (x as f64) > edge_x {
+                            v *= 0.7;
+                        }
+                        v += r.normal() * 0.015;
+                        img.set(x, y, c, (v.clamp(0.0, 1.0) * 255.0) as u8);
+                    }
+                }
+            }
+            img
+        })
+        .collect()
+}
+
+/// Gallery/probe split of the face corpus: the *same* identities, with
+/// disjoint per-sample variation (illumination/noise), as in the Yale
+/// protocol. Returns (train, test).
+pub fn faces_split(
+    identities: usize,
+    train_per: usize,
+    test_per: usize,
+    seed: u64,
+) -> (Vec<Image>, Vec<Image>) {
+    let all = faces(identities, train_per + test_per, seed);
+    let mut train = Vec::with_capacity(identities * train_per);
+    let mut test = Vec::with_capacity(identities * test_per);
+    for (i, img) in all.into_iter().enumerate() {
+        if i % (train_per + test_per) < train_per {
+            train.push(img);
+        } else {
+            test.push(img);
+        }
+    }
+    (train, test)
+}
+
+/// Face-like 24×24 grayscale corpus (Yale stand-in): a shared base face,
+/// per-identity geometry offsets, per-sample illumination + noise.
+pub fn faces(identities: usize, per_identity: usize, seed: u64) -> Vec<Image> {
+    let mut r = Rng::new(seed ^ 0xFACE);
+    let (w, h) = (24usize, 24usize);
+    // Per-identity parameters.
+    let params: Vec<[f64; 6]> = (0..identities)
+        .map(|_| {
+            [
+                r.normal() * 1.6,  // eye spacing
+                r.normal() * 1.2,  // eye height
+                r.normal() * 1.6,  // mouth width
+                r.normal() * 1.2,  // mouth height
+                r.normal() * 0.9,  // face width
+                r.normal() * 0.8,  // brow
+            ]
+        })
+        .collect();
+    let mut out = Vec::with_capacity(identities * per_identity);
+    for (id, p) in params.iter().enumerate() {
+        for _ in 0..per_identity {
+            let mut img = Image::new(w, h, 1, id as i32);
+            let light = 0.88 + 0.12 * r.f64(); // illumination variation
+            let lx = r.normal() * 0.15;
+            for y in 0..h {
+                for x in 0..w {
+                    let dx = x as f64 - 11.5;
+                    let dy = y as f64 - 11.5;
+                    // Face oval.
+                    let face = dx * dx / (60.0 + 8.0 * p[4]) + dy * dy / 90.0;
+                    let mut v = if face < 1.0 { 0.75 } else { 0.12 };
+                    // Eyes.
+                    let es = 4.0 + p[0];
+                    let ey = -3.0 + p[1];
+                    for ex in [-es, es] {
+                        let d2 = (dx - ex).powi(2) + (dy - ey).powi(2);
+                        if d2 < 2.4 {
+                            v = 0.08;
+                        }
+                    }
+                    // Brow line.
+                    if dy > ey - 2.8 - p[5] && dy < ey - 1.8 - p[5] && dx.abs() < es + 1.6 {
+                        v *= 0.55;
+                    }
+                    // Mouth.
+                    let mw = 4.0 + p[2];
+                    let my = 5.0 + p[3];
+                    if dx.abs() < mw && (dy - my).abs() < 1.0 {
+                        v = 0.2;
+                    }
+                    // Nose shadow.
+                    if dx.abs() < 0.9 && dy > -1.0 && dy < 3.0 {
+                        v *= 0.8;
+                    }
+                    let shade = light * (1.0 + lx * dx / 12.0);
+                    let v = (v * shade + r.normal() * 0.02).clamp(0.0, 1.0);
+                    img.set(x, y, 0, (v * 255.0) as u8);
+                }
+            }
+            out.push(img);
+        }
+    }
+    out
+}
+
+/// Sparse 28×28 grayscale corpus (Fashion-MNIST stand-in): a centered
+/// silhouette per class, background exactly 0 — preserving the zero-heavy
+/// access pattern §VII-A5 selected FMNIST for.
+pub fn fmnist_like(n: usize, seed: u64) -> Vec<Image> {
+    let mut r = Rng::new(seed ^ 0xF817);
+    (0..n)
+        .map(|i| {
+            let label = (i % NUM_CLASSES) as i32;
+            let mut img = Image::new(28, 28, 1, label);
+            let jx = r.normal() * 1.2;
+            let jy = r.normal() * 1.2;
+            let scale = 1.0 + r.normal() * 0.08;
+            for y in 0..28 {
+                for x in 0..28 {
+                    let dx = (x as f64 - 14.0 - jx) / scale;
+                    let dy = (y as f64 - 14.0 - jy) / scale;
+                    if silhouette(label, dx, dy) {
+                        let v = 0.55 + 0.4 * r.f64();
+                        img.set(x, y, 0, (v * 255.0) as u8);
+                    }
+                }
+            }
+            img
+        })
+        .collect()
+}
+
+fn silhouette(label: i32, dx: f64, dy: f64) -> bool {
+    match label % 10 {
+        0 => dx.abs() < 6.0 && dy.abs() < 9.0,                       // shirt body
+        1 => dx.abs() < 3.5 && dy.abs() < 10.0,                      // trouser
+        2 => dx.abs() < 7.0 - dy * 0.3 && dy.abs() < 8.0,            // pullover
+        3 => dx.abs() < 4.0 + dy * 0.35 && dy.abs() < 10.0,          // dress
+        4 => dx.abs() < 8.0 && dy.abs() < 6.0,                       // coat
+        5 => dy > 2.0 && dy < 7.0 && dx.abs() < 9.0 - (dy - 4.0),    // sandal
+        6 => dx.abs() < 5.5 && dy.abs() < 9.5 && dx.abs() + dy.abs() > 2.0, // open shirt
+        7 => dy > 0.0 && dy < 6.5 && dx.abs() < 8.5,                 // sneaker
+        8 => dx.abs() < 6.5 && dy.abs() < 7.0 && !(dx.abs() < 2.0 && dy < -2.0), // bag
+        _ => dy > -2.0 && dy < 7.0 && dx.abs() < 4.0 + (dy > 4.0) as i32 as f64 * 4.0, // boot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_images_deterministic_and_labeled() {
+        let a = synth_images(20, 7);
+        let b = synth_images(20, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        for (i, img) in a.iter().enumerate() {
+            assert_eq!(img.label, (i % NUM_CLASSES) as i32);
+            assert_eq!(img.data.len(), 32 * 32 * 3);
+        }
+        // Different seeds differ.
+        assert_ne!(a, synth_images(20, 8));
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean pixel distance between two classes should exceed the
+        // within-class distance (sanity that a classifier can learn).
+        let imgs = synth_images(40, 9);
+        let dist = |a: &Image, b: &Image| -> f64 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| ((x as f64) - (y as f64)).abs())
+                .sum::<f64>()
+                / a.data.len() as f64
+        };
+        let within = dist(&imgs[0], &imgs[10]); // same class (label 0)
+        let between = dist(&imgs[0], &imgs[15]); // class 0 vs 5 (other palette)
+        assert!(between > within, "between {between} within {within}");
+    }
+
+    #[test]
+    fn fmnist_like_is_sparse() {
+        let imgs = fmnist_like(50, 11);
+        let zeros: usize = imgs
+            .iter()
+            .flat_map(|i| i.data.iter())
+            .filter(|&&b| b == 0)
+            .count();
+        let total: usize = imgs.iter().map(|i| i.data.len()).sum();
+        let frac = zeros as f64 / total as f64;
+        assert!(frac > 0.5, "zero fraction {frac} too low for FMNIST-like");
+    }
+
+    #[test]
+    fn faces_split_shares_identities() {
+        let (train, test) = faces_split(4, 3, 2, 21);
+        assert_eq!(train.len(), 12);
+        assert_eq!(test.len(), 8);
+        assert_eq!(train[0].label, 0);
+        assert_eq!(test[0].label, 0);
+        assert_eq!(test[7].label, 3);
+        // Same identity, different samples.
+        assert_ne!(train[0].data, test[0].data);
+    }
+
+    #[test]
+    fn faces_group_by_identity() {
+        let fs = faces(4, 3, 13);
+        assert_eq!(fs.len(), 12);
+        let dist = |a: &Image, b: &Image| -> f64 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| ((x as f64) - (y as f64)).powi(2))
+                .sum::<f64>()
+        };
+        // Same identity closer than different identity, on average.
+        let same = dist(&fs[0], &fs[1]) + dist(&fs[3], &fs[4]);
+        let diff = dist(&fs[0], &fs[3]) + dist(&fs[3], &fs[6]);
+        assert!(same < diff, "same {same} diff {diff}");
+    }
+
+    #[test]
+    fn kodak_like_has_smooth_and_edge_regions() {
+        let img = &kodak_like(1, 64, 48, 17)[0];
+        // Neighbouring-pixel deltas: mostly small (smooth) but some large.
+        let mut small = 0;
+        let mut large = 0;
+        for y in 0..48 {
+            for x in 1..64 {
+                let d = (img.at(x, y, 0) as i32 - img.at(x - 1, y, 0) as i32).abs();
+                if d < 8 {
+                    small += 1;
+                } else if d > 24 {
+                    large += 1;
+                }
+            }
+        }
+        assert!(small > 1500, "smooth pixels {small}");
+        assert!(large > 5, "edge pixels {large}");
+    }
+
+    #[test]
+    fn pnm_header() {
+        let img = Image::new(4, 2, 3, 0);
+        let pnm = img.to_pnm();
+        assert!(pnm.starts_with(b"P6\n4 2\n255\n"));
+        assert_eq!(pnm.len(), 11 + 24);
+    }
+
+    #[test]
+    fn to_f32_normalizes() {
+        let mut img = Image::new(2, 1, 1, 0);
+        img.set(0, 0, 0, 255);
+        img.set(1, 0, 0, 0);
+        assert_eq!(img.to_f32(), vec![1.0, 0.0]);
+    }
+}

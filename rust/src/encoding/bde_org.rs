@@ -1,0 +1,168 @@
+//! BDE_ORG — the original Bitwise Difference Coder (Seol et al. [14]),
+//! paper Algorithm 1.
+//!
+//! * MSE search over the data table; if `hamming(data)` >
+//!   `hamming(data XOR mse)` the xor is sent plus the MSE's binary index
+//!   on the dedicated index line; otherwise raw data is sent.
+//! * The index line carries an address in *both* branches ("the index
+//!   lines send the address", §III) — in the raw branch it is the slot
+//!   the receiver must update, which is what drags BDE_ORG's sideband
+//!   energy up and makes it lose to DBI in Fig. 10.
+//! * Table update: only on raw (unencoded) transfers, per Algorithm 1's
+//!   `else` branch — the "not updated regularly" behaviour §VIII-B blames
+//!   for its weakness on uniform workloads like Eigen.
+
+use super::config::Scheme;
+use super::data_table::DataTable;
+use super::stats::Outcome;
+use super::wire::WireWord;
+use super::{ChipDecoder, ChipEncoder};
+
+pub struct BdeOrgEncoder {
+    table: DataTable,
+}
+
+impl BdeOrgEncoder {
+    pub fn new(table_size: usize) -> Self {
+        BdeOrgEncoder {
+            table: DataTable::new(table_size),
+        }
+    }
+
+    /// Slot the next raw word will occupy (FIFO head) — driven on the
+    /// index line in the raw branch so the mirror updates the same slot.
+    fn next_slot(&self) -> usize {
+        self.table.next_slot()
+    }
+}
+
+impl ChipEncoder for BdeOrgEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        if let Some(hit) = self.table.most_similar(word) {
+            let xored = word ^ hit.entry;
+            if word.count_ones() > xored.count_ones() {
+                // Encoded branch: xor on data lines, MSE index sideband.
+                return WireWord {
+                    data: xored,
+                    dbi_mask: 0,
+                    index_line: hit.index as u8,
+                    index_used: true,
+                    outcome: Outcome::Bde,
+                };
+            }
+        }
+        // Raw branch: data as-is, write-slot address on the index line,
+        // table updated (FIFO) on both sides.
+        let slot = self.next_slot();
+        self.table.push(word);
+        WireWord {
+            data: word,
+            dbi_mask: 0,
+            index_line: slot as u8,
+            index_used: true,
+            outcome: if word == 0 { Outcome::ZeroSkip } else { Outcome::Raw },
+        }
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::BdeOrg
+    }
+
+    fn reset(&mut self) {
+        self.table.reset();
+    }
+}
+
+pub struct BdeOrgDecoder {
+    table: DataTable,
+}
+
+impl BdeOrgDecoder {
+    pub fn new(table_size: usize) -> Self {
+        BdeOrgDecoder {
+            table: DataTable::new(table_size),
+        }
+    }
+}
+
+impl ChipDecoder for BdeOrgDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        match wire.outcome {
+            Outcome::Bde => {
+                let entry = self.table.get(wire.index_line as usize);
+                wire.data ^ entry
+            }
+            _ => {
+                // Raw/zero: mirror the FIFO update.
+                self.table.push(wire.data);
+                wire.data
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.table.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn round_trip(words: &[u64]) {
+        let mut e = BdeOrgEncoder::new(64);
+        let mut d = BdeOrgDecoder::new(64);
+        for &w in words {
+            let wire = e.encode(w, true);
+            assert_eq!(d.decode(&wire), w);
+        }
+    }
+
+    #[test]
+    fn lossless_on_random_stream() {
+        let mut r = Rng::new(31);
+        let words: Vec<u64> = (0..2000).map(|_| r.next_u64()).collect();
+        round_trip(&words);
+    }
+
+    #[test]
+    fn lossless_on_similar_stream() {
+        let mut r = Rng::new(32);
+        let base = r.next_u64();
+        let words: Vec<u64> = (0..2000).map(|_| base ^ (1 << r.below(64))).collect();
+        round_trip(&words);
+    }
+
+    #[test]
+    fn encodes_repeat_as_low_weight() {
+        let mut e = BdeOrgEncoder::new(64);
+        let w = 0xFFFF_FFFF_0000_0000;
+        let first = e.encode(w, true);
+        assert_eq!(first.outcome, Outcome::Raw);
+        let second = e.encode(w, true);
+        assert_eq!(second.outcome, Outcome::Bde);
+        assert_eq!(second.data, 0); // exact repeat xors to zero
+    }
+
+    #[test]
+    fn table_not_updated_on_encoded_transfers() {
+        let mut e = BdeOrgEncoder::new(64);
+        e.encode(0xFF00, true); // raw, stored
+        e.encode(0xFF01, true); // encoded against 0xFF00
+        // Third similar word should still match 0xFF00 (no new entry).
+        let wire = e.encode(0xFF02, true);
+        assert_eq!(wire.outcome, Outcome::Bde);
+        assert_eq!(wire.index_line, 0);
+        assert_eq!(wire.data, 0xFF00 ^ 0xFF02);
+    }
+
+    #[test]
+    fn index_line_driven_in_both_branches() {
+        let mut e = BdeOrgEncoder::new(64);
+        let raw = e.encode(0xABCD, true);
+        assert!(raw.index_used);
+        let enc = e.encode(0xABCF, true);
+        assert!(enc.index_used);
+    }
+}

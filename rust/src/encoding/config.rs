@@ -1,0 +1,319 @@
+//! Scheme taxonomy (paper Table I) and the ZAC-DEST configuration knobs.
+
+use crate::util::bits::{lsb_chunk_mask, msb_chunk_mask};
+
+/// Encoding schemes under evaluation (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Original unencoded data (baseline).
+    Org,
+    /// Dynamic Bus Inversion.
+    Dbi,
+    /// Original Bitwise Difference Coder (Seol et al., Algorithm 1).
+    BdeOrg,
+    /// Modified BD-Coder (the paper's stricter baseline, "BDE").
+    Bde,
+    /// ZAC-DEST one-hot skip encoding (Algorithm 2, includes DBI stage).
+    ZacDest,
+}
+
+impl Scheme {
+    /// Paper Table I label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Scheme::Org => "ORG",
+            Scheme::Dbi => "DBI",
+            Scheme::BdeOrg => "BDE_ORG",
+            Scheme::Bde => "BDE",
+            Scheme::ZacDest => "OHE",
+        }
+    }
+
+    /// Paper Table I description.
+    pub fn description(self) -> &'static str {
+        match self {
+            Scheme::Org => "Original Unencoded Data (Baseline)",
+            Scheme::Dbi => "Dynamic Bus Inversion",
+            Scheme::BdeOrg => "Original Bitwise Difference Coder",
+            Scheme::Bde => "Modified Bitwise Difference Coder",
+            Scheme::ZacDest => "One-Hot Encoding of ZAC-DEST",
+        }
+    }
+
+    /// All schemes, in Table I order.
+    pub fn all() -> [Scheme; 5] {
+        [
+            Scheme::ZacDest,
+            Scheme::BdeOrg,
+            Scheme::Bde,
+            Scheme::Dbi,
+            Scheme::Org,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_uppercase().as_str() {
+            "ORG" => Some(Scheme::Org),
+            "DBI" => Some(Scheme::Dbi),
+            "BDE_ORG" | "BDEORG" => Some(Scheme::BdeOrg),
+            "BDE" | "MBDC" => Some(Scheme::Bde),
+            "OHE" | "ZAC" | "ZAC-DEST" | "ZACDEST" | "ZAC_DEST" => Some(Scheme::ZacDest),
+            _ => None,
+        }
+    }
+}
+
+/// Full encoder configuration: scheme + the three ZAC-DEST knobs.
+///
+/// * **Similarity Limit** — % of the 64 bits that must match the most
+///   similar table entry for the skip-transfer to fire. Paper evaluates
+///   {90, 80, 75, 70} (⇒ at most {7, 13, 16, 20} dissimilar bits) for
+///   images and {70, 65, 60, 50} for weights.
+/// * **Truncation** — LSBs per chunk zeroed before comparison and
+///   reconstruction (removed from the transfer entirely).
+/// * **Tolerance** — MSBs per chunk that must match *exactly* for the
+///   skip to fire (protects sign/exponent-like bits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZacConfig {
+    pub scheme: Scheme,
+    /// Similarity limit in percent (50..=100). Only used by ZacDest.
+    pub similarity_limit_pct: u32,
+    /// Chunk width in bits: 8, 16, 32 or 64 (the data element width).
+    pub chunk_width: u32,
+    /// Tolerance bits per chunk (MSB side); paper circuit offers {0, W/8, W/4}.
+    pub tolerance_bits: u32,
+    /// Truncation bits per chunk (LSB side); {0, W/8, W/4}.
+    pub truncation_bits: u32,
+    /// Optional explicit tolerance mask overriding the per-chunk MSB rule
+    /// (used for IEEE-754 weights: sign+exponent bits, Fig. 19).
+    pub tolerance_mask_override: Option<u64>,
+    /// Data-table entries per chip (paper: 64).
+    pub table_size: usize,
+    /// Ablation knobs (paper defaults; the `ablation` harness flips them
+    /// to quantify each §IV/§V design choice).
+    pub ablation: Ablation,
+}
+
+/// Design-choice ablation switches (all `true`/paper-default normally).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ablation {
+    /// §IV-B: one-hot index on the data lines (false = binary index on
+    /// the sideband even for skips, as BD-Coder would do).
+    pub ohe_index: bool,
+    /// §V-A: all-zero words bypass encoding and the table.
+    pub zero_skip: bool,
+    /// §IV-A: update the table only with exact transfers, deduplicated
+    /// (false = BD-Coder's update-after-every-transfer FIFO policy).
+    pub dedup_update: bool,
+}
+
+impl Default for Ablation {
+    fn default() -> Self {
+        Ablation {
+            ohe_index: true,
+            zero_skip: true,
+            dedup_update: true,
+        }
+    }
+}
+
+impl Default for ZacConfig {
+    fn default() -> Self {
+        ZacConfig {
+            scheme: Scheme::ZacDest,
+            similarity_limit_pct: 80,
+            chunk_width: 8,
+            tolerance_bits: 0,
+            truncation_bits: 0,
+            tolerance_mask_override: None,
+            table_size: 64,
+            ablation: Ablation::default(),
+        }
+    }
+}
+
+impl ZacConfig {
+    /// Plain configuration for a non-ZAC scheme.
+    pub fn scheme(scheme: Scheme) -> Self {
+        ZacConfig {
+            scheme,
+            ..Default::default()
+        }
+    }
+
+    /// ZAC-DEST with a similarity limit (knobs at 0).
+    pub fn zac(similarity_limit_pct: u32) -> Self {
+        ZacConfig {
+            scheme: Scheme::ZacDest,
+            similarity_limit_pct,
+            ..Default::default()
+        }
+    }
+
+    /// ZAC-DEST with all three knobs (chunk width 8, byte data).
+    pub fn zac_full(limit_pct: u32, truncation_bits: u32, tolerance_bits: u32) -> Self {
+        ZacConfig {
+            scheme: Scheme::ZacDest,
+            similarity_limit_pct: limit_pct,
+            truncation_bits,
+            tolerance_bits,
+            ..Default::default()
+        }
+    }
+
+    /// ZAC-DEST configured for IEEE-754 f32 weight traffic: 32-bit chunks
+    /// with sign+exponent (top 9 bits of each float) as the tolerance mask
+    /// (§VIII-G: approximating even the last exponent bit costs ~60%
+    /// output quality, so those bits are always pinned).
+    pub fn zac_weights(limit_pct: u32) -> Self {
+        ZacConfig {
+            scheme: Scheme::ZacDest,
+            similarity_limit_pct: limit_pct,
+            chunk_width: 32,
+            tolerance_mask_override: Some(msb_chunk_mask(32, 9)),
+            ..Default::default()
+        }
+    }
+
+    /// Maximum number of dissimilar bits for the skip to fire:
+    /// `ceil(64 * (100 - limit) / 100)`. Reproduces the paper's mapping
+    /// 90→7, 80→13, 75→16, 70→20 (strict `<` comparison in Alg. 2).
+    pub fn dissimilar_threshold(&self) -> u32 {
+        let num = 64 * (100 - self.similarity_limit_pct);
+        num.div_ceil(100).max(1)
+    }
+
+    /// Effective tolerance mask (bits that must match exactly).
+    pub fn tolerance_mask(&self) -> u64 {
+        if let Some(m) = self.tolerance_mask_override {
+            return m;
+        }
+        msb_chunk_mask(self.chunk_width, self.tolerance_bits)
+    }
+
+    /// Truncation mask (bits zeroed / excluded from comparison).
+    pub fn truncation_mask(&self) -> u64 {
+        lsb_chunk_mask(self.chunk_width, self.truncation_bits)
+    }
+
+    /// Total truncated bits per 64-bit word.
+    pub fn truncated_bits_total(&self) -> u32 {
+        self.truncation_mask().count_ones()
+    }
+
+    /// Validate invariants (chunk sizes, knob ranges, mask disjointness).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(self.chunk_width, 8 | 16 | 32 | 64),
+            "chunk_width must be 8/16/32/64, got {}",
+            self.chunk_width
+        );
+        anyhow::ensure!(
+            (50..=100).contains(&self.similarity_limit_pct),
+            "similarity limit {}% out of range [50,100]",
+            self.similarity_limit_pct
+        );
+        anyhow::ensure!(
+            self.tolerance_bits + self.truncation_bits <= self.chunk_width,
+            "tolerance {} + truncation {} exceed chunk width {}",
+            self.tolerance_bits,
+            self.truncation_bits,
+            self.chunk_width
+        );
+        anyhow::ensure!(
+            self.table_size > 0 && self.table_size <= 64,
+            "table_size {} out of range (OHE index must fit 64 data lines)",
+            self.table_size
+        );
+        anyhow::ensure!(
+            self.tolerance_mask() & self.truncation_mask() == 0,
+            "tolerance and truncation masks overlap"
+        );
+        Ok(())
+    }
+
+    /// Short config label for figure legends, e.g. `ZAC(L80,T16,O8)`.
+    pub fn label(&self) -> String {
+        match self.scheme {
+            Scheme::ZacDest => format!(
+                "ZAC(L{},T{},O{})",
+                self.similarity_limit_pct,
+                self.truncated_bits_total(),
+                self.tolerance_mask().count_ones()
+            ),
+            s => s.label().to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_similarity_thresholds() {
+        // §V-B: 90/80/75/70 % ⇒ 7/13/16/20 dissimilar bits.
+        for (pct, thr) in [(90, 7), (80, 13), (75, 16), (70, 20)] {
+            assert_eq!(ZacConfig::zac(pct).dissimilar_threshold(), thr, "{pct}%");
+        }
+        // §VIII-G weight limits.
+        for (pct, thr) in [(65, 23), (60, 26), (50, 32)] {
+            assert_eq!(ZacConfig::zac(pct).dissimilar_threshold(), thr, "{pct}%");
+        }
+    }
+
+    #[test]
+    fn weight_config_pins_sign_exponent() {
+        let cfg = ZacConfig::zac_weights(70);
+        let m = cfg.tolerance_mask();
+        // Top 9 bits of each 32-bit lane: sign + 8 exponent bits.
+        assert_eq!(m, 0xFF80_0000_FF80_0000);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let mut cfg = ZacConfig::default();
+        cfg.chunk_width = 12;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ZacConfig::default();
+        cfg.tolerance_bits = 6;
+        cfg.truncation_bits = 4;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ZacConfig::default();
+        cfg.table_size = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn paper_knob_grid_is_valid() {
+        for limit in [90, 80, 75, 70] {
+            for chunk in [8u32, 16, 32, 64] {
+                for tol in [0, chunk / 8, chunk / 4] {
+                    for trunc in [0, chunk / 8, chunk / 4] {
+                        let cfg = ZacConfig {
+                            scheme: Scheme::ZacDest,
+                            similarity_limit_pct: limit,
+                            chunk_width: chunk,
+                            tolerance_bits: tol,
+                            truncation_bits: trunc,
+                            tolerance_mask_override: None,
+                            table_size: 64,
+                            ablation: Ablation::default(),
+                        };
+                        cfg.validate().unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_parse_round_trip() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::parse(s.label()), Some(s));
+        }
+        assert_eq!(Scheme::parse("zac-dest"), Some(Scheme::ZacDest));
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+}

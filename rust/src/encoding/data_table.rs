@@ -1,0 +1,216 @@
+//! The BD-Coder / ZAC-DEST data table: a software model of the NOR-CAM
+//! of Fig. 6 (64 entries × 64 bits per DRAM chip, mirrored at the
+//! memory controller).
+//!
+//! Hardware correspondence:
+//! * `most_similar` = the CAM search phase (SL/SL' compare + replica-row
+//!   hamming count); ties resolve to the lowest slot index, as a
+//!   priority encoder would.
+//! * `contains` = the exact-match CAM lookup MBDC uses to keep entries
+//!   unique.
+//! * `push` = FIFO write via BL/BL' (round-robin replacement, matching
+//!   BD-Coder's update behaviour).
+
+/// Fixed-capacity FIFO CAM model.
+#[derive(Clone, Debug)]
+pub struct DataTable {
+    entries: Vec<u64>,
+    /// Next slot to overwrite (round-robin FIFO).
+    head: usize,
+    /// Number of valid entries (≤ capacity).
+    len: usize,
+}
+
+/// Result of a most-similar-entry search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchHit {
+    /// Slot index of the most similar entry (wire index).
+    pub index: usize,
+    /// The stored word.
+    pub entry: u64,
+    /// Hamming distance to the query.
+    pub distance: u32,
+}
+
+impl DataTable {
+    /// An empty table with `capacity` slots (paper: 64).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        DataTable {
+            entries: vec![0; capacity],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The FIFO slot the next `push` will write (wire-visible write
+    /// address in BDE_ORG's raw branch).
+    pub fn next_slot(&self) -> usize {
+        self.head
+    }
+
+    /// Entry at a wire index (panics if out of the valid range — the
+    /// decoder can only receive indices the encoder produced).
+    pub fn get(&self, index: usize) -> u64 {
+        debug_assert!(index < self.len, "index {index} >= len {}", self.len);
+        self.entries[index]
+    }
+
+    /// CAM search: the valid entry with minimum hamming distance to
+    /// `word`; ties resolve to the lowest index. `None` when empty.
+    ///
+    /// Hot path: the (distance, index) pair is packed as
+    /// `distance * 256 + index`, so a single branchless `min` (cmov)
+    /// yields both the minimum distance *and* the lowest-index
+    /// tie-break; the XOR+POPCNT per entry pipelines with no
+    /// data-dependent branches in the loop.
+    #[inline]
+    pub fn most_similar(&self, word: u64) -> Option<SearchHit> {
+        if self.len == 0 {
+            return None;
+        }
+        debug_assert!(self.entries.len() <= 256, "packed key assumes index < 256");
+        let mut best_key = u32::MAX;
+        for (i, &e) in self.entries[..self.len].iter().enumerate() {
+            let key = ((e ^ word).count_ones() << 8) | i as u32;
+            best_key = best_key.min(key);
+        }
+        let index = (best_key & 0xFF) as usize;
+        Some(SearchHit {
+            index,
+            entry: self.entries[index],
+            distance: best_key >> 8,
+        })
+    }
+
+    /// Exact-match CAM lookup.
+    pub fn contains(&self, word: u64) -> bool {
+        self.entries[..self.len].contains(&word)
+    }
+
+    /// FIFO insert (BD-Coder update policy: overwrite the oldest slot).
+    pub fn push(&mut self, word: u64) {
+        self.entries[self.head] = word;
+        self.head = (self.head + 1) % self.entries.len();
+        self.len = (self.len + 1).min(self.entries.len());
+    }
+
+    /// Insert only if not already present (MBDC dedup policy, §IV-A).
+    /// Returns true if inserted.
+    pub fn push_unique(&mut self, word: u64) -> bool {
+        if self.contains(word) {
+            return false;
+        }
+        self.push(word);
+        true
+    }
+
+    /// Clear all entries.
+    pub fn reset(&mut self) {
+        self.head = 0;
+        self.len = 0;
+    }
+
+    /// Valid entries in slot order (for the L2 `trace_screen` bridge and
+    /// the figure harness).
+    pub fn snapshot(&self) -> &[u64] {
+        &self.entries[..self.len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_table_has_no_hit() {
+        assert!(DataTable::new(4).most_similar(123).is_none());
+    }
+
+    #[test]
+    fn finds_exact_then_nearest() {
+        let mut t = DataTable::new(8);
+        t.push(0xFF);
+        t.push(0x0F);
+        let h = t.most_similar(0x0F).unwrap();
+        assert_eq!((h.index, h.distance), (1, 0));
+        let h = t.most_similar(0x1F).unwrap();
+        assert_eq!(h.entry, 0x0F);
+        assert_eq!(h.distance, 1);
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_index() {
+        let mut t = DataTable::new(4);
+        t.push(0b0001); // distance 1 from 0b0000
+        t.push(0b0010); // also distance 1
+        let h = t.most_similar(0).unwrap();
+        assert_eq!(h.index, 0);
+    }
+
+    #[test]
+    fn fifo_overwrites_oldest() {
+        let mut t = DataTable::new(2);
+        t.push(1);
+        t.push(2);
+        t.push(3); // evicts 1
+        assert!(!t.contains(1));
+        assert!(t.contains(2) && t.contains(3));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn push_unique_dedups() {
+        let mut t = DataTable::new(4);
+        assert!(t.push_unique(7));
+        assert!(!t.push_unique(7));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn search_matches_naive_reference() {
+        let mut r = Rng::new(9);
+        let mut t = DataTable::new(64);
+        for _ in 0..64 {
+            t.push(r.next_u64());
+        }
+        for _ in 0..500 {
+            let q = r.next_u64();
+            let hit = t.most_similar(q).unwrap();
+            // Naive argmin with lowest-index ties.
+            let (mut bi, mut bd) = (0usize, u32::MAX);
+            for (i, &e) in t.snapshot().iter().enumerate() {
+                let d = (e ^ q).count_ones();
+                if d < bd {
+                    bd = d;
+                    bi = i;
+                }
+            }
+            assert_eq!((hit.index, hit.distance), (bi, bd));
+        }
+    }
+
+    #[test]
+    fn get_returns_pushed_value() {
+        let mut t = DataTable::new(64);
+        for i in 0..10u64 {
+            t.push(i * 1000);
+        }
+        for i in 0..10usize {
+            assert_eq!(t.get(i), i as u64 * 1000);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! DBI — Dynamic Bus Inversion at 8-bit granularity (Stan & Burleson).
+//!
+//! Per beat (byte): if more than 4 of the 8 bits are 1, the byte is
+//! inverted and the chip's DBI line is asserted for that beat, so at most
+//! four 1s ever cross the data lines per beat (§III).
+
+use super::config::Scheme;
+use super::stats::Outcome;
+use super::wire::WireWord;
+use super::{ChipDecoder, ChipEncoder};
+
+/// Apply DBI to a 64-bit transfer: returns (encoded word, per-beat mask).
+///
+/// Branchless SWAR: per-byte popcounts land one count per byte, a
+/// `+3 / bit-3` trick flags bytes with more than four 1s, and the flags
+/// expand to full-byte inversion masks with a carry-free multiply.
+#[inline]
+pub fn dbi_encode(word: u64) -> (u64, u8) {
+    // Per-byte popcount (each byte of `v` = ones in that byte of word).
+    let mut v = word - ((word >> 1) & 0x5555_5555_5555_5555);
+    v = (v & 0x3333_3333_3333_3333) + ((v >> 2) & 0x3333_3333_3333_3333);
+    v = (v + (v >> 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    // count > 4  <=>  count + 3 >= 8  <=>  bit 3 of (count + 3).
+    let flags = (v.wrapping_add(0x0303_0303_0303_0303) & 0x0808_0808_0808_0808) >> 3;
+    // Expand 0/1 byte flags to 0x00/0xFF (255 * flag never carries).
+    let invert = flags.wrapping_mul(0xFF);
+    // Gather each byte's flag bit into one u8 (bit b = beat b).
+    let mask = (flags.wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8;
+    (word ^ invert, mask)
+}
+
+/// Invert the beats flagged in `mask` (the decoder side).
+#[inline]
+pub fn dbi_decode(word: u64, mask: u8) -> u64 {
+    // Replicate the mask into every byte, isolate bit b in byte b
+    // (power-of-two residue), then saturate any nonzero byte to 0xFF.
+    let replicated = (mask as u64).wrapping_mul(0x0101_0101_0101_0101);
+    let residue = replicated & 0x8040_2010_0804_0201;
+    let high = residue.wrapping_add(0x7F7F_7F7F_7F7F_7F7F) & 0x8080_8080_8080_8080;
+    word ^ (high >> 7).wrapping_mul(0xFF)
+}
+
+/// Standalone DBI encoder (Table I row "DBI").
+#[derive(Default)]
+pub struct DbiEncoder;
+
+impl DbiEncoder {
+    pub fn new() -> Self {
+        DbiEncoder
+    }
+}
+
+impl ChipEncoder for DbiEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        let (data, mask) = dbi_encode(word);
+        WireWord {
+            data,
+            dbi_mask: mask,
+            index_line: 0,
+            index_used: false,
+            outcome: if word == 0 { Outcome::ZeroSkip } else { Outcome::Raw },
+        }
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::Dbi
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Standalone DBI decoder.
+#[derive(Default)]
+pub struct DbiDecoder;
+
+impl DbiDecoder {
+    pub fn new() -> Self {
+        DbiDecoder
+    }
+}
+
+impl ChipDecoder for DbiDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        dbi_decode(wire.data, wire.dbi_mask)
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_random() {
+        let mut r = Rng::new(21);
+        for _ in 0..1000 {
+            let w = r.next_u64();
+            let (enc, mask) = dbi_encode(w);
+            assert_eq!(dbi_decode(enc, mask), w);
+        }
+    }
+
+    #[test]
+    fn at_most_four_ones_per_byte() {
+        let mut r = Rng::new(22);
+        for _ in 0..1000 {
+            let w = r.next_u64();
+            let (enc, _) = dbi_encode(w);
+            for beat in 0..8 {
+                let byte = ((enc >> (beat * 8)) & 0xFF) as u8;
+                assert!(byte.count_ones() <= 4, "byte {byte:08b}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_increases_total_ones_including_dbi_line() {
+        let mut r = Rng::new(23);
+        for _ in 0..1000 {
+            let w = r.next_u64();
+            let (enc, mask) = dbi_encode(w);
+            // Inversion fires only for >4 ones: 8-k+1 <= k for k >= 5.
+            assert!(enc.count_ones() + mask.count_ones() <= w.count_ones().max(4 * 8));
+            for beat in 0..8 {
+                let orig = ((w >> (beat * 8)) & 0xFF) as u8;
+                let new = ((enc >> (beat * 8)) & 0xFF) as u8;
+                let cost = new.count_ones() + ((mask >> beat) & 1) as u32;
+                assert!(cost <= orig.count_ones().max(4));
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_inverts_everywhere() {
+        let (enc, mask) = dbi_encode(u64::MAX);
+        assert_eq!(enc, 0);
+        assert_eq!(mask, 0xFF);
+    }
+
+    #[test]
+    fn exactly_four_ones_does_not_invert() {
+        let (enc, mask) = dbi_encode(0x0F); // 4 ones in beat 0
+        assert_eq!(enc, 0x0F);
+        assert_eq!(mask, 0);
+    }
+}

@@ -1,0 +1,185 @@
+//! The paper's contribution: DRAM-channel data-encoding engines.
+//!
+//! Five schemes (paper Table I):
+//!
+//! | scheme    | module       | paper name |
+//! |-----------|--------------|------------|
+//! | `ORG`     | [`org`]      | original unencoded data (baseline) |
+//! | `DBI`     | [`dbi`]      | Dynamic Bus Inversion |
+//! | `BDE_ORG` | [`bde_org`]  | original Bitwise Difference Coder (Alg. 1) |
+//! | `BDE`     | [`mbdc`]     | Modified BD-Coder (zero bypass, index-aware condition, dedup table) |
+//! | `OHE`     | [`zac_dest`] | ZAC-DEST (Alg. 2: skip-transfer + one-hot index + DBI) |
+//!
+//! All encoders operate at the hardware granularity: one 64-bit word per
+//! DRAM chip per cache-line transfer (8 chips × 64 bits = one 64 B line),
+//! mirrored tables at sender (DRAM) and receiver (memory controller).
+
+pub mod bde_org;
+pub mod config;
+pub mod data_table;
+pub mod dbi;
+pub mod mbdc;
+pub mod org;
+pub mod stats;
+pub mod wire;
+pub mod zac_dest;
+
+pub use config::{Scheme, ZacConfig};
+pub use data_table::DataTable;
+pub use stats::{EncodeStats, Outcome};
+pub use wire::WireWord;
+
+use crate::channel::ChipChannel;
+
+/// One DRAM chip's encoder: turns a 64-bit word into what is driven on
+/// the wires. `approx` is the per-access error-resilience hint (false for
+/// instruction/critical traffic — such words are never approximated).
+pub trait ChipEncoder: Send {
+    /// Encode one 64-bit word for transfer.
+    fn encode(&mut self, word: u64, approx: bool) -> WireWord;
+    /// Which scheme this encoder implements.
+    fn scheme(&self) -> Scheme;
+    /// Reset all internal state (tables, line history is channel-side).
+    fn reset(&mut self);
+}
+
+/// The matching memory-controller-side decoder. It sees exactly the
+/// wire-visible information (data lines + sideband flags/index) and keeps
+/// its own mirror of the data table.
+pub trait ChipDecoder: Send {
+    /// Reconstruct the received word (approximate under ZAC-DEST skips).
+    fn decode(&mut self, wire: &WireWord) -> u64;
+    fn reset(&mut self);
+}
+
+/// Construct the (encoder, decoder) pair for a scheme.
+pub fn make_codec(cfg: &ZacConfig) -> (Box<dyn ChipEncoder>, Box<dyn ChipDecoder>) {
+    match cfg.scheme {
+        Scheme::Org => (
+            Box::new(org::OrgEncoder::new()),
+            Box::new(org::OrgDecoder::new()),
+        ),
+        Scheme::Dbi => (
+            Box::new(dbi::DbiEncoder::new()),
+            Box::new(dbi::DbiDecoder::new()),
+        ),
+        Scheme::BdeOrg => (
+            Box::new(bde_org::BdeOrgEncoder::new(cfg.table_size)),
+            Box::new(bde_org::BdeOrgDecoder::new(cfg.table_size)),
+        ),
+        Scheme::Bde => (
+            Box::new(mbdc::MbdcEncoder::new(cfg.table_size)),
+            Box::new(mbdc::MbdcDecoder::new(cfg.table_size)),
+        ),
+        Scheme::ZacDest => (
+            Box::new(zac_dest::ZacDestEncoder::new(cfg.clone())),
+            Box::new(zac_dest::ZacDestDecoder::new(cfg.clone())),
+        ),
+    }
+}
+
+/// Convenience: run a word stream through one chip's encoder + channel +
+/// decoder, returning reconstructed words and accumulating stats/energy.
+pub fn run_chip_stream(
+    cfg: &ZacConfig,
+    words: &[u64],
+    approx: &[bool],
+    chan: &mut ChipChannel,
+    stats: &mut EncodeStats,
+) -> Vec<u64> {
+    assert_eq!(words.len(), approx.len());
+    let (mut enc, mut dec) = make_codec(cfg);
+    let mut out = Vec::with_capacity(words.len());
+    for (&w, &a) in words.iter().zip(approx) {
+        let wire = enc.encode(w, a);
+        chan.transmit(&wire);
+        stats.record(&wire, w);
+        out.push(dec.decode(&wire));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::ChipChannel;
+    use crate::util::rng::Rng;
+
+    fn stream(n: usize, seed: u64) -> Vec<u64> {
+        let mut r = Rng::new(seed);
+        // Locally-similar stream: random walk over a base word, plus zeros.
+        let mut base = r.next_u64();
+        (0..n)
+            .map(|i| {
+                if i % 17 == 0 {
+                    0
+                } else {
+                    if i % 5 == 0 {
+                        base = r.next_u64();
+                    }
+                    base ^ (1u64 << r.below(64)) // 1-bit neighbour
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_schemes_round_trip() {
+        let words = stream(500, 11);
+        let approx = vec![true; words.len()];
+        for scheme in [Scheme::Org, Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde] {
+            let cfg = ZacConfig::scheme(scheme);
+            let mut chan = ChipChannel::new();
+            let mut st = EncodeStats::default();
+            let got = run_chip_stream(&cfg, &words, &approx, &mut chan, &mut st);
+            assert_eq!(got, words, "{scheme:?} must be lossless");
+        }
+    }
+
+    #[test]
+    fn zac_dest_respects_similarity_envelope() {
+        let words = stream(500, 13);
+        let approx = vec![true; words.len()];
+        let cfg = ZacConfig::zac(80);
+        let mut chan = ChipChannel::new();
+        let mut st = EncodeStats::default();
+        let got = run_chip_stream(&cfg, &words, &approx, &mut chan, &mut st);
+        let thr = cfg.dissimilar_threshold();
+        for (g, w) in got.iter().zip(&words) {
+            let d = (g ^ w).count_ones();
+            assert!(d < thr, "reconstruction differs by {d} >= {thr}");
+        }
+        assert!(st.total() == words.len() as u64);
+    }
+
+    #[test]
+    fn non_approx_accesses_are_exact_under_zac() {
+        let words = stream(300, 17);
+        let approx = vec![false; words.len()];
+        let cfg = ZacConfig::zac(70);
+        let mut chan = ChipChannel::new();
+        let mut st = EncodeStats::default();
+        let got = run_chip_stream(&cfg, &words, &approx, &mut chan, &mut st);
+        assert_eq!(got, words);
+        assert_eq!(st.count(Outcome::OheSkip), 0);
+    }
+
+    #[test]
+    fn zac_beats_bde_on_energy_for_similar_stream() {
+        let words = stream(2000, 19);
+        let approx = vec![true; words.len()];
+        let mut e = Vec::new();
+        for cfg in [ZacConfig::scheme(Scheme::Bde), ZacConfig::zac(70)] {
+            let mut chan = ChipChannel::new();
+            let mut st = EncodeStats::default();
+            run_chip_stream(&cfg, &words, &approx, &mut chan, &mut st);
+            e.push(chan.energy().termination_ones);
+        }
+        assert!(
+            e[1] < e[0],
+            "zac {} should beat bde {} on this stream",
+            e[1],
+            e[0]
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! ORG — the unencoded baseline (paper Table I).
+
+use super::config::Scheme;
+use super::stats::Outcome;
+use super::wire::WireWord;
+use super::{ChipDecoder, ChipEncoder};
+
+/// Passthrough encoder: drives the word as-is, no sidebands.
+#[derive(Default)]
+pub struct OrgEncoder;
+
+impl OrgEncoder {
+    pub fn new() -> Self {
+        OrgEncoder
+    }
+}
+
+impl ChipEncoder for OrgEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        let mut w = WireWord::raw(word);
+        if word == 0 {
+            // Classified for stats only; the wire is identical.
+            w.outcome = Outcome::ZeroSkip;
+        }
+        w
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Passthrough decoder.
+#[derive(Default)]
+pub struct OrgDecoder;
+
+impl OrgDecoder {
+    pub fn new() -> Self {
+        OrgDecoder
+    }
+}
+
+impl ChipDecoder for OrgDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        wire.data
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_round_trip() {
+        let mut e = OrgEncoder::new();
+        let mut d = OrgDecoder::new();
+        for w in [0u64, 1, u64::MAX, 0xDEADBEEF_CAFEBABE] {
+            let wire = e.encode(w, true);
+            assert_eq!(wire.data, w);
+            assert_eq!(d.decode(&wire), w);
+            assert_eq!(wire.total_ones(), w.count_ones());
+        }
+    }
+}

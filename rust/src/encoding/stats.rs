@@ -1,0 +1,130 @@
+//! Per-stream encoding statistics (feeds Fig. 22 and the energy reports).
+
+use super::wire::WireWord;
+
+/// How a word went over the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Outcome {
+    /// All-zero word: transferred as zeros, nothing encoded (§V-A).
+    ZeroSkip,
+    /// ZAC-DEST skip: one-hot table address instead of data (§IV-B).
+    OheSkip,
+    /// Bitwise-difference encoded (BD-Coder / MBDC xor + index).
+    Bde,
+    /// Unencoded data on the data lines (possibly DBI-inverted).
+    Raw,
+}
+
+impl Outcome {
+    pub fn all() -> [Outcome; 4] {
+        [
+            Outcome::ZeroSkip,
+            Outcome::OheSkip,
+            Outcome::Bde,
+            Outcome::Raw,
+        ]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Outcome::ZeroSkip => "zero",
+            Outcome::OheSkip => "ohe-skip",
+            Outcome::Bde => "bde",
+            Outcome::Raw => "unencoded",
+        }
+    }
+}
+
+/// Aggregate statistics over an encoded stream.
+#[derive(Clone, Debug, Default)]
+pub struct EncodeStats {
+    counts: [u64; 4],
+    /// Ones in the original (pre-encoding) words.
+    pub original_ones: u64,
+    /// Ones actually driven on all lines (data + sidebands).
+    pub wire_ones: u64,
+}
+
+impl EncodeStats {
+    fn slot(o: Outcome) -> usize {
+        match o {
+            Outcome::ZeroSkip => 0,
+            Outcome::OheSkip => 1,
+            Outcome::Bde => 2,
+            Outcome::Raw => 3,
+        }
+    }
+
+    /// Record one transfer.
+    pub fn record(&mut self, wire: &WireWord, original: u64) {
+        self.counts[Self::slot(wire.outcome)] += 1;
+        self.original_ones += original.count_ones() as u64;
+        self.wire_ones += wire.total_ones() as u64;
+    }
+
+    pub fn count(&self, o: Outcome) -> u64 {
+        self.counts[Self::slot(o)]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of transfers with the given outcome.
+    pub fn fraction(&self, o: Outcome) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.count(o) as f64 / self.total() as f64
+        }
+    }
+
+    /// Fraction of accesses not encoded at all (paper reports ~6.5% for
+    /// ZAC-DEST / ~6.6% for BDE in Fig. 22).
+    pub fn unencoded_fraction(&self) -> f64 {
+        self.fraction(Outcome::Raw)
+    }
+
+    /// Merge another stream's stats (per-chip aggregation).
+    pub fn merge(&mut self, other: &EncodeStats) {
+        for i in 0..4 {
+            self.counts[i] += other.counts[i];
+        }
+        self.original_ones += other.original_ones;
+        self.wire_ones += other.wire_ones;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_fractions() {
+        let mut s = EncodeStats::default();
+        let mut w = WireWord::raw(0b111);
+        s.record(&w, 0b111);
+        w.outcome = Outcome::OheSkip;
+        w.data = 1;
+        s.record(&w, 0xFFFF);
+        assert_eq!(s.total(), 2);
+        assert_eq!(s.count(Outcome::Raw), 1);
+        assert_eq!(s.fraction(Outcome::OheSkip), 0.5);
+        assert_eq!(s.original_ones, 3 + 16);
+        // ohe transfer drives 1 data one + 1 flag one.
+        assert_eq!(s.wire_ones, 3 + 2);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = EncodeStats::default();
+        let mut b = EncodeStats::default();
+        let w = WireWord::raw(1);
+        a.record(&w, 1);
+        b.record(&w, 1);
+        b.record(&w, 1);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.wire_ones, 3);
+    }
+}

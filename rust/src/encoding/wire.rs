@@ -1,0 +1,96 @@
+//! What one chip drives on its wires for one 64-bit transfer (8 beats).
+
+use super::stats::Outcome;
+
+/// Wire-level view of one chip transfer.
+///
+/// Line inventory per x8 DRAM chip (matching §III / §IV-B):
+/// * 8 **data lines** × 8 beats — `data` (byte *b* = beat *b*, bit *l* =
+///   line *l*).
+/// * 1 **DBI line** — `dbi_mask`, one inversion flag per beat.
+/// * 1 **index line** — `index_line`, the 6-bit binary table address
+///   serialized over the burst (BD-Coder/MBDC; ZAC-DEST's skip path puts
+///   the index on the *data* lines one-hot instead).
+/// * flag signalling — `outcome` stands for the mode flag the receiver
+///   needs (data vs xor vs address); its wire cost is
+///   [`WireWord::flag_ones`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireWord {
+    /// Bits driven on the 8 data lines over the 8-beat burst.
+    pub data: u64,
+    /// Per-beat DBI inversion flags (0 when the scheme has no DBI stage).
+    pub dbi_mask: u8,
+    /// Serialized binary index on the index sideband line (0 when unused).
+    pub index_line: u8,
+    /// Whether the index line is driven this transfer.
+    pub index_used: bool,
+    /// Transfer mode (wire-visible via the flag line in hardware).
+    pub outcome: Outcome,
+}
+
+impl WireWord {
+    /// A raw, sideband-free transfer (ORG baseline).
+    pub fn raw(data: u64) -> Self {
+        WireWord {
+            data,
+            dbi_mask: 0,
+            index_line: 0,
+            index_used: false,
+            outcome: Outcome::Raw,
+        }
+    }
+
+    /// Ones on the mode-flag signalling for this transfer: encoded modes
+    /// (xor or one-hot address) pulse the flag line once per burst.
+    pub fn flag_ones(&self) -> u32 {
+        match self.outcome {
+            Outcome::Bde | Outcome::OheSkip => 1,
+            Outcome::Raw | Outcome::ZeroSkip => 0,
+        }
+    }
+
+    /// Total ones this transfer drives across data + sidebands
+    /// (the termination-energy contribution, paper §III).
+    pub fn total_ones(&self) -> u32 {
+        self.data.count_ones()
+            + self.dbi_mask.count_ones()
+            + if self.index_used {
+                self.index_line.count_ones()
+            } else {
+                0
+            }
+            + self.flag_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_has_no_sideband_cost() {
+        let w = WireWord::raw(0xFF00);
+        assert_eq!(w.total_ones(), 8);
+        assert_eq!(w.flag_ones(), 0);
+    }
+
+    #[test]
+    fn encoded_modes_pulse_flag() {
+        let mut w = WireWord::raw(0);
+        w.outcome = Outcome::Bde;
+        assert_eq!(w.flag_ones(), 1);
+        w.outcome = Outcome::OheSkip;
+        assert_eq!(w.flag_ones(), 1);
+        w.outcome = Outcome::ZeroSkip;
+        assert_eq!(w.flag_ones(), 0);
+    }
+
+    #[test]
+    fn index_counts_only_when_used() {
+        let mut w = WireWord::raw(0);
+        w.index_line = 0b111111;
+        assert_eq!(w.total_ones(), 0);
+        w.index_used = true;
+        assert_eq!(w.total_ones(), 6);
+    }
+}

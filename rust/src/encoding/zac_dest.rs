@@ -1,0 +1,317 @@
+//! ZAC-DEST — Algorithm 2: skip-transfer with one-hot index, on top of
+//! MBDC, with the Similarity-Limit / Truncation / Tolerance knobs and a
+//! final DBI stage (Fig. 7b).
+//!
+//! Per 64-bit chip word:
+//! 1. **Truncation** (approx-eligible accesses only): the configured LSBs
+//!    of every chunk are zeroed — they are neither compared nor sent.
+//! 2. **Zero check**: an all-zero (post-truncation) word is sent as zeros,
+//!    no encoding, no table update (§V-A).
+//! 3. **CAM search** for the most similar entry.
+//! 4. **ZAC-DEST condition**: `hamming(MSET XOR DCDT) < threshold` *and*
+//!    zero mismatches in the Tolerance mask. If it fires, the data lines
+//!    carry the MSE's index **one-hot encoded** (exactly one 1 — cheaper
+//!    than the worst-case 6 ones of a binary index, §IV-B) and the
+//!    receiver substitutes its mirrored entry: an approximation within
+//!    the similarity envelope. The table is *not* updated (§IV-A: only
+//!    exact transfers update it).
+//! 5. Otherwise, fall back to MBDC (exact), updating the table.
+//! 6. **DBI** is applied to whatever goes out on the data lines.
+//!
+//! Accesses with `approx = false` (instructions, critical data) skip
+//! steps 1 and 4 entirely and go straight to the exact MBDC path.
+
+use super::config::{Scheme, ZacConfig};
+use super::data_table::DataTable;
+use super::dbi::{dbi_decode, dbi_encode};
+use super::mbdc::{MbdcDecoder, MbdcEncoder};
+use super::stats::Outcome;
+use super::wire::WireWord;
+use super::{ChipDecoder, ChipEncoder};
+
+pub struct ZacDestEncoder {
+    table: DataTable,
+    threshold: u32,
+    tol_mask: u64,
+    trunc_keep: u64,
+    ablation: super::config::Ablation,
+}
+
+impl ZacDestEncoder {
+    pub fn new(cfg: ZacConfig) -> Self {
+        cfg.validate().expect("invalid ZAC-DEST config");
+        ZacDestEncoder {
+            threshold: cfg.dissimilar_threshold(),
+            tol_mask: cfg.tolerance_mask(),
+            trunc_keep: !cfg.truncation_mask(),
+            table: DataTable::new(cfg.table_size),
+            ablation: cfg.ablation,
+        }
+    }
+
+    /// Apply the final DBI stage to a wire word's data lines.
+    #[inline]
+    fn dbi_stage(mut wire: WireWord) -> WireWord {
+        let (data, mask) = dbi_encode(wire.data);
+        wire.data = data;
+        wire.dbi_mask = mask;
+        wire
+    }
+}
+
+impl ChipEncoder for ZacDestEncoder {
+    fn encode(&mut self, word: u64, approx: bool) -> WireWord {
+        // (1) Truncation — approximate traffic only.
+        let dcdt = if approx { word & self.trunc_keep } else { word };
+
+        // (2) Zero check: cheapest possible transfer, leave the CAM alone.
+        // (ablation zero_skip=false: zeros flow through the normal
+        // search/BDE path and update the table, as original BD-Coder.)
+        if dcdt == 0 && self.ablation.zero_skip {
+            return WireWord {
+                data: 0,
+                dbi_mask: 0,
+                index_line: 0,
+                index_used: false,
+                outcome: Outcome::ZeroSkip,
+            };
+        }
+
+        // One CAM search serves both the skip check and the MBDC
+        // fallback (the hardware searches once too — Fig. 7b).
+        let hit = self.table.most_similar(dcdt);
+
+        // (3)+(4) ZAC-DEST skip check.
+        if approx {
+            if let Some(hit) = hit {
+                let diff = dcdt ^ hit.entry;
+                if diff.count_ones() < self.threshold && diff & self.tol_mask == 0 {
+                    debug_assert!(hit.index < 64);
+                    return Self::dbi_stage(if self.ablation.ohe_index {
+                        // One-hot index on the otherwise idle data lines.
+                        WireWord {
+                            data: 1u64 << hit.index,
+                            dbi_mask: 0,
+                            index_line: 0,
+                            index_used: false,
+                            outcome: Outcome::OheSkip,
+                        }
+                    } else {
+                        // Ablation: binary index on the sideband, data
+                        // lines idle (BD-Coder-style addressing).
+                        WireWord {
+                            data: 0,
+                            dbi_mask: 0,
+                            index_line: hit.index as u8,
+                            index_used: true,
+                            outcome: Outcome::OheSkip,
+                        }
+                    });
+                }
+            }
+        }
+
+        // (5) Exact fallback: MBDC (updates the table), then (6) DBI.
+        Self::dbi_stage(MbdcEncoder::encode_word_with_hit(
+            &mut self.table,
+            dcdt,
+            hit,
+            self.ablation.dedup_update,
+        ))
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::ZacDest
+    }
+
+    fn reset(&mut self) {
+        self.table.reset();
+    }
+}
+
+pub struct ZacDestDecoder {
+    table: DataTable,
+    ablation: super::config::Ablation,
+}
+
+impl ZacDestDecoder {
+    pub fn new(cfg: ZacConfig) -> Self {
+        ZacDestDecoder {
+            table: DataTable::new(cfg.table_size),
+            ablation: cfg.ablation,
+        }
+    }
+}
+
+impl ChipDecoder for ZacDestDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        match wire.outcome {
+            Outcome::ZeroSkip => 0,
+            Outcome::OheSkip => {
+                let index = if wire.index_used {
+                    // Ablation path: binary index on the sideband.
+                    wire.index_line as usize
+                } else {
+                    let ohe = dbi_decode(wire.data, wire.dbi_mask);
+                    debug_assert_eq!(ohe.count_ones(), 1, "OHE word must have one 1");
+                    ohe.trailing_zeros() as usize
+                };
+                // Approximate reconstruction: the mirrored entry, no update.
+                self.table.get(index)
+            }
+            Outcome::Bde | Outcome::Raw => {
+                let mut undone = *wire;
+                undone.data = dbi_decode(wire.data, wire.dbi_mask);
+                MbdcDecoder::decode_word_policy(
+                    &mut self.table,
+                    &undone,
+                    self.ablation.dedup_update,
+                )
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.table.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn codec(cfg: ZacConfig) -> (ZacDestEncoder, ZacDestDecoder) {
+        (
+            ZacDestEncoder::new(cfg.clone()),
+            ZacDestDecoder::new(cfg),
+        )
+    }
+
+    #[test]
+    fn exact_when_not_approx() {
+        let (mut e, mut d) = codec(ZacConfig::zac_full(70, 2, 0));
+        let mut r = Rng::new(51);
+        for _ in 0..2000 {
+            let w = r.next_u64();
+            let wire = e.encode(w, false);
+            assert_ne!(wire.outcome, Outcome::OheSkip);
+            assert_eq!(d.decode(&wire), w);
+        }
+    }
+
+    #[test]
+    fn skip_reconstruction_within_envelope() {
+        let cfg = ZacConfig::zac(80);
+        let (mut e, mut d) = codec(cfg.clone());
+        let mut r = Rng::new(52);
+        let mut base = r.next_u64();
+        let mut skips = 0;
+        for i in 0..3000 {
+            if i % 50 == 0 {
+                base = r.next_u64();
+            }
+            let w = base ^ (r.next_u64() & r.next_u64() & r.next_u64() & 0xFF); // few flipped bits
+            let wire = e.encode(w, true);
+            let got = d.decode(&wire);
+            let trunc = w & !cfg.truncation_mask();
+            let d_bits = (got ^ trunc).count_ones();
+            assert!(
+                d_bits < cfg.dissimilar_threshold(),
+                "approximation outside envelope: {d_bits}"
+            );
+            if wire.outcome == Outcome::OheSkip {
+                skips += 1;
+                assert_eq!(wire.total_ones(), 2); // one data 1 + one flag 1
+            }
+        }
+        assert!(skips > 100, "skip path barely exercised: {skips}");
+    }
+
+    #[test]
+    fn truncation_zeroes_lsbs() {
+        let cfg = ZacConfig::zac_full(90, 2, 0); // 2 LSBs per byte
+        let (mut e, mut d) = codec(cfg.clone());
+        let w = 0xFFFF_FFFF_FFFF_FFFFu64;
+        let wire = e.encode(w, true);
+        let got = d.decode(&wire);
+        assert_eq!(got, w & !cfg.truncation_mask());
+        assert_eq!(got & cfg.truncation_mask(), 0);
+    }
+
+    #[test]
+    fn tolerance_vetoes_skip_on_msb_mismatch() {
+        let cfg = ZacConfig::zac_full(50, 0, 2); // very loose limit, strict MSBs
+        let (mut e, _) = codec(cfg);
+        let a = 0x0101_0101_0101_0101u64;
+        e.encode(a, true); // stored
+        // Flip an MSB (tolerance bit) of one byte: within the similarity
+        // budget but vetoed by tolerance.
+        let b = a ^ 0x8000_0000_0000_0000;
+        let wire = e.encode(b, true);
+        assert_ne!(wire.outcome, Outcome::OheSkip);
+        // Flipping a non-tolerance bit instead does skip.
+        let c = a ^ 0x0000_0000_0000_1000; // bit 12 = byte 1 bit 4 (not MSB 2)
+        let wire = e.encode(c, true);
+        assert_eq!(wire.outcome, Outcome::OheSkip);
+    }
+
+    #[test]
+    fn zero_after_truncation_is_zero_skip() {
+        let cfg = ZacConfig::zac_full(80, 2, 0);
+        let (mut e, mut d) = codec(cfg);
+        let w = 0x0303_0303_0303_0303u64; // only truncated LSBs set
+        let wire = e.encode(w, true);
+        assert_eq!(wire.outcome, Outcome::ZeroSkip);
+        assert_eq!(wire.total_ones(), 0);
+        assert_eq!(d.decode(&wire), 0);
+    }
+
+    #[test]
+    fn weights_config_never_skips_on_exponent_mismatch() {
+        let cfg = ZacConfig::zac_weights(50);
+        let (mut e, _) = codec(cfg);
+        let w1 = f32_pair(1.5, 2.5);
+        e.encode(w1, true);
+        // Same mantissa-ish bits, different exponent -> no skip.
+        let w2 = f32_pair(3.0, 5.0);
+        let wire = e.encode(w2, true);
+        assert_ne!(wire.outcome, Outcome::OheSkip);
+        // Tiny mantissa perturbation -> skip allowed.
+        let w3 = f32_pair(1.5000002, 2.5000004);
+        let wire = e.encode(w3, true);
+        assert_eq!(wire.outcome, Outcome::OheSkip);
+    }
+
+    fn f32_pair(a: f32, b: f32) -> u64 {
+        (a.to_bits() as u64) | ((b.to_bits() as u64) << 32)
+    }
+
+    #[test]
+    fn mirror_consistency_under_mixed_traffic() {
+        let cfg = ZacConfig::zac_full(75, 1, 1);
+        let (mut e, mut d) = codec(cfg);
+        let mut r = Rng::new(53);
+        for _ in 0..5000 {
+            let w = match r.below(4) {
+                0 => 0,
+                1 => r.next_u64() & 0x0F0F,
+                _ => r.next_u64(),
+            };
+            let approx = r.chance(0.7);
+            let wire = e.encode(w, approx);
+            let _ = d.decode(&wire);
+            assert_eq!(e.table.snapshot(), d.table.snapshot());
+        }
+    }
+
+    #[test]
+    fn ohe_word_survives_dbi() {
+        // DBI must never mangle the one-hot index (≤1 one per byte).
+        for i in 0..64 {
+            let (data, mask) = dbi_encode(1u64 << i);
+            assert_eq!(data, 1u64 << i);
+            assert_eq!(mask, 0);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Figure/table harness: one generator per figure and table of the
+//! paper's evaluation (§VIII), printing the same rows/series the paper
+//! reports. See DESIGN.md §6 for the full experiment index.
+//!
+//! Energy-only figures (10, 14, 22, ...) need no trained models and run
+//! in seconds; quality figures lazily build the trained workload
+//! [`Suite`] once and share it.
+
+mod ablations;
+mod energy;
+mod misc;
+mod quality_figs;
+mod training;
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::datasets;
+use crate::runtime::Runtime;
+use crate::workloads::{Kind, Suite, SuiteBudget};
+
+pub use ablations::ablations;
+pub use energy::{fig10, fig14, fig2, fig22, table1};
+pub use misc::{fig1, fig19, sec6};
+pub use quality_figs::{fig11, fig12, fig13, fig15, fig16, fig17};
+pub use training::{fig18, fig20, fig21};
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+    "fig18", "fig19", "fig20", "fig21", "fig22", "table1", "sec6", "ablations",
+];
+
+/// Shared context: seed, budget, and a lazily-built workload suite.
+pub struct FigureCtx {
+    pub seed: u64,
+    pub budget: SuiteBudget,
+    suite: OnceLock<Suite>,
+}
+
+impl FigureCtx {
+    pub fn new(seed: u64, budget: SuiteBudget) -> Self {
+        FigureCtx {
+            seed,
+            budget,
+            suite: OnceLock::new(),
+        }
+    }
+
+    /// The trained suite (built on first use).
+    pub fn suite(&self) -> Result<&Suite> {
+        if self.suite.get().is_none() {
+            let rt = Runtime::load(Runtime::default_dir())?;
+            let s = Suite::build(rt, self.seed, self.budget)?;
+            let _ = self.suite.set(s);
+        }
+        Ok(self.suite.get().expect("just set"))
+    }
+
+    /// The byte trace each workload's evaluation input produces
+    /// (energy-only figures; no trained models required).
+    pub fn workload_trace(&self, kind: Kind) -> Vec<u8> {
+        let seed = self.seed;
+        let images = match kind {
+            Kind::ImageNet | Kind::ResNet => {
+                datasets::synth_images(self.budget.eval_images, seed ^ 0x7e57)
+            }
+            Kind::Quant => datasets::kodak_like(self.budget.kodak_images, 64, 64, seed ^ 0x0d),
+            Kind::Eigen => datasets::faces_split(16, 8, 8, seed ^ 0xFA).1,
+            Kind::Svm => datasets::fmnist_like(self.budget.svm_test, seed ^ 0x5e),
+        };
+        let mut bytes = Vec::new();
+        for img in &images {
+            bytes.extend_from_slice(&img.data);
+        }
+        bytes
+    }
+}
+
+/// Render a figure by id.
+pub fn render(ctx: &FigureCtx, id: &str) -> Result<String> {
+    match id {
+        "fig1" => fig1(ctx),
+        "fig2" => fig2(),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "fig12" => fig12(ctx),
+        "fig13" => fig13(ctx),
+        "fig14" => fig14(ctx),
+        "fig15" => fig15(ctx),
+        "fig16" => fig16(ctx),
+        "fig17" => fig17(ctx),
+        "fig18" => fig18(ctx),
+        "fig19" => fig19(ctx),
+        "fig20" => fig20(ctx),
+        "fig21" => fig21(ctx),
+        "fig22" => fig22(ctx),
+        "table1" => table1(),
+        "sec6" => sec6(ctx),
+        "ablations" => ablations(ctx),
+        other => anyhow::bail!("unknown figure {other:?}; known: {}", ALL.join(", ")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> FigureCtx {
+        FigureCtx::new(42, SuiteBudget::quick())
+    }
+
+    #[test]
+    fn energy_only_figures_render() {
+        let c = ctx();
+        for id in ["fig1", "fig2", "fig10", "fig14", "fig19", "fig22", "table1", "sec6"] {
+            let out = render(&c, id).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(out.len() > 50, "{id} output too short:\n{out}");
+        }
+    }
+
+    #[test]
+    fn unknown_figure_is_an_error() {
+        assert!(render(&ctx(), "fig99").is_err());
+    }
+}

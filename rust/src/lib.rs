@@ -1,0 +1,35 @@
+//! # ZAC-DEST — Zero Aware Configurable Data Encoding by Skipping Transfer
+//!
+//! Full-system reproduction of *"Zero Aware Configurable Data Encoding by
+//! Skipping Transfer for Error Resilient Applications"* (Jha et al., 2021).
+//!
+//! The crate is the Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the DRAM-channel
+//!   data-encoding engines ([`encoding`]), the channel energy model
+//!   ([`channel`]), the trace/reconstruction machinery ([`trace`]), the
+//!   gate-level circuit overhead model ([`circuits`]), and the streaming
+//!   [`coordinator`] that drives whole-workload simulations.
+//! * **Layer 2** — JAX compute graphs for the five evaluation workloads,
+//!   AOT-lowered to HLO text in `artifacts/` and executed through
+//!   [`runtime`] (PJRT CPU client; python never runs on the request path).
+//! * **Layer 1** — Pallas kernels (matmul / conv / k-means / popcount)
+//!   inside those graphs.
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index mapping every figure and table of the paper onto modules here.
+
+pub mod channel;
+pub mod circuits;
+pub mod coordinator;
+pub mod datasets;
+pub mod encoding;
+pub mod figures;
+pub mod quality;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,278 @@
+//! `zac-dest` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//! * `figure <id>`   — regenerate a paper figure/table (see DESIGN.md §6)
+//! * `figures`       — regenerate every figure
+//! * `encode`        — encode a hex trace (or a synthetic stream) and
+//!                     report energy + outcome statistics
+//! * `workload <k>`  — evaluate one workload under a config
+//! * `run --config`  — full run from a TOML config file
+//! * `circuit`       — §VI circuit-overhead report
+//! * `artifacts`     — list/verify the AOT artifacts
+
+use anyhow::Result;
+
+use zac_dest::coordinator::{simulate_bytes, RunConfig};
+use zac_dest::encoding::{Outcome, Scheme, ZacConfig};
+use zac_dest::figures::{self, FigureCtx};
+use zac_dest::runtime::Runtime;
+use zac_dest::util::cli::Command;
+use zac_dest::util::table::{pct, TextTable};
+use zac_dest::workloads::{Kind, Suite, SuiteBudget};
+
+fn app() -> Command {
+    Command::new("zac-dest", "ZAC-DEST full-system reproduction (Jha et al., 2021)")
+        .subcommand(
+            Command::new("figure", "regenerate one paper figure/table")
+                .positional("id", "fig1..fig22, table1, sec6")
+                .opt("seed", "42", "experiment seed")
+                .opt("budget", "full", "suite budget: quick | full"),
+        )
+        .subcommand(
+            Command::new("figures", "regenerate every figure")
+                .opt("seed", "42", "experiment seed")
+                .opt("budget", "full", "suite budget: quick | full")
+                .opt("out", "-", "output file ('-' = stdout)"),
+        )
+        .subcommand(
+            Command::new("encode", "encode a trace and report energy")
+                .opt("input", "-", "hex trace file ('-' = synthetic stream)")
+                .opt("scheme", "OHE", "ORG | DBI | BDE_ORG | BDE | OHE")
+                .opt("limit", "80", "similarity limit %")
+                .opt("truncation", "0", "truncation bits per 8-bit chunk")
+                .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
+                .opt("bytes", "1048576", "synthetic stream size")
+                .opt("seed", "42", "synthetic stream seed"),
+        )
+        .subcommand(
+            Command::new("workload", "evaluate one workload under a config")
+                .positional("kind", "imagenet | resnet | quant | eigen | svm")
+                .opt("limit", "80", "similarity limit %")
+                .opt("truncation", "0", "truncation bits per 8-bit chunk")
+                .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
+                .opt("seed", "42", "experiment seed")
+                .opt("budget", "quick", "suite budget: quick | full"),
+        )
+        .subcommand(
+            Command::new("run", "full run from a TOML config file")
+                .req("config", "path to run config (see configs/)"),
+        )
+        .subcommand(Command::new("circuit", "§VI circuit overhead report").opt(
+            "vectors",
+            "10000",
+            "random vectors for switching activity",
+        ))
+        .subcommand(Command::new("artifacts", "list and verify AOT artifacts"))
+}
+
+fn budget(name: &str) -> SuiteBudget {
+    if name == "quick" {
+        SuiteBudget::quick()
+    } else {
+        SuiteBudget::full()
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    if args.is_empty() {
+        println!("{}", app.help());
+        return Ok(());
+    }
+    let m = match app.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            // --help surfaces as an "error" carrying the help text.
+            println!("{e}");
+            return Ok(());
+        }
+    };
+    match m.path.first().map(|s| s.as_str()) {
+        Some("figure") => {
+            let id = m
+                .positionals
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("figure id required"))?;
+            let ctx = FigureCtx::new(
+                m.get_usize("seed")? as u64,
+                budget(m.get_or("budget", "full")),
+            );
+            println!("{}", figures::render(&ctx, id)?);
+        }
+        Some("figures") => {
+            let ctx = FigureCtx::new(
+                m.get_usize("seed")? as u64,
+                budget(m.get_or("budget", "full")),
+            );
+            let mut out = String::new();
+            for id in figures::ALL {
+                eprintln!("[figures] rendering {id} ...");
+                out.push_str(&figures::render(&ctx, id)?);
+                out.push_str("\n\n");
+            }
+            let path = m.get_or("out", "-");
+            if path == "-" {
+                println!("{out}");
+            } else {
+                std::fs::write(path, &out)?;
+                eprintln!("wrote {path}");
+            }
+        }
+        Some("encode") => cmd_encode(&m)?,
+        Some("workload") => {
+            let kind = m
+                .positionals
+                .first()
+                .and_then(|s| Kind::parse(s))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("workload kind required (imagenet|resnet|quant|eigen|svm)")
+                })?;
+            let cfg = ZacConfig::zac_full(
+                m.get_usize("limit")? as u32,
+                m.get_usize("truncation")? as u32,
+                m.get_usize("tolerance")? as u32,
+            );
+            let rt = Runtime::load(Runtime::default_dir())?;
+            let suite = Suite::build(
+                rt,
+                m.get_usize("seed")? as u64,
+                budget(m.get_or("budget", "quick")),
+            )?;
+            let r = suite.eval(&cfg, kind)?;
+            println!(
+                "{} under {}:\n  quality ratio  {:.3}  (original {:.3} -> approx {:.3})\n  termination 1s {}  switching {}  unencoded {:.1}%",
+                kind.label(),
+                cfg.label(),
+                r.quality,
+                r.original_metric,
+                r.approx_metric,
+                r.run.counts.termination_ones,
+                r.run.counts.switching_transitions,
+                100.0 * r.run.stats.unencoded_fraction(),
+            );
+        }
+        Some("run") => cmd_run(m.get("config").unwrap())?,
+        Some("circuit") => {
+            let (bd, zd) = zac_dest::circuits::evaluate(m.get_usize("vectors")?, 42);
+            println!(
+                "BD-Coder : {} transistors, {:.2} pJ/access, {:.2} ns",
+                bd.transistors, bd.energy_pj, bd.latency_ns
+            );
+            println!(
+                "ZAC-DEST : {} transistors, {:.2} pJ/access, {:.2} ns",
+                zd.transistors, zd.energy_pj, zd.latency_ns
+            );
+            println!(
+                "overheads: area {} energy {}",
+                pct(zd.area_overhead_pct(&bd)),
+                pct(zd.energy_overhead_pct(&bd))
+            );
+        }
+        Some("artifacts") => {
+            let dir = Runtime::default_dir();
+            let rt = Runtime::load(&dir)?;
+            let mut t = TextTable::new(&["artifact", "args", "outputs"]);
+            let mut names: Vec<_> = rt.manifest().artifacts.keys().collect();
+            names.sort();
+            for name in names {
+                let s = &rt.manifest().artifacts[name];
+                t.row(vec![
+                    name.clone(),
+                    format!("{}", s.args.len()),
+                    format!("{}", s.outputs.len()),
+                ]);
+            }
+            println!("artifacts dir: {}\n{}", dir.display(), t.render());
+            rt.precompile(&["trace_stats"])?;
+            println!("PJRT compile check: ok");
+        }
+        _ => println!("{}", app.help()),
+    }
+    Ok(())
+}
+
+fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    let scheme = Scheme::parse(m.get_or("scheme", "OHE"))
+        .ok_or_else(|| anyhow::anyhow!("bad scheme"))?;
+    let mut cfg = ZacConfig::zac_full(
+        m.get_usize("limit")? as u32,
+        m.get_usize("truncation")? as u32,
+        m.get_usize("tolerance")? as u32,
+    );
+    cfg.scheme = scheme;
+    cfg.validate()?;
+    let input = m.get_or("input", "-");
+    let bytes = if input == "-" {
+        // Synthetic image-like stream.
+        let n = m.get_usize("bytes")?;
+        let mut r = zac_dest::util::rng::Rng::new(m.get_usize("seed")? as u64);
+        let mut v = 128i32;
+        (0..n)
+            .map(|_| {
+                v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+                v as u8
+            })
+            .collect()
+    } else {
+        let text = std::fs::read_to_string(input)?;
+        let lines = zac_dest::trace::hex::parse(&text)?;
+        zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64)
+    };
+    let t0 = std::time::Instant::now();
+    let out = simulate_bytes(&cfg, &bytes, true);
+    let dt = t0.elapsed();
+    let base = simulate_bytes(&ZacConfig::scheme(Scheme::Org), &bytes, true);
+    println!("scheme        : {}", cfg.label());
+    println!("bytes         : {}", bytes.len());
+    println!(
+        "termination 1s: {} ({} vs ORG)",
+        out.counts.termination_ones,
+        pct(out.counts.termination_savings_vs(&base.counts))
+    );
+    println!(
+        "switching     : {} ({} vs ORG)",
+        out.counts.switching_transitions,
+        pct(out.counts.switching_savings_vs(&base.counts))
+    );
+    for o in Outcome::all() {
+        println!("  {:<10}: {:.1}%", o.label(), 100.0 * out.stats.fraction(o));
+    }
+    println!(
+        "throughput    : {:.1} MB/s ({} lines in {:.1} ms)",
+        bytes.len() as f64 / dt.as_secs_f64() / 1e6,
+        bytes.len() / 64,
+        dt.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_run(path: &str) -> Result<()> {
+    let rc = RunConfig::from_file(path)?;
+    println!(
+        "run {:?}: {} over {:?}",
+        rc.name,
+        rc.encoder.label(),
+        rc.workloads
+    );
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let mut b = SuiteBudget::full();
+    b.eval_images = rc.eval_images.max(32);
+    b.train_steps = rc.train_steps;
+    b.lr = rc.lr;
+    let suite = Suite::build(rt, rc.seed, b)?;
+    let mut t = TextTable::new(&["workload", "quality", "term 1s", "switching", "unencoded"]);
+    for w in &rc.workloads {
+        let kind = Kind::parse(w).ok_or_else(|| anyhow::anyhow!("unknown workload {w:?}"))?;
+        let r = suite.eval(&rc.encoder, kind)?;
+        t.row(vec![
+            kind.label().into(),
+            format!("{:.3}", r.quality),
+            format!("{}", r.run.counts.termination_ones),
+            format!("{}", r.run.counts.switching_transitions),
+            pct(100.0 * r.run.stats.unencoded_fraction()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Output-quality metrics (paper §VII-A): PSNR, SSIM, top-1 accuracy,
+//! and the paper's *quality ratio* (approximated metric / original
+//! metric; 1.0 = no degradation).
+
+/// Peak signal-to-noise ratio between two u8 buffers (dB). `inf` for
+/// identical buffers (the paper prints "PSNR=Inf" for the original).
+pub fn psnr_u8(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return f64::INFINITY;
+    }
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+/// Mean structural similarity (Wang et al. [51]) over 8x8 windows with
+/// stride 4, single channel. Inputs are row-major `w*h` u8 buffers.
+pub fn ssim_u8(a: &[u8], b: &[u8], w: usize, h: usize) -> f64 {
+    assert_eq!(a.len(), w * h);
+    assert_eq!(b.len(), w * h);
+    const C1: f64 = 6.5025; // (0.01 * 255)^2
+    const C2: f64 = 58.5225; // (0.03 * 255)^2
+    const WIN: usize = 8;
+    const STRIDE: usize = 4;
+    if w < WIN || h < WIN {
+        // Degenerate: global statistics.
+        return ssim_window(a, b, w, 0, 0, w.min(h), C1, C2);
+    }
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    let mut y = 0;
+    while y + WIN <= h {
+        let mut x = 0;
+        while x + WIN <= w {
+            acc += ssim_window(a, b, w, x, y, WIN, C1, C2);
+            n += 1;
+            x += STRIDE;
+        }
+        y += STRIDE;
+    }
+    acc / n as f64
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ssim_window(a: &[u8], b: &[u8], stride: usize, x0: usize, y0: usize, win: usize, c1: f64, c2: f64) -> f64 {
+    let n = (win * win) as f64;
+    let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for y in y0..y0 + win {
+        for x in x0..x0 + win {
+            let pa = a[y * stride + x] as f64;
+            let pb = b[y * stride + x] as f64;
+            sa += pa;
+            sb += pb;
+            saa += pa * pa;
+            sbb += pb * pb;
+            sab += pa * pb;
+        }
+    }
+    let (ma, mb) = (sa / n, sb / n);
+    let va = (saa / n - ma * ma).max(0.0);
+    let vb = (sbb / n - mb * mb).max(0.0);
+    let cov = sab / n - ma * mb;
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2)) / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+/// SSIM for interleaved RGB: mean over channels.
+pub fn ssim_rgb(a: &[u8], b: &[u8], w: usize, h: usize) -> f64 {
+    assert_eq!(a.len(), w * h * 3);
+    assert_eq!(b.len(), w * h * 3);
+    let mut acc = 0.0;
+    for c in 0..3 {
+        let pa: Vec<u8> = a.iter().skip(c).step_by(3).copied().collect();
+        let pb: Vec<u8> = b.iter().skip(c).step_by(3).copied().collect();
+        acc += ssim_u8(&pa, &pb, w, h);
+    }
+    acc / 3.0
+}
+
+/// Top-1 accuracy: fraction of `pred == label`.
+pub fn top1(pred: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(labels).filter(|(p, l)| p == l).count() as f64 / pred.len() as f64
+}
+
+/// The paper's quality ratio: approx metric / original metric
+/// (clamped at 0 when the original metric is 0).
+pub fn quality_ratio(approx_metric: f64, original_metric: f64) -> f64 {
+    if original_metric <= 0.0 {
+        0.0
+    } else {
+        approx_metric / original_metric
+    }
+}
+
+/// Argmax of each row of a logits matrix (B x C) → class indices.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<i32> {
+    assert_eq!(logits.len() % classes, 0);
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn psnr_identical_is_inf() {
+        let a = vec![7u8; 100];
+        assert!(psnr_u8(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // Uniform error of 1 → MSE 1 → PSNR = 20*log10(255) ≈ 48.13 dB.
+        let a = vec![100u8; 1000];
+        let b = vec![101u8; 1000];
+        assert!((psnr_u8(&a, &b) - 48.13).abs() < 0.01);
+    }
+
+    #[test]
+    fn psnr_decreases_with_damage() {
+        let mut r = Rng::new(91);
+        let a: Vec<u8> = (0..4096).map(|_| r.next_u32() as u8).collect();
+        let small: Vec<u8> = a.iter().map(|&x| x ^ 1).collect();
+        let big: Vec<u8> = a.iter().map(|&x| x ^ 0x0F).collect();
+        assert!(psnr_u8(&a, &small) > psnr_u8(&a, &big));
+    }
+
+    #[test]
+    fn ssim_identity_is_one() {
+        let mut r = Rng::new(92);
+        let a: Vec<u8> = (0..64 * 64).map(|_| r.next_u32() as u8).collect();
+        assert!((ssim_u8(&a, &a, 64, 64) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ssim_orders_degradation() {
+        let mut r = Rng::new(93);
+        // Structured image: gradient.
+        let a: Vec<u8> = (0..64 * 64).map(|i| ((i % 64) * 4) as u8).collect();
+        let slight: Vec<u8> = a.iter().map(|&x| x.saturating_add((r.next_u32() % 4) as u8)).collect();
+        let heavy: Vec<u8> = a.iter().map(|&x| x ^ ((r.next_u32() % 128) as u8)).collect();
+        let s1 = ssim_u8(&a, &slight, 64, 64);
+        let s2 = ssim_u8(&a, &heavy, 64, 64);
+        assert!(s1 > 0.8, "slight {s1}");
+        assert!(s2 < s1, "heavy {s2} !< slight {s1}");
+    }
+
+    #[test]
+    fn ssim_range() {
+        let mut r = Rng::new(94);
+        let a: Vec<u8> = (0..32 * 32).map(|_| r.next_u32() as u8).collect();
+        let b: Vec<u8> = (0..32 * 32).map(|_| r.next_u32() as u8).collect();
+        let s = ssim_u8(&a, &b, 32, 32);
+        assert!((-1.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn top1_and_ratio() {
+        assert_eq!(top1(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(quality_ratio(0.4, 0.8), 0.5);
+        assert_eq!(quality_ratio(0.4, 0.0), 0.0);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let logits = [0.1f32, 0.9, 0.0, 1.0, -1.0, 0.5];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+}

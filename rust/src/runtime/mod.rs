@@ -1,0 +1,374 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) once and
+//! execute them from the request path. Python never runs here — the HLO
+//! text was produced at build time by `python/compile/aot.py`.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not the
+//! serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json_lite::Json;
+
+/// Argument/output signature entry from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for (name, meta) in doc.get("artifacts")?.as_obj()? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                meta.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| {
+                        Ok(TensorSpec {
+                            name: a
+                                .get("name")
+                                .map(|n| n.as_str().unwrap_or("").to_string())
+                                .unwrap_or_else(|_| format!("out{i}")),
+                            shape: a
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<_>>()?,
+                            dtype: a.get("dtype")?.as_str()?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: meta.get("file")?.as_str()?.to_string(),
+                    args: parse_specs("args")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+}
+
+/// A typed host tensor crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![1])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "f32",
+            Tensor::I32(..) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => anyhow::bail!("tensor is {}, wanted f32", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => anyhow::bail!("tensor is {}, wanted i32", self.dtype()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => anyhow::bail!("tensor is i32, wanted f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => anyhow::bail!("tensor is f32, wanted i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+            Tensor::I32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        Ok(match spec.dtype.as_str() {
+            "f32" => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            "i32" => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+            other => anyhow::bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// Pack 64-bit channel words as the (N, 2) i32 lo/hi layout the
+/// `trace_stats` / `trace_screen` artifacts expect.
+pub fn pack_words_i32(words: &[u64]) -> Vec<i32> {
+    words
+        .iter()
+        .flat_map(|w| [(*w as u32) as i32, ((*w >> 32) as u32) as i32])
+        .collect()
+}
+
+/// The PJRT runtime: one compiled executable per artifact, compiled
+/// lazily and cached.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            executables: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$ZAC_ARTIFACTS` or `artifacts/`
+    /// (searched upward so tests work from the crate root).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("ZAC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile a set of artifacts up front (warm start).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with typed host tensors; returns the tuple
+    /// elements as typed tensors. Arguments are validated against the
+    /// manifest before anything touches PJRT.
+    pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == spec.args.len(),
+            "{name}: expected {} args, got {}",
+            spec.args.len(),
+            inputs.len()
+        );
+        for (t, a) in inputs.iter().zip(&spec.args) {
+            anyhow::ensure!(
+                t.shape() == a.shape.as_slice() && t.dtype() == a.dtype,
+                "{name}: arg {:?} expects {:?}{:?}, got {:?}{:?}",
+                a.name,
+                a.dtype,
+                a.shape,
+                t.dtype(),
+                t.shape()
+            );
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: manifest says {} outputs, got {}",
+            spec.outputs.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        Runtime::load(Runtime::default_dir()).expect("artifacts missing — run `make artifacts`")
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = runtime();
+        assert!(m.manifest().artifacts.contains_key("trace_stats"));
+        let spec = &m.manifest().artifacts["cnn_train_step"];
+        assert_eq!(spec.args[0].shape, vec![32, 32, 32, 3]);
+        assert_eq!(spec.outputs.last().unwrap().shape, vec![1]);
+    }
+
+    #[test]
+    fn trace_stats_executes_and_matches_popcount() {
+        let rt = runtime();
+        let words: Vec<u64> = (0..8192u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+        let t = Tensor::i32(pack_words_i32(&words), &[8192, 2]);
+        let out = rt.exec("trace_stats", &[t]).unwrap();
+        let per_word = out[0].as_i32().unwrap();
+        let total = out[1].as_i32().unwrap()[0];
+        let expect: i64 = words.iter().map(|w| w.count_ones() as i64).sum();
+        assert_eq!(total as i64, expect);
+        assert_eq!(per_word[7], words[7].count_ones() as i32);
+    }
+
+    #[test]
+    fn arg_validation_rejects_bad_shapes() {
+        let rt = runtime();
+        let bad = Tensor::i32(vec![0; 4], &[2, 2]);
+        let err = rt.exec("trace_stats", &[bad]).unwrap_err().to_string();
+        assert!(err.contains("expects"), "{err}");
+        assert!(rt.exec("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn trace_screen_agrees_with_data_table() {
+        use crate::encoding::DataTable;
+        let rt = runtime();
+        let mut table = DataTable::new(64);
+        let mut r = crate::util::rng::Rng::new(7);
+        for _ in 0..64 {
+            table.push(r.next_u64());
+        }
+        let words: Vec<u64> = (0..8192).map(|_| r.next_u64()).collect();
+        let out = rt
+            .exec(
+                "trace_screen",
+                &[
+                    Tensor::i32(pack_words_i32(&words), &[8192, 2]),
+                    Tensor::i32(pack_words_i32(table.snapshot()), &[64, 2]),
+                ],
+            )
+            .unwrap();
+        let res = out[0].as_i32().unwrap();
+        for (i, &w) in words.iter().enumerate().step_by(97) {
+            let hit = table.most_similar(w).unwrap();
+            assert_eq!(res[2 * i] as u32, hit.distance, "word {i} dist");
+            assert_eq!(res[2 * i + 1] as usize, hit.index, "word {i} idx");
+        }
+    }
+}

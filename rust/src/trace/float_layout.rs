@@ -1,0 +1,109 @@
+//! IEEE-754 f32 field utilities (paper Fig. 19 and §VIII-G).
+//!
+//! Weight traffic is approximated like image traffic, but the sign and
+//! exponent bits are pinned with the Tolerance mask — the paper measures
+//! ~60% output-quality loss from approximating even the last exponent
+//! bit, which `exponent_flip_damage` reproduces.
+
+/// Sign bit mask of an f32.
+pub const SIGN_MASK: u32 = 0x8000_0000;
+/// Exponent field mask.
+pub const EXP_MASK: u32 = 0x7F80_0000;
+/// Mantissa field mask.
+pub const MANTISSA_MASK: u32 = 0x007F_FFFF;
+
+/// Decompose an f32 into (sign, exponent, mantissa) fields.
+pub fn fields(x: f32) -> (u32, u32, u32) {
+    let b = x.to_bits();
+    ((b >> 31) & 1, (b >> 23) & 0xFF, b & MANTISSA_MASK)
+}
+
+/// The per-64-bit-word tolerance mask protecting sign+exponent of both
+/// packed f32 lanes (chunk width 32, top 9 bits).
+pub fn weight_tolerance_mask() -> u64 {
+    let lane = (SIGN_MASK | EXP_MASK) as u64;
+    lane | (lane << 32)
+}
+
+/// Flip the lowest exponent bit of every float — the §VIII-G ablation
+/// showing why Tolerance must cover the exponent.
+pub fn flip_low_exponent_bit(xs: &[f32]) -> Vec<f32> {
+    xs.iter()
+        .map(|x| f32::from_bits(x.to_bits() ^ (1 << 23)))
+        .collect()
+}
+
+/// Zero the low `n` mantissa bits (mantissa-side truncation).
+pub fn truncate_mantissa(xs: &[f32], n: u32) -> Vec<f32> {
+    assert!(n <= 23);
+    let mask = !((1u32 << n) - 1);
+    xs.iter().map(|x| f32::from_bits(x.to_bits() & mask)).collect()
+}
+
+/// Mean relative error between two slices (the "damage" metric used for
+/// the Fig. 19 narrative).
+pub fn mean_relative_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let denom = x.abs().max(1e-12) as f64;
+        acc += ((x - y).abs() as f64) / denom;
+    }
+    acc / a.len() as f64
+}
+
+/// Quantify the §VIII-G claim: relative damage from one exponent-bit flip
+/// vs from truncating `n` mantissa bits, over the given weights.
+pub fn exponent_flip_damage(xs: &[f32], mantissa_bits: u32) -> (f64, f64) {
+    let exp = flip_low_exponent_bit(xs);
+    let man = truncate_mantissa(xs, mantissa_bits);
+    (mean_relative_error(xs, &exp), mean_relative_error(xs, &man))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn field_decomposition() {
+        let (s, e, m) = fields(-1.5);
+        assert_eq!(s, 1);
+        assert_eq!(e, 127);
+        assert_eq!(m, 1 << 22);
+        let (s, e, m) = fields(0.0);
+        assert_eq!((s, e, m), (0, 0, 0));
+    }
+
+    #[test]
+    fn tolerance_mask_covers_sign_exponent_only() {
+        let m = weight_tolerance_mask();
+        assert_eq!(m, 0xFF80_0000_FF80_0000);
+        assert_eq!(m.count_ones(), 18);
+    }
+
+    #[test]
+    fn exponent_flip_is_catastrophic_vs_mantissa_truncation() {
+        let mut r = Rng::new(81);
+        let xs: Vec<f32> = (0..4096).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        let (exp_err, man_err) = exponent_flip_damage(&xs, 12);
+        // Flipping the low exponent bit halves/doubles values (~50-100%
+        // relative error); truncating 12 mantissa bits is < 0.1%.
+        assert!(exp_err > 0.4, "exponent damage {exp_err}");
+        assert!(man_err < 0.01, "mantissa damage {man_err}");
+        assert!(exp_err / man_err.max(1e-9) > 50.0);
+    }
+
+    #[test]
+    fn mantissa_truncation_preserves_magnitude() {
+        let xs = [1.000001f32, -2.3456789, 1e-4];
+        let t = truncate_mantissa(&xs, 10);
+        for (a, b) in xs.iter().zip(&t) {
+            assert!((a - b).abs() / a.abs() < 1e-3);
+            assert_eq!(a.signum(), b.signum());
+        }
+    }
+}

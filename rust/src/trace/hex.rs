@@ -1,0 +1,84 @@
+//! Hex trace emit/parse (paper §VII: "converting their inputs to
+//! hexadecimal traces"). One cache line per row: eight 16-hex-digit
+//! chip words separated by spaces.
+
+use super::ChipWords;
+use crate::channel::CHIPS;
+
+/// Serialize cache lines to the hex trace format.
+pub fn emit(lines: &[ChipWords]) -> String {
+    let mut out = String::with_capacity(lines.len() * (17 * CHIPS + 1));
+    for line in lines {
+        for (j, w) in line.iter().enumerate() {
+            if j > 0 {
+                out.push(' ');
+            }
+            out.push_str(&format!("{w:016x}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse the hex trace format back into cache lines.
+pub fn parse(text: &str) -> anyhow::Result<Vec<ChipWords>> {
+    let mut out = Vec::new();
+    for (lineno, row) in text.lines().enumerate() {
+        let row = row.trim();
+        if row.is_empty() || row.starts_with('#') {
+            continue;
+        }
+        let mut words = [0u64; CHIPS];
+        let mut count = 0;
+        for (j, tok) in row.split_whitespace().enumerate() {
+            anyhow::ensure!(j < CHIPS, "trace line {}: too many words", lineno + 1);
+            words[j] = u64::from_str_radix(tok, 16)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {:?}: {}", lineno + 1, tok, e))?;
+            count = j + 1;
+        }
+        anyhow::ensure!(
+            count == CHIPS,
+            "trace line {}: expected {CHIPS} words, got {count}",
+            lineno + 1
+        );
+        out.push(words);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip() {
+        let mut r = Rng::new(71);
+        let lines: Vec<ChipWords> = (0..20)
+            .map(|_| {
+                let mut w = [0u64; CHIPS];
+                for x in w.iter_mut() {
+                    *x = r.next_u64();
+                }
+                w
+            })
+            .collect();
+        let text = emit(&lines);
+        assert_eq!(parse(&text).unwrap(), lines);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# header\n\n0 0 0 0 0 0 0 0\n";
+        let lines = parse(text).unwrap();
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0], [0u64; CHIPS]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("1 2 3\n").is_err()); // short row
+        assert!(parse("x y z w a b c d\n").is_err()); // not hex
+        assert!(parse("0 0 0 0 0 0 0 0 0\n").is_err()); // long row
+    }
+}

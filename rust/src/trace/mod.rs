@@ -1,0 +1,186 @@
+//! Trace machinery: tensors ⇄ cache lines ⇄ per-chip 64-bit words, plus
+//! reconstruction of approximate tensors from the receiver's output
+//! (paper §VII, Fig. 9 workflow steps 1 and 3).
+//!
+//! Layout (§III): a 64 B cache line is transferred as 8 beats of 64 bits;
+//! chip *j* (x8) drives bits `[8j, 8j+8)` of every beat, so over the
+//! burst chip *j* carries bytes `{8b + j : b ∈ 0..8}` of the line — one
+//! byte per beat, i.e. one 64-bit word per chip per line.
+
+pub mod float_layout;
+pub mod hex;
+
+use crate::channel::CHIPS;
+
+/// Bytes per cache line.
+pub const LINE_BYTES: usize = 64;
+
+/// One cache line as the 8 per-chip words the encoders consume.
+pub type ChipWords = [u64; CHIPS];
+
+/// Split a byte stream into cache lines of per-chip words. The tail is
+/// zero-padded to a full line (callers trim with the original length).
+pub fn bytes_to_chip_words(bytes: &[u8]) -> Vec<ChipWords> {
+    let lines = bytes.len().div_ceil(LINE_BYTES);
+    let mut out = Vec::with_capacity(lines);
+    for l in 0..lines {
+        let base = l * LINE_BYTES;
+        let mut words = [0u64; CHIPS];
+        for (j, w) in words.iter_mut().enumerate() {
+            let mut word = 0u64;
+            for beat in 0..8 {
+                let idx = base + beat * CHIPS + j;
+                let byte = bytes.get(idx).copied().unwrap_or(0);
+                word |= (byte as u64) << (beat * 8);
+            }
+            *w = word;
+        }
+        out.push(words);
+    }
+    out
+}
+
+/// Inverse of [`bytes_to_chip_words`]; truncates to `len` bytes.
+pub fn chip_words_to_bytes(lines: &[ChipWords], len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; lines.len() * LINE_BYTES];
+    for (l, words) in lines.iter().enumerate() {
+        let base = l * LINE_BYTES;
+        for (j, &w) in words.iter().enumerate() {
+            for beat in 0..8 {
+                out[base + beat * CHIPS + j] = (w >> (beat * 8)) as u8;
+            }
+        }
+    }
+    out.truncate(len);
+    out
+}
+
+/// f32 slice → little-endian byte stream (weights traffic, Fig. 19).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Byte stream → f32 slice (panics on misaligned length).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "f32 trace must be 4-byte aligned");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Fig. 1's approximation: flip a fraction of the 1s in the low `nbits`
+/// of every byte to 0 (deterministic order: every k-th candidate 1).
+pub fn flip_lsb_ones(bytes: &[u8], nbits: u32, fraction: f64) -> Vec<u8> {
+    assert!(nbits <= 8);
+    let mask: u8 = ((1u16 << nbits) - 1) as u8;
+    let total: u64 = bytes.iter().map(|b| (b & mask).count_ones() as u64).sum();
+    let to_flip = (total as f64 * fraction).round() as u64;
+    if to_flip == 0 {
+        return bytes.to_vec();
+    }
+    let stride = (total as f64 / to_flip as f64).max(1.0);
+    let mut out = bytes.to_vec();
+    let mut seen = 0u64;
+    let mut next = 0.0f64;
+    for b in out.iter_mut() {
+        let mut low = *b & mask;
+        if low == 0 {
+            continue;
+        }
+        for bit in 0..nbits {
+            if low & (1 << bit) != 0 {
+                if seen as f64 >= next {
+                    low &= !(1 << bit);
+                    next += stride;
+                }
+                seen += 1;
+            }
+        }
+        *b = (*b & !mask) | low;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chip_mapping_round_trips() {
+        let mut r = Rng::new(61);
+        for len in [0usize, 1, 63, 64, 65, 640, 1000] {
+            let bytes: Vec<u8> = (0..len).map(|_| r.next_u32() as u8).collect();
+            let lines = bytes_to_chip_words(&bytes);
+            assert_eq!(lines.len(), len.div_ceil(LINE_BYTES));
+            assert_eq!(chip_words_to_bytes(&lines, len), bytes);
+        }
+    }
+
+    #[test]
+    fn chip_j_carries_interleaved_bytes() {
+        // Line with byte i = i: chip 0 sees bytes 0,8,16,... beat-ordered.
+        let bytes: Vec<u8> = (0..64u8).collect();
+        let lines = bytes_to_chip_words(&bytes);
+        let w0 = lines[0][0];
+        for beat in 0..8 {
+            assert_eq!((w0 >> (beat * 8)) as u8, (beat * 8) as u8);
+        }
+        let w3 = lines[0][3];
+        for beat in 0..8 {
+            assert_eq!((w3 >> (beat * 8)) as u8, (beat * 8 + 3) as u8);
+        }
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let xs = [0.0f32, -1.5, 3.14159, f32::MIN_POSITIVE, 1e30];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn flip_lsb_ones_fraction() {
+        let bytes = vec![0xFFu8; 1000];
+        let out = flip_lsb_ones(&bytes, 4, 0.2);
+        let before: u64 = bytes.iter().map(|b| (b & 0x0F).count_ones() as u64).sum();
+        let after: u64 = out.iter().map(|b| (b & 0x0F).count_ones() as u64).sum();
+        let frac = (before - after) as f64 / before as f64;
+        assert!((frac - 0.2).abs() < 0.02, "flipped fraction {frac}");
+        // High nibble untouched.
+        assert!(out.iter().all(|b| b & 0xF0 == 0xF0));
+    }
+
+    #[test]
+    fn flip_zero_fraction_is_identity() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(flip_lsb_ones(&bytes, 4, 0.0), bytes);
+    }
+
+    #[test]
+    fn prop_round_trip_any_stream() {
+        prop::check(
+            "bytes -> chip words -> bytes",
+            62,
+            |r| {
+                let len = r.range(0, 512);
+                (0..len).map(|_| r.next_u32() as u64).collect::<Vec<u64>>()
+            },
+            |words| {
+                let bytes: Vec<u8> = words.iter().map(|&w| w as u8).collect();
+                let lines = bytes_to_chip_words(&bytes);
+                let back = chip_words_to_bytes(&lines, bytes.len());
+                if back == bytes {
+                    Ok(())
+                } else {
+                    Err("round trip mismatch".to_string())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Mini-criterion: warmup + timed iterations with mean/p50/p99 and
+//! throughput reporting (offline stand-in for `criterion`).
+//!
+//! `cargo bench` invokes the `[[bench]]` binaries with `harness = false`;
+//! they construct a [`Bencher`] and register closures. Honors
+//! `ZAC_BENCH_FAST=1` to shrink iteration counts (used by `make test` so
+//! the bench binaries can be smoke-run in CI). Timings are kept in f64
+//! nanoseconds — per-iteration costs can be sub-nanosecond once a batch
+//! is amortized, which `Duration` would truncate to zero.
+
+use std::time::{Duration, Instant};
+
+/// Measurement statistics for one benchmark (all times in ns).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional units-per-iteration for throughput reporting.
+    pub units: Option<(u64, &'static str)>,
+}
+
+impl Stats {
+    /// e.g. "12.3 Melem/s".
+    pub fn throughput(&self) -> Option<String> {
+        let (n, unit) = self.units?;
+        let per_sec = n as f64 / (self.mean_ns * 1e-9);
+        Some(humanize_rate(per_sec, unit))
+    }
+}
+
+fn humanize_rate(r: f64, unit: &str) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G{unit}/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M{unit}/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} K{unit}/s", r / 1e3)
+    } else {
+        format!("{r:.2} {unit}/s")
+    }
+}
+
+fn humanize_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// The bench harness.
+pub struct Bencher {
+    /// Target sampling time per benchmark.
+    pub sample_time: Duration,
+    /// Warmup time before sampling.
+    pub warmup: Duration,
+    /// Max samples collected.
+    pub max_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let fast = std::env::var("ZAC_BENCH_FAST").map_or(false, |v| v == "1");
+        Bencher {
+            sample_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(800)
+            },
+            warmup: if fast {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(200)
+            },
+            max_samples: if fast { 10 } else { 200 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, preventing the result from being optimized out.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        self.bench_units(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation (`units` processed per call).
+    pub fn bench_with_units<T>(
+        &mut self,
+        name: &str,
+        units: u64,
+        unit_name: &'static str,
+        mut f: impl FnMut() -> T,
+    ) -> &Stats {
+        self.bench_units(name, Some((units, unit_name)), &mut f)
+    }
+
+    fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units: Option<(u64, &'static str)>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Stats {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Choose a batch size so one sample is ≥ ~20µs (timer noise floor).
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((20e-6 / per_iter.max(1e-9)).ceil() as usize).max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.sample_time && samples.len() < self.max_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n * batch,
+            mean_ns: mean,
+            p50_ns: samples.get(n / 2).copied().unwrap_or(mean),
+            p99_ns: samples.get(n * 99 / 100).copied().unwrap_or(mean),
+            units,
+        };
+        let tp = stats
+            .throughput()
+            .map(|t| format!("  ({t})"))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  iters {:>8}{}",
+            stats.name,
+            humanize_ns(stats.mean_ns),
+            humanize_ns(stats.p50_ns),
+            humanize_ns(stats.p99_ns),
+            stats.iters,
+            tp
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("ZAC_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let st = b.bench("spin", || {
+            acc = std::hint::black_box(acc).wrapping_mul(6364136223846793005).wrapping_add(1);
+            acc
+        });
+        assert!(st.mean_ns > 0.0);
+        assert!(st.iters > 0);
+    }
+
+    #[test]
+    fn throughput_formats() {
+        assert_eq!(humanize_rate(1.5e6, "elem"), "1.50 Melem/s");
+        assert_eq!(humanize_rate(900.0, "word"), "900.00 word/s");
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(humanize_ns(500.0), "500.0 ns");
+        assert_eq!(humanize_ns(1.5e6), "1.50 ms");
+    }
+}

@@ -1,0 +1,139 @@
+//! Bit-level helpers shared by the encoders and the channel model.
+
+/// Transpose an 8x8 bit matrix held in a `u64`.
+///
+/// Input layout: byte `b` of `x` is row `b` (beat `b` on the channel),
+/// bit `l` of that byte is column `l` (data line `l`). The output has
+/// byte `l` = the per-beat bit sequence seen by line `l` — exactly the
+/// per-line view the switching-energy model needs.
+///
+/// Hacker's Delight 7-3 (straight-line, no branches) — this sits on the
+/// simulator's hot path.
+#[inline]
+pub fn transpose8x8(mut x: u64) -> u64 {
+    let t = (x ^ (x >> 7)) & 0x00AA00AA00AA00AA;
+    x ^= t ^ (t << 7);
+    let t = (x ^ (x >> 14)) & 0x0000CCCC0000CCCC;
+    x ^= t ^ (t << 14);
+    let t = (x ^ (x >> 28)) & 0x00000000F0F0F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// Per-line falling-edge (1→0) transition count for one 8-beat transfer.
+///
+/// `lane_seq` is the line's bit value per beat (bit 0 = first beat),
+/// `prev` is the line state left by the previous transfer. Returns
+/// (number of 1→0 transitions, final line state).
+#[inline]
+pub fn falling_edges(lane_seq: u8, prev: bool) -> (u32, bool) {
+    // Sequence shifted so bit b holds the value *before* beat b.
+    let shifted = (lane_seq << 1) | prev as u8;
+    let falling = shifted & !lane_seq;
+    (falling.count_ones(), lane_seq & 0x80 != 0)
+}
+
+/// Build a repeated per-chunk mask: `bits_per_chunk` ones placed at
+/// `offset` within every `chunk_width`-bit chunk of a 64-bit word.
+///
+/// `make_chunk_mask(8, 2, 6)` = the top-2-bits-of-every-byte mask used by
+/// the paper's Tolerance circuit (Fig. 8(1)).
+pub fn make_chunk_mask(chunk_width: u32, bits_per_chunk: u32, offset: u32) -> u64 {
+    assert!(chunk_width.is_power_of_two() && (8..=64).contains(&chunk_width));
+    assert!(bits_per_chunk + offset <= chunk_width);
+    if bits_per_chunk == 0 {
+        return 0;
+    }
+    let ones = if bits_per_chunk == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits_per_chunk) - 1
+    };
+    let chunk = ones << offset;
+    let mut mask = 0u64;
+    let mut pos = 0;
+    while pos < 64 {
+        mask |= chunk << pos;
+        pos += chunk_width;
+    }
+    mask
+}
+
+/// MSB-side mask: top `bits_per_chunk` bits of every chunk (Tolerance).
+pub fn msb_chunk_mask(chunk_width: u32, bits_per_chunk: u32) -> u64 {
+    make_chunk_mask(chunk_width, bits_per_chunk, chunk_width - bits_per_chunk)
+}
+
+/// LSB-side mask: bottom `bits_per_chunk` bits of every chunk (Truncation).
+pub fn lsb_chunk_mask(chunk_width: u32, bits_per_chunk: u32) -> u64 {
+    make_chunk_mask(chunk_width, bits_per_chunk, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bit(x: u64, row: u32, col: u32) -> bool {
+        (x >> (row * 8 + col)) & 1 != 0
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let mut s = 0x9E3779B97F4A7C15u64;
+        for _ in 0..100 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            assert_eq!(transpose8x8(transpose8x8(s)), s);
+        }
+    }
+
+    #[test]
+    fn transpose_moves_bits() {
+        let mut s = 1u64;
+        for row in 0..8 {
+            for col in 0..8 {
+                let x = 1u64 << (row * 8 + col);
+                let t = transpose8x8(x);
+                assert!(bit(t, col, row), "bit ({row},{col})");
+                assert_eq!(t.count_ones(), 1);
+                s = s.wrapping_add(x);
+            }
+        }
+    }
+
+    #[test]
+    fn falling_edges_counts() {
+        // 1,0,1,0,... starting from prev=1: falls at beats 1,3,5,7 plus
+        // prev(1)->beat0(1)? no. seq bit0=1.
+        let (n, last) = falling_edges(0b0101_0101, true);
+        assert_eq!(n, 4);
+        assert!(!last);
+        // all-ones from 0: no falls, ends high.
+        let (n, last) = falling_edges(0xFF, false);
+        assert_eq!(n, 0);
+        assert!(last);
+        // single pulse at beat 0 from prev=0: one fall (beat0 -> beat1).
+        let (n, last) = falling_edges(0b0000_0001, false);
+        assert_eq!(n, 1);
+        assert!(!last);
+        // prev=1, all-zero seq: one fall at entry.
+        let (n, _) = falling_edges(0, true);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn chunk_masks() {
+        assert_eq!(msb_chunk_mask(8, 2), 0xC0C0_C0C0_C0C0_C0C0);
+        assert_eq!(msb_chunk_mask(16, 4), 0xF000_F000_F000_F000);
+        assert_eq!(lsb_chunk_mask(8, 4), 0x0F0F_0F0F_0F0F_0F0F);
+        assert_eq!(lsb_chunk_mask(16, 2), 0x0003_0003_0003_0003);
+        assert_eq!(msb_chunk_mask(64, 16), 0xFFFF_0000_0000_0000);
+        assert_eq!(lsb_chunk_mask(32, 0), 0);
+    }
+
+    #[test]
+    fn tolerance_truncation_disjoint_when_sane() {
+        let tol = msb_chunk_mask(8, 2);
+        let trunc = lsb_chunk_mask(8, 2);
+        assert_eq!(tol & trunc, 0);
+    }
+}

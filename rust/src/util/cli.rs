@@ -1,0 +1,272 @@
+//! Declarative command-line parser (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, positional arguments, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One option/flag specification.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A (sub)command specification.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+    subs: Vec<Command>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Matches {
+    /// Subcommand path, e.g. `["figure"]`.
+    pub path: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` required option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument (documented; collected in order).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subs.push(sub);
+        self
+    }
+
+    /// Render `--help`.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            out.push_str(" <SUBCOMMAND>");
+        }
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                out.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let kind = if o.is_flag {
+                    String::new()
+                } else if let Some(d) = &o.default {
+                    format!(" <v> [default: {d}]")
+                } else {
+                    " <v> (required)".to_string()
+                };
+                out.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, kind));
+            }
+        }
+        if !self.subs.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for s in &self.subs {
+                out.push_str(&format!("  {:<14} {}\n", s.name, s.about));
+            }
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Matches> {
+        let mut m = Matches::default();
+        self.parse_into(args, &mut m)?;
+        Ok(m)
+    }
+
+    fn parse_into(&self, args: &[String], m: &mut Matches) -> anyhow::Result<()> {
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                m.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.help());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.is_flag {
+                    m.flags.insert(key.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    m.values.insert(key.to_string(), v);
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == a.as_str()) {
+                m.path.push(sub.name.to_string());
+                return sub.parse_into(&args[i + 1..], m);
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && !m.values.contains_key(o.name) {
+                anyhow::bail!("missing required --{}\n\n{}", o.name, self.help());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn app() -> Command {
+        Command::new("zac-dest", "test app")
+            .subcommand(
+                Command::new("figure", "make a figure")
+                    .positional("id", "figure id")
+                    .opt("seed", "42", "rng seed")
+                    .opt("out", "-", "output path")
+                    .flag("verbose", "chatty"),
+            )
+            .subcommand(Command::new("encode", "encode a trace").req("input", "trace file"))
+    }
+
+    #[test]
+    fn parses_subcommand_with_defaults() {
+        let m = app().parse(&argv("figure fig10 --seed 7 --verbose")).unwrap();
+        assert_eq!(m.path, vec!["figure"]);
+        assert_eq!(m.positionals, vec!["fig10"]);
+        assert_eq!(m.get_usize("seed").unwrap(), 7);
+        assert_eq!(m.get_or("out", ""), "-");
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = app().parse(&argv("figure fig14 --seed=9")).unwrap();
+        assert_eq!(m.get_usize("seed").unwrap(), 9);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(&argv("encode")).is_err());
+        assert!(app().parse(&argv("encode --input t.hex")).is_ok());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(app().parse(&argv("figure fig10 --nope 1")).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = app().help();
+        assert!(h.contains("SUBCOMMANDS"));
+        assert!(h.contains("figure"));
+    }
+}

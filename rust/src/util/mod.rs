@@ -1,0 +1,25 @@
+//! Self-contained utility substrate.
+//!
+//! The sandbox vendors only the `xla` + `anyhow` dependency chains, so the
+//! usual ecosystem crates are re-implemented here in minimal, fully-tested
+//! form (see DESIGN.md for the substitution table):
+//!
+//! * [`rng`] — deterministic xoshiro256** RNG + distributions (for `rand`)
+//! * [`bits`] — bit-matrix transpose and word/lane helpers
+//! * [`cli`] — declarative argument parser (for `clap`)
+//! * [`json_lite`] — JSON parser/serializer (for `serde_json`)
+//! * [`toml_lite`] — TOML-subset parser (for `toml`)
+//! * [`bench`] — mini-criterion measurement harness (for `criterion`)
+//! * [`prop`] — property-testing mini-framework (for `proptest`)
+//! * [`par`] — scoped-thread parallel map (for `rayon`)
+//! * [`table`] — aligned text tables for the figure harness
+
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod json_lite;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod toml_lite;

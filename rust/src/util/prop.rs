@@ -1,0 +1,177 @@
+//! Property-testing mini-framework (offline stand-in for `proptest`).
+//!
+//! Generators are closures over the deterministic [`Rng`](super::rng::Rng);
+//! failures report the seed and a shrunk counterexample (halving-style
+//! shrinking for integer-like inputs via `Shrink`).
+
+use super::rng::Rng;
+
+/// Number of cases per property (env `ZAC_PROP_CASES` overrides).
+pub fn default_cases() -> usize {
+    std::env::var("ZAC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// A value that can propose smaller versions of itself.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, roughly ordered most-aggressive first.
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if *self > 0 {
+            c.push(0);
+            c.push(self / 2);
+            c.push(self - 1);
+            // Clear the highest set bit.
+            c.push(self & !(1u64 << (63 - self.leading_zeros())));
+        }
+        c.dedup();
+        c
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        (*self as u64).shrinks().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for bool {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            vec![]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if !self.is_empty() {
+            c.push(self[..self.len() / 2].to_vec());
+            c.push(self[1..].to_vec());
+            let mut tail = self.clone();
+            tail.pop();
+            c.push(tail);
+            // Shrink the first element.
+            for s in self[0].shrinks().into_iter().take(2) {
+                let mut v = self.clone();
+                v[0] = s;
+                c.push(v);
+            }
+        }
+        c
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut c: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        c.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        c
+    }
+}
+
+/// Run a property: generate `cases` inputs with `gen`, check `prop`,
+/// shrink on failure. Panics with the seed + minimal counterexample.
+pub fn check<T: Shrink>(
+    name: &str,
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = (input, msg);
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 10_000 {
+                improved = false;
+                rounds += 1;
+                for cand in best.0.shrinks() {
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed {seed}, case {case}):\n  \
+                 counterexample: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("u64 xor self is zero", 1, |r| r.next_u64(), |x| {
+            if x ^ x == 0 {
+                Ok(())
+            } else {
+                Err("xor".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check(
+                "all u64 < 1000",
+                2,
+                |r| r.next_u64(),
+                |x| {
+                    if *x < 1000 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} too big"))
+                    }
+                },
+            );
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        // Shrinker should land on the boundary value 1000.
+        assert!(msg.contains("counterexample: 1000"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrinks_reduce_length() {
+        let v = vec![5u64, 6, 7];
+        assert!(v.shrinks().iter().any(|s| s.len() < 3));
+    }
+}

@@ -1,0 +1,207 @@
+//! TOML-subset parser (offline stand-in for `toml` + `serde`).
+//!
+//! Supports the subset the run-config files need: `[section]` and
+//! `[section.sub]` headers, `key = value` with strings, integers, floats,
+//! booleans and flat arrays, plus `#` comments. Values are exposed
+//! through the same [`Json`](super::json_lite::Json) value type so config
+//! and manifest plumbing share accessors.
+
+use std::collections::BTreeMap;
+
+use super::json_lite::Json;
+
+/// Parse a TOML-subset document into a nested `Json::Obj`.
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unclosed section", lineno + 1))?
+                .trim();
+            anyhow::ensure!(!name.is_empty(), "line {}: empty section", lineno + 1);
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_section(&mut root, &section)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {}", lineno + 1, e))?;
+        insert(&mut root, &section, key, value)?;
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_section(root: &mut BTreeMap<String, Json>, path: &[String]) -> anyhow::Result<()> {
+    let mut cur = root;
+    for p in path {
+        let entry = cur
+            .entry(p.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => anyhow::bail!("section {p:?} conflicts with a value"),
+        };
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    key: String,
+    value: Json,
+) -> anyhow::Result<()> {
+    let mut cur = root;
+    for p in path {
+        cur = match cur.get_mut(p) {
+            Some(Json::Obj(m)) => m,
+            _ => anyhow::bail!("missing section {p:?}"),
+        };
+    }
+    anyhow::ensure!(!cur.contains_key(&key), "duplicate key {key:?}");
+    cur.insert(key, value);
+    Ok(())
+}
+
+fn parse_value(v: &str) -> anyhow::Result<Json> {
+    anyhow::ensure!(!v.is_empty(), "empty value");
+    if let Some(rest) = v.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unclosed array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    if v.starts_with('"') {
+        let inner = v
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| anyhow::anyhow!("unterminated string {v:?}"))?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    clean
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow::anyhow!("cannot parse value {v:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_run_config() {
+        let doc = r#"
+            # experiment config
+            name = "fig14"
+            seed = 42
+
+            [encoder]
+            scheme = "ZAC-DEST"
+            similarity_limit = 80
+            truncation = 0
+            tolerance = 0
+            table_size = 64
+
+            [workload]
+            kinds = ["imagenet", "quant"]
+            images = 128
+            lr = 0.05
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fig14");
+        assert_eq!(
+            v.get("encoder")
+                .unwrap()
+                .get("similarity_limit")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            80
+        );
+        let kinds = v.get("workload").unwrap().get("kinds").unwrap();
+        assert_eq!(kinds.as_arr().unwrap().len(), 2);
+        assert!((v.get("workload").unwrap().get("lr").unwrap().as_f64().unwrap() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_sections() {
+        let v = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        assert_eq!(v.get("a").unwrap().get("b").unwrap().get("x").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("a").unwrap().get("c").unwrap().get("y").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let v = parse("k = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = @@\n").is_err());
+    }
+
+    #[test]
+    fn arrays_of_numbers_and_strings() {
+        let v = parse("xs = [1, 2, 3]\nss = [\"a\", \"b\"]\n").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("ss").unwrap().as_arr().unwrap()[1].as_str().unwrap(), "b");
+    }
+}

@@ -1,0 +1,155 @@
+//! CNN plumbing shared by the ImageNet-zoo and ResNet workloads:
+//! parameter init (host-side He init), training loop and batched
+//! inference through the `cnn_train_step` / `cnn_infer` artifacts.
+
+use anyhow::Result;
+
+use crate::datasets::Image;
+use crate::quality::argmax_rows;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Fixed artifact geometry (must match python/compile/model.py).
+pub const BATCH: usize = 32;
+pub const IMG: usize = 32;
+pub const CLASSES: usize = 10;
+
+/// The six parameter tensors of the residual CNN.
+#[derive(Clone, Debug)]
+pub struct CnnParams(pub Vec<Tensor>);
+
+/// Parameter shapes, mirroring `CNN_PARAM_SHAPES` in model.py.
+pub fn param_shapes() -> Vec<(&'static str, Vec<usize>)> {
+    let feat = (IMG / 4) * (IMG / 4) * 16;
+    vec![
+        ("w1", vec![3, 3, 3, 16]),
+        ("b1", vec![16]),
+        ("w2", vec![3, 3, 16, 16]),
+        ("b2", vec![16]),
+        ("w3", vec![feat, CLASSES]),
+        ("b3", vec![CLASSES]),
+    ]
+}
+
+impl CnnParams {
+    /// He-initialized parameters (host RNG; deterministic per seed).
+    pub fn init(seed: u64) -> CnnParams {
+        let mut r = Rng::new(seed ^ 0xC44);
+        let ps = param_shapes()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.starts_with('w') {
+                    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                    let std = (2.0 / fan_in as f64).sqrt() as f32;
+                    (0..n).map(|_| r.normal_f32(0.0, std)).collect()
+                } else {
+                    vec![0.0f32; n]
+                };
+                Tensor::f32(data, &shape)
+            })
+            .collect();
+        CnnParams(ps)
+    }
+
+    /// Flatten all parameters into one f32 stream (weight-trace order).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for t in &self.0 {
+            out.extend_from_slice(t.as_f32().unwrap());
+        }
+        out
+    }
+
+    /// Rebuild from a flat stream (e.g. a reconstructed weight trace).
+    pub fn unflatten(&self, flat: &[f32]) -> CnnParams {
+        let mut out = Vec::with_capacity(self.0.len());
+        let mut off = 0usize;
+        for t in &self.0 {
+            let n = t.shape().iter().product::<usize>();
+            out.push(Tensor::f32(flat[off..off + n].to_vec(), t.shape()));
+            off += n;
+        }
+        assert_eq!(off, flat.len());
+        CnnParams(out)
+    }
+}
+
+/// Pack a batch of images (exactly [`BATCH`]) as the NHWC f32 tensor.
+pub fn batch_tensor(images: &[&Image]) -> Tensor {
+    assert_eq!(images.len(), BATCH);
+    let mut data = Vec::with_capacity(BATCH * IMG * IMG * 3);
+    for img in images {
+        assert_eq!((img.w, img.h, img.channels), (IMG, IMG, 3));
+        data.extend(img.to_f32());
+    }
+    Tensor::f32(data, &[BATCH, IMG, IMG, 3])
+}
+
+fn labels_tensor(images: &[&Image]) -> Tensor {
+    Tensor::i32(images.iter().map(|i| i.label).collect(), &[BATCH])
+}
+
+/// SGD training over shuffled batches; returns (params, loss history).
+pub fn train(
+    rt: &Runtime,
+    images: &[Image],
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(CnnParams, Vec<f32>)> {
+    assert!(
+        images.len() >= BATCH,
+        "need at least one batch of training images"
+    );
+    let mut params = CnnParams::init(seed);
+    let mut r = Rng::new(seed ^ 0x7ea1);
+    let mut order: Vec<usize> = (0..images.len()).collect();
+    let mut losses = Vec::with_capacity(steps);
+    let mut cursor = images.len(); // force initial shuffle
+    for _ in 0..steps {
+        if cursor + BATCH > order.len() {
+            r.shuffle(&mut order);
+            cursor = 0;
+        }
+        let batch: Vec<&Image> = order[cursor..cursor + BATCH]
+            .iter()
+            .map(|&i| &images[i])
+            .collect();
+        cursor += BATCH;
+        let mut args = vec![
+            batch_tensor(&batch),
+            labels_tensor(&batch),
+            Tensor::scalar_f32(lr),
+        ];
+        args.extend(params.0.iter().cloned());
+        let mut out = rt.exec("cnn_train_step", &args)?;
+        let loss = out.pop().expect("loss").into_f32()?[0];
+        losses.push(loss);
+        params = CnnParams(out);
+    }
+    Ok((params, losses))
+}
+
+/// Batched inference; returns predicted classes for every image
+/// (the image count must be a multiple of [`BATCH`]).
+pub fn predict(rt: &Runtime, params: &CnnParams, images: &[Image]) -> Result<Vec<i32>> {
+    assert_eq!(images.len() % BATCH, 0, "predict needs whole batches");
+    let mut preds = Vec::with_capacity(images.len());
+    for chunk in images.chunks(BATCH) {
+        let refs: Vec<&Image> = chunk.iter().collect();
+        let mut args = vec![batch_tensor(&refs)];
+        args.extend(params.0.iter().cloned());
+        let out = rt.exec("cnn_infer", &args)?;
+        let logits = out[0].as_f32()?;
+        preds.extend(argmax_rows(logits, CLASSES));
+    }
+    Ok(preds)
+}
+
+/// Top-1 accuracy of a parameter set over an image set.
+pub fn accuracy(rt: &Runtime, params: &CnnParams, images: &[Image]) -> Result<f64> {
+    let preds = predict(rt, params, images)?;
+    let labels: Vec<i32> = images.iter().map(|i| i.label).collect();
+    Ok(crate::quality::top1(&preds, &labels))
+}

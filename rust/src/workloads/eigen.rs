@@ -1,0 +1,112 @@
+//! Eigen: PCA face identification (paper §VII-A4).
+//!
+//! PCA basis learned from clean training faces via the `pca_cov` and
+//! `pca_power_iter` artifacts (blocked power iteration with in-graph
+//! Gram-Schmidt — no LAPACK custom-calls, which PJRT-CPU 0.5.1 cannot
+//! execute); identification is nearest-neighbour in eigenspace.
+
+use anyhow::Result;
+
+use crate::datasets::Image;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Geometry fixed by the artifacts (model.py FACE_* / PCA_K).
+pub const N: usize = 128;
+pub const D: usize = 576; // 24*24
+pub const KDIM: usize = 16;
+
+/// The trained eigenface model.
+#[derive(Clone, Debug)]
+pub struct EigenModel {
+    pub mean: Tensor,       // (D,)
+    pub components: Tensor, // (D, KDIM)
+    /// Projected gallery (training) faces + labels.
+    gallery: Vec<[f32; KDIM]>,
+    gallery_labels: Vec<i32>,
+}
+
+fn faces_tensor(faces: &[Image]) -> Tensor {
+    assert_eq!(faces.len(), N, "eigen expects exactly {N} faces");
+    let mut data = Vec::with_capacity(N * D);
+    for f in faces {
+        assert_eq!((f.w * f.h, f.channels), (D, 1));
+        // Per-face photometric normalization (zero mean, unit norm) —
+        // standard eigenfaces preprocessing so illumination does not
+        // dominate the principal components.
+        let px = f.to_f32();
+        let mean = px.iter().sum::<f32>() / px.len() as f32;
+        let norm = px
+            .iter()
+            .map(|v| (v - mean) * (v - mean))
+            .sum::<f32>()
+            .sqrt()
+            .max(1e-6);
+        data.extend(px.iter().map(|v| (v - mean) / norm));
+    }
+    Tensor::f32(data, &[N, D])
+}
+
+/// Fit PCA on clean training faces and index them as the gallery.
+pub fn fit(rt: &Runtime, train: &[Image], power_iters: usize, seed: u64) -> Result<EigenModel> {
+    let x = faces_tensor(train);
+    let out = rt.exec("pca_cov", &[x.clone()])?;
+    let cov = out[0].clone();
+    let mean = out[1].clone();
+    // Random init, then blocked power iteration.
+    let mut r = Rng::new(seed ^ 0xe1ce);
+    let mut v = Tensor::f32(
+        (0..D * KDIM).map(|_| r.normal_f32(0.0, 1.0)).collect(),
+        &[D, KDIM],
+    );
+    for _ in 0..power_iters {
+        v = rt.exec("pca_power_iter", &[cov.clone(), v])?.remove(0);
+    }
+    let proj = project(rt, &x, &mean, &v)?;
+    Ok(EigenModel {
+        mean,
+        components: v,
+        gallery: proj,
+        gallery_labels: train.iter().map(|f| f.label).collect(),
+    })
+}
+
+fn project(rt: &Runtime, x: &Tensor, mean: &Tensor, v: &Tensor) -> Result<Vec<[f32; KDIM]>> {
+    let out = rt.exec("pca_project", &[x.clone(), mean.clone(), v.clone()])?;
+    let flat = out[0].as_f32()?;
+    Ok(flat
+        .chunks_exact(KDIM)
+        .map(|c| {
+            let mut a = [0f32; KDIM];
+            a.copy_from_slice(c);
+            a
+        })
+        .collect())
+}
+
+impl EigenModel {
+    /// Identify each probe face by nearest gallery neighbour; returns
+    /// identification accuracy.
+    pub fn identify_accuracy(&self, rt: &Runtime, probes: &[Image]) -> Result<f64> {
+        let x = faces_tensor(probes);
+        let proj = project(rt, &x, &self.mean, &self.components)?;
+        let mut correct = 0usize;
+        for (p, face) in proj.iter().zip(probes) {
+            let mut best = (f32::INFINITY, -1i32);
+            for (g, &lab) in self.gallery.iter().zip(&self.gallery_labels) {
+                let mut d = 0f32;
+                for k in 0..KDIM {
+                    let t = p[k] - g[k];
+                    d += t * t;
+                }
+                if d < best.0 {
+                    best = (d, lab);
+                }
+            }
+            if best.1 == face.label {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / probes.len() as f64)
+    }
+}

@@ -1,0 +1,365 @@
+//! The five evaluation workloads (paper §VII-A) and the [`Suite`] that
+//! trains them once on clean data, then evaluates any encoder
+//! configuration by reconstructing the test traces through the channel
+//! and re-running the models (Fig. 9 workflow).
+//!
+//! | paper workload | here | quality metric |
+//! |---|---|---|
+//! | ImageNet CNN zoo | [`Kind::ImageNet`] | mean top-1 ratio over the zoo |
+//! | ResNet/CIFAR-100 | [`Kind::ResNet`]   | top-1 ratio (supports train-on-reconstructed) |
+//! | Quant (K-Means)  | [`Kind::Quant`]    | SSIM ratio |
+//! | Eigen (PCA)      | [`Kind::Eigen`]    | identification-accuracy ratio |
+//! | SVM (FMNIST)     | [`Kind::Svm`]      | accuracy ratio |
+
+pub mod cnn;
+pub mod eigen;
+pub mod quant;
+pub mod svm;
+
+use anyhow::Result;
+
+use crate::coordinator::{simulate_bytes, simulate_f32s, RunOutput};
+use crate::datasets::{self, Image};
+use crate::encoding::ZacConfig;
+use crate::quality::quality_ratio;
+use crate::runtime::Runtime;
+
+/// Workload identifiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    ImageNet,
+    ResNet,
+    Quant,
+    Eigen,
+    Svm,
+}
+
+impl Kind {
+    pub fn all() -> [Kind; 5] {
+        [Kind::ImageNet, Kind::ResNet, Kind::Quant, Kind::Eigen, Kind::Svm]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Kind::ImageNet => "ImageNet",
+            Kind::ResNet => "ResNet",
+            Kind::Quant => "Quant",
+            Kind::Eigen => "Eigen",
+            Kind::Svm => "SVM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s.to_ascii_lowercase().as_str() {
+            "imagenet" => Some(Kind::ImageNet),
+            "resnet" => Some(Kind::ResNet),
+            "quant" => Some(Kind::Quant),
+            "eigen" => Some(Kind::Eigen),
+            "svm" => Some(Kind::Svm),
+            _ => None,
+        }
+    }
+}
+
+/// One workload evaluation under one encoder configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    pub kind: Kind,
+    /// The paper's quality ratio (approx / original metric).
+    pub quality: f64,
+    pub original_metric: f64,
+    pub approx_metric: f64,
+    /// Channel counts + encoding stats of the workload's input trace.
+    pub run: RunOutput,
+}
+
+/// Training/evaluation budget (sized so the full suite builds in
+/// minutes on CPU-PJRT; `quick()` for tests).
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteBudget {
+    pub zoo_size: usize,
+    pub train_images: usize,
+    pub eval_images: usize,
+    pub train_steps: usize,
+    pub lr: f32,
+    pub svm_train: usize,
+    pub svm_test: usize,
+    pub svm_steps: usize,
+    pub pca_iters: usize,
+    pub kmeans_iters: usize,
+    pub kodak_images: usize,
+}
+
+impl SuiteBudget {
+    pub fn full() -> Self {
+        SuiteBudget {
+            zoo_size: 4,
+            train_images: 512,
+            eval_images: 128,
+            train_steps: 240,
+            lr: 0.08,
+            svm_train: 640,
+            svm_test: 128,
+            svm_steps: 200,
+            pca_iters: 25,
+            kmeans_iters: 6,
+            kodak_images: 4,
+        }
+    }
+
+    pub fn quick() -> Self {
+        SuiteBudget {
+            zoo_size: 1,
+            train_images: 128,
+            eval_images: 32,
+            train_steps: 12,
+            lr: 0.08,
+            svm_train: 128,
+            svm_test: 64,
+            svm_steps: 30,
+            pca_iters: 8,
+            kmeans_iters: 3,
+            kodak_images: 1,
+        }
+    }
+}
+
+/// Everything trained/learned on clean data, reusable across encoder
+/// configurations (the expensive part of the Fig. 9 workflow).
+pub struct Suite {
+    pub rt: Runtime,
+    pub seed: u64,
+    pub budget: SuiteBudget,
+    // ImageNet zoo + ResNet.
+    pub train_images: Vec<Image>,
+    pub test_images: Vec<Image>,
+    pub zoo: Vec<cnn::CnnParams>,
+    pub zoo_clean_acc: Vec<f64>,
+    pub resnet: cnn::CnnParams,
+    pub resnet_clean_acc: f64,
+    // Quant.
+    pub kodak: Vec<Image>,
+    pub quant_clean_ssim: Vec<f64>,
+    // Eigen.
+    pub faces_test: Vec<Image>,
+    pub eigen_model: eigen::EigenModel,
+    pub eigen_clean_acc: f64,
+    // SVM.
+    pub fmnist_test: Vec<Image>,
+    pub svm_w: crate::runtime::Tensor,
+    pub svm_clean_acc: f64,
+}
+
+impl Suite {
+    /// Train all five workloads on clean data. Deterministic per seed.
+    pub fn build(rt: Runtime, seed: u64, budget: SuiteBudget) -> Result<Suite> {
+        // --- CNN corpora. ---
+        let train_images = datasets::synth_images(budget.train_images, seed);
+        let test_images = datasets::synth_images(budget.eval_images, seed ^ 0x7e57);
+        let mut zoo = Vec::with_capacity(budget.zoo_size);
+        let mut zoo_clean_acc = Vec::with_capacity(budget.zoo_size);
+        for m in 0..budget.zoo_size {
+            let (p, _losses) = cnn::train(
+                &rt,
+                &train_images,
+                budget.train_steps,
+                budget.lr,
+                seed + 1000 * m as u64,
+            )?;
+            zoo_clean_acc.push(cnn::accuracy(&rt, &p, &test_images)?);
+            zoo.push(p);
+        }
+        // ResNet analogue: same architecture, trained longer.
+        let (resnet, _) = cnn::train(
+            &rt,
+            &train_images,
+            budget.train_steps * 3 / 2,
+            budget.lr,
+            seed ^ 0x2E5,
+        )?;
+        let resnet_clean_acc = cnn::accuracy(&rt, &resnet, &test_images)?;
+
+        // --- Quant. ---
+        let kodak = datasets::kodak_like(budget.kodak_images, 64, 64, seed ^ 0x0d);
+        let mut quant_clean_ssim = Vec::with_capacity(kodak.len());
+        for img in &kodak {
+            quant_clean_ssim.push(quant::quant_ssim(&rt, img, img, budget.kmeans_iters)?);
+        }
+
+        // --- Eigen: same identities, disjoint samples (Yale protocol). ---
+        let (faces_train, faces_test) = datasets::faces_split(16, 8, 8, seed ^ 0xFA);
+        let eigen_model = eigen::fit(&rt, &faces_train, budget.pca_iters, seed)?;
+        let eigen_clean_acc = eigen_model.identify_accuracy(&rt, &faces_test)?;
+
+        // --- SVM. ---
+        let fmnist_train = datasets::fmnist_like(budget.svm_train, seed ^ 0x5f);
+        let fmnist_test = datasets::fmnist_like(budget.svm_test, seed ^ 0x5e);
+        let (svm_w, _) = svm::train(&rt, &fmnist_train, budget.svm_steps, 0.05, seed)?;
+        let svm_clean_acc = svm::accuracy(&rt, &svm_w, &fmnist_test)?;
+
+        Ok(Suite {
+            rt,
+            seed,
+            budget,
+            train_images,
+            test_images,
+            zoo,
+            zoo_clean_acc,
+            resnet,
+            resnet_clean_acc,
+            kodak,
+            quant_clean_ssim,
+            faces_test,
+            eigen_model,
+            eigen_clean_acc,
+            fmnist_test,
+            svm_w,
+            svm_clean_acc,
+        })
+    }
+
+    /// Reconstruct a set of images through the channel under `cfg`,
+    /// returning the approximate images plus the trace energy/stats.
+    pub fn reconstruct_images(&self, cfg: &ZacConfig, images: &[Image]) -> (Vec<Image>, RunOutput) {
+        // One concatenated trace: better table locality and one energy
+        // figure for the whole set, as in the paper's methodology.
+        let mut bytes = Vec::new();
+        for img in images {
+            bytes.extend_from_slice(&img.data);
+        }
+        let out = simulate_bytes(cfg, &bytes, true);
+        let mut rebuilt = Vec::with_capacity(images.len());
+        let mut off = 0usize;
+        for img in images {
+            let n = img.data.len();
+            rebuilt.push(img.with_data(out.bytes[off..off + n].to_vec()));
+            off += n;
+        }
+        (rebuilt, out)
+    }
+
+    /// Evaluate one workload under one encoder configuration.
+    pub fn eval(&self, cfg: &ZacConfig, kind: Kind) -> Result<WorkloadResult> {
+        match kind {
+            Kind::ImageNet => {
+                let (recon, run) = self.reconstruct_images(cfg, &self.test_images);
+                let mut ratios = Vec::new();
+                let mut approx_mean = 0.0;
+                for (p, &clean) in self.zoo.iter().zip(&self.zoo_clean_acc) {
+                    let acc = cnn::accuracy(&self.rt, p, &recon)?;
+                    approx_mean += acc;
+                    ratios.push(quality_ratio(acc, clean));
+                }
+                let n = self.zoo.len() as f64;
+                Ok(WorkloadResult {
+                    kind,
+                    quality: ratios.iter().sum::<f64>() / n,
+                    original_metric: self.zoo_clean_acc.iter().sum::<f64>() / n,
+                    approx_metric: approx_mean / n,
+                    run,
+                })
+            }
+            Kind::ResNet => {
+                let (recon, run) = self.reconstruct_images(cfg, &self.test_images);
+                let acc = cnn::accuracy(&self.rt, &self.resnet, &recon)?;
+                Ok(WorkloadResult {
+                    kind,
+                    quality: quality_ratio(acc, self.resnet_clean_acc),
+                    original_metric: self.resnet_clean_acc,
+                    approx_metric: acc,
+                    run,
+                })
+            }
+            Kind::Quant => {
+                let (recon, run) = self.reconstruct_images(cfg, &self.kodak);
+                let mut q = 0.0;
+                let mut approx = 0.0;
+                for ((r, orig), &clean) in
+                    recon.iter().zip(&self.kodak).zip(&self.quant_clean_ssim)
+                {
+                    let ssim = quant::quant_ssim(&self.rt, r, orig, self.budget.kmeans_iters)?;
+                    approx += ssim;
+                    q += quality_ratio(ssim, clean);
+                }
+                let n = recon.len() as f64;
+                Ok(WorkloadResult {
+                    kind,
+                    quality: q / n,
+                    original_metric: self.quant_clean_ssim.iter().sum::<f64>() / n,
+                    approx_metric: approx / n,
+                    run,
+                })
+            }
+            Kind::Eigen => {
+                let (recon, run) = self.reconstruct_images(cfg, &self.faces_test);
+                let acc = self.eigen_model.identify_accuracy(&self.rt, &recon)?;
+                Ok(WorkloadResult {
+                    kind,
+                    quality: quality_ratio(acc, self.eigen_clean_acc),
+                    original_metric: self.eigen_clean_acc,
+                    approx_metric: acc,
+                    run,
+                })
+            }
+            Kind::Svm => {
+                let (recon, run) = self.reconstruct_images(cfg, &self.fmnist_test);
+                let acc = svm::accuracy(&self.rt, &self.svm_w, &recon)?;
+                Ok(WorkloadResult {
+                    kind,
+                    quality: quality_ratio(acc, self.svm_clean_acc),
+                    original_metric: self.svm_clean_acc,
+                    approx_metric: acc,
+                    run,
+                })
+            }
+        }
+    }
+
+    /// Fig. 18/21: train a fresh ResNet *on reconstructed* training
+    /// images and evaluate it on reconstructed test images.
+    pub fn resnet_trained_on_recon(&self, cfg: &ZacConfig) -> Result<WorkloadResult> {
+        let (recon_train, _) = self.reconstruct_images(cfg, &self.train_images);
+        let (recon_test, run) = self.reconstruct_images(cfg, &self.test_images);
+        let (p, _) = cnn::train(
+            &self.rt,
+            &recon_train,
+            self.budget.train_steps * 3 / 2,
+            self.budget.lr,
+            self.seed ^ 0x18,
+        )?;
+        let acc = cnn::accuracy(&self.rt, &p, &recon_test)?;
+        Ok(WorkloadResult {
+            kind: Kind::ResNet,
+            quality: quality_ratio(acc, self.resnet_clean_acc),
+            original_metric: self.resnet_clean_acc,
+            approx_metric: acc,
+            run,
+        })
+    }
+
+    /// Fig. 20/21: approximate the *weights* of the ResNet with a
+    /// weights-mode config (sign+exponent pinned), optionally also
+    /// approximating the input images, and measure accuracy + the
+    /// weight-trace energy.
+    pub fn resnet_with_approx_weights(
+        &self,
+        weight_cfg: &ZacConfig,
+        image_cfg: Option<&ZacConfig>,
+    ) -> Result<WorkloadResult> {
+        let flat = self.resnet.flatten();
+        let (recon_w, run) = simulate_f32s(weight_cfg, &flat, true);
+        let params = self.resnet.unflatten(&recon_w);
+        let images = match image_cfg {
+            Some(icfg) => self.reconstruct_images(icfg, &self.test_images).0,
+            None => self.test_images.clone(),
+        };
+        let acc = cnn::accuracy(&self.rt, &params, &images)?;
+        Ok(WorkloadResult {
+            kind: Kind::ResNet,
+            quality: quality_ratio(acc, self.resnet_clean_acc),
+            original_metric: self.resnet_clean_acc,
+            approx_metric: acc,
+            run,
+        })
+    }
+}

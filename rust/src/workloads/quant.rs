@@ -1,0 +1,72 @@
+//! Quant: K-Means colour quantization (paper §VII-A3).
+//!
+//! Pixels of a 64×64 image (= exactly the artifact's 4096-point block)
+//! are clustered to K=64 colours via the `kmeans_step` artifact; output
+//! quality is SSIM of the quantized image against the *original*
+//! reference, and the workload quality is the paper's ratio
+//! SSIM(quantize(reconstructed)) / SSIM(quantize(original)).
+
+use anyhow::Result;
+
+use crate::datasets::Image;
+use crate::quality::ssim_rgb;
+use crate::runtime::{Runtime, Tensor};
+
+/// Geometry fixed by the artifact (model.py KMEANS_*).
+pub const N: usize = 4096;
+pub const K: usize = 64;
+
+/// Pixels of an interleaved-RGB image as the (N, 3) f32 tensor.
+fn pixels_tensor(img: &Image) -> Tensor {
+    assert_eq!(img.channels, 3);
+    assert_eq!(img.w * img.h, N, "quant expects 64x64 images");
+    Tensor::f32(img.to_f32(), &[N, 3])
+}
+
+/// Deterministic init: K pixels evenly strided through the image.
+fn init_centroids(img: &Image) -> Tensor {
+    let px = img.to_f32();
+    let stride = N / K;
+    let mut c = Vec::with_capacity(K * 3);
+    for k in 0..K {
+        let p = k * stride + stride / 2;
+        c.extend_from_slice(&px[p * 3..p * 3 + 3]);
+    }
+    Tensor::f32(c, &[K, 3])
+}
+
+/// Run Lloyd iterations and return the colour-quantized image.
+pub fn quantize(rt: &Runtime, img: &Image, iters: usize) -> Result<Image> {
+    let x = pixels_tensor(img);
+    let mut c = init_centroids(img);
+    let mut assign: Option<Vec<i32>> = None;
+    for _ in 0..iters {
+        let out = rt.exec("kmeans_step", &[x.clone(), c])?;
+        let mut it = out.into_iter();
+        c = it.next().expect("centroids");
+        let _counts = it.next();
+        assign = Some(it.next().expect("assign").into_i32()?);
+    }
+    let assign = match assign {
+        Some(a) => a,
+        None => rt.exec("kmeans_assign", &[x.clone(), c.clone()])?[0]
+            .clone()
+            .into_i32()?,
+    };
+    let cents = c.as_f32()?;
+    let mut data = Vec::with_capacity(N * 3);
+    for &a in &assign {
+        let a = a as usize;
+        for ch in 0..3 {
+            data.push((cents[a * 3 + ch].clamp(0.0, 1.0) * 255.0) as u8);
+        }
+    }
+    Ok(img.with_data(data))
+}
+
+/// SSIM of the quantized version of `input` against the `reference`
+/// original (the paper's Quant quality metric).
+pub fn quant_ssim(rt: &Runtime, input: &Image, reference: &Image, iters: usize) -> Result<f64> {
+    let q = quantize(rt, input, iters)?;
+    Ok(ssim_rgb(&q.data, &reference.data, reference.w, reference.h))
+}

@@ -1,0 +1,71 @@
+//! SVM: multiclass linear SVM on the sparse FMNIST-analogue corpus
+//! (paper §VII-A5 — chosen for its zero-heavy access pattern, which
+//! exercises ZAC-DEST's zero-skip path).
+
+use anyhow::Result;
+
+use crate::datasets::Image;
+use crate::quality::top1;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Geometry fixed by the artifacts (model.py SVM_*).
+pub const D: usize = 784;
+pub const C: usize = 10;
+pub const B: usize = 64;
+
+fn batch_tensor(images: &[&Image]) -> Tensor {
+    assert_eq!(images.len(), B);
+    let mut data = Vec::with_capacity(B * D);
+    for img in images {
+        assert_eq!((img.w * img.h, img.channels), (D, 1));
+        data.extend(img.to_f32());
+    }
+    Tensor::f32(data, &[B, D])
+}
+
+/// Train a weight matrix with SGD on the hinge loss.
+pub fn train(
+    rt: &Runtime,
+    images: &[Image],
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(Tensor, Vec<f32>)> {
+    assert!(images.len() >= B);
+    let mut w = Tensor::f32(vec![0.0; D * C], &[D, C]);
+    let mut r = Rng::new(seed ^ 0x57a);
+    let mut order: Vec<usize> = (0..images.len()).collect();
+    let mut cursor = images.len();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        if cursor + B > order.len() {
+            r.shuffle(&mut order);
+            cursor = 0;
+        }
+        let batch: Vec<&Image> = order[cursor..cursor + B].iter().map(|&i| &images[i]).collect();
+        cursor += B;
+        let y = Tensor::i32(batch.iter().map(|i| i.label).collect(), &[B]);
+        let out = rt.exec(
+            "svm_train_step",
+            &[w, batch_tensor(&batch), y, Tensor::scalar_f32(lr)],
+        )?;
+        let mut it = out.into_iter();
+        w = it.next().expect("weights");
+        losses.push(it.next().expect("loss").into_f32()?[0]);
+    }
+    Ok((w, losses))
+}
+
+/// Classification accuracy over whole batches of [`B`] images.
+pub fn accuracy(rt: &Runtime, w: &Tensor, images: &[Image]) -> Result<f64> {
+    assert_eq!(images.len() % B, 0, "svm eval needs whole batches");
+    let mut preds = Vec::with_capacity(images.len());
+    for chunk in images.chunks(B) {
+        let refs: Vec<&Image> = chunk.iter().collect();
+        let out = rt.exec("svm_infer", &[w.clone(), batch_tensor(&refs)])?;
+        preds.extend_from_slice(out[0].as_i32()?);
+    }
+    let labels: Vec<i32> = images.iter().map(|i| i.label).collect();
+    Ok(top1(&preds, &labels))
+}

@@ -1,0 +1,252 @@
+//! Cross-module integration tests: trace → encoders → channel →
+//! reconstruction, property-based invariants over random configs, and
+//! the energy-figure pipelines.
+
+use zac_dest::channel::CHIPS;
+use zac_dest::coordinator::{simulate_bytes, simulate_f32s, Pipeline};
+use zac_dest::encoding::{Outcome, Scheme, ZacConfig};
+use zac_dest::trace::{bytes_to_chip_words, hex};
+use zac_dest::util::prop;
+use zac_dest::util::rng::Rng;
+
+fn image_like(n: usize, seed: u64) -> Vec<u8> {
+    let mut r = Rng::new(seed);
+    let mut v = 128i32;
+    (0..n)
+        .map(|_| {
+            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+            v as u8
+        })
+        .collect()
+}
+
+#[test]
+fn all_exact_schemes_lossless_on_all_traffic_shapes() {
+    let mut r = Rng::new(100);
+    let streams: Vec<Vec<u8>> = vec![
+        image_like(8192, 1),
+        vec![0u8; 4096],                                        // all zeros
+        (0..4096).map(|_| r.next_u32() as u8).collect(),        // random
+        (0..4096).map(|i| ((i / 64) % 256) as u8).collect(),    // repetitive
+    ];
+    for bytes in &streams {
+        for scheme in [Scheme::Org, Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde] {
+            let out = simulate_bytes(&ZacConfig::scheme(scheme), bytes, true);
+            assert_eq!(&out.bytes, bytes, "{scheme:?} must be lossless");
+        }
+    }
+}
+
+#[test]
+fn prop_zac_reconstruction_within_envelope_for_random_configs() {
+    prop::check(
+        "zac reconstruction envelope",
+        101,
+        |r| {
+            let limit = [90u32, 80, 75, 70][r.range(0, 4)];
+            let trunc = r.range(0, 3) as u64;
+            let tol = r.range(0, 3) as u64;
+            let len = r.range(64, 2048);
+            let seed = r.next_u64();
+            vec![limit as u64, trunc, tol, len as u64, seed]
+        },
+        |v| {
+            let (limit, trunc, tol, len, seed) =
+                (v[0] as u32, v[1] as u32, v[2] as u32, v[3] as usize, v[4]);
+            let cfg = ZacConfig::zac_full(limit, trunc, tol);
+            let bytes = image_like(len, seed);
+            let out = simulate_bytes(&cfg, &bytes, true);
+            let thr = cfg.dissimilar_threshold();
+            let keep = !cfg.truncation_mask();
+            let orig = bytes_to_chip_words(&bytes);
+            let recon = bytes_to_chip_words(&out.bytes);
+            for (a, b) in orig.iter().zip(&recon) {
+                for j in 0..CHIPS {
+                    let d = ((a[j] & keep) ^ b[j]).count_ones();
+                    if d >= thr {
+                        return Err(format!(
+                            "chip word differs by {d} >= {thr} (limit {limit}, trunc {trunc})"
+                        ));
+                    }
+                    // Tolerance bits must be exact.
+                    if ((a[j] & keep) ^ b[j]) & cfg.tolerance_mask() != 0 {
+                        return Err("tolerance bits approximated".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_non_approx_traffic_is_always_exact() {
+    prop::check(
+        "non-approx exactness",
+        102,
+        |r| {
+            let len = r.range(64, 1024);
+            (0..len).map(|_| r.next_u64()).collect::<Vec<u64>>()
+        },
+        |words| {
+            let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let out = simulate_bytes(&ZacConfig::zac(70), &bytes, false);
+            if out.bytes == bytes {
+                Ok(())
+            } else {
+                Err("critical traffic was approximated".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_energy_never_exceeds_org_baseline_by_much() {
+    // Encoded schemes may add sideband overhead, but on similar streams
+    // total termination must not blow up vs the unencoded baseline.
+    prop::check(
+        "termination sanity vs ORG",
+        103,
+        |r| vec![r.range(256, 4096) as u64, r.next_u64()],
+        |v| {
+            let bytes = image_like(v[0] as usize, v[1]);
+            let base = simulate_bytes(&ZacConfig::scheme(Scheme::Org), &bytes, true);
+            let zac = simulate_bytes(&ZacConfig::zac(80), &bytes, true);
+            // Allow a small slack for flag/index sidebands.
+            if zac.counts.termination_ones
+                <= base.counts.termination_ones + base.counts.transfers * 8
+            {
+                Ok(())
+            } else {
+                Err(format!(
+                    "zac {} vs org {}",
+                    zac.counts.termination_ones, base.counts.termination_ones
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn savings_increase_monotonically_with_lower_limits() {
+    let bytes = image_like(65536, 5);
+    let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+    let mut prev = f64::NEG_INFINITY;
+    for limit in [95u32, 90, 85, 80, 75, 70, 65, 60] {
+        let out = simulate_bytes(&ZacConfig::zac(limit), &bytes, true);
+        let s = out.counts.termination_savings_vs(&base.counts);
+        assert!(
+            s + 1.0 >= prev, // allow 1% jitter from table-state divergence
+            "L{limit}: savings {s:.2}% dropped below previous {prev:.2}%"
+        );
+        prev = prev.max(s);
+    }
+}
+
+#[test]
+fn truncation_strictly_reduces_energy() {
+    let bytes = image_like(65536, 6);
+    let t0 = simulate_bytes(&ZacConfig::zac_full(80, 0, 0), &bytes, true);
+    let t1 = simulate_bytes(&ZacConfig::zac_full(80, 1, 0), &bytes, true);
+    let t2 = simulate_bytes(&ZacConfig::zac_full(80, 2, 0), &bytes, true);
+    assert!(t1.counts.termination_ones < t0.counts.termination_ones);
+    assert!(t2.counts.termination_ones < t1.counts.termination_ones);
+}
+
+#[test]
+fn tolerance_reduces_skip_rate_and_improves_fidelity() {
+    let bytes = image_like(65536, 7);
+    let loose = simulate_bytes(&ZacConfig::zac_full(70, 0, 0), &bytes, true);
+    let tight = simulate_bytes(&ZacConfig::zac_full(70, 0, 2), &bytes, true);
+    assert!(
+        tight.stats.fraction(Outcome::OheSkip) <= loose.stats.fraction(Outcome::OheSkip),
+        "tolerance must not increase the skip rate"
+    );
+    // Fidelity: mean absolute pixel error must improve with tolerance.
+    let err = |out: &[u8]| -> f64 {
+        bytes
+            .iter()
+            .zip(out)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .sum::<f64>()
+            / bytes.len() as f64
+    };
+    assert!(err(&tight.bytes) <= err(&loose.bytes) + 1e-9);
+}
+
+#[test]
+fn zero_heavy_traffic_hits_zero_skip_path() {
+    // Sparse FMNIST-like traffic: most lines all-zero.
+    let mut bytes = vec![0u8; 65536];
+    let mut r = Rng::new(8);
+    for _ in 0..200 {
+        let pos = r.range(0, bytes.len());
+        bytes[pos] = r.next_u32() as u8;
+    }
+    let out = simulate_bytes(&ZacConfig::zac(80), &bytes, true);
+    assert!(
+        out.stats.fraction(Outcome::ZeroSkip) > 0.8,
+        "zero-skip fraction {}",
+        out.stats.fraction(Outcome::ZeroSkip)
+    );
+    // Zero words cost nothing.
+    let dense = simulate_bytes(&ZacConfig::zac(80), &image_like(65536, 9), true);
+    assert!(out.counts.termination_ones < dense.counts.termination_ones / 10);
+}
+
+#[test]
+fn streaming_pipeline_equals_batch_for_every_scheme() {
+    let bytes = image_like(16384, 10);
+    let lines = bytes_to_chip_words(&bytes);
+    for scheme in Scheme::all() {
+        let cfg = if scheme == Scheme::ZacDest {
+            ZacConfig::zac(75)
+        } else {
+            ZacConfig::scheme(scheme)
+        };
+        let batch = simulate_bytes(&cfg, &bytes, true);
+        let mut p = Pipeline::new(&cfg, 8);
+        for l in &lines {
+            p.push_line(*l, true);
+        }
+        let streamed = p.finish(bytes.len());
+        assert_eq!(streamed.bytes, batch.bytes, "{scheme:?}");
+        assert_eq!(streamed.counts, batch.counts, "{scheme:?}");
+    }
+}
+
+#[test]
+fn hex_trace_round_trips_through_simulation() {
+    let bytes = image_like(4096, 11);
+    let lines = bytes_to_chip_words(&bytes);
+    let text = hex::emit(&lines);
+    let parsed = hex::parse(&text).unwrap();
+    assert_eq!(parsed, lines);
+    let out = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+    assert_eq!(out.bytes, bytes);
+}
+
+#[test]
+fn weights_never_flip_sign_or_explode() {
+    let mut r = Rng::new(12);
+    let xs: Vec<f32> = (0..8192).map(|_| r.normal_f32(0.0, 0.02)).collect();
+    for limit in [70u32, 60, 50] {
+        let (got, _) = simulate_f32s(&ZacConfig::zac_weights(limit), &xs, true);
+        for (a, b) in xs.iter().zip(&got) {
+            assert!(b.is_finite());
+            assert!(a.signum() == b.signum() || *b == 0.0, "L{limit}: {a} -> {b}");
+            assert!(b.abs() < a.abs() * 2.0 + 1e-12, "L{limit}: {a} -> {b}");
+        }
+    }
+}
+
+#[test]
+fn figure_pipeline_renders_energy_figures() {
+    use zac_dest::figures::{render, FigureCtx};
+    use zac_dest::workloads::SuiteBudget;
+    let ctx = FigureCtx::new(7, SuiteBudget::quick());
+    for id in ["fig1", "fig2", "fig10", "fig14", "fig19", "fig22", "table1", "sec6"] {
+        let out = render(&ctx, id).unwrap();
+        assert!(out.contains('%') || out.contains("Table"), "{id}:\n{out}");
+    }
+}

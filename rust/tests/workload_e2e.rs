@@ -1,0 +1,77 @@
+//! Heavy end-to-end tests: PJRT runtime + trained workloads. These need
+//! `make artifacts` to have run; the quick budget keeps them ~1 min.
+
+use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::runtime::Runtime;
+use zac_dest::workloads::{Kind, Suite, SuiteBudget};
+
+fn suite() -> Suite {
+    let rt = Runtime::load(Runtime::default_dir()).expect("run `make artifacts` first");
+    Suite::build(rt, 42, SuiteBudget::quick()).expect("suite build")
+}
+
+#[test]
+fn workloads_train_above_chance_and_quality_degrades_gracefully() {
+    let s = suite();
+    // Clean-data sanity: everything learns something.
+    for (&acc, name) in s
+        .zoo_clean_acc
+        .iter()
+        .zip(std::iter::repeat("zoo"))
+        .chain([(&s.resnet_clean_acc, "resnet")])
+    {
+        assert!(acc > 0.15, "{name} clean accuracy {acc} at chance (0.1)");
+    }
+    assert!(s.svm_clean_acc > 0.5, "svm {}", s.svm_clean_acc);
+    assert!(s.eigen_clean_acc > 0.5, "eigen {}", s.eigen_clean_acc);
+    assert!(s.quant_clean_ssim[0] > 0.5);
+
+    // Exact scheme ⇒ quality exactly 1.0 for every workload.
+    for kind in Kind::all() {
+        let r = s.eval(&ZacConfig::scheme(Scheme::Bde), kind).unwrap();
+        assert!(
+            (r.quality - 1.0).abs() < 1e-9,
+            "{}: exact scheme must give quality 1.0, got {}",
+            kind.label(),
+            r.quality
+        );
+    }
+
+    // Approximation: quality stays in [0, ~1.2] and the conservative
+    // L90 config stays close to 1.
+    for kind in Kind::all() {
+        let r90 = s.eval(&ZacConfig::zac(90), kind).unwrap();
+        assert!(
+            r90.quality > 0.6,
+            "{}: L90 quality {} too low",
+            kind.label(),
+            r90.quality
+        );
+        let r70 = s.eval(&ZacConfig::zac_full(70, 2, 0), kind).unwrap();
+        assert!(
+            (0.0..=1.5).contains(&r70.quality),
+            "{}: L70T16 quality {} out of range",
+            kind.label(),
+            r70.quality
+        );
+        // Aggressive configs never *increase* the trace energy vs L90.
+        assert!(
+            r70.run.counts.termination_ones <= r90.run.counts.termination_ones
+        );
+    }
+}
+
+#[test]
+fn weight_approximation_keeps_model_usable_at_high_limits() {
+    let s = suite();
+    let r = s
+        .resnet_with_approx_weights(&ZacConfig::zac_weights(70), None)
+        .unwrap();
+    // Sign+exponent are pinned, so a 70% weight limit must not destroy
+    // the model.
+    assert!(
+        r.quality > 0.5,
+        "weight-approx L70 quality {} too low",
+        r.quality
+    );
+}
