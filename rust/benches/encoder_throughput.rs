@@ -1,5 +1,9 @@
 //! Encoder throughput per scheme (the cost side of every paper table):
 //! bytes/s through the full 8-chip encode → wire → decode path.
+//!
+//! `ZAC_BENCH_BYTES` overrides the input size (default 1 MiB; CI smoke
+//! runs 64 KiB). Results are printed and persisted to
+//! `BENCH_encoder.json` so the perf trajectory is tracked across PRs.
 
 use zac_dest::coordinator::simulate_bytes;
 use zac_dest::encoding::{Scheme, ZacConfig};
@@ -17,13 +21,28 @@ fn image_like(n: usize, seed: u64) -> Vec<u8> {
         .collect()
 }
 
+fn size_label(n: usize) -> String {
+    if n >= (1 << 20) && n % (1 << 20) == 0 {
+        format!("{}MiB", n >> 20)
+    } else if n >= (1 << 10) {
+        format!("{}KiB", n >> 10)
+    } else {
+        format!("{n}B")
+    }
+}
+
 fn main() {
     let mut b = Bencher::new();
-    let bytes = image_like(1 << 20, 42);
+    let n: usize = std::env::var("ZAC_BENCH_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 20);
+    let bytes = image_like(n, 42);
+    let sz = size_label(n);
     for scheme in Scheme::all() {
         let cfg = ZacConfig::scheme(scheme);
         b.bench_with_units(
-            &format!("simulate_1MiB/{}", scheme.label()),
+            &format!("simulate_{sz}/{}", scheme.label()),
             bytes.len() as u64,
             "B",
             || simulate_bytes(&cfg, &bytes, true),
@@ -32,7 +51,7 @@ fn main() {
     for limit in [90u32, 80, 70] {
         let cfg = ZacConfig::zac(limit);
         b.bench_with_units(
-            &format!("simulate_1MiB/ZAC_L{limit}"),
+            &format!("simulate_{sz}/ZAC_L{limit}"),
             bytes.len() as u64,
             "B",
             || simulate_bytes(&cfg, &bytes, true),
@@ -40,7 +59,11 @@ fn main() {
     }
     // Knobbed variant (truncation+tolerance active).
     let cfg = ZacConfig::zac_full(75, 2, 1);
-    b.bench_with_units("simulate_1MiB/ZAC_L75_T16_O8", bytes.len() as u64, "B", || {
-        simulate_bytes(&cfg, &bytes, true)
-    });
+    b.bench_with_units(
+        &format!("simulate_{sz}/ZAC_L75_T16_O8"),
+        bytes.len() as u64,
+        "B",
+        || simulate_bytes(&cfg, &bytes, true),
+    );
+    b.write_json("BENCH_encoder.json").expect("write BENCH_encoder.json");
 }

@@ -54,4 +54,5 @@ fn main() {
         }
         Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e}"),
     }
+    b.write_json("BENCH_pipeline.json").expect("write BENCH_pipeline.json");
 }

@@ -3,7 +3,7 @@
 //! sweep discussion (§VIII-A).
 
 use zac_dest::channel::ChipChannel;
-use zac_dest::encoding::{make_codec, DataTable, EncodeStats, ZacConfig};
+use zac_dest::encoding::{make_codec, DataTable, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
 use zac_dest::util::bench::Bencher;
 use zac_dest::util::rng::Rng;
 
@@ -21,6 +21,21 @@ fn main() {
             i = (i + 1) & 4095;
             table.most_similar(queries[i])
         });
+        let mut i = 0;
+        b.bench_with_units(&format!("most_similar_sliced/table{size}"), 1, "search", || {
+            i = (i + 1) & 4095;
+            table.most_similar_sliced(queries[i])
+        });
+        let mut hits = Vec::with_capacity(queries.len());
+        b.bench_with_units(
+            &format!("most_similar_batch/table{size}_x4096"),
+            queries.len() as u64,
+            "search",
+            || {
+                table.most_similar_batch(&queries, &mut hits);
+                hits.len()
+            },
+        );
     }
     // Early-exit case: query present in the table.
     let mut table = DataTable::new(64);
@@ -45,4 +60,23 @@ fn main() {
         stats.record(&wire, queries[i]);
         dec.decode(&wire)
     });
+    // Same step through the batch hot path.
+    let (mut enc, mut dec) = make_codec(&cfg);
+    let mut chan = ChipChannel::new();
+    let mut stats = EncodeStats::default();
+    let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+    let flags = [true; ENCODE_BATCH];
+    let mut decoded: Vec<u64> = Vec::with_capacity(ENCODE_BATCH);
+    let mut base = 0usize;
+    b.bench_with_units("encode_decode_batch256/ZAC_L80", ENCODE_BATCH as u64, "word", || {
+        base = (base + ENCODE_BATCH) & 4095;
+        let words = &queries[base..base + ENCODE_BATCH];
+        enc.encode_batch(words, &flags, &mut wires);
+        chan.transmit_batch(&wires);
+        stats.record_batch(&wires, words);
+        decoded.clear();
+        dec.decode_batch(&wires, &mut decoded);
+        decoded.len()
+    });
+    b.write_json("BENCH_table_search.json").expect("write BENCH_table_search.json");
 }

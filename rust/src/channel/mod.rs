@@ -54,6 +54,7 @@ impl ChipChannel {
 
     /// Serialize one wire word over the burst, accumulating termination
     /// ones and per-line 1→0 switching transitions.
+    #[inline]
     pub fn transmit(&mut self, wire: &WireWord) {
         // Termination: every 1 driven on any line costs I_term for a beat.
         self.counts.termination_ones += wire.total_ones() as u64;
@@ -86,6 +87,16 @@ impl ChipChannel {
         self.flag_state = last;
 
         self.counts.transfers += 1;
+    }
+
+    /// Serialize a whole batch of wire words, equivalent to calling
+    /// [`Self::transmit`] per word: the energy accounting reads the
+    /// batch in one pass, letting the per-transfer SWAR steps inline
+    /// and the line-state updates stay in registers across the loop.
+    pub fn transmit_batch(&mut self, wires: &[WireWord]) {
+        for w in wires {
+            self.transmit(w);
+        }
     }
 
     /// Accumulated counts.

@@ -10,6 +10,14 @@
 //! * [`Pipeline`] — streaming mode with bounded per-chip queues
 //!   (`sync_channel`), giving real backpressure when a producer outruns
 //!   the encoder workers; used by the e2e example and the service loop.
+//!
+//! Both drivers are batch-first: words move in
+//! [`ENCODE_BATCH`](crate::encoding::ENCODE_BATCH)-sized chunks through
+//! `encode_batch`/`transmit_batch`/`record_batch`/`decode_batch` over
+//! preallocated buffers. The per-chip lane is gathered per batch
+//! ([`gather_chip_lane`]) instead of cloning each chip's whole word
+//! stream, and the pipeline's queue element is a boxed chunk of lines,
+//! amortizing the channel send ~256× versus the old per-word send.
 
 pub mod config;
 
@@ -19,8 +27,8 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
 use crate::channel::{ChipChannel, EnergyCounts, CHIPS};
-use crate::encoding::{make_codec, EncodeStats, ZacConfig};
-use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, ChipWords};
+use crate::encoding::{make_codec, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
+use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords};
 
 /// Result of a trace simulation.
 #[derive(Clone, Debug)]
@@ -65,15 +73,25 @@ pub fn simulate_lines_per_chip(
     byte_len: usize,
 ) -> RunOutput {
     assert_eq!(cfgs.len(), CHIPS);
-    let per_chip: Vec<(ZacConfig, Vec<u64>)> = (0..CHIPS)
-        .map(|j| (cfgs[j].clone(), lines.iter().map(|l| l[j]).collect()))
-        .collect();
-    let results = crate::util::par::par_map(per_chip, CHIPS, |(cfg, words)| {
+    // One worker per chip over the shared line matrix: each batch
+    // gathers its lane into a fixed buffer — no per-chip clone of the
+    // whole stream, no per-chip approx-flag Vec.
+    let results = crate::util::par::par_map((0..CHIPS).collect(), CHIPS, |j| {
+        let (mut enc, mut dec) = make_codec(&cfgs[j]);
         let mut chan = ChipChannel::new();
         let mut stats = EncodeStats::default();
-        let approx_flags = vec![approx; words.len()];
-        let decoded =
-            crate::encoding::run_chip_stream(&cfg, &words, &approx_flags, &mut chan, &mut stats);
+        let mut decoded = Vec::with_capacity(lines.len());
+        let mut words = [0u64; ENCODE_BATCH];
+        let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+        let flags = [approx; ENCODE_BATCH];
+        for chunk in lines.chunks(ENCODE_BATCH) {
+            let n = chunk.len();
+            gather_chip_lane(chunk, j, &mut words[..n]);
+            enc.encode_batch(&words[..n], &flags[..n], &mut wires[..n]);
+            chan.transmit_batch(&wires[..n]);
+            stats.record_batch(&wires[..n], &words[..n]);
+            dec.decode_batch(&wires[..n], &mut decoded);
+        }
         (decoded, *chan.energy(), stats)
     });
     assemble(results, lines.len(), byte_len)
@@ -147,35 +165,57 @@ pub fn simulate_f32s(cfg: &ZacConfig, xs: &[f32], approx: bool) -> (Vec<f32>, Ru
     (floats, out)
 }
 
+/// One queue element: a chip's words for up to [`ENCODE_BATCH`] lines
+/// plus the matching approx flags, boxed so the channel moves two
+/// pointers instead of per-word tuples.
+type LineChunk = (Box<[u64]>, Box<[bool]>);
+
 /// Streaming pipeline: one worker thread per chip behind a bounded queue.
 ///
-/// `push_line` blocks when a queue is full — backpressure toward the
-/// producer, exactly what a memory controller's write queue does.
+/// `push_line` blocks when the chunk queue is full — backpressure toward
+/// the producer, exactly what a memory controller's write queue does.
+/// Lines accumulate in a pending buffer and ship as boxed
+/// [`ENCODE_BATCH`]-line chunks, so the `sync_channel` send/recv
+/// overhead amortizes ~256× and the workers run the batch codec path.
+/// Note the granularity change vs the per-word queue: backpressure now
+/// engages at whole-chunk boundaries, so a producer can run up to
+/// `capacity.div_ceil(ENCODE_BATCH) * ENCODE_BATCH` queued lines plus
+/// one partially-filled pending chunk ahead of the workers.
 pub struct Pipeline {
-    senders: Vec<SyncSender<(u64, bool)>>,
+    senders: Vec<SyncSender<LineChunk>>,
     workers: Vec<JoinHandle<(Vec<u64>, EnergyCounts, EncodeStats)>>,
+    /// Per-chip words awaiting the next chunk flush.
+    pending: Vec<Vec<u64>>,
+    /// Approx flags for the pending lines (shared across chips).
+    pending_approx: Vec<bool>,
     lines_pushed: usize,
 }
 
 impl Pipeline {
-    /// Spawn the per-chip workers with queue `capacity` (lines).
+    /// Spawn the per-chip workers with queue `capacity` (in lines;
+    /// rounded up to whole chunks).
     pub fn new(cfg: &ZacConfig, capacity: usize) -> Pipeline {
+        let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(CHIPS);
         let mut workers = Vec::with_capacity(CHIPS);
         for _ in 0..CHIPS {
-            let (tx, rx): (SyncSender<(u64, bool)>, Receiver<(u64, bool)>) =
-                sync_channel(capacity.max(1));
+            let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
+                sync_channel(chunk_capacity);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
                 let (mut enc, mut dec) = make_codec(&cfg);
                 let mut chan = ChipChannel::new();
                 let mut stats = EncodeStats::default();
                 let mut decoded = Vec::new();
-                while let Ok((word, approx)) = rx.recv() {
-                    let wire = enc.encode(word, approx);
-                    chan.transmit(&wire);
-                    stats.record(&wire, word);
-                    decoded.push(dec.decode(&wire));
+                let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+                while let Ok((words, approx)) = rx.recv() {
+                    for (wc, ac) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
+                        let buf = &mut wires[..wc.len()];
+                        enc.encode_batch(wc, ac, buf);
+                        chan.transmit_batch(buf);
+                        stats.record_batch(buf, wc);
+                        dec.decode_batch(buf, &mut decoded);
+                    }
                 }
                 (decoded, *chan.energy(), stats)
             }));
@@ -184,16 +224,37 @@ impl Pipeline {
         Pipeline {
             senders,
             workers,
+            pending: (0..CHIPS).map(|_| Vec::with_capacity(ENCODE_BATCH)).collect(),
+            pending_approx: Vec::with_capacity(ENCODE_BATCH),
             lines_pushed: 0,
         }
     }
 
-    /// Enqueue one cache line (blocks when workers are behind).
+    /// Enqueue one cache line (blocks when workers are behind and the
+    /// chunk queues are full).
     pub fn push_line(&mut self, line: ChipWords, approx: bool) {
-        for (j, tx) in self.senders.iter().enumerate() {
-            tx.send((line[j], approx)).expect("worker died");
+        for (words, &w) in self.pending.iter_mut().zip(line.iter()) {
+            words.push(w);
         }
+        self.pending_approx.push(approx);
         self.lines_pushed += 1;
+        if self.pending_approx.len() == ENCODE_BATCH {
+            self.flush();
+        }
+    }
+
+    /// Ship the pending lines to the workers as one boxed chunk per chip.
+    fn flush(&mut self) {
+        if self.pending_approx.is_empty() {
+            return;
+        }
+        let approx: Box<[bool]> = self.pending_approx.as_slice().into();
+        self.pending_approx.clear();
+        for (tx, words) in self.senders.iter().zip(self.pending.iter_mut()) {
+            let chunk = std::mem::replace(words, Vec::with_capacity(ENCODE_BATCH));
+            tx.send((chunk.into_boxed_slice(), approx.clone()))
+                .expect("worker died");
+        }
     }
 
     /// Number of lines accepted so far.
@@ -202,14 +263,20 @@ impl Pipeline {
     }
 
     /// Close the queues, join the workers, reassemble the output.
-    pub fn finish(self, byte_len: usize) -> RunOutput {
-        drop(self.senders);
-        let results: Vec<_> = self
-            .workers
+    pub fn finish(mut self, byte_len: usize) -> RunOutput {
+        self.flush();
+        let Pipeline {
+            senders,
+            workers,
+            lines_pushed,
+            ..
+        } = self;
+        drop(senders);
+        let results: Vec<_> = workers
             .into_iter()
             .map(|w| w.join().expect("worker panicked"))
             .collect();
-        assemble(results, self.lines_pushed, byte_len)
+        assemble(results, lines_pushed, byte_len)
     }
 }
 
@@ -251,6 +318,26 @@ mod tests {
         for l in &lines {
             p.push_line(*l, true);
         }
+        let streamed = p.finish(data.len());
+        assert_eq!(streamed.bytes, batch.bytes);
+        assert_eq!(streamed.counts, batch.counts);
+        assert_eq!(streamed.stats.total(), batch.stats.total());
+    }
+
+    #[test]
+    fn streaming_matches_batch_across_chunk_boundaries() {
+        // 300 lines + a partial tail line: one full 256-line chunk, a
+        // 44-line remainder flush, and zero-padding — all boundary cases
+        // of the chunked queue at once.
+        let data = bytes(300 * 64 + 32, 15);
+        let cfg = ZacConfig::zac_full(75, 1, 1);
+        let batch = simulate_bytes(&cfg, &data, true);
+        let lines = bytes_to_chip_words(&data);
+        let mut p = Pipeline::new(&cfg, 1);
+        for l in &lines {
+            p.push_line(*l, true);
+        }
+        assert_eq!(p.lines_pushed(), lines.len());
         let streamed = p.finish(data.len());
         assert_eq!(streamed.bytes, batch.bytes);
         assert_eq!(streamed.counts, batch.counts);

@@ -34,11 +34,17 @@ impl BdeOrgEncoder {
     fn next_slot(&self) -> usize {
         self.table.next_slot()
     }
-}
 
-impl ChipEncoder for BdeOrgEncoder {
-    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
-        if let Some(hit) = self.table.most_similar(word) {
+    /// Per-word encode core; `sliced` picks the CAM search layout (the
+    /// batch path runs against the bit-plane mirror, same results).
+    #[inline]
+    fn encode_one(&mut self, word: u64, sliced: bool) -> WireWord {
+        let hit = if sliced {
+            self.table.most_similar_sliced(word)
+        } else {
+            self.table.most_similar(word)
+        };
+        if let Some(hit) = hit {
             let xored = word ^ hit.entry;
             if word.count_ones() > xored.count_ones() {
                 // Encoded branch: xor on data lines, MSE index sideband.
@@ -61,6 +67,20 @@ impl ChipEncoder for BdeOrgEncoder {
             index_line: slot as u8,
             index_used: true,
             outcome: if word == 0 { Outcome::ZeroSkip } else { Outcome::Raw },
+        }
+    }
+}
+
+impl ChipEncoder for BdeOrgEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        self.encode_one(word, false)
+    }
+
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        assert_eq!(words.len(), approx.len());
+        assert_eq!(words.len(), out.len());
+        for (&word, slot) in words.iter().zip(out.iter_mut()) {
+            *slot = self.encode_one(word, true);
         }
     }
 

@@ -6,15 +6,28 @@
 //! * `most_similar` = the CAM search phase (SL/SL' compare + replica-row
 //!   hamming count); ties resolve to the lowest slot index, as a
 //!   priority encoder would.
+//! * `most_similar_sliced` / `most_similar_batch` = the same search over
+//!   a column-major (bit-plane) mirror of the array: one XOR compares
+//!   the query bit against *all* rows at once, exactly like the CAM's
+//!   search lines driving every row in parallel.
 //! * `contains` = the exact-match CAM lookup MBDC uses to keep entries
 //!   unique.
 //! * `push` = FIFO write via BL/BL' (round-robin replacement, matching
 //!   BD-Coder's update behaviour).
 
-/// Fixed-capacity FIFO CAM model.
+/// Fixed-capacity FIFO CAM model, kept in two mirrored layouts:
+///
+/// * row-major `entries` (slot -> word), the reference layout;
+/// * column-major `planes` (bit -> one u64 whose bit *s* is bit *b* of
+///   slot *s*), maintained incrementally and only when the capacity fits
+///   the 64 lanes of a word (`capacity <= 64`, always true for paper
+///   configs — `ZacConfig::validate` caps `table_size` at 64).
 #[derive(Clone, Debug)]
 pub struct DataTable {
     entries: Vec<u64>,
+    /// Bit-plane mirror: `planes[b]` bit `s` == bit `b` of `entries[s]`.
+    /// Stale above `len` (masked out by every sliced search).
+    planes: [u64; 64],
     /// Next slot to overwrite (round-robin FIFO).
     head: usize,
     /// Number of valid entries (≤ capacity).
@@ -38,6 +51,7 @@ impl DataTable {
         assert!(capacity > 0);
         DataTable {
             entries: vec![0; capacity],
+            planes: [0; 64],
             head: 0,
             len: 0,
         }
@@ -53,6 +67,23 @@ impl DataTable {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Whether the bit-plane mirror covers this table (it needs one lane
+    /// per slot in a `u64`).
+    #[inline]
+    fn bit_sliced(&self) -> bool {
+        self.entries.len() <= 64
+    }
+
+    /// Lane mask of the valid slots (callable only when `bit_sliced`).
+    #[inline]
+    fn valid_mask(&self) -> u64 {
+        if self.len >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.len) - 1
+        }
     }
 
     /// The FIFO slot the next `push` will write (wire-visible write
@@ -71,11 +102,13 @@ impl DataTable {
     /// CAM search: the valid entry with minimum hamming distance to
     /// `word`; ties resolve to the lowest index. `None` when empty.
     ///
-    /// Hot path: the (distance, index) pair is packed as
-    /// `distance * 256 + index`, so a single branchless `min` (cmov)
-    /// yields both the minimum distance *and* the lowest-index
-    /// tie-break; the XOR+POPCNT per entry pipelines with no
-    /// data-dependent branches in the loop.
+    /// Reference (row-major) implementation: the (distance, index) pair
+    /// is packed as `distance * 256 + index`, so a single branchless
+    /// `min` (cmov) yields both the minimum distance *and* the
+    /// lowest-index tie-break; the XOR+POPCNT per entry pipelines with
+    /// no data-dependent branches in the loop. The bit-sliced variants
+    /// below must stay bit-identical to this oracle
+    /// (`search_matches_naive_reference`).
     #[inline]
     pub fn most_similar(&self, word: u64) -> Option<SearchHit> {
         if self.len == 0 {
@@ -95,16 +128,124 @@ impl DataTable {
         })
     }
 
-    /// Exact-match CAM lookup.
+    /// Bit-sliced CAM search: compare `word` against **all** entries at
+    /// once, one bit plane per step — the software analogue of the
+    /// NOR-CAM match phase where the search lines drive every row
+    /// simultaneously.
+    ///
+    /// Per plane, one XOR against the broadcast query bit yields the
+    /// per-entry mismatch lane vector, which is accumulated into seven
+    /// vertical (bit-serial SWAR) counters: bit *s* of `counts[k]` is
+    /// bit *k* of entry *s*'s running hamming distance (≤ 64, so 7
+    /// planes suffice). The argmin then narrows a candidate lane mask
+    /// from the counter MSB down, and `trailing_zeros` plays the
+    /// priority encoder for the lowest-index tie-break.
+    ///
+    /// Falls back to the row-major scan for capacities above 64 (no
+    /// plane mirror). Bit-identical to [`Self::most_similar`].
+    pub fn most_similar_sliced(&self, word: u64) -> Option<SearchHit> {
+        if self.len == 0 {
+            return None;
+        }
+        if !self.bit_sliced() {
+            return self.most_similar(word);
+        }
+        let mut counts = [0u64; 7];
+        for (b, &plane) in self.planes.iter().enumerate() {
+            // Broadcast query bit b across all 64 lanes (all-ones when set).
+            let query = ((word >> b) & 1).wrapping_neg();
+            // Ripple the per-entry mismatch bit into the vertical counters;
+            // the carry thins out geometrically, so this loop runs ~2
+            // levels on average.
+            let mut carry = plane ^ query;
+            for c in counts.iter_mut() {
+                let t = *c & carry;
+                *c ^= carry;
+                carry = t;
+                if carry == 0 {
+                    break;
+                }
+            }
+        }
+        // Minimum distance over valid lanes: from the counter MSB down,
+        // any candidate with a 0 at this magnitude beats every candidate
+        // with a 1.
+        let mut cand = self.valid_mask();
+        for c in counts.iter().rev() {
+            let zeros = cand & !c;
+            if zeros != 0 {
+                cand = zeros;
+            }
+        }
+        let index = cand.trailing_zeros() as usize;
+        let mut distance = 0u32;
+        for (k, c) in counts.iter().enumerate() {
+            distance |= (((c >> index) & 1) as u32) << k;
+        }
+        Some(SearchHit {
+            index,
+            entry: self.entries[index],
+            distance,
+        })
+    }
+
+    /// Batched fixed-table search: resolves each query exactly as
+    /// [`Self::most_similar`] would against the *current* table state
+    /// (callers interleaving `push` must re-issue). Results are appended
+    /// to `out` after clearing it, so a preallocated buffer is reused
+    /// across batches.
+    pub fn most_similar_batch(&self, queries: &[u64], out: &mut Vec<Option<SearchHit>>) {
+        out.clear();
+        out.reserve(queries.len());
+        for &q in queries {
+            out.push(self.most_similar_sliced(q));
+        }
+    }
+
+    /// Exact-match CAM lookup. With the plane mirror this is an
+    /// AND-reduction over bit planes with early exit (a random mismatch
+    /// kills every lane within a few planes).
     pub fn contains(&self, word: u64) -> bool {
-        self.entries[..self.len].contains(&word)
+        if self.len == 0 {
+            return false;
+        }
+        if !self.bit_sliced() {
+            return self.entries[..self.len].contains(&word);
+        }
+        let mut lanes = self.valid_mask();
+        for (b, &plane) in self.planes.iter().enumerate() {
+            let query = ((word >> b) & 1).wrapping_neg();
+            lanes &= !(plane ^ query);
+            if lanes == 0 {
+                return false;
+            }
+        }
+        true
     }
 
     /// FIFO insert (BD-Coder update policy: overwrite the oldest slot).
     pub fn push(&mut self, word: u64) {
-        self.entries[self.head] = word;
-        self.head = (self.head + 1) % self.entries.len();
-        self.len = (self.len + 1).min(self.entries.len());
+        let slot = self.head;
+        // Compare-and-wrap: no division on the hot path.
+        self.head += 1;
+        if self.head == self.entries.len() {
+            self.head = 0;
+        }
+        if self.len < self.entries.len() {
+            self.len += 1;
+        }
+        // Incremental plane maintenance: only the planes where the new
+        // word differs from the overwritten one change — cheap exactly
+        // when the stream is similar, which is when pushes also matter.
+        if self.bit_sliced() {
+            let slot_bit = 1u64 << slot;
+            let mut diff = self.entries[slot] ^ word;
+            while diff != 0 {
+                self.planes[diff.trailing_zeros() as usize] ^= slot_bit;
+                diff &= diff - 1;
+            }
+        }
+        self.entries[slot] = word;
     }
 
     /// Insert only if not already present (MBDC dedup policy, §IV-A).
@@ -117,7 +258,9 @@ impl DataTable {
         true
     }
 
-    /// Clear all entries.
+    /// Clear all entries. The plane mirror tracks the full `entries`
+    /// array (stale slots are masked by `len`), so it stays valid
+    /// without being touched.
     pub fn reset(&mut self) {
         self.head = 0;
         self.len = 0;
@@ -138,6 +281,7 @@ mod tests {
     #[test]
     fn empty_table_has_no_hit() {
         assert!(DataTable::new(4).most_similar(123).is_none());
+        assert!(DataTable::new(4).most_similar_sliced(123).is_none());
     }
 
     #[test]
@@ -158,6 +302,8 @@ mod tests {
         t.push(0b0001); // distance 1 from 0b0000
         t.push(0b0010); // also distance 1
         let h = t.most_similar(0).unwrap();
+        assert_eq!(h.index, 0);
+        let h = t.most_similar_sliced(0).unwrap();
         assert_eq!(h.index, 0);
     }
 
@@ -180,6 +326,20 @@ mod tests {
         assert_eq!(t.len(), 1);
     }
 
+    /// Naive argmin with lowest-index ties — the oracle every search
+    /// implementation must match bit-for-bit.
+    fn naive_argmin(t: &DataTable, q: u64) -> (usize, u32) {
+        let (mut bi, mut bd) = (0usize, u32::MAX);
+        for (i, &e) in t.snapshot().iter().enumerate() {
+            let d = (e ^ q).count_ones();
+            if d < bd {
+                bd = d;
+                bi = i;
+            }
+        }
+        (bi, bd)
+    }
+
     #[test]
     fn search_matches_naive_reference() {
         let mut r = Rng::new(9);
@@ -189,17 +349,94 @@ mod tests {
         }
         for _ in 0..500 {
             let q = r.next_u64();
+            let (bi, bd) = naive_argmin(&t, q);
             let hit = t.most_similar(q).unwrap();
-            // Naive argmin with lowest-index ties.
-            let (mut bi, mut bd) = (0usize, u32::MAX);
-            for (i, &e) in t.snapshot().iter().enumerate() {
-                let d = (e ^ q).count_ones();
-                if d < bd {
-                    bd = d;
-                    bi = i;
+            assert_eq!((hit.index, hit.distance), (bi, bd));
+            let hit = t.most_similar_sliced(q).unwrap();
+            assert_eq!((hit.index, hit.distance), (bi, bd), "sliced");
+        }
+    }
+
+    #[test]
+    fn sliced_matches_oracle_across_fill_levels_and_sizes() {
+        // Partially-filled and odd-sized tables, near-duplicate queries
+        // (tie-heavy), and words at the extremes.
+        let mut r = Rng::new(10);
+        for cap in [1usize, 2, 7, 16, 63, 64] {
+            let mut t = DataTable::new(cap);
+            for round in 0..(cap * 3) {
+                t.push(if round % 3 == 0 { 0 } else { r.next_u64() });
+                for _ in 0..20 {
+                    let q = match r.below(4) {
+                        0 => 0,
+                        1 => u64::MAX,
+                        2 => t.snapshot()[r.below(t.len() as u64) as usize]
+                            ^ (1u64 << r.below(64)),
+                        _ => r.next_u64(),
+                    };
+                    let (bi, bd) = naive_argmin(&t, q);
+                    let hit = t.most_similar_sliced(q).unwrap();
+                    assert_eq!(
+                        (hit.index, hit.distance),
+                        (bi, bd),
+                        "cap {cap} round {round} query {q:#x}"
+                    );
+                    assert_eq!(hit.entry, t.get(bi));
                 }
             }
-            assert_eq!((hit.index, hit.distance), (bi, bd));
+        }
+    }
+
+    #[test]
+    fn batch_search_matches_oracle() {
+        let mut r = Rng::new(11);
+        let mut t = DataTable::new(64);
+        for _ in 0..40 {
+            t.push(r.next_u64());
+        }
+        let queries: Vec<u64> = (0..257).map(|_| r.next_u64()).collect();
+        let mut hits = Vec::new();
+        t.most_similar_batch(&queries, &mut hits);
+        assert_eq!(hits.len(), queries.len());
+        for (q, hit) in queries.iter().zip(&hits) {
+            let hit = hit.expect("table not empty");
+            assert_eq!((hit.index, hit.distance), naive_argmin(&t, *q));
+        }
+        // Reuses the buffer (cleared, not appended).
+        t.most_similar_batch(&queries[..3], &mut hits);
+        assert_eq!(hits.len(), 3);
+    }
+
+    #[test]
+    fn contains_agrees_with_linear_scan() {
+        let mut r = Rng::new(12);
+        let mut t = DataTable::new(32);
+        for _ in 0..48 {
+            t.push(r.next_u64() & 0xFF); // small domain => real collisions
+            for _ in 0..8 {
+                let q = r.next_u64() & 0xFF;
+                assert_eq!(t.contains(q), t.snapshot().contains(&q), "{q:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn planes_survive_wraparound_and_reset() {
+        let mut r = Rng::new(13);
+        let mut t = DataTable::new(8);
+        for _ in 0..100 {
+            t.push(r.next_u64());
+        }
+        t.reset();
+        assert!(t.most_similar_sliced(1).is_none());
+        // Refill after reset: the mirror must still agree with the oracle.
+        for _ in 0..12 {
+            t.push(r.next_u64());
+        }
+        for _ in 0..100 {
+            let q = r.next_u64();
+            let hit = t.most_similar_sliced(q).unwrap();
+            assert_eq!((hit.index, hit.distance), naive_argmin(&t, q));
         }
     }
 

@@ -51,6 +51,8 @@ impl DbiEncoder {
 }
 
 impl ChipEncoder for DbiEncoder {
+    // Stateless SWAR transform: the default `encode_batch` loop inlines
+    // `dbi_encode` per word with nothing left to hoist, so no override.
     fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
         let (data, mask) = dbi_encode(word);
         WireWord {

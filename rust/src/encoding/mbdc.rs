@@ -32,6 +32,13 @@ impl MbdcEncoder {
     /// The MBDC decision + wire construction, shared with ZAC-DEST's
     /// fallback path. Updates the table.
     pub(crate) fn encode_word(table: &mut DataTable, word: u64) -> WireWord {
+        Self::encode_one(table, word, false)
+    }
+
+    /// Shared per-word core; `sliced` picks the CAM search layout (the
+    /// batch path runs against the bit-plane mirror, same results).
+    #[inline]
+    fn encode_one(table: &mut DataTable, word: u64, sliced: bool) -> WireWord {
         if word == 0 {
             return WireWord {
                 data: 0,
@@ -41,7 +48,11 @@ impl MbdcEncoder {
                 outcome: Outcome::ZeroSkip,
             };
         }
-        let hit = table.most_similar(word);
+        let hit = if sliced {
+            table.most_similar_sliced(word)
+        } else {
+            table.most_similar(word)
+        };
         Self::encode_word_with_hit(table, word, hit, true)
     }
 
@@ -88,6 +99,16 @@ impl MbdcEncoder {
 impl ChipEncoder for MbdcEncoder {
     fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
         Self::encode_word(&mut self.table, word)
+    }
+
+    /// Batch path: the shared core with the CAM search running against
+    /// the bit-plane mirror (bit-identical to [`MbdcEncoder::encode_word`]).
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        assert_eq!(words.len(), approx.len());
+        assert_eq!(words.len(), out.len());
+        for (&word, slot) in words.iter().zip(out.iter_mut()) {
+            *slot = Self::encode_one(&mut self.table, word, true);
+        }
     }
 
     fn scheme(&self) -> Scheme {

@@ -13,6 +13,25 @@
 //! All encoders operate at the hardware granularity: one 64-bit word per
 //! DRAM chip per cache-line transfer (8 chips × 64 bits = one 64 B line),
 //! mirrored tables at sender (DRAM) and receiver (memory controller).
+//!
+//! # Batch API contract
+//!
+//! The hot path is batch-first: every driver moves words in
+//! [`ENCODE_BATCH`]-sized chunks through [`ChipEncoder::encode_batch`] /
+//! [`ChipDecoder::decode_batch`] with preallocated buffers, so per-word
+//! virtual dispatch, queue sends and `Vec` growth amortize away. The
+//! contract every implementation must keep:
+//!
+//! * **Bit-identical to scalar.** `encode_batch` over any chunking of a
+//!   stream produces exactly the wire words the per-word [`ChipEncoder::encode`]
+//!   sequence would, including all table side effects — batch boundaries
+//!   are invisible on the wire (`batch_is_bit_identical_to_scalar_for_every_scheme`).
+//! * **Stateful across calls.** A batch call continues from the table
+//!   state the previous call left behind; callers may freely mix scalar
+//!   and batch calls on one codec.
+//! * **No allocation.** `encode_batch` writes into a caller-provided
+//!   slice of exactly `words.len()`; `decode_batch` appends to a
+//!   caller-provided `Vec` (reserve up front for zero growth).
 
 pub mod bde_org;
 pub mod config;
@@ -31,12 +50,32 @@ pub use wire::WireWord;
 
 use crate::channel::ChipChannel;
 
+/// Words per batch in the chunked drivers (coordinator, pipeline,
+/// [`run_chip_stream`]): large enough to amortize per-word dispatch and
+/// per-chunk queue overhead ~256×, small enough that the word + wire +
+/// flag buffers stay resident in L1.
+pub const ENCODE_BATCH: usize = 256;
+
 /// One DRAM chip's encoder: turns a 64-bit word into what is driven on
 /// the wires. `approx` is the per-access error-resilience hint (false for
 /// instruction/critical traffic — such words are never approximated).
 pub trait ChipEncoder: Send {
     /// Encode one 64-bit word for transfer.
     fn encode(&mut self, word: u64, approx: bool) -> WireWord;
+
+    /// Encode a batch into `out` (exactly `words.len()` slots). The
+    /// default is the scalar loop; schemes override it to hoist config
+    /// loads, pre-screen zero words and amortize table lookups. Must
+    /// stay bit-identical to the scalar sequence (see the module-level
+    /// batch contract).
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        assert_eq!(words.len(), approx.len());
+        assert_eq!(words.len(), out.len());
+        for ((&w, &a), slot) in words.iter().zip(approx).zip(out.iter_mut()) {
+            *slot = self.encode(w, a);
+        }
+    }
+
     /// Which scheme this encoder implements.
     fn scheme(&self) -> Scheme;
     /// Reset all internal state (tables, line history is channel-side).
@@ -49,6 +88,16 @@ pub trait ChipEncoder: Send {
 pub trait ChipDecoder: Send {
     /// Reconstruct the received word (approximate under ZAC-DEST skips).
     fn decode(&mut self, wire: &WireWord) -> u64;
+
+    /// Decode a batch, appending to `out` (same bit-identical/stateful
+    /// contract as [`ChipEncoder::encode_batch`]).
+    fn decode_batch(&mut self, wires: &[WireWord], out: &mut Vec<u64>) {
+        out.reserve(wires.len());
+        for w in wires {
+            out.push(self.decode(w));
+        }
+    }
+
     fn reset(&mut self);
 }
 
@@ -80,6 +129,8 @@ pub fn make_codec(cfg: &ZacConfig) -> (Box<dyn ChipEncoder>, Box<dyn ChipDecoder
 
 /// Convenience: run a word stream through one chip's encoder + channel +
 /// decoder, returning reconstructed words and accumulating stats/energy.
+/// Batch-first: fixed [`ENCODE_BATCH`]-word chunks over preallocated
+/// buffers, no per-word dispatch or channel calls.
 pub fn run_chip_stream(
     cfg: &ZacConfig,
     words: &[u64],
@@ -90,11 +141,13 @@ pub fn run_chip_stream(
     assert_eq!(words.len(), approx.len());
     let (mut enc, mut dec) = make_codec(cfg);
     let mut out = Vec::with_capacity(words.len());
-    for (&w, &a) in words.iter().zip(approx) {
-        let wire = enc.encode(w, a);
-        chan.transmit(&wire);
-        stats.record(&wire, w);
-        out.push(dec.decode(&wire));
+    let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+    for (wchunk, achunk) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
+        let buf = &mut wires[..wchunk.len()];
+        enc.encode_batch(wchunk, achunk, buf);
+        chan.transmit_batch(buf);
+        stats.record_batch(buf, wchunk);
+        dec.decode_batch(buf, &mut out);
     }
     out
 }
@@ -103,6 +156,7 @@ pub fn run_chip_stream(
 mod tests {
     use super::*;
     use crate::channel::ChipChannel;
+    use crate::util::prop;
     use crate::util::rng::Rng;
 
     fn stream(n: usize, seed: u64) -> Vec<u64> {
@@ -180,6 +234,94 @@ mod tests {
             "zac {} should beat bde {} on this stream",
             e[1],
             e[0]
+        );
+    }
+
+    /// Every config worth testing: all schemes, plus ZAC variants that
+    /// exercise truncation, tolerance and the weights mask.
+    fn codec_matrix() -> Vec<ZacConfig> {
+        let mut cfgs: Vec<ZacConfig> = [Scheme::Org, Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde]
+            .into_iter()
+            .map(ZacConfig::scheme)
+            .collect();
+        cfgs.push(ZacConfig::zac(80));
+        cfgs.push(ZacConfig::zac_full(75, 2, 1));
+        cfgs.push(ZacConfig::zac_weights(60));
+        cfgs
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_scalar_for_every_scheme() {
+        let mut r = Rng::new(23);
+        for cfg in codec_matrix() {
+            let words = stream(1500, 29);
+            let approx: Vec<bool> = (0..words.len()).map(|_| r.chance(0.6)).collect();
+
+            let (mut scalar_enc, mut scalar_dec) = make_codec(&cfg);
+            let scalar_wires: Vec<WireWord> = words
+                .iter()
+                .zip(&approx)
+                .map(|(&w, &a)| scalar_enc.encode(w, a))
+                .collect();
+            let scalar_out: Vec<u64> = scalar_wires.iter().map(|w| scalar_dec.decode(w)).collect();
+
+            // Irregular chunk sizes so chunk boundaries land everywhere.
+            let (mut batch_enc, mut batch_dec) = make_codec(&cfg);
+            let mut batch_wires = vec![WireWord::raw(0); words.len()];
+            let mut batch_out = Vec::new();
+            let (mut i, mut k) = (0usize, 0usize);
+            while i < words.len() {
+                let n = [1usize, 7, ENCODE_BATCH, 64, 3][k % 5].min(words.len() - i);
+                k += 1;
+                let buf = &mut batch_wires[i..i + n];
+                batch_enc.encode_batch(&words[i..i + n], &approx[i..i + n], buf);
+                batch_dec.decode_batch(buf, &mut batch_out);
+                i += n;
+            }
+            assert_eq!(batch_wires, scalar_wires, "{} wires", cfg.label());
+            assert_eq!(batch_out, scalar_out, "{} decodes", cfg.label());
+        }
+    }
+
+    #[test]
+    fn prop_batch_equals_scalar_on_random_mixes() {
+        prop::check(
+            "encode_batch/decode_batch == scalar",
+            31,
+            |r| {
+                let n = r.range(0, 96);
+                let words: Vec<u64> = (0..n)
+                    .map(|_| match r.below(3) {
+                        0 => 0u64,
+                        1 => r.next_u64() & 0x0F0F,
+                        _ => r.next_u64(),
+                    })
+                    .collect();
+                let flags: Vec<bool> = (0..n).map(|_| r.chance(0.5)).collect();
+                (words, flags)
+            },
+            |(words, flags)| {
+                let n = words.len().min(flags.len()); // shrinking may desync lengths
+                let (words, flags) = (&words[..n], &flags[..n]);
+                for cfg in [ZacConfig::zac_full(75, 1, 1), ZacConfig::scheme(Scheme::Bde)] {
+                    let (mut se, mut sd) = make_codec(&cfg);
+                    let (mut be, mut bd) = make_codec(&cfg);
+                    let mut wires = vec![WireWord::raw(0); n];
+                    be.encode_batch(words, flags, &mut wires);
+                    let mut batch_out = Vec::new();
+                    bd.decode_batch(&wires, &mut batch_out);
+                    for (i, (&w, &a)) in words.iter().zip(flags).enumerate() {
+                        let wire = se.encode(w, a);
+                        if wire != wires[i] {
+                            return Err(format!("{}: wire {i} diverged", cfg.label()));
+                        }
+                        if sd.decode(&wire) != batch_out[i] {
+                            return Err(format!("{}: decode {i} diverged", cfg.label()));
+                        }
+                    }
+                }
+                Ok(())
+            },
         );
     }
 }

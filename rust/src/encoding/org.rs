@@ -16,6 +16,8 @@ impl OrgEncoder {
 }
 
 impl ChipEncoder for OrgEncoder {
+    // Stateless passthrough: the default `encode_batch` loop already
+    // compiles to the optimal per-word copy, so no override is needed.
     fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
         let mut w = WireWord::raw(word);
         if word == 0 {

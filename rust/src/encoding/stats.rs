@@ -56,10 +56,19 @@ impl EncodeStats {
     }
 
     /// Record one transfer.
+    #[inline]
     pub fn record(&mut self, wire: &WireWord, original: u64) {
         self.counts[Self::slot(wire.outcome)] += 1;
         self.original_ones += original.count_ones() as u64;
         self.wire_ones += wire.total_ones() as u64;
+    }
+
+    /// Record a batch of transfers (one pass, counters stay enregistered).
+    pub fn record_batch(&mut self, wires: &[WireWord], originals: &[u64]) {
+        debug_assert_eq!(wires.len(), originals.len());
+        for (w, &o) in wires.iter().zip(originals) {
+            self.record(w, o);
+        }
     }
 
     pub fn count(&self, o: Outcome) -> u64 {

@@ -57,17 +57,29 @@ impl ZacDestEncoder {
         wire.dbi_mask = mask;
         wire
     }
-}
 
-impl ChipEncoder for ZacDestEncoder {
-    fn encode(&mut self, word: u64, approx: bool) -> WireWord {
+    /// Per-word encode core, shared by the scalar and batch paths. The
+    /// knobs arrive as arguments so the batch loop hoists them once;
+    /// `sliced` selects the bit-sliced CAM search (batch hot path) vs
+    /// the row-major reference scan — both return identical hits.
+    #[inline]
+    fn encode_one(
+        table: &mut DataTable,
+        word: u64,
+        approx: bool,
+        threshold: u32,
+        tol_mask: u64,
+        trunc_keep: u64,
+        ablation: super::config::Ablation,
+        sliced: bool,
+    ) -> WireWord {
         // (1) Truncation — approximate traffic only.
-        let dcdt = if approx { word & self.trunc_keep } else { word };
+        let dcdt = if approx { word & trunc_keep } else { word };
 
         // (2) Zero check: cheapest possible transfer, leave the CAM alone.
         // (ablation zero_skip=false: zeros flow through the normal
         // search/BDE path and update the table, as original BD-Coder.)
-        if dcdt == 0 && self.ablation.zero_skip {
+        if dcdt == 0 && ablation.zero_skip {
             return WireWord {
                 data: 0,
                 dbi_mask: 0,
@@ -79,15 +91,19 @@ impl ChipEncoder for ZacDestEncoder {
 
         // One CAM search serves both the skip check and the MBDC
         // fallback (the hardware searches once too — Fig. 7b).
-        let hit = self.table.most_similar(dcdt);
+        let hit = if sliced {
+            table.most_similar_sliced(dcdt)
+        } else {
+            table.most_similar(dcdt)
+        };
 
         // (3)+(4) ZAC-DEST skip check.
         if approx {
             if let Some(hit) = hit {
                 let diff = dcdt ^ hit.entry;
-                if diff.count_ones() < self.threshold && diff & self.tol_mask == 0 {
+                if diff.count_ones() < threshold && diff & tol_mask == 0 {
                     debug_assert!(hit.index < 64);
-                    return Self::dbi_stage(if self.ablation.ohe_index {
+                    return Self::dbi_stage(if ablation.ohe_index {
                         // One-hot index on the otherwise idle data lines.
                         WireWord {
                             data: 1u64 << hit.index,
@@ -113,11 +129,50 @@ impl ChipEncoder for ZacDestEncoder {
 
         // (5) Exact fallback: MBDC (updates the table), then (6) DBI.
         Self::dbi_stage(MbdcEncoder::encode_word_with_hit(
-            &mut self.table,
+            table,
             dcdt,
             hit,
-            self.ablation.dedup_update,
+            ablation.dedup_update,
         ))
+    }
+}
+
+impl ChipEncoder for ZacDestEncoder {
+    fn encode(&mut self, word: u64, approx: bool) -> WireWord {
+        Self::encode_one(
+            &mut self.table,
+            word,
+            approx,
+            self.threshold,
+            self.tol_mask,
+            self.trunc_keep,
+            self.ablation,
+            false,
+        )
+    }
+
+    /// Batch hot path: config knobs hoisted out of the loop, each
+    /// (post-truncation) all-zero word short-circuiting ahead of its CAM
+    /// access, and the search running against the bit-plane mirror.
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        assert_eq!(words.len(), approx.len());
+        assert_eq!(words.len(), out.len());
+        let threshold = self.threshold;
+        let tol_mask = self.tol_mask;
+        let trunc_keep = self.trunc_keep;
+        let ablation = self.ablation;
+        for ((&word, &approx), slot) in words.iter().zip(approx).zip(out.iter_mut()) {
+            *slot = Self::encode_one(
+                &mut self.table,
+                word,
+                approx,
+                threshold,
+                tol_mask,
+                trunc_keep,
+                ablation,
+                true,
+            );
+        }
     }
 
     fn scheme(&self) -> Scheme {

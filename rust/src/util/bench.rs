@@ -74,19 +74,25 @@ impl Default for Bencher {
 
 impl Bencher {
     pub fn new() -> Self {
-        let fast = std::env::var("ZAC_BENCH_FAST").map_or(false, |v| v == "1");
+        if std::env::var("ZAC_BENCH_FAST").map_or(false, |v| v == "1") {
+            return Self::fast();
+        }
         Bencher {
-            sample_time: if fast {
-                Duration::from_millis(50)
-            } else {
-                Duration::from_millis(800)
-            },
-            warmup: if fast {
-                Duration::from_millis(10)
-            } else {
-                Duration::from_millis(200)
-            },
-            max_samples: if fast { 10 } else { 200 },
+            sample_time: Duration::from_millis(800),
+            warmup: Duration::from_millis(200),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// The minimal-iteration configuration `ZAC_BENCH_FAST=1` selects,
+    /// constructed directly — tests use this instead of mutating the
+    /// process environment (racy under the parallel test runner).
+    pub fn fast() -> Self {
+        Bencher {
+            sample_time: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            max_samples: 10,
             results: Vec::new(),
         }
     }
@@ -164,6 +170,39 @@ impl Bencher {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Persist every collected result as machine-readable JSON — one
+    /// object per benchmark with `name`, `iters`, `mean_ns`/`p50_ns`/
+    /// `p99_ns` and, when the bench declared units, `units_per_iter`,
+    /// `unit` and the derived `units_per_sec` (bytes/s for byte-unit
+    /// benches). The perf trajectory across PRs diffs these files
+    /// (`BENCH_encoder.json` et al.) instead of scraping stdout.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json_lite::{num, obj, s, Json};
+        let entries = self
+            .results
+            .iter()
+            .map(|st| {
+                let mut pairs = vec![
+                    ("name", s(&st.name)),
+                    ("iters", num(st.iters as f64)),
+                    ("mean_ns", num(st.mean_ns)),
+                    ("p50_ns", num(st.p50_ns)),
+                    ("p99_ns", num(st.p99_ns)),
+                ];
+                if let Some((n, unit)) = st.units {
+                    pairs.push(("units_per_iter", num(n as f64)));
+                    pairs.push(("unit", s(unit)));
+                    pairs.push(("units_per_sec", num(n as f64 / (st.mean_ns * 1e-9))));
+                }
+                obj(pairs)
+            })
+            .collect();
+        let report = Json::Arr(entries);
+        std::fs::write(path, report.to_pretty() + "\n")?;
+        println!("bench report -> {path}");
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -172,8 +211,7 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        std::env::set_var("ZAC_BENCH_FAST", "1");
-        let mut b = Bencher::new();
+        let mut b = Bencher::fast();
         let mut acc = 0u64;
         let st = b.bench("spin", || {
             acc = std::hint::black_box(acc).wrapping_mul(6364136223846793005).wrapping_add(1);
@@ -181,6 +219,23 @@ mod tests {
         });
         assert!(st.mean_ns > 0.0);
         assert!(st.iters > 0);
+    }
+
+    #[test]
+    fn write_json_round_trips() {
+        use crate::util::json_lite::Json;
+        let mut b = Bencher::fast();
+        b.bench_with_units("jsn", 64, "B", || std::hint::black_box(1 + 1));
+        let path = std::env::temp_dir().join("zac_bench_test.json");
+        let path = path.to_str().unwrap();
+        b.write_json(path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "jsn");
+        assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(arr[0].get("units_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

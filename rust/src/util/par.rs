@@ -1,38 +1,47 @@
 //! Scoped-thread fan-out helpers (offline stand-in for `rayon`).
 
+use std::sync::Mutex;
+
 /// Map `f` over `items` on up to `threads` OS threads, preserving order.
+///
+/// Work distribution is a shared stack of *chunked ranges* over the
+/// input/output slices: each worker pops a whole chunk (one lock per
+/// chunk, not per item) and fills the matching output chunk in place.
+/// Chunks are ~4 per thread, coarse enough that the queue lock stays
+/// cold yet fine enough to balance uneven per-item cost.
 pub fn par_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
 where
     T: Send,
     U: Send,
     F: Fn(T) -> U + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    if threads <= 1 || items.len() <= 1 {
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
         return items.into_iter().map(f).collect();
     }
-    let n = items.len();
-    let inputs: Vec<std::sync::Mutex<Option<T>>> =
-        items.into_iter().map(|x| std::sync::Mutex::new(Some(x))).collect();
-    let outputs: Vec<std::sync::Mutex<Option<U>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut inputs: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let mut outputs: Vec<Option<U>> = std::iter::repeat_with(|| None).take(n).collect();
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let work: Mutex<Vec<(&mut [Option<T>], &mut [Option<U>])>> = Mutex::new(
+        inputs
+            .chunks_mut(chunk)
+            .zip(outputs.chunks_mut(chunk))
+            .collect(),
+    );
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+                let unit = work.lock().unwrap().pop();
+                let Some((ins, outs)) = unit else { break };
+                for (i, o) in ins.iter_mut().zip(outs.iter_mut()) {
+                    *o = Some(f(i.take().unwrap()));
                 }
-                let item = inputs[i].lock().unwrap().take().unwrap();
-                *outputs[i].lock().unwrap() = Some(f(item));
             });
         }
     });
-    outputs
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().unwrap())
-        .collect()
+    drop(work);
+    outputs.into_iter().map(|o| o.unwrap()).collect()
 }
 
 /// Reasonable worker count for this host.
@@ -60,6 +69,16 @@ mod tests {
     fn empty_input() {
         let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunking_covers_every_item_for_awkward_sizes() {
+        // Sizes around the chunking boundaries: n ≤ threads, n = prime,
+        // n just above threads*4.
+        for n in [2usize, 3, 7, 8, 9, 31, 33, 97] {
+            let out = par_map((0..n as i32).collect::<Vec<_>>(), 8, |x| x + 1);
+            assert_eq!(out, (1..=n as i32).collect::<Vec<_>>(), "n={n}");
+        }
     }
 
     #[test]

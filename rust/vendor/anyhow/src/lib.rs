@@ -1,0 +1,189 @@
+//! Minimal vendored stand-in for the `anyhow` crate, covering exactly the
+//! API surface this workspace uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros and the [`Context`]
+//! extension trait. The sandbox builds fully offline, so the real crate
+//! cannot be fetched from a registry; this drop-in keeps `?`-conversion
+//! from any `std::error::Error` and the context-chain `Display` the
+//! callers rely on. Swap back to the real `anyhow` by deleting the
+//! `path` override in the workspace manifest.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error: a root message plus the contexts wrapped around it
+/// (outermost last, as added).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.push(context);
+        self
+    }
+
+    /// The outermost context down to the root cause.
+    fn render(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, c) in self.chain.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion (used by `?`)
+// coherent with core's reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error::msg(msg)
+    }
+}
+
+/// `anyhow::Result<T>` alias with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy or eager context to a `Result` or `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return Err($crate::anyhow!($($tok)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($tok:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($tok)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // io-free StdError conversion via `?`
+        ensure!(n < 100, "{n} out of range");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        assert!(parse("100").unwrap_err().to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let base: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = base.context("opening manifest").unwrap_err();
+        let shown = e.to_string();
+        assert!(shown.starts_with("opening manifest"), "{shown}");
+        assert!(shown.contains("missing"), "{shown}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("needed a value").unwrap_err();
+        assert_eq!(e.to_string(), "needed a value");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("inline {x}");
+        assert_eq!(b.to_string(), "inline 7");
+        let c = anyhow!("args {} {}", 1, 2);
+        assert_eq!(c.to_string(), "args 1 2");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+}
