@@ -1,10 +1,12 @@
 //! END-TO-END DRIVER: the full system on a real (synthetic) workload,
 //! proving all three layers compose:
 //!
-//!   datasets → cache-line traces → STREAMING coordinator (8 chip
-//!   workers, bounded queues = backpressure) → channel energy model →
-//!   receiver-side reconstruction → PJRT workloads (L2 JAX graphs with
-//!   L1 Pallas kernels inside) → quality metrics,
+//!   datasets → cache-line traces → MULTI-CHANNEL system layer (sharded
+//!   channel array, one service-loop worker per channel, bounded chunk
+//!   mailboxes = backpressure; `ZAC_CHANNELS` picks the shard count) →
+//!   channel energy model → receiver-side reconstruction → PJRT
+//!   workloads (L2 JAX graphs with L1 Pallas kernels inside) → quality
+//!   metrics,
 //!
 //! for the paper's headline comparison: ZAC-DEST vs BD-Coder on all
 //! five workloads, plus a short training run on reconstructed data with
@@ -12,9 +14,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_pipeline`
 
-use zac_dest::coordinator::Pipeline;
 use zac_dest::encoding::{Scheme, ZacConfig};
 use zac_dest::runtime::Runtime;
+use zac_dest::system::{channels_from_env, ChannelArray};
 use zac_dest::trace::bytes_to_chip_words;
 use zac_dest::util::table::{f, pct, TextTable};
 use zac_dest::workloads::{cnn, Kind, Suite, SuiteBudget};
@@ -39,28 +41,42 @@ fn main() -> anyhow::Result<()> {
         suite.eigen_clean_acc
     );
 
-    // ---- Phase 2: stream the test-image trace through the coordinator
-    // (demonstrates the bounded-queue streaming path explicitly).
+    // ---- Phase 2: stream the test-image trace through the sharded
+    // channel array (round-robin address interleaving, one service-loop
+    // worker per channel behind a bounded chunk mailbox).
     let cfg = ZacConfig::zac(80);
     let mut bytes = Vec::new();
     for img in &suite.test_images {
         bytes.extend_from_slice(&img.data);
     }
     let lines = bytes_to_chip_words(&bytes);
+    let channels = match channels_from_env()? {
+        Some(list) => {
+            if list.len() > 1 {
+                eprintln!(
+                    "[e2e] ZAC_CHANNELS lists {list:?}; this example streams one array, using {}",
+                    list[0]
+                );
+            }
+            list[0]
+        }
+        None => 2,
+    };
     let ts = std::time::Instant::now();
-    let mut pipe = Pipeline::new(&cfg, 64);
+    let mut array = ChannelArray::new(&cfg, channels, 64);
     for l in &lines {
-        pipe.push_line(*l, true);
+        array.push_line(*l, true);
     }
-    let streamed = pipe.finish(bytes.len());
+    let streamed = array.finish(bytes.len());
     eprintln!(
-        "[e2e] streamed {} cache lines through 8 chip workers in {:.1} ms \
-         ({:.1} MB/s, termination 1s {})",
+        "[e2e] streamed {} cache lines across {} channel(s) in {:.1} ms \
+         ({:.1} MB/s)",
         lines.len(),
+        channels,
         ts.elapsed().as_secs_f64() * 1e3,
         bytes.len() as f64 / ts.elapsed().as_secs_f64() / 1e6,
-        streamed.counts.termination_ones
     );
+    println!("\n{}", streamed.report());
 
     // ---- Phase 3: the headline table — ZAC-DEST L80 vs BDE across all
     // five workloads: energy savings + output quality.

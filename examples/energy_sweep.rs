@@ -1,38 +1,52 @@
 //! Energy sweep: every (similarity limit × truncation × tolerance) knob
 //! combination over all five workload traces, as CSV on stdout — the
-//! data behind the paper's Fig. 14/15/16.
+//! data behind the paper's Fig. 14/15/16, driven by the declarative
+//! scenario engine (`system::SweepSpec` + `run_sweep`) instead of
+//! hand-rolled config loops.
+//!
+//! `ZAC_CHANNELS` shards each run across that many 8-chip channels
+//! (default 1, the paper's single-channel setup).
 //!
 //! Run: `cargo run --release --example energy_sweep > sweep.csv`
 
-use zac_dest::coordinator::simulate_bytes;
-use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::encoding::{Outcome, Scheme};
 use zac_dest::figures::FigureCtx;
+use zac_dest::system::{channels_from_env, run_sweep, SweepSpec};
 use zac_dest::workloads::{Kind, SuiteBudget};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let ctx = FigureCtx::new(42, SuiteBudget::quick());
-    println!("workload,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac");
+    let channels = channels_from_env()?.unwrap_or_else(|| vec![1]);
+    println!(
+        "workload,channels,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac"
+    );
     for kind in Kind::all() {
         let bytes = ctx.workload_trace(kind);
-        let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
-        for limit in [90u32, 80, 75, 70] {
-            for trunc in [0u32, 1, 2] {
-                for tol in [0u32, 1, 2] {
-                    let cfg = ZacConfig::zac_full(limit, trunc, tol);
-                    let out = simulate_bytes(&cfg, &bytes, true);
-                    println!(
-                        "{},{},{},{},{:.2},{:.2},{:.4},{:.4}",
-                        kind.label(),
-                        limit,
-                        trunc * 8,
-                        tol * 8,
-                        out.counts.termination_savings_vs(&base.counts),
-                        out.counts.switching_savings_vs(&base.counts),
-                        out.stats.fraction(zac_dest::encoding::Outcome::OheSkip),
-                        out.stats.unencoded_fraction(),
-                    );
-                }
-            }
+        let spec = SweepSpec {
+            name: format!("energy_sweep_{}", kind.label()),
+            channels: channels.clone(),
+            schemes: vec![Scheme::ZacDest],
+            limits: vec![90, 80, 75, 70],
+            truncations: vec![0, 1, 2],
+            tolerances: vec![0, 1, 2],
+            baseline: Scheme::Bde,
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&spec, &bytes)?;
+        for r in &report.scenarios {
+            println!(
+                "{},{},{},{},{},{:.2},{:.2},{:.4},{:.4}",
+                kind.label(),
+                r.channels,
+                r.limit,
+                r.truncation_bits * 8,
+                r.tolerance_bits * 8,
+                r.term_savings_pct,
+                r.switch_savings_pct,
+                r.fraction(Outcome::OheSkip),
+                r.fraction(Outcome::Raw),
+            );
         }
     }
+    Ok(())
 }

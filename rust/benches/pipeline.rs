@@ -1,9 +1,11 @@
 //! End-to-end pipeline benches: streaming (bounded queues) vs batch
-//! coordination, plus the PJRT inference path (requires artifacts).
+//! coordination, the sharded channel array at 1/2/4 channels, plus the
+//! PJRT inference path (requires artifacts).
 
 use zac_dest::coordinator::{simulate_bytes, Pipeline};
 use zac_dest::encoding::ZacConfig;
 use zac_dest::runtime::{pack_words_i32, Runtime, Tensor};
+use zac_dest::system::ChannelArray;
 use zac_dest::trace::bytes_to_chip_words;
 use zac_dest::util::bench::Bencher;
 use zac_dest::util::rng::Rng;
@@ -32,6 +34,17 @@ fn main() {
         }
         p.finish(bytes.len())
     });
+
+    // Multi-channel system layer: round-robin interleave across 1/2/4
+    // independent 8-chip channels, one service-loop worker each.
+    for shards in [1usize, 2, 4] {
+        b.bench_with_units(
+            &format!("channel_array_512KiB_x{shards}"),
+            bytes.len() as u64,
+            "B",
+            || ChannelArray::run(&cfg, shards, &lines, true, bytes.len()),
+        );
+    }
 
     // PJRT path: bulk trace analytics + CNN inference per batch.
     match Runtime::load(Runtime::default_dir()) {

@@ -177,6 +177,32 @@ mod tests {
     }
 
     #[test]
+    fn energy_merge_of_split_halves_equals_whole_run() {
+        // The shard reduction in `system::ChannelArray` sums per-shard
+        // `EnergyCounts`. Pin merge(half on channel A, half on channel
+        // B) == whole run on one channel, using words whose final beat
+        // drives every line low (MSByte zero) so all line state returns
+        // to idle at each word boundary and any split point is
+        // equivalent to a fresh channel.
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(22);
+        let wires: Vec<WireWord> = (0..256)
+            .map(|_| WireWord::raw(r.next_u64() & 0x00FF_FFFF_FFFF_FFFF))
+            .collect();
+        let mut whole = ChipChannel::new();
+        whole.transmit_batch(&wires);
+        for split in [0usize, 1, 100, 255, 256] {
+            let mut a = ChipChannel::new();
+            let mut b = ChipChannel::new();
+            a.transmit_batch(&wires[..split]);
+            b.transmit_batch(&wires[split..]);
+            let mut merged = *a.energy();
+            merged.merge(b.energy());
+            assert_eq!(merged, *whole.energy(), "split at {split}");
+        }
+    }
+
+    #[test]
     fn full_channel_aggregates() {
         let mut ch = Channel::new();
         for i in 0..CHIPS {

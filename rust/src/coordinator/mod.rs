@@ -9,7 +9,9 @@
 //!   tables, lines and sidebands).
 //! * [`Pipeline`] — streaming mode with bounded per-chip queues
 //!   (`sync_channel`), giving real backpressure when a producer outruns
-//!   the encoder workers; used by the e2e example and the service loop.
+//!   the encoder workers. The multi-channel layer
+//!   ([`crate::system`]) reuses this chunked-queue discipline as the
+//!   per-shard mailbox of its channel array.
 //!
 //! Both drivers are batch-first: words move in
 //! [`ENCODE_BATCH`](crate::encoding::ENCODE_BATCH)-sized chunks through
@@ -252,8 +254,11 @@ impl Pipeline {
         self.pending_approx.clear();
         for (tx, words) in self.senders.iter().zip(self.pending.iter_mut()) {
             let chunk = std::mem::replace(words, Vec::with_capacity(ENCODE_BATCH));
-            tx.send((chunk.into_boxed_slice(), approx.clone()))
-                .expect("worker died");
+            // A failed send means that chip's worker died (receiver
+            // dropped mid-panic). Don't panic here: keep feeding the
+            // healthy workers so their queues drain, and let `finish`
+            // join everyone and surface the original panic.
+            let _ = tx.send((chunk.into_boxed_slice(), approx.clone()));
         }
     }
 
@@ -263,6 +268,11 @@ impl Pipeline {
     }
 
     /// Close the queues, join the workers, reassemble the output.
+    ///
+    /// Panic path: every worker is joined (drained) before any panic is
+    /// surfaced, then the *original* worker panic payload is re-raised
+    /// — one dying chip worker can neither leak its siblings' threads
+    /// nor mask its own root cause behind a generic join error.
     pub fn finish(mut self, byte_len: usize) -> RunOutput {
         self.flush();
         let Pipeline {
@@ -272,10 +282,7 @@ impl Pipeline {
             ..
         } = self;
         drop(senders);
-        let results: Vec<_> = workers
-            .into_iter()
-            .map(|w| w.join().expect("worker panicked"))
-            .collect();
+        let results = crate::util::par::join_all_reraise(workers);
         assemble(results, lines_pushed, byte_len)
     }
 }

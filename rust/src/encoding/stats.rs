@@ -36,7 +36,7 @@ impl Outcome {
 }
 
 /// Aggregate statistics over an encoded stream.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EncodeStats {
     counts: [u64; 4],
     /// Ones in the original (pre-encoding) words.
@@ -122,6 +122,39 @@ mod tests {
         assert_eq!(s.original_ones, 3 + 16);
         // ohe transfer drives 1 data one + 1 flag one.
         assert_eq!(s.wire_ones, 3 + 2);
+    }
+
+    #[test]
+    fn merge_of_split_halves_equals_whole_run() {
+        // The shard reduction in `system::ChannelArray` relies on this:
+        // recording a stream in two halves and merging must be
+        // indistinguishable from one whole-run recording, at any split.
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(21);
+        let outcomes = Outcome::all();
+        let pairs: Vec<(WireWord, u64)> = (0..512)
+            .map(|i| {
+                let original = r.next_u64();
+                let mut w = WireWord::raw(r.next_u64());
+                w.outcome = outcomes[i % 4];
+                w.dbi_mask = r.next_u64() as u8;
+                w.index_line = r.next_u64() as u8;
+                w.index_used = i % 3 == 0;
+                (w, original)
+            })
+            .collect();
+        let wires: Vec<WireWord> = pairs.iter().map(|(w, _)| *w).collect();
+        let originals: Vec<u64> = pairs.iter().map(|(_, o)| *o).collect();
+        let mut whole = EncodeStats::default();
+        whole.record_batch(&wires, &originals);
+        for split in [0usize, 1, 255, 256, 511, 512] {
+            let mut a = EncodeStats::default();
+            let mut b = EncodeStats::default();
+            a.record_batch(&wires[..split], &originals[..split]);
+            b.record_batch(&wires[split..], &originals[split..]);
+            a.merge(&b);
+            assert_eq!(a, whole, "split at {split}");
+        }
     }
 
     #[test]

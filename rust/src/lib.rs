@@ -8,8 +8,10 @@
 //! * **Layer 3 (this crate)** — the paper's contribution: the DRAM-channel
 //!   data-encoding engines ([`encoding`]), the channel energy model
 //!   ([`channel`]), the trace/reconstruction machinery ([`trace`]), the
-//!   gate-level circuit overhead model ([`circuits`]), and the streaming
-//!   [`coordinator`] that drives whole-workload simulations.
+//!   gate-level circuit overhead model ([`circuits`]), the streaming
+//!   [`coordinator`] that drives whole-workload simulations, and the
+//!   multi-channel [`system`] layer (sharded channel array + scenario
+//!   sweep engine) on top of it.
 //! * **Layer 2** — JAX compute graphs for the five evaluation workloads,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through
 //!   [`runtime`] (PJRT CPU client; python never runs on the request path).
@@ -27,6 +29,7 @@ pub mod encoding;
 pub mod figures;
 pub mod quality;
 pub mod runtime;
+pub mod system;
 pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -7,6 +7,10 @@
 //!                     report energy + outcome statistics
 //! * `workload <k>`  — evaluate one workload under a config
 //! * `run --config`  — full run from a TOML config file
+//! * `sweep`         — multi-channel scenario grid (channels × scheme ×
+//!                     knobs) over the sharded channel array, emitting
+//!                     `BENCH_system.json`; honors `ZAC_CHANNELS` and
+//!                     `ZAC_BENCH_BYTES`
 //! * `circuit`       — §VI circuit-overhead report
 //! * `artifacts`     — list/verify the AOT artifacts
 
@@ -56,6 +60,22 @@ fn app() -> Command {
         .subcommand(
             Command::new("run", "full run from a TOML config file")
                 .req("config", "path to run config (see configs/)"),
+        )
+        .subcommand(
+            Command::new("sweep", "multi-channel scenario grid over the channel array")
+                .opt("spec", "-", "sweep spec TOML ('-' = built-in default grid)")
+                .opt("channels", "", "channel counts, e.g. 1,2,4 (overrides spec)")
+                .opt("bytes", "0", "synthetic trace bytes (0 = spec/env value)")
+                .opt("seed", "0", "synthetic trace seed (0 = spec value)")
+                .opt("out", "BENCH_system.json", "JSON report path ('-' = skip)")
+                .env(
+                    "ZAC_CHANNELS",
+                    "default channel counts for sweep + e2e example (comma-separated)",
+                )
+                .env(
+                    "ZAC_BENCH_BYTES",
+                    "default trace size in bytes for sweep + bench smokes",
+                ),
         )
         .subcommand(Command::new("circuit", "§VI circuit overhead report").opt(
             "vectors",
@@ -153,6 +173,7 @@ fn main() -> Result<()> {
             );
         }
         Some("run") => cmd_run(m.get("config").unwrap())?,
+        Some("sweep") => cmd_sweep(&m)?,
         Some("circuit") => {
             let (bd, zd) = zac_dest::circuits::evaluate(m.get_usize("vectors")?, 42);
             println!(
@@ -244,6 +265,51 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         bytes.len() / 64,
         dt.as_secs_f64() * 1e3
     );
+    Ok(())
+}
+
+fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    use zac_dest::system::{channels_from_env, parse_channel_list, run_sweep, synthetic_trace, SweepSpec};
+    let mut spec = match m.get_or("spec", "-") {
+        "-" => SweepSpec::default(),
+        path => SweepSpec::from_file(path)?,
+    };
+    // Precedence for each knob: explicit flag > environment > spec.
+    match m.get_or("channels", "") {
+        "" => {
+            if let Some(ch) = channels_from_env()? {
+                spec.channels = ch;
+            }
+        }
+        list => spec.channels = parse_channel_list(list)?,
+    }
+    let bytes = m.get_usize("bytes")?;
+    if bytes > 0 {
+        spec.bytes = bytes;
+    } else if let Ok(v) = std::env::var("ZAC_BENCH_BYTES") {
+        // A set-but-malformed value must error, not silently fall back.
+        spec.bytes = v
+            .parse::<usize>()
+            .map_err(|e| anyhow::anyhow!("ZAC_BENCH_BYTES {v:?}: {e}"))?;
+    }
+    let seed = m.get_usize("seed")? as u64;
+    if seed > 0 {
+        spec.seed = seed;
+    }
+    let trace = synthetic_trace(spec.bytes, spec.seed);
+    eprintln!(
+        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}",
+        spec.name,
+        spec.channels,
+        trace.len(),
+        spec.baseline.label()
+    );
+    let report = run_sweep(&spec, &trace)?;
+    println!("{}", report.render_table());
+    let out = m.get_or("out", "BENCH_system.json");
+    if out != "-" {
+        report.write_json(out)?;
+    }
     Ok(())
 }
 

@@ -1,0 +1,377 @@
+//! Sharded channel array: N independent 8-chip channels behind bounded
+//! chunk mailboxes, one service-loop worker thread per shard.
+//!
+//! Address interleaving is round-robin at cache-line granularity: line
+//! `l` lands on shard `l % shards` ([`shard_of_line`]). Each shard owns
+//! its own codecs (data tables) and [`ChipChannel`] line state, so its
+//! behaviour over its subsequence is bit-identical to a single-channel
+//! [`simulate_lines`](crate::coordinator::simulate_lines) run on that
+//! subsequence — the shard worker is the same batch encode → transmit →
+//! record → decode path, just fed from a mailbox of boxed
+//! [`ENCODE_BATCH`]-line chunks instead of a slice.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::channel::{ChipChannel, EnergyCounts, CHIPS};
+use crate::encoding::{make_codec, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
+use crate::trace::{chip_words_to_bytes, gather_chip_lane, ChipWords};
+use crate::util::table::TextTable;
+
+/// The shard a cache line lands on under round-robin interleaving.
+#[inline]
+pub fn shard_of_line(line: usize, shards: usize) -> usize {
+    line % shards
+}
+
+/// One mailbox element: a boxed block of cache lines plus approx flags.
+type ShardChunk = (Box<[ChipWords]>, Box<[bool]>);
+
+/// What a shard worker hands back: its decoded lines (in shard-local
+/// order), channel-wide energy counts and encode statistics.
+type ShardResult = (Vec<ChipWords>, EnergyCounts, EncodeStats);
+
+/// Per-shard slice of the system report.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    /// Cache lines this shard served.
+    pub lines: usize,
+    /// Energy counts summed over the shard's 8 chips.
+    pub counts: EnergyCounts,
+    /// Encode statistics summed over the shard's 8 chips.
+    pub stats: EncodeStats,
+}
+
+/// Result of a channel-array run: the reassembled receiver-side stream
+/// plus system-level (merged) and per-shard statistics.
+#[derive(Clone, Debug)]
+pub struct SystemOutput {
+    /// Receiver-side byte stream, de-interleaved back into trace order.
+    pub bytes: Vec<u8>,
+    /// System-wide energy counts (merged over shards).
+    pub counts: EnergyCounts,
+    /// System-wide encode statistics (merged over shards).
+    pub stats: EncodeStats,
+    /// Per-shard breakdown, indexed by shard id.
+    pub shards: Vec<ShardReport>,
+}
+
+impl SystemOutput {
+    /// Render the system-level report: one row per shard + the merged
+    /// totals (the table `examples/e2e_pipeline.rs` prints).
+    pub fn report(&self) -> String {
+        let mut t = TextTable::new(&["shard", "lines", "transfers", "term 1s", "switching"]);
+        for (i, s) in self.shards.iter().enumerate() {
+            t.row(vec![
+                format!("{i}"),
+                format!("{}", s.lines),
+                format!("{}", s.counts.transfers),
+                format!("{}", s.counts.termination_ones),
+                format!("{}", s.counts.switching_transitions),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".into(),
+            format!("{}", self.shards.iter().map(|s| s.lines).sum::<usize>()),
+            format!("{}", self.counts.transfers),
+            format!("{}", self.counts.termination_ones),
+            format!("{}", self.counts.switching_transitions),
+        ]);
+        format!(
+            "system report: {} channel(s), unencoded {:.1}%\n{}",
+            self.shards.len(),
+            100.0 * self.stats.unencoded_fraction(),
+            t.render()
+        )
+    }
+}
+
+/// N independent 8-chip channels fed by round-robin address interleaving.
+///
+/// `push_line` routes each line to its shard's pending buffer; full
+/// [`ENCODE_BATCH`]-line chunks ship to that shard's bounded mailbox
+/// (blocking when the shard is behind — per-shard backpressure, exactly
+/// the memory controller's per-channel write queue). `finish` drains the
+/// tails, joins every worker and merges the per-shard stats.
+pub struct ChannelArray {
+    senders: Vec<SyncSender<ShardChunk>>,
+    workers: Vec<JoinHandle<ShardResult>>,
+    /// Per-shard lines + approx flags awaiting the next chunk flush.
+    pending: Vec<(Vec<ChipWords>, Vec<bool>)>,
+    lines_pushed: usize,
+}
+
+impl ChannelArray {
+    /// Spawn `shards` service-loop workers, all chips on one shard
+    /// sharing `cfg`. `capacity` is the mailbox depth in lines (rounded
+    /// up to whole chunks).
+    pub fn new(cfg: &ZacConfig, shards: usize, capacity: usize) -> ChannelArray {
+        let cfgs: Vec<ZacConfig> = (0..CHIPS).map(|_| cfg.clone()).collect();
+        Self::with_chip_configs(&cfgs, shards, capacity)
+    }
+
+    /// Spawn the array with a distinct configuration per chip (same 8
+    /// configs on every shard) — the multi-channel analogue of
+    /// [`simulate_lines_per_chip`](crate::coordinator::simulate_lines_per_chip).
+    pub fn with_chip_configs(cfgs: &[ZacConfig], shards: usize, capacity: usize) -> ChannelArray {
+        assert_eq!(cfgs.len(), CHIPS);
+        assert!(shards >= 1, "channel array needs at least one shard");
+        let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
+        let mut senders = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx): (SyncSender<ShardChunk>, Receiver<ShardChunk>) =
+                sync_channel(chunk_capacity);
+            let cfgs = cfgs.to_vec();
+            workers.push(std::thread::spawn(move || shard_service_loop(&cfgs, rx)));
+            senders.push(tx);
+        }
+        ChannelArray {
+            senders,
+            workers,
+            pending: (0..shards)
+                .map(|_| (Vec::with_capacity(ENCODE_BATCH), Vec::with_capacity(ENCODE_BATCH)))
+                .collect(),
+            lines_pushed: 0,
+        }
+    }
+
+    /// Number of shards (channels) in the array.
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Lines accepted so far.
+    pub fn lines_pushed(&self) -> usize {
+        self.lines_pushed
+    }
+
+    /// Route one cache line to its shard (blocks when that shard's
+    /// mailbox is full).
+    pub fn push_line(&mut self, line: ChipWords, approx: bool) {
+        let s = shard_of_line(self.lines_pushed, self.shards());
+        self.lines_pushed += 1;
+        let (lines, flags) = &mut self.pending[s];
+        lines.push(line);
+        flags.push(approx);
+        if lines.len() == ENCODE_BATCH {
+            self.flush_shard(s);
+        }
+    }
+
+    /// Ship shard `s`'s pending lines as one boxed chunk.
+    fn flush_shard(&mut self, s: usize) {
+        let (lines, flags) = &mut self.pending[s];
+        if lines.is_empty() {
+            return;
+        }
+        let chunk: Box<[ChipWords]> =
+            std::mem::replace(lines, Vec::with_capacity(ENCODE_BATCH)).into_boxed_slice();
+        let approx: Box<[bool]> =
+            std::mem::replace(flags, Vec::with_capacity(ENCODE_BATCH)).into_boxed_slice();
+        // A failed send means the shard worker died (receiver dropped);
+        // keep accepting traffic so the healthy shards drain normally —
+        // `finish` joins every worker and surfaces the original panic.
+        let _ = self.senders[s].send((chunk, approx));
+    }
+
+    /// Close the mailboxes, join every worker, merge the shard results
+    /// and de-interleave the decoded stream back into trace order.
+    ///
+    /// If a shard worker panicked, every other worker is still joined
+    /// (drained) first, then the original panic payload is re-raised —
+    /// no sibling threads are leaked and the root cause is what the
+    /// caller sees.
+    pub fn finish(mut self, byte_len: usize) -> SystemOutput {
+        for s in 0..self.shards() {
+            self.flush_shard(s);
+        }
+        let ChannelArray {
+            senders,
+            workers,
+            lines_pushed,
+            ..
+        } = self;
+        drop(senders);
+        let shards = workers.len();
+        let results = crate::util::par::join_all_reraise(workers);
+
+        // De-interleave: line l of the trace is entry l / shards of
+        // shard l % shards.
+        let mut out_lines = vec![[0u64; CHIPS]; lines_pushed];
+        let mut reports = Vec::with_capacity(shards);
+        let mut counts = EnergyCounts::default();
+        let mut stats = EncodeStats::default();
+        for (s, (decoded, c, st)) in results.into_iter().enumerate() {
+            debug_assert_eq!(decoded.len(), (lines_pushed + shards - 1 - s) / shards);
+            for (i, line) in decoded.iter().enumerate() {
+                out_lines[i * shards + s] = *line;
+            }
+            counts.merge(&c);
+            stats.merge(&st);
+            reports.push(ShardReport {
+                lines: decoded.len(),
+                counts: c,
+                stats: st,
+            });
+        }
+        SystemOutput {
+            bytes: chip_words_to_bytes(&out_lines, byte_len),
+            counts,
+            stats,
+            shards: reports,
+        }
+    }
+
+    /// Batch driver: run a whole pre-split trace through a fresh array.
+    pub fn run(
+        cfg: &ZacConfig,
+        shards: usize,
+        lines: &[ChipWords],
+        approx: bool,
+        byte_len: usize,
+    ) -> SystemOutput {
+        let mut array = ChannelArray::new(cfg, shards, 4 * ENCODE_BATCH);
+        for l in lines {
+            array.push_line(*l, approx);
+        }
+        array.finish(byte_len)
+    }
+}
+
+/// The per-shard service loop: receive boxed line chunks until the
+/// mailbox closes, driving all 8 chips of this shard's channel through
+/// the batch codec path (per-batch lane gather, no stream clones).
+fn shard_service_loop(cfgs: &[ZacConfig], rx: Receiver<ShardChunk>) -> ShardResult {
+    let mut codecs: Vec<_> = cfgs.iter().map(make_codec).collect();
+    let mut chans = vec![ChipChannel::new(); CHIPS];
+    let mut stats = EncodeStats::default();
+    let mut decoded: Vec<Vec<u64>> = (0..CHIPS).map(|_| Vec::new()).collect();
+    let mut words = [0u64; ENCODE_BATCH];
+    let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+    while let Ok((lines, approx)) = rx.recv() {
+        for (lc, ac) in lines.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
+            let n = lc.len();
+            for j in 0..CHIPS {
+                gather_chip_lane(lc, j, &mut words[..n]);
+                let (enc, dec) = &mut codecs[j];
+                enc.encode_batch(&words[..n], &ac[..n], &mut wires[..n]);
+                chans[j].transmit_batch(&wires[..n]);
+                stats.record_batch(&wires[..n], &words[..n]);
+                dec.decode_batch(&wires[..n], &mut decoded[j]);
+            }
+        }
+    }
+    let nlines = decoded[0].len();
+    let mut lines_out = vec![[0u64; CHIPS]; nlines];
+    for (j, lane) in decoded.into_iter().enumerate() {
+        debug_assert_eq!(lane.len(), nlines);
+        for (l, w) in lane.into_iter().enumerate() {
+            lines_out[l][j] = w;
+        }
+    }
+    let mut counts = EnergyCounts::default();
+    for c in &chans {
+        counts.merge(c.energy());
+    }
+    (lines_out, counts, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{simulate_bytes, simulate_lines};
+    use crate::encoding::Scheme;
+    use crate::system::scenario::synthetic_trace as image_like;
+    use crate::trace::bytes_to_chip_words;
+
+    #[test]
+    fn round_robin_interleaving() {
+        for l in 0..16 {
+            assert_eq!(shard_of_line(l, 1), 0);
+            assert_eq!(shard_of_line(l, 4), l % 4);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_bit_identical_to_single_channel_path() {
+        let bytes = image_like(300 * 64 + 32, 31);
+        let lines = bytes_to_chip_words(&bytes);
+        let cfg = ZacConfig::zac_full(75, 1, 1);
+        let reference = simulate_bytes(&cfg, &bytes, true);
+        let out = ChannelArray::run(&cfg, 1, &lines, true, bytes.len());
+        assert_eq!(out.bytes, reference.bytes);
+        assert_eq!(out.counts, reference.counts);
+        assert_eq!(out.stats, reference.stats);
+        assert_eq!(out.shards.len(), 1);
+        assert_eq!(out.shards[0].lines, lines.len());
+    }
+
+    #[test]
+    fn multi_shard_matches_merged_per_shard_reference() {
+        // Each shard owns its own tables + line state, so the array must
+        // equal N independent single-channel runs over the interleaved
+        // subsequences, merged (the integration property test widens
+        // this over random traces).
+        let bytes = image_like(550 * 64, 33);
+        let lines = bytes_to_chip_words(&bytes);
+        let cfg = ZacConfig::zac(80);
+        for shards in [2usize, 4] {
+            let out = ChannelArray::run(&cfg, shards, &lines, true, bytes.len());
+            let mut counts = EnergyCounts::default();
+            let mut stats = EncodeStats::default();
+            let mut ref_lines = vec![[0u64; CHIPS]; lines.len()];
+            for s in 0..shards {
+                let sub: Vec<_> = lines.iter().skip(s).step_by(shards).copied().collect();
+                let r = simulate_lines(&cfg, &sub, true, sub.len() * 64);
+                counts.merge(&r.counts);
+                stats.merge(&r.stats);
+                assert_eq!(out.shards[s].counts, r.counts, "shard {s}");
+                assert_eq!(out.shards[s].stats, r.stats, "shard {s}");
+                for (i, l) in bytes_to_chip_words(&r.bytes).iter().enumerate() {
+                    ref_lines[i * shards + s] = *l;
+                }
+            }
+            assert_eq!(out.counts, counts, "{shards} shards");
+            assert_eq!(out.stats, stats, "{shards} shards");
+            assert_eq!(out.bytes, chip_words_to_bytes(&ref_lines, bytes.len()));
+        }
+    }
+
+    #[test]
+    fn exact_schemes_lossless_for_every_shard_count() {
+        let bytes = image_like(4096, 35);
+        let lines = bytes_to_chip_words(&bytes);
+        for scheme in [Scheme::Org, Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde] {
+            for shards in 1..=4 {
+                let out =
+                    ChannelArray::run(&ZacConfig::scheme(scheme), shards, &lines, true, bytes.len());
+                assert_eq!(out.bytes, bytes, "{scheme:?} x{shards}");
+                assert_eq!(out.stats.total(), lines.len() as u64 * CHIPS as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_line_counts_cover_the_stream() {
+        let bytes = image_like(103 * 64, 37);
+        let lines = bytes_to_chip_words(&bytes);
+        let out = ChannelArray::run(&ZacConfig::zac(80), 4, &lines, true, bytes.len());
+        let total: usize = out.shards.iter().map(|s| s.lines).sum();
+        assert_eq!(total, lines.len());
+        // 103 = 4*25 + 3: shards 0..3 get 26,26,26,25.
+        assert_eq!(
+            out.shards.iter().map(|s| s.lines).collect::<Vec<_>>(),
+            vec![26, 26, 26, 25]
+        );
+        assert!(out.report().contains("TOTAL"));
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_output() {
+        let out = ChannelArray::run(&ZacConfig::zac(80), 3, &[], true, 0);
+        assert!(out.bytes.is_empty());
+        assert_eq!(out.stats.total(), 0);
+        assert_eq!(out.shards.len(), 3);
+    }
+}

@@ -1,0 +1,41 @@
+//! Multi-channel memory-system layer: the step from "one 8-chip channel
+//! per process" to a sharded channel array plus a declarative scenario
+//! engine (ROADMAP: "shard the line stream across multiple 8-chip
+//! channels, async service loop over the chunked queues").
+//!
+//! Three pieces:
+//!
+//! * [`array`] — [`ChannelArray`]: N independent 8-chip channels, the
+//!   line stream sharded across them by deterministic round-robin
+//!   address interleaving. Each shard runs a service loop on its own
+//!   worker thread, consuming boxed [`ENCODE_BATCH`]-line chunks from a
+//!   bounded mailbox (the same chunked-queue discipline as
+//!   [`Pipeline`](crate::coordinator::Pipeline)); per-shard
+//!   [`EncodeStats`](crate::encoding::EncodeStats) /
+//!   [`EnergyCounts`](crate::channel::EnergyCounts) merge into one
+//!   system-level [`SystemOutput`].
+//! * [`scenario`] — [`SweepSpec`]: a declarative (channels × scheme ×
+//!   knob-grid) sweep, parsed from a TOML subset via
+//!   [`toml_lite`](crate::util::toml_lite) or built from the default
+//!   grid, fanned out over the array by [`run_sweep`].
+//! * [`report`] — [`SweepReport`]: per-scenario energy savings, outcome
+//!   mix and trace-level quality, rendered as a text table and persisted
+//!   as machine-readable `BENCH_system.json`.
+//!
+//! Physical model note: each channel owns its encoder tables and line
+//! state, so a shard behaves exactly like a single-channel
+//! [`simulate_lines`](crate::coordinator::simulate_lines) run over its
+//! own interleaved subsequence — the property tests pin the array
+//! bit-identical to that reference for 1/2/4 shards.
+//!
+//! [`ENCODE_BATCH`]: crate::encoding::ENCODE_BATCH
+
+pub mod array;
+pub mod report;
+pub mod scenario;
+
+pub use array::{shard_of_line, ChannelArray, ShardReport, SystemOutput};
+pub use report::{ScenarioResult, SweepReport};
+pub use scenario::{
+    channels_from_env, parse_channel_list, run_sweep, synthetic_trace, Scenario, SweepSpec,
+};

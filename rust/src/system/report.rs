@@ -1,0 +1,219 @@
+//! System-level sweep reporting: per-scenario results, a text table for
+//! humans and machine-readable JSON (`BENCH_system.json`) diffed across
+//! PRs like `BENCH_encoder.json`.
+
+use crate::channel::EnergyCounts;
+use crate::encoding::Outcome;
+use crate::util::json_lite::{num, obj, s, Json};
+use crate::util::table::{f, pct, TextTable};
+
+/// One scenario's measured outcome.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    /// Human label, e.g. `ZAC(L80,T0,O0)@2ch`.
+    pub label: String,
+    /// Scheme label (Table I name).
+    pub scheme: String,
+    /// Channel (shard) count the scenario ran on.
+    pub channels: usize,
+    /// ZAC knobs (0 for non-ZAC schemes).
+    pub limit: u32,
+    pub truncation_bits: u32,
+    pub tolerance_bits: u32,
+    /// Merged system-wide energy counts.
+    pub counts: EnergyCounts,
+    /// Savings vs the spec's baseline scheme at the same channel count.
+    pub term_savings_pct: f64,
+    pub switch_savings_pct: f64,
+    /// Transfer-outcome fractions, in [`Outcome::all`] order.
+    pub outcome_fracs: [f64; 4],
+    /// Trace-level quality proxy: `1 - MAE/255` (1.0 = bit-exact). The
+    /// paper's full quality ratios come from the workload suite; this is
+    /// the sweep engine's model-free stand-in.
+    pub quality_ratio: f64,
+    /// PSNR of the reconstructed trace (dB); `None` when bit-exact.
+    pub psnr_db: Option<f64>,
+    /// Wall time of the array run.
+    pub wall_ms: f64,
+    /// Trace bytes per second through the array.
+    pub bytes_per_sec: f64,
+    /// Lines served per shard (round-robin shares).
+    pub shard_lines: Vec<usize>,
+}
+
+impl ScenarioResult {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("scheme", s(&self.scheme)),
+            ("channels", num(self.channels as f64)),
+            ("limit", num(self.limit as f64)),
+            ("truncation_bits", num(self.truncation_bits as f64)),
+            ("tolerance_bits", num(self.tolerance_bits as f64)),
+            ("termination_ones", num(self.counts.termination_ones as f64)),
+            (
+                "switching_transitions",
+                num(self.counts.switching_transitions as f64),
+            ),
+            ("transfers", num(self.counts.transfers as f64)),
+            ("term_savings_pct", num(self.term_savings_pct)),
+            ("switch_savings_pct", num(self.switch_savings_pct)),
+            ("zero_frac", num(self.outcome_fracs[0])),
+            ("ohe_frac", num(self.outcome_fracs[1])),
+            ("bde_frac", num(self.outcome_fracs[2])),
+            ("unencoded_frac", num(self.outcome_fracs[3])),
+            ("quality_ratio", num(self.quality_ratio)),
+            ("psnr_db", self.psnr_db.map_or(Json::Null, num)),
+            ("wall_ms", num(self.wall_ms)),
+            ("bytes_per_sec", num(self.bytes_per_sec)),
+            (
+                "shard_lines",
+                Json::Arr(self.shard_lines.iter().map(|&l| num(l as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Fraction for one outcome (in [`Outcome::all`] order).
+    pub fn fraction(&self, o: Outcome) -> f64 {
+        let idx = Outcome::all().iter().position(|&x| x == o).unwrap();
+        self.outcome_fracs[idx]
+    }
+}
+
+/// Full sweep result: every scenario over one trace.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    /// Trace size the grid ran over.
+    pub trace_bytes: usize,
+    /// Baseline scheme label the savings columns reference.
+    pub baseline: String,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("trace_bytes", num(self.trace_bytes as f64)),
+            ("baseline", s(&self.baseline)),
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Persist as pretty JSON (the `BENCH_system.json` artifact). The
+    /// status line goes to stderr so piped stdout stays clean CSV/table.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")?;
+        eprintln!("sweep report -> {path}");
+        Ok(())
+    }
+
+    /// Human-readable table, one row per scenario.
+    pub fn render_table(&self) -> String {
+        let mut t = TextTable::new(&[
+            "scenario",
+            "ch",
+            "term save",
+            "switch save",
+            "ohe",
+            "unenc",
+            "quality",
+            "MB/s",
+        ]);
+        for r in &self.scenarios {
+            t.row(vec![
+                r.label.clone(),
+                format!("{}", r.channels),
+                pct(r.term_savings_pct),
+                pct(r.switch_savings_pct),
+                pct(100.0 * r.outcome_fracs[1]),
+                pct(100.0 * r.outcome_fracs[3]),
+                f(r.quality_ratio, 4),
+                f(r.bytes_per_sec / 1e6, 1),
+            ]);
+        }
+        format!(
+            "sweep {:?}: {} scenarios over {} B (savings vs {} at equal channel count)\n{}",
+            self.name,
+            self.scenarios.len(),
+            self.trace_bytes,
+            self.baseline,
+            t.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SweepReport {
+        SweepReport {
+            name: "unit".into(),
+            trace_bytes: 4096,
+            baseline: "BDE".into(),
+            scenarios: vec![ScenarioResult {
+                label: "ZAC(L80,T0,O0)@2ch".into(),
+                scheme: "OHE".into(),
+                channels: 2,
+                limit: 80,
+                truncation_bits: 0,
+                tolerance_bits: 0,
+                counts: EnergyCounts {
+                    termination_ones: 100,
+                    switching_transitions: 50,
+                    transfers: 512,
+                },
+                term_savings_pct: 12.5,
+                switch_savings_pct: 3.25,
+                outcome_fracs: [0.1, 0.4, 0.3, 0.2],
+                quality_ratio: 0.998,
+                psnr_db: Some(41.5),
+                wall_ms: 1.25,
+                bytes_per_sec: 3.2e6,
+                shard_lines: vec![32, 32],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_and_carries_fields() {
+        let rpt = sample();
+        let j = Json::parse(&rpt.to_json().to_string()).unwrap();
+        assert_eq!(j.get("baseline").unwrap().as_str().unwrap(), "BDE");
+        let sc = &j.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("channels").unwrap().as_usize().unwrap(), 2);
+        assert!((sc.get("term_savings_pct").unwrap().as_f64().unwrap() - 12.5).abs() < 1e-12);
+        assert_eq!(
+            sc.get("shard_lines").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn exact_scenario_serializes_psnr_as_null() {
+        let mut rpt = sample();
+        rpt.scenarios[0].psnr_db = None;
+        let j = Json::parse(&rpt.to_json().to_string()).unwrap();
+        let sc = &j.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("psnr_db").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn table_renders_each_scenario() {
+        let out = sample().render_table();
+        assert!(out.contains("ZAC(L80,T0,O0)@2ch"), "{out}");
+        assert!(out.contains("term save"), "{out}");
+    }
+
+    #[test]
+    fn fraction_accessor_follows_outcome_order() {
+        let r = &sample().scenarios[0];
+        assert_eq!(r.fraction(Outcome::ZeroSkip), 0.1);
+        assert_eq!(r.fraction(Outcome::Raw), 0.2);
+    }
+}

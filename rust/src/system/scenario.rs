@@ -1,0 +1,464 @@
+//! Declarative sweep engine: a (channels × scheme × knob-grid) spec,
+//! expanded into concrete scenarios and fanned out over the
+//! [`ChannelArray`]. The spec is a TOML subset (parsed with
+//! [`toml_lite`](crate::util::toml_lite)):
+//!
+//! ```toml
+//! name = "smoke"
+//! seed = 42
+//! bytes = 262144
+//! approx = true
+//!
+//! [grid]
+//! channels = [1, 2]
+//! schemes = ["BDE", "OHE"]
+//! limits = [90, 80, 75]
+//! truncations = [0]
+//! tolerances = [0]
+//! baseline = "BDE"
+//! ```
+//!
+//! Non-ZAC schemes contribute one scenario per channel count; the ZAC
+//! scheme takes the full limits × truncations × tolerances grid. Every
+//! scenario's savings are measured against the baseline scheme run at
+//! the *same* channel count (sharding changes per-table history, so the
+//! baseline must shard identically to be comparable).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::encoding::{Outcome, Scheme, ZacConfig};
+use crate::quality::psnr_u8;
+use crate::system::array::ChannelArray;
+use crate::system::report::{ScenarioResult, SweepReport};
+use crate::trace::bytes_to_chip_words;
+use crate::util::toml_lite;
+
+/// A declarative sweep: the grid axes plus trace parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Synthetic-trace seed.
+    pub seed: u64,
+    /// Synthetic-trace size in bytes (callers may substitute their own
+    /// trace in [`run_sweep`]; this sizes the default one).
+    pub bytes: usize,
+    /// Mark the stream error-resilient.
+    pub approx: bool,
+    /// Channel counts to shard across.
+    pub channels: Vec<usize>,
+    /// Schemes to evaluate.
+    pub schemes: Vec<Scheme>,
+    /// ZAC similarity limits (%).
+    pub limits: Vec<u32>,
+    /// ZAC truncation knob values (bits per 8-bit chunk).
+    pub truncations: Vec<u32>,
+    /// ZAC tolerance knob values (bits per 8-bit chunk).
+    pub tolerances: Vec<u32>,
+    /// Savings reference scheme.
+    pub baseline: Scheme,
+}
+
+impl Default for SweepSpec {
+    /// The built-in smoke grid: {1, 2} channels × (BDE + ZAC at three
+    /// limits) = 8 scenarios.
+    fn default() -> Self {
+        SweepSpec {
+            name: "default-grid".into(),
+            seed: 42,
+            bytes: 1 << 18,
+            approx: true,
+            channels: vec![1, 2],
+            schemes: vec![Scheme::Bde, Scheme::ZacDest],
+            limits: vec![90, 80, 75],
+            truncations: vec![0],
+            tolerances: vec![0],
+            baseline: Scheme::Bde,
+        }
+    }
+}
+
+/// One concrete cell of the sweep grid.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub channels: usize,
+    pub cfg: ZacConfig,
+}
+
+impl Scenario {
+    pub fn label(&self) -> String {
+        format!("{}@{}ch", self.cfg.label(), self.channels)
+    }
+}
+
+impl SweepSpec {
+    /// Parse a spec file; unknown keys are rejected to catch typos.
+    pub fn from_toml(text: &str) -> anyhow::Result<SweepSpec> {
+        let doc = toml_lite::parse(text)?;
+        let mut spec = SweepSpec::default();
+        for (k, v) in doc.as_obj()? {
+            match k.as_str() {
+                "name" => spec.name = v.as_str()?.to_string(),
+                "seed" => spec.seed = parse_seed(v)?,
+                "bytes" => spec.bytes = v.as_usize()?,
+                "approx" => match v {
+                    crate::util::json_lite::Json::Bool(b) => spec.approx = *b,
+                    other => anyhow::bail!("approx must be true/false, got {other:?}"),
+                },
+                "grid" => {
+                    for (gk, gv) in v.as_obj()? {
+                        match gk.as_str() {
+                            "channels" => {
+                                spec.channels = gv
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| x.as_usize())
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
+                            "schemes" => {
+                                spec.schemes = gv
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| {
+                                        let name = x.as_str()?;
+                                        Scheme::parse(name).ok_or_else(|| {
+                                            anyhow::anyhow!("unknown scheme {name:?}")
+                                        })
+                                    })
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
+                            "limits" => spec.limits = parse_u32_list(gv)?,
+                            "truncations" => spec.truncations = parse_u32_list(gv)?,
+                            "tolerances" => spec.tolerances = parse_u32_list(gv)?,
+                            "baseline" => {
+                                let name = gv.as_str()?;
+                                spec.baseline = Scheme::parse(name)
+                                    .ok_or_else(|| anyhow::anyhow!("unknown baseline {name:?}"))?;
+                            }
+                            other => anyhow::bail!("unknown [grid] key {other:?}"),
+                        }
+                    }
+                }
+                other => anyhow::bail!("unknown top-level key {other:?}"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Basic axis sanity (per-cell knob validity is checked when the
+    /// grid expands).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.channels.is_empty(), "empty channels axis");
+        anyhow::ensure!(
+            self.channels.iter().all(|&c| (1..=64).contains(&c)),
+            "channel counts must be in 1..=64, got {:?}",
+            self.channels
+        );
+        anyhow::ensure!(!self.schemes.is_empty(), "empty schemes axis");
+        if self.schemes.contains(&Scheme::ZacDest) {
+            anyhow::ensure!(!self.limits.is_empty(), "ZAC in grid but no limits");
+            anyhow::ensure!(!self.truncations.is_empty(), "ZAC in grid but no truncations");
+            anyhow::ensure!(!self.tolerances.is_empty(), "ZAC in grid but no tolerances");
+        }
+        Ok(())
+    }
+
+    /// Expand the grid into concrete, validated scenarios.
+    pub fn scenarios(&self) -> anyhow::Result<Vec<Scenario>> {
+        self.validate()?;
+        let mut out = Vec::new();
+        for &channels in &self.channels {
+            for &scheme in &self.schemes {
+                if scheme == Scheme::ZacDest {
+                    for &limit in &self.limits {
+                        for &trunc in &self.truncations {
+                            for &tol in &self.tolerances {
+                                let cfg = ZacConfig::zac_full(limit, trunc, tol);
+                                cfg.validate()?;
+                                out.push(Scenario { channels, cfg });
+                            }
+                        }
+                    }
+                } else {
+                    out.push(Scenario {
+                        channels,
+                        cfg: ZacConfig::scheme(scheme),
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Seeds ride through `toml_lite` as f64, which is exact only below
+/// 2^53 — reject anything that would silently round to a different
+/// (irreproducible) seed.
+fn parse_seed(v: &crate::util::json_lite::Json) -> anyhow::Result<u64> {
+    let x = v.as_f64()?;
+    anyhow::ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0,
+        "seed must be a non-negative integer <= 2^53, got {x}"
+    );
+    Ok(x as u64)
+}
+
+fn parse_u32_list(v: &crate::util::json_lite::Json) -> anyhow::Result<Vec<u32>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_usize()? as u32))
+        .collect()
+}
+
+/// Parse a comma-separated channel list, e.g. `"1,2,4"`.
+pub fn parse_channel_list(text: &str) -> anyhow::Result<Vec<usize>> {
+    let list: Vec<usize> = text
+        .split(',')
+        .map(|p| {
+            let p = p.trim();
+            p.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad channel count {p:?}: {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!list.is_empty(), "empty channel list");
+    anyhow::ensure!(
+        list.iter().all(|&c| (1..=64).contains(&c)),
+        "channel counts must be in 1..=64, got {list:?}"
+    );
+    Ok(list)
+}
+
+/// The `ZAC_CHANNELS` override (comma-separated shard counts), shared by
+/// `zac-dest sweep` and the e2e example. `Ok(None)` when unset; a set
+/// but malformed value is an error (a typo must not silently fall back
+/// to the defaults).
+pub fn channels_from_env() -> anyhow::Result<Option<Vec<usize>>> {
+    match std::env::var("ZAC_CHANNELS") {
+        Err(_) => Ok(None),
+        Ok(v) => parse_channel_list(&v)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("ZAC_CHANNELS: {e}")),
+    }
+}
+
+/// The standard image-like synthetic trace (slowly varying byte walk)
+/// used by the CLI, benches and CI smokes.
+pub fn synthetic_trace(n: usize, seed: u64) -> Vec<u8> {
+    let mut r = crate::util::rng::Rng::new(seed);
+    let mut v = 128i32;
+    (0..n)
+        .map(|_| {
+            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
+            v as u8
+        })
+        .collect()
+}
+
+/// Run every scenario of the grid over `trace`, measuring energy savings
+/// against the baseline scheme at the same channel count plus the
+/// trace-level quality of the reconstructed stream.
+pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> {
+    let scenarios = spec.scenarios()?;
+    let lines = bytes_to_chip_words(trace);
+
+    // One baseline run per channel count: sharding splits the table
+    // history, so the fair baseline shards the same way. The full
+    // output (+ wall time) is kept so a grid scenario that IS the
+    // baseline config reuses it instead of simulating twice.
+    let mut baselines: BTreeMap<usize, (crate::system::array::SystemOutput, f64)> =
+        BTreeMap::new();
+    let base_cfg = ZacConfig::scheme(spec.baseline);
+    for &c in &spec.channels {
+        baselines.entry(c).or_insert_with(|| {
+            let t0 = Instant::now();
+            let out = ChannelArray::run(&base_cfg, c, &lines, spec.approx, trace.len());
+            (out, t0.elapsed().as_secs_f64())
+        });
+    }
+
+    let mut results = Vec::with_capacity(scenarios.len());
+    for sc in &scenarios {
+        let (out, wall) = if sc.cfg == base_cfg {
+            let (o, w) = &baselines[&sc.channels];
+            (o.clone(), *w)
+        } else {
+            let t0 = Instant::now();
+            let o = ChannelArray::run(&sc.cfg, sc.channels, &lines, spec.approx, trace.len());
+            (o, t0.elapsed().as_secs_f64())
+        };
+        let base = &baselines[&sc.channels].0.counts;
+        let mae = if trace.is_empty() {
+            0.0
+        } else {
+            trace
+                .iter()
+                .zip(&out.bytes)
+                .map(|(&a, &b)| (a as f64 - b as f64).abs())
+                .sum::<f64>()
+                / trace.len() as f64
+        };
+        let psnr = psnr_u8(trace, &out.bytes);
+        let fracs = Outcome::all().map(|o| out.stats.fraction(o));
+        let (limit, trunc, tol) = match sc.cfg.scheme {
+            Scheme::ZacDest => (
+                sc.cfg.similarity_limit_pct,
+                sc.cfg.truncation_bits,
+                sc.cfg.tolerance_bits,
+            ),
+            _ => (0, 0, 0),
+        };
+        results.push(ScenarioResult {
+            label: sc.label(),
+            scheme: sc.cfg.scheme.label().to_string(),
+            channels: sc.channels,
+            limit,
+            truncation_bits: trunc,
+            tolerance_bits: tol,
+            counts: out.counts,
+            term_savings_pct: out.counts.termination_savings_vs(base),
+            switch_savings_pct: out.counts.switching_savings_vs(base),
+            outcome_fracs: fracs,
+            quality_ratio: 1.0 - mae / 255.0,
+            psnr_db: psnr.is_finite().then_some(psnr),
+            wall_ms: wall * 1e3,
+            bytes_per_sec: if wall > 0.0 {
+                trace.len() as f64 / wall
+            } else {
+                0.0
+            },
+            shard_lines: out.shards.iter().map(|s| s.lines).collect(),
+        });
+    }
+    Ok(SweepReport {
+        name: spec.name.clone(),
+        trace_bytes: trace.len(),
+        baseline: spec.baseline.label().to_string(),
+        scenarios: results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_has_at_least_six_scenarios() {
+        let spec = SweepSpec::default();
+        let sc = spec.scenarios().unwrap();
+        assert!(sc.len() >= 6, "only {} scenarios", sc.len());
+        // Every channel count × every scheme is represented.
+        for &c in &spec.channels {
+            assert!(sc.iter().any(|x| x.channels == c && x.cfg.scheme == Scheme::Bde));
+            assert!(sc.iter().any(|x| x.channels == c && x.cfg.scheme == Scheme::ZacDest));
+        }
+    }
+
+    #[test]
+    fn spec_parses_from_toml() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            name = "ci-smoke"
+            seed = 7
+            bytes = 65536
+            approx = true
+            [grid]
+            channels = [1, 2, 4]
+            schemes = ["ORG", "OHE"]
+            limits = [80]
+            truncations = [0, 1]
+            tolerances = [0]
+            baseline = "ORG"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "ci-smoke");
+        assert_eq!(spec.channels, vec![1, 2, 4]);
+        assert_eq!(spec.baseline, Scheme::Org);
+        // 3 channels × (ORG + ZAC 1×2×1) = 9 scenarios.
+        assert_eq!(spec.scenarios().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_keys_and_bad_axes() {
+        assert!(SweepSpec::from_toml("bogus = 1\n").is_err());
+        assert!(SweepSpec::from_toml("[grid]\nwat = [1]\n").is_err());
+        assert!(SweepSpec::from_toml("[grid]\nschemes = [\"NOPE\"]\n").is_err());
+        assert!(SweepSpec::from_toml("[grid]\nchannels = [0]\n").is_err());
+        let mut spec = SweepSpec::default();
+        spec.limits.clear();
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn channel_list_parsing() {
+        assert_eq!(parse_channel_list("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_channel_list(" 2 ").unwrap(), vec![2]);
+        assert!(parse_channel_list("0").is_err());
+        assert!(parse_channel_list("a,b").is_err());
+        assert!(parse_channel_list("").is_err());
+    }
+
+    #[test]
+    fn sweep_runs_end_to_end_and_writes_json() {
+        let mut spec = SweepSpec::default();
+        spec.bytes = 8192;
+        let trace = synthetic_trace(spec.bytes, spec.seed);
+        let report = run_sweep(&spec, &trace).unwrap();
+        assert!(report.scenarios.len() >= 6);
+        // Baseline scenario at its own channel count saves ~0% vs itself.
+        let bde = report
+            .scenarios
+            .iter()
+            .find(|r| r.scheme == "BDE" && r.channels == 1)
+            .unwrap();
+        assert!(bde.term_savings_pct.abs() < 1e-9);
+        assert_eq!(bde.quality_ratio, 1.0);
+        assert!(bde.psnr_db.is_none());
+        // Every scenario covers the whole trace.
+        for r in &report.scenarios {
+            assert_eq!(
+                r.shard_lines.iter().sum::<usize>(),
+                trace.len() / 64,
+                "{}",
+                r.label
+            );
+            assert_eq!(r.counts.transfers, (trace.len() / 64 * 8) as u64);
+        }
+        let path = std::env::temp_dir().join("zac_sweep_test.json");
+        let path = path.to_str().unwrap();
+        report.write_json(path).unwrap();
+        let parsed =
+            crate::util::json_lite::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(
+            parsed.get("scenarios").unwrap().as_arr().unwrap().len(),
+            report.scenarios.len()
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn zac_beats_baseline_on_image_like_trace() {
+        let mut spec = SweepSpec::default();
+        spec.bytes = 65536;
+        spec.channels = vec![2];
+        let trace = synthetic_trace(spec.bytes, 7);
+        let report = run_sweep(&spec, &trace).unwrap();
+        let zac = report
+            .scenarios
+            .iter()
+            .find(|r| r.scheme == "OHE" && r.limit == 75)
+            .unwrap();
+        assert!(
+            zac.term_savings_pct > 0.0,
+            "ZAC L75 should save termination energy vs BDE, got {}",
+            zac.term_savings_pct
+        );
+    }
+}

@@ -22,6 +22,8 @@ pub struct Command {
     opts: Vec<OptSpec>,
     positionals: Vec<(&'static str, &'static str)>,
     subs: Vec<Command>,
+    /// Environment variables the command honors (documented in help).
+    envs: Vec<(&'static str, &'static str)>,
 }
 
 /// Parsed arguments.
@@ -117,6 +119,13 @@ impl Command {
         self
     }
 
+    /// Document an environment variable the command reads (rendered as
+    /// an ENVIRONMENT help section; not parsed from argv).
+    pub fn env(mut self, name: &'static str, help: &'static str) -> Self {
+        self.envs.push((name, help));
+        self
+    }
+
     /// Render `--help`.
     pub fn help(&self) -> String {
         let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
@@ -144,6 +153,12 @@ impl Command {
                     " <v> (required)".to_string()
                 };
                 out.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, kind));
+            }
+        }
+        if !self.envs.is_empty() {
+            out.push_str("\nENVIRONMENT:\n");
+            for (n, h) in &self.envs {
+                out.push_str(&format!("  {n:<24} {h}\n"));
             }
         }
         if !self.subs.is_empty() {
@@ -268,5 +283,18 @@ mod tests {
         let h = app().help();
         assert!(h.contains("SUBCOMMANDS"));
         assert!(h.contains("figure"));
+    }
+
+    #[test]
+    fn env_vars_render_in_help() {
+        let c = Command::new("x", "env demo")
+            .env("ZAC_CHANNELS", "channel counts")
+            .env("ZAC_BENCH_BYTES", "trace size");
+        let h = c.help();
+        assert!(h.contains("ENVIRONMENT"), "{h}");
+        assert!(h.contains("ZAC_CHANNELS"), "{h}");
+        assert!(h.contains("ZAC_BENCH_BYTES"), "{h}");
+        // Commands without env docs keep the section out of help.
+        assert!(!app().help().contains("ENVIRONMENT"));
     }
 }

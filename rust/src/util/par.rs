@@ -1,6 +1,27 @@
 //! Scoped-thread fan-out helpers (offline stand-in for `rayon`).
 
 use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// Join every handle, collecting results in order; if any worker
+/// panicked, every other worker is still joined (drained) first, then
+/// the first panic payload is re-raised. Callers — the streaming
+/// `Pipeline` and the `system::ChannelArray` — thus neither leak
+/// sibling threads nor mask the root cause behind a generic join error.
+pub fn join_all_reraise<T>(workers: Vec<JoinHandle<T>>) -> Vec<T> {
+    let mut results = Vec::with_capacity(workers.len());
+    let mut panicked = None;
+    for w in workers {
+        match w.join() {
+            Ok(r) => results.push(r),
+            Err(p) => panicked = panicked.or(Some(p)),
+        }
+    }
+    if let Some(p) = panicked {
+        std::panic::resume_unwind(p);
+    }
+    results
+}
 
 /// Map `f` over `items` on up to `threads` OS threads, preserving order.
 ///
@@ -79,6 +100,30 @@ mod tests {
             let out = par_map((0..n as i32).collect::<Vec<_>>(), 8, |x| x + 1);
             assert_eq!(out, (1..=n as i32).collect::<Vec<_>>(), "n={n}");
         }
+    }
+
+    #[test]
+    fn join_all_reraise_drains_siblings_then_reraises_original_payload() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        // Happy path: results in handle order.
+        let hs = vec![std::thread::spawn(|| 1), std::thread::spawn(|| 2)];
+        assert_eq!(join_all_reraise(hs), vec![1, 2]);
+        // Panic path: the sibling still runs to completion (drained) and
+        // the original payload — not a generic join error — is re-raised.
+        let sibling_ran = Arc::new(AtomicBool::new(false));
+        let flag = sibling_ran.clone();
+        let dying = std::thread::spawn(|| -> i32 { panic!("boom") });
+        let healthy = std::thread::spawn(move || {
+            flag.store(true, Ordering::SeqCst);
+            2
+        });
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            join_all_reraise(vec![dying, healthy])
+        }));
+        let payload = caught.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        assert!(sibling_ran.load(Ordering::SeqCst));
     }
 
     #[test]

@@ -2,10 +2,11 @@
 //! reconstruction, property-based invariants over random configs, and
 //! the energy-figure pipelines.
 
-use zac_dest::channel::CHIPS;
-use zac_dest::coordinator::{simulate_bytes, simulate_f32s, Pipeline};
-use zac_dest::encoding::{Outcome, Scheme, ZacConfig};
-use zac_dest::trace::{bytes_to_chip_words, hex};
+use zac_dest::channel::{EnergyCounts, CHIPS};
+use zac_dest::coordinator::{simulate_bytes, simulate_f32s, simulate_lines, Pipeline};
+use zac_dest::encoding::{EncodeStats, Outcome, Scheme, ZacConfig};
+use zac_dest::system::ChannelArray;
+use zac_dest::trace::{bytes_to_chip_words, chip_words_to_bytes, hex, ChipWords};
 use zac_dest::util::prop;
 use zac_dest::util::rng::Rng;
 
@@ -212,6 +213,99 @@ fn streaming_pipeline_equals_batch_for_every_scheme() {
         let streamed = p.finish(bytes.len());
         assert_eq!(streamed.bytes, batch.bytes, "{scheme:?}");
         assert_eq!(streamed.counts, batch.counts, "{scheme:?}");
+    }
+}
+
+#[test]
+fn prop_channel_array_bit_identical_to_single_channel_reference() {
+    // Each shard of the array owns its own tables + line state, so for
+    // shard counts 1/2/4 the array must be bit-identical — merged stats,
+    // merged energy counts AND decoded bytes — to independent
+    // single-channel `simulate_lines` runs over the round-robin
+    // interleaved subsequences. With 1 shard the reference IS the plain
+    // whole-trace single-channel path.
+    prop::check(
+        "channel array ≡ interleaved single-channel reference",
+        104,
+        |r| {
+            let nlines = r.range(1, 48);
+            let shards = [1u64, 2, 4][r.range(0, 3)];
+            let limit = [90u64, 80, 75, 70][r.range(0, 4)];
+            vec![nlines as u64, shards, limit, r.next_u64()]
+        },
+        |v| {
+            let nlines = (v[0] as usize).clamp(1, 64);
+            let shards = (v[1] as usize).clamp(1, 8);
+            let limit = (v[2] as u32).clamp(50, 100);
+            let bytes = image_like(nlines * 64, v[3]);
+            let lines = bytes_to_chip_words(&bytes);
+            let cfg = ZacConfig::zac(limit);
+            let out = ChannelArray::run(&cfg, shards, &lines, true, bytes.len());
+
+            let mut counts = EnergyCounts::default();
+            let mut stats = EncodeStats::default();
+            let mut ref_lines: Vec<ChipWords> = vec![[0u64; CHIPS]; lines.len()];
+            for s in 0..shards {
+                let sub: Vec<ChipWords> = lines.iter().skip(s).step_by(shards).copied().collect();
+                let r = simulate_lines(&cfg, &sub, true, sub.len() * 64);
+                counts.merge(&r.counts);
+                stats.merge(&r.stats);
+                for (i, l) in bytes_to_chip_words(&r.bytes).iter().enumerate() {
+                    ref_lines[i * shards + s] = *l;
+                }
+            }
+            if out.counts != counts {
+                return Err(format!(
+                    "energy counts diverge at {shards} shards: {:?} vs {:?}",
+                    out.counts, counts
+                ));
+            }
+            if out.stats != stats {
+                return Err(format!(
+                    "encode stats diverge at {shards} shards: {:?} vs {:?}",
+                    out.stats, stats
+                ));
+            }
+            let ref_bytes = chip_words_to_bytes(&ref_lines, bytes.len());
+            if out.bytes != ref_bytes {
+                return Err(format!("decoded bytes diverge at {shards} shards"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn channel_array_single_shard_equals_whole_trace_reference_for_every_scheme() {
+    let bytes = image_like(16384, 14);
+    let lines = bytes_to_chip_words(&bytes);
+    for scheme in Scheme::all() {
+        let cfg = if scheme == Scheme::ZacDest {
+            ZacConfig::zac(75)
+        } else {
+            ZacConfig::scheme(scheme)
+        };
+        let reference = simulate_bytes(&cfg, &bytes, true);
+        let out = ChannelArray::run(&cfg, 1, &lines, true, bytes.len());
+        assert_eq!(out.bytes, reference.bytes, "{scheme:?}");
+        assert_eq!(out.counts, reference.counts, "{scheme:?}");
+        assert_eq!(out.stats, reference.stats, "{scheme:?}");
+    }
+}
+
+#[test]
+fn sweep_engine_grid_runs_end_to_end() {
+    use zac_dest::system::{run_sweep, synthetic_trace, SweepSpec};
+    let mut spec = SweepSpec::default();
+    spec.bytes = 16384;
+    spec.channels = vec![1, 2];
+    let trace = synthetic_trace(spec.bytes, spec.seed);
+    let report = run_sweep(&spec, &trace).unwrap();
+    assert!(report.scenarios.len() >= 6, "{}", report.scenarios.len());
+    assert!(report.render_table().contains("term save"));
+    // Exact baseline scenarios reconstruct the trace bit-exactly.
+    for r in report.scenarios.iter().filter(|r| r.scheme == "BDE") {
+        assert_eq!(r.quality_ratio, 1.0, "{}", r.label);
     }
 }
 
