@@ -14,10 +14,10 @@
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_pipeline`
 
-use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::encoding::CodecSpec;
 use zac_dest::runtime::Runtime;
-use zac_dest::system::{channels_from_env, ChannelArray};
-use zac_dest::trace::bytes_to_chip_words;
+use zac_dest::session::{Session, Trace, TrafficClass};
+use zac_dest::system::channels_from_env;
 use zac_dest::util::table::{f, pct, TextTable};
 use zac_dest::workloads::{cnn, Kind, Suite, SuiteBudget};
 
@@ -43,13 +43,14 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Phase 2: stream the test-image trace through the sharded
     // channel array (round-robin address interleaving, one service-loop
-    // worker per channel behind a bounded chunk mailbox).
-    let cfg = ZacConfig::zac(80);
+    // worker per channel behind a bounded chunk mailbox) — all behind
+    // one `Session` run.
+    let spec = CodecSpec::zac(80);
     let mut bytes = Vec::new();
     for img in &suite.test_images {
         bytes.extend_from_slice(&img.data);
     }
-    let lines = bytes_to_chip_words(&bytes);
+    let trace = Trace::from_bytes(bytes);
     let channels = match channels_from_env()? {
         Some(list) => {
             if list.len() > 1 {
@@ -62,21 +63,23 @@ fn main() -> anyhow::Result<()> {
         }
         None => 2,
     };
+    let session = Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .traffic(TrafficClass::Approximate)
+        .capacity_lines(64)
+        .build()?;
     let ts = std::time::Instant::now();
-    let mut array = ChannelArray::new(&cfg, channels, 64);
-    for l in &lines {
-        array.push_line(*l, true);
-    }
-    let streamed = array.finish(bytes.len());
+    let streamed = session.run(&trace)?;
     eprintln!(
         "[e2e] streamed {} cache lines across {} channel(s) in {:.1} ms \
          ({:.1} MB/s)",
-        lines.len(),
+        trace.line_count(),
         channels,
         ts.elapsed().as_secs_f64() * 1e3,
-        bytes.len() as f64 / ts.elapsed().as_secs_f64() / 1e6,
+        trace.byte_len() as f64 / ts.elapsed().as_secs_f64() / 1e6,
     );
-    println!("\n{}", streamed.report());
+    println!("\n{}", streamed.render());
 
     // ---- Phase 3: the headline table — ZAC-DEST L80 vs BDE across all
     // five workloads: energy savings + output quality.
@@ -94,16 +97,19 @@ fn main() -> anyhow::Result<()> {
     let mut mean_sw = 0.0;
     let mut mean_q = 0.0;
     for kind in Kind::all() {
-        let r = suite.eval(&cfg, kind)?;
+        let r = suite.eval(&spec, kind)?;
         // BDE baseline on the same trace for the savings columns.
-        let trace: Vec<u8> = match kind {
-            Kind::ImageNet | Kind::ResNet => bytes.clone(),
+        let kind_bytes: Vec<u8> = match kind {
+            Kind::ImageNet | Kind::ResNet => trace.bytes().to_vec(),
             Kind::Quant => suite.kodak.iter().flat_map(|i| i.data.clone()).collect(),
             Kind::Eigen => suite.faces_test.iter().flat_map(|i| i.data.clone()).collect(),
             Kind::Svm => suite.fmnist_test.iter().flat_map(|i| i.data.clone()).collect(),
         };
-        let base =
-            zac_dest::coordinator::simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &trace, true);
+        let base = Session::builder()
+            .codec(CodecSpec::named("BDE"))
+            .traffic(TrafficClass::Approximate)
+            .build()?
+            .run(&Trace::from_bytes(kind_bytes))?;
         let term = r.run.counts.termination_savings_vs(&base.counts);
         let sw = r.run.counts.switching_savings_vs(&base.counts);
         mean_term += term / 5.0;
@@ -133,7 +139,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Phase 4: short training run ON RECONSTRUCTED data, logging
     // the loss curve (the paper's train-with-ZAC-DEST result).
     eprintln!("[e2e] training on ZAC-DEST-reconstructed images, logging loss ...");
-    let (recon_train, _) = suite.reconstruct_images(&cfg, &suite.train_images);
+    let (recon_train, _) = suite.reconstruct_images(&spec, &suite.train_images)?;
     let steps = suite.budget.train_steps;
     let (params, losses) = cnn::train(&suite.rt, &recon_train, steps, suite.budget.lr, seed ^ 0xE2E)?;
     println!("loss curve (train on reconstructed, {} steps):", losses.len());
@@ -141,7 +147,7 @@ fn main() -> anyhow::Result<()> {
         let mean = chunk.iter().sum::<f32>() / chunk.len() as f32;
         println!("  steps {:>3}..{:>3}  mean loss {:.4}", i * chunk.len(), i * chunk.len() + chunk.len(), mean);
     }
-    let (recon_test, _) = suite.reconstruct_images(&cfg, &suite.test_images);
+    let (recon_test, _) = suite.reconstruct_images(&spec, &suite.test_images)?;
     let acc = cnn::accuracy(&suite.rt, &params, &recon_test)?;
     println!(
         "\ntrained-on-reconstructed accuracy on reconstructed test: {:.3} \

@@ -4,7 +4,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example imagenet_inference`
 
-use zac_dest::encoding::ZacConfig;
+use zac_dest::encoding::CodecSpec;
 use zac_dest::runtime::Runtime;
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
 
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nlimit  quality  approx-top1  term-1s  ohe-skip%");
     for limit in [90u32, 80, 75, 70] {
-        let r = suite.eval(&ZacConfig::zac(limit), Kind::ImageNet)?;
+        let r = suite.eval(&CodecSpec::zac(limit), Kind::ImageNet)?;
         println!(
             "L{limit:<4}  {:>6.3}  {:>10.3}  {:>8}  {:>7.1}",
             r.quality,

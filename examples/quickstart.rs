@@ -1,13 +1,14 @@
-//! Quickstart: encode a data stream with ZAC-DEST, compare the energy
-//! against the exact BD-Coder baseline, and inspect the approximation.
+//! Quickstart: encode a data stream with ZAC-DEST through the v2
+//! `Session` API, compare the energy against the exact BD-Coder
+//! baseline, and inspect the approximation.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use zac_dest::coordinator::simulate_bytes;
-use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::encoding::CodecSpec;
+use zac_dest::session::{Session, Trace, TrafficClass};
 use zac_dest::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // An image-like byte stream (slowly varying values — the data
     // similarity ZAC-DEST exploits).
     let mut r = Rng::new(1);
@@ -18,16 +19,32 @@ fn main() {
             v as u8
         })
         .collect();
+    let trace = Trace::from_bytes(bytes);
 
-    // Exact baseline: the paper's modified BD-Coder.
-    let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
-    assert_eq!(bde.bytes, bytes, "exact schemes are lossless");
+    // Exact baseline: the paper's modified BD-Coder. The codec comes
+    // from the open registry ("BDE" is its Table I name), and the
+    // stream is marked error-resilient — the default TrafficClass is
+    // Critical, which never approximates.
+    let bde = Session::builder()
+        .codec(CodecSpec::named("BDE"))
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .run(&trace)?;
+    assert_eq!(bde.bytes, trace.bytes(), "exact schemes are lossless");
 
     // ZAC-DEST at an 80% similarity limit: approximate, much cheaper.
-    let cfg = ZacConfig::zac(80);
-    let zac = simulate_bytes(&cfg, &bytes, true);
+    let spec = CodecSpec::zac(80);
+    let zac = Session::builder()
+        .codec(spec.clone())
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .run(&trace)?;
 
-    println!("stream: {} bytes ({} cache lines)\n", bytes.len(), bytes.len() / 64);
+    println!(
+        "stream: {} bytes ({} cache lines)\n",
+        trace.byte_len(),
+        trace.line_count()
+    );
     println!(
         "BDE  (exact)  : termination 1s {:>9}  switching {:>9}",
         bde.counts.termination_ones, bde.counts.switching_transitions
@@ -46,10 +63,10 @@ fn main() {
     // envelope: every 64-bit *chip word* differs by < 13 bits (80% of
     // 64). Note the envelope is per chip word — the channel interleaves
     // bytes across chips, so we must compare in chip-word space.
-    let thr = cfg.dissimilar_threshold();
-    let orig_words = zac_dest::trace::bytes_to_chip_words(&bytes);
+    let thr = spec.zac_knobs().expect("zac spec").dissimilar_threshold();
     let recon_words = zac_dest::trace::bytes_to_chip_words(&zac.bytes);
-    let max_diff = orig_words
+    let max_diff = trace
+        .lines()
         .iter()
         .zip(&recon_words)
         .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()))
@@ -63,4 +80,5 @@ fn main() {
     for o in zac_dest::encoding::Outcome::all() {
         println!("  {:<10} {:>6.1}%", o.label(), 100.0 * zac.stats.fraction(o));
     }
+    Ok(())
 }

@@ -5,7 +5,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example train_with_zacdest`
 
-use zac_dest::encoding::ZacConfig;
+use zac_dest::encoding::CodecSpec;
 use zac_dest::runtime::Runtime;
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
 
@@ -16,10 +16,10 @@ fn main() -> anyhow::Result<()> {
     println!("clean test accuracy: {:.3}\n", suite.resnet_clean_acc);
     println!("config      trained-on-clean  trained-on-recon  improvement");
     for (limit, trunc) in [(80u32, 0u32), (70, 0), (70, 2)] {
-        let cfg = ZacConfig::zac_full(limit, trunc, 0);
-        let base = suite.eval(&cfg, Kind::ResNet)?;
+        let spec = CodecSpec::zac_full(limit, trunc, 0);
+        let base = suite.eval(&spec, Kind::ResNet)?;
         eprintln!("retraining on reconstructed images (L{limit} T{}) ...", trunc * 8);
-        let retrained = suite.resnet_trained_on_recon(&cfg)?;
+        let retrained = suite.resnet_trained_on_recon(&spec)?;
         let imp = if base.quality > 0.0 {
             retrained.quality / base.quality
         } else {

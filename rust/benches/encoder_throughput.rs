@@ -1,12 +1,14 @@
 //! Encoder throughput per scheme (the cost side of every paper table):
-//! bytes/s through the full 8-chip encode → wire → decode path.
+//! bytes/s through the full 8-chip encode → wire → decode path, driven
+//! through the v2 `Session` API.
 //!
 //! `ZAC_BENCH_BYTES` overrides the input size (default 1 MiB; CI smoke
 //! runs 64 KiB). Results are printed and persisted to
 //! `BENCH_encoder.json` so the perf trajectory is tracked across PRs.
 
-use zac_dest::coordinator::simulate_bytes;
-use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::encoding::{CodecSpec, Scheme};
+use zac_dest::session::{Session, Trace, TrafficClass};
+use zac_dest::system::bench_bytes_from_env;
 use zac_dest::util::bench::Bencher;
 use zac_dest::util::rng::Rng;
 
@@ -31,39 +33,46 @@ fn size_label(n: usize) -> String {
     }
 }
 
+fn bench_spec(b: &mut Bencher, name: &str, spec: CodecSpec, trace: &Trace) {
+    let session = Session::builder()
+        .codec(spec)
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .expect("valid bench spec");
+    b.bench_with_units(name, trace.byte_len() as u64, "B", || {
+        session.run(trace).expect("bench run")
+    });
+}
+
 fn main() {
     let mut b = Bencher::new();
-    let n: usize = std::env::var("ZAC_BENCH_BYTES")
-        .ok()
-        .and_then(|v| v.parse().ok())
+    let n: usize = bench_bytes_from_env()
+        .expect("ZAC_BENCH_BYTES")
         .unwrap_or(1 << 20);
-    let bytes = image_like(n, 42);
+    let trace = Trace::from_bytes(image_like(n, 42));
     let sz = size_label(n);
     for scheme in Scheme::all() {
-        let cfg = ZacConfig::scheme(scheme);
-        b.bench_with_units(
+        bench_spec(
+            &mut b,
             &format!("simulate_{sz}/{}", scheme.label()),
-            bytes.len() as u64,
-            "B",
-            || simulate_bytes(&cfg, &bytes, true),
+            CodecSpec::named(scheme.label()),
+            &trace,
         );
     }
     for limit in [90u32, 80, 70] {
-        let cfg = ZacConfig::zac(limit);
-        b.bench_with_units(
+        bench_spec(
+            &mut b,
             &format!("simulate_{sz}/ZAC_L{limit}"),
-            bytes.len() as u64,
-            "B",
-            || simulate_bytes(&cfg, &bytes, true),
+            CodecSpec::zac(limit),
+            &trace,
         );
     }
     // Knobbed variant (truncation+tolerance active).
-    let cfg = ZacConfig::zac_full(75, 2, 1);
-    b.bench_with_units(
+    bench_spec(
+        &mut b,
         &format!("simulate_{sz}/ZAC_L75_T16_O8"),
-        bytes.len() as u64,
-        "B",
-        || simulate_bytes(&cfg, &bytes, true),
+        CodecSpec::zac_full(75, 2, 1),
+        &trace,
     );
     b.write_json("BENCH_encoder.json").expect("write BENCH_encoder.json");
 }

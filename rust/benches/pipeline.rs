@@ -2,10 +2,10 @@
 //! coordination, the sharded channel array at 1/2/4 channels, plus the
 //! PJRT inference path (requires artifacts).
 
-use zac_dest::coordinator::{simulate_bytes, Pipeline};
-use zac_dest::encoding::ZacConfig;
+use zac_dest::coordinator::Pipeline;
+use zac_dest::encoding::{CodecSpec, ZacConfig};
 use zac_dest::runtime::{pack_words_i32, Runtime, Tensor};
-use zac_dest::system::ChannelArray;
+use zac_dest::session::{Execution, Session, Trace, TrafficClass};
 use zac_dest::trace::bytes_to_chip_words;
 use zac_dest::util::bench::Bencher;
 use zac_dest::util::rng::Rng;
@@ -21,11 +21,19 @@ fn main() {
         })
         .collect();
     let cfg = ZacConfig::zac(80);
+    let spec = CodecSpec::zac(80);
+    let trace = Trace::from_bytes(bytes.clone());
 
+    let batch = Session::builder()
+        .codec(spec.clone())
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .expect("batch session");
     b.bench_with_units("batch_512KiB", bytes.len() as u64, "B", || {
-        simulate_bytes(&cfg, &bytes, true)
+        batch.run(&trace).expect("batch run")
     });
 
+    // Legacy streaming pipeline (kept as the shim-coverage bench).
     let lines = bytes_to_chip_words(&bytes);
     b.bench_with_units("streaming_512KiB_cap64", bytes.len() as u64, "B", || {
         let mut p = Pipeline::new(&cfg, 64);
@@ -36,13 +44,21 @@ fn main() {
     });
 
     // Multi-channel system layer: round-robin interleave across 1/2/4
-    // independent 8-chip channels, one service-loop worker each.
+    // independent 8-chip channels, one service-loop worker each, via
+    // the sharded Session path.
     for shards in [1usize, 2, 4] {
+        let session = Session::builder()
+            .codec(spec.clone())
+            .channels(shards)
+            .execution(Execution::Sharded)
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .expect("sharded session");
         b.bench_with_units(
             &format!("channel_array_512KiB_x{shards}"),
             bytes.len() as u64,
             "B",
-            || ChannelArray::run(&cfg, shards, &lines, true, bytes.len()),
+            || session.run(&trace).expect("sharded run"),
         );
     }
 

@@ -3,7 +3,9 @@
 //! sweep discussion (§VIII-A).
 
 use zac_dest::channel::ChipChannel;
-use zac_dest::encoding::{make_codec, DataTable, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
+use zac_dest::encoding::{
+    CodecRegistry, CodecSpec, DataTable, EncodeStats, WireWord, ENCODE_BATCH,
+};
 use zac_dest::util::bench::Bencher;
 use zac_dest::util::rng::Rng;
 
@@ -47,21 +49,22 @@ fn main() {
         i = (i + 1) & 63;
         table.most_similar(queries[i])
     });
-    // Full encode+decode step per word.
-    let cfg = ZacConfig::zac(80);
-    let (mut enc, mut dec) = make_codec(&cfg);
+    // Full encode+decode step per word, through a registry-built codec.
+    let registry = CodecRegistry::with_builtins();
+    let spec = CodecSpec::zac(80);
+    let mut codec = registry.build(&spec).expect("builtin codec");
     let mut chan = ChipChannel::new();
     let mut stats = EncodeStats::default();
     let mut i = 0;
     b.bench_with_units("encode_decode_word/ZAC_L80", 1, "word", || {
         i = (i + 1) & 4095;
-        let wire = enc.encode(queries[i], true);
+        let wire = codec.encoder.encode(queries[i], true);
         chan.transmit(&wire);
         stats.record(&wire, queries[i]);
-        dec.decode(&wire)
+        codec.decoder.decode(&wire)
     });
     // Same step through the batch hot path.
-    let (mut enc, mut dec) = make_codec(&cfg);
+    let mut codec = registry.build(&spec).expect("builtin codec");
     let mut chan = ChipChannel::new();
     let mut stats = EncodeStats::default();
     let mut wires = [WireWord::raw(0); ENCODE_BATCH];
@@ -71,11 +74,11 @@ fn main() {
     b.bench_with_units("encode_decode_batch256/ZAC_L80", ENCODE_BATCH as u64, "word", || {
         base = (base + ENCODE_BATCH) & 4095;
         let words = &queries[base..base + ENCODE_BATCH];
-        enc.encode_batch(words, &flags, &mut wires);
+        codec.encoder.encode_batch(words, &flags, &mut wires);
         chan.transmit_batch(&wires);
         stats.record_batch(&wires, words);
         decoded.clear();
-        dec.decode_batch(&wires, &mut decoded);
+        codec.decoder.decode_batch(&wires, &mut decoded);
         decoded.len()
     });
     b.write_json("BENCH_table_search.json").expect("write BENCH_table_search.json");

@@ -1,7 +1,10 @@
 //! Run configuration: a TOML file (or CLI flags) describing the encoder
-//! knobs and workload parameters for one simulation run.
+//! knobs and workload parameters for one simulation run. The `[encoder]`
+//! table feeds the uniform [`CodecSpec::set_knob`] ingestion path, so
+//! TOML, CLI flags and env overrides all apply (and reject) knobs
+//! identically, and `validate()` runs before the config is accepted.
 
-use crate::encoding::{Scheme, ZacConfig};
+use crate::encoding::CodecSpec;
 use crate::util::json_lite::Json;
 use crate::util::toml_lite;
 
@@ -10,7 +13,7 @@ use crate::util::toml_lite;
 pub struct RunConfig {
     pub name: String,
     pub seed: u64,
-    pub encoder: ZacConfig,
+    pub encoder: CodecSpec,
     /// Workloads to run (imagenet / resnet / quant / eigen / svm).
     pub workloads: Vec<String>,
     /// Images per workload evaluation.
@@ -26,7 +29,7 @@ impl Default for RunConfig {
         RunConfig {
             name: "default".into(),
             seed: 42,
-            encoder: ZacConfig::default(),
+            encoder: CodecSpec::named("OHE"),
             workloads: vec![
                 "imagenet".into(),
                 "resnet".into(),
@@ -67,31 +70,43 @@ impl RunConfig {
     }
 }
 
-fn parse_encoder(v: &Json) -> anyhow::Result<ZacConfig> {
-    let mut cfg = ZacConfig::default();
-    for (k, val) in v.as_obj()? {
+fn parse_encoder(v: &Json) -> anyhow::Result<CodecSpec> {
+    let table = v.as_obj()?;
+    // Two passes: the scheme decides which knobs exist, and TOML table
+    // iteration is key-sorted, so resolve the scheme first.
+    let mut spec = match table.get("scheme") {
+        Some(s) => {
+            let name = s.as_str()?;
+            let spec = CodecSpec::named(name);
+            anyhow::ensure!(
+                crate::encoding::default_registry().contains(&spec.scheme),
+                "unknown scheme {name:?}"
+            );
+            spec
+        }
+        None => CodecSpec::named("OHE"),
+    };
+    for (k, val) in table {
         match k.as_str() {
-            "scheme" => {
-                let s = val.as_str()?;
-                cfg.scheme = Scheme::parse(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown scheme {s:?}"))?;
+            "scheme" => {}
+            "similarity_limit" | "chunk_width" | "tolerance" | "truncation" | "table_size" => {
+                // Numbers ride through toml_lite as f64; knobs must be
+                // exact non-negative integers (no silent truncation).
+                let x = val.as_f64()?;
+                anyhow::ensure!(
+                    x >= 0.0 && x.fract() == 0.0,
+                    "[encoder] {k} must be a non-negative integer, got {x}"
+                );
+                spec.set_knob(k, &format!("{}", x as u64))?;
             }
-            "similarity_limit" => cfg.similarity_limit_pct = val.as_f64()? as u32,
-            "chunk_width" => cfg.chunk_width = val.as_f64()? as u32,
-            "tolerance" => cfg.tolerance_bits = val.as_f64()? as u32,
-            "truncation" => cfg.truncation_bits = val.as_f64()? as u32,
-            "table_size" => cfg.table_size = val.as_usize()?,
-            "weights_mode" => {
-                if matches!(val, Json::Bool(true)) {
-                    cfg.chunk_width = 32;
-                    cfg.tolerance_mask_override =
-                        Some(crate::trace::float_layout::weight_tolerance_mask());
-                }
-            }
+            "weights_mode" => match val {
+                Json::Bool(b) => spec.set_knob("weights_mode", if *b { "true" } else { "false" })?,
+                other => anyhow::bail!("weights_mode must be true/false, got {other:?}"),
+            },
             other => anyhow::bail!("unknown [encoder] key {other:?}"),
         }
     }
-    Ok(cfg)
+    Ok(spec)
 }
 
 fn parse_workload(v: &Json, cfg: &mut RunConfig) -> anyhow::Result<()> {
@@ -138,8 +153,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.name, "fig15-cell");
-        assert_eq!(cfg.encoder.similarity_limit_pct, 75);
-        assert_eq!(cfg.encoder.truncation_bits, 2);
+        let knobs = cfg.encoder.zac_knobs().unwrap();
+        assert_eq!(knobs.similarity_limit_pct, 75);
+        assert_eq!(knobs.truncation_bits, 2);
         assert_eq!(cfg.workloads, vec!["quant", "svm"]);
         assert_eq!(cfg.train_steps, 10);
     }
@@ -150,11 +166,9 @@ mod tests {
             "[encoder]\nscheme = \"OHE\"\nsimilarity_limit = 60\nweights_mode = true\n",
         )
         .unwrap();
-        assert_eq!(cfg.encoder.chunk_width, 32);
-        assert_eq!(
-            cfg.encoder.tolerance_mask_override,
-            Some(0xFF80_0000_FF80_0000)
-        );
+        let knobs = cfg.encoder.zac_knobs().unwrap();
+        assert_eq!(knobs.chunk_width, 32);
+        assert_eq!(knobs.tolerance_mask_override, Some(0xFF80_0000_FF80_0000));
     }
 
     #[test]
@@ -162,6 +176,23 @@ mod tests {
         assert!(RunConfig::from_toml("bogus = 1\n").is_err());
         assert!(RunConfig::from_toml("[encoder]\nscheme = \"WAT\"\n").is_err());
         assert!(RunConfig::from_toml("[encoder]\nsimilarity_limit = 10\n").is_err());
+        // Knob values must be exact non-negative integers.
+        assert!(RunConfig::from_toml("[encoder]\ntable_size = 32.9\n").is_err());
+        assert!(RunConfig::from_toml("[encoder]\nsimilarity_limit = -80\n").is_err());
+    }
+
+    #[test]
+    fn knobs_of_other_schemes_are_rejected_not_absorbed() {
+        // The god-struct used to silently accept ZAC knobs on any
+        // scheme; the per-scheme knob structs reject them.
+        let err = RunConfig::from_toml("[encoder]\nscheme = \"BDE\"\nsimilarity_limit = 80\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no knob"), "{err}");
+        // table_size is a BDE knob, so that still parses.
+        let cfg =
+            RunConfig::from_toml("[encoder]\nscheme = \"BDE\"\ntable_size = 32\n").unwrap();
+        assert_eq!(cfg.encoder.table_size(), 32);
     }
 
     #[test]

@@ -1,25 +1,30 @@
-//! The streaming coordinator: drives whole byte/float traces through the
-//! 8-chip channel (encode → wire → decode), aggregating energy and
-//! encoding statistics, and reassembling the receiver-side (possibly
-//! approximate) stream for the workloads.
+//! The single-channel coordinator: the shared batch engine
+//! ([`drive_lines`]) behind [`Session`](crate::session::Session)'s
+//! batch execution, plus the v1 free-function drivers kept as thin
+//! deprecated shims.
 //!
-//! Two drivers:
-//! * [`simulate_bytes`] — batch mode: one worker per DRAM chip via
-//!   [`par_map`] (chips are architecturally independent: separate
-//!   tables, lines and sidebands).
-//! * [`Pipeline`] — streaming mode with bounded per-chip queues
-//!   (`sync_channel`), giving real backpressure when a producer outruns
-//!   the encoder workers. The multi-channel layer
-//!   ([`crate::system`]) reuses this chunked-queue discipline as the
-//!   per-shard mailbox of its channel array.
+//! v2 layering (see `ARCHITECTURE.md`):
 //!
-//! Both drivers are batch-first: words move in
-//! [`ENCODE_BATCH`](crate::encoding::ENCODE_BATCH)-sized chunks through
-//! `encode_batch`/`transmit_batch`/`record_batch`/`decode_batch` over
-//! preallocated buffers. The per-chip lane is gathered per batch
-//! ([`gather_chip_lane`]) instead of cloning each chip's whole word
-//! stream, and the pipeline's queue element is a boxed chunk of lines,
-//! amortizing the channel send ~256× versus the old per-word send.
+//! * [`Session`](crate::session::Session) is the public entry point —
+//!   codec specs resolve through the
+//!   [`CodecRegistry`](crate::encoding::CodecRegistry) and every
+//!   execution strategy funnels into the one
+//!   [`ChipLane`](crate::encoding::ChipLane) drive loop.
+//! * [`drive_lines`] here is the batch engine: one worker per DRAM chip
+//!   via [`par_map`](crate::util::par::par_map) (chips are
+//!   architecturally independent: separate tables, lines, sidebands),
+//!   per-batch lane gather ([`gather_chip_lane`]) instead of per-chip
+//!   stream clones.
+//! * [`Pipeline`] is the streaming engine: bounded per-chip queues
+//!   (`sync_channel`) of boxed [`ENCODE_BATCH`]-line chunks, giving real
+//!   backpressure when a producer outruns the encoder workers. The
+//!   multi-channel [`crate::system`] array reuses this chunked-queue
+//!   discipline per shard.
+//!
+//! **Deprecated shims** (prefer `Session`): [`simulate_bytes`],
+//! [`simulate_lines`], [`simulate_lines_per_chip`], [`simulate_f32s`].
+//! They stay pinned bit-identical to `Session` runs by the property
+//! tests in `rust/tests/integration.rs`.
 
 pub mod config;
 
@@ -28,8 +33,8 @@ pub use config::RunConfig;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
-use crate::channel::{ChipChannel, EnergyCounts, CHIPS};
-use crate::encoding::{make_codec, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
+use crate::channel::{EnergyCounts, CHIPS};
+use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords};
 
 /// Result of a trace simulation.
@@ -43,16 +48,18 @@ pub struct RunOutput {
     pub stats: EncodeStats,
 }
 
-/// Batch simulation of a byte stream under one encoder configuration.
-/// `approx` marks the whole stream as error-resilient (the paper
-/// approximates only accesses known resilient a priori; instruction-like
-/// traffic passes `false` and is never approximated).
+/// **Deprecated shim** — batch simulation of a byte stream under one
+/// legacy config. Prefer [`Session`](crate::session::Session). `approx`
+/// marks the whole stream as error-resilient (the paper approximates
+/// only accesses known resilient a priori; instruction-like traffic
+/// passes `false` and is never approximated).
 pub fn simulate_bytes(cfg: &ZacConfig, bytes: &[u8], approx: bool) -> RunOutput {
     let lines = bytes_to_chip_words(bytes);
     simulate_lines(cfg, &lines, approx, bytes.len())
 }
 
-/// Batch simulation over pre-split cache lines.
+/// **Deprecated shim** — batch simulation over pre-split cache lines.
+/// Prefer [`Session`](crate::session::Session).
 pub fn simulate_lines(
     cfg: &ZacConfig,
     lines: &[ChipWords],
@@ -63,7 +70,8 @@ pub fn simulate_lines(
     simulate_lines_per_chip(&cfgs, lines, approx, byte_len)
 }
 
-/// Batch simulation with a distinct configuration per chip. The DRAM
+/// **Deprecated shim** — batch simulation with a distinct configuration
+/// per chip. Prefer `Session::builder().codec_per_chip(...)`. The DRAM
 /// layout interleaves bytes across chips (chip *j* carries byte `j % 4`
 /// of every f32, see [`crate::trace`]), so field-aware knobs — e.g. the
 /// weights-mode tolerance over sign+exponent — must be expressed
@@ -75,26 +83,37 @@ pub fn simulate_lines_per_chip(
     byte_len: usize,
 ) -> RunOutput {
     assert_eq!(cfgs.len(), CHIPS);
-    // One worker per chip over the shared line matrix: each batch
-    // gathers its lane into a fixed buffer — no per-chip clone of the
-    // whole stream, no per-chip approx-flag Vec.
-    let results = crate::util::par::par_map((0..CHIPS).collect(), CHIPS, |j| {
-        let (mut enc, mut dec) = make_codec(&cfgs[j]);
-        let mut chan = ChipChannel::new();
-        let mut stats = EncodeStats::default();
-        let mut decoded = Vec::with_capacity(lines.len());
+    drive_lines(
+        cfgs.iter().map(Codec::from_config).collect(),
+        lines,
+        approx,
+        byte_len,
+    )
+}
+
+/// The shared batch engine: one worker per chip over the shared line
+/// matrix, each batch gathering its lane into a fixed buffer (no
+/// per-chip clone of the whole stream) and running the one
+/// [`ChipLane`] drive loop. Both the legacy shims above and
+/// [`Session`](crate::session::Session) batch execution land here.
+pub(crate) fn drive_lines(
+    codecs: Vec<Codec>,
+    lines: &[ChipWords],
+    approx: bool,
+    byte_len: usize,
+) -> RunOutput {
+    assert_eq!(codecs.len(), CHIPS);
+    let chips: Vec<(usize, Codec)> = codecs.into_iter().enumerate().collect();
+    let results = crate::util::par::par_map(chips, CHIPS, |(j, codec)| {
+        let mut lane = ChipLane::with_capacity(codec, lines.len());
         let mut words = [0u64; ENCODE_BATCH];
-        let mut wires = [WireWord::raw(0); ENCODE_BATCH];
         let flags = [approx; ENCODE_BATCH];
         for chunk in lines.chunks(ENCODE_BATCH) {
             let n = chunk.len();
             gather_chip_lane(chunk, j, &mut words[..n]);
-            enc.encode_batch(&words[..n], &flags[..n], &mut wires[..n]);
-            chan.transmit_batch(&wires[..n]);
-            stats.record_batch(&wires[..n], &words[..n]);
-            dec.decode_batch(&wires[..n], &mut decoded);
+            lane.drive(&words[..n], &flags[..n]);
         }
-        (decoded, *chan.energy(), stats)
+        lane.finish()
     });
     assemble(results, lines.len(), byte_len)
 }
@@ -149,11 +168,13 @@ fn assemble(
     }
 }
 
-/// Simulate an f32 (weight) stream; returns the reconstructed floats.
-/// When the config carries a tolerance-mask override (weights mode), it
-/// is projected onto the byte-interleaved chips via
-/// [`weight_chip_configs`] so sign/exponent protection actually lands on
-/// the bytes that hold those fields.
+/// **Deprecated shim** — simulate an f32 (weight) stream; returns the
+/// reconstructed floats. Prefer `Session::builder().codec_weights(...)`
+/// with [`Trace::from_f32s`](crate::session::Trace::from_f32s). When the
+/// config carries a tolerance-mask override (weights mode), it is
+/// projected onto the byte-interleaved chips via [`weight_chip_configs`]
+/// so sign/exponent protection actually lands on the bytes that hold
+/// those fields.
 pub fn simulate_f32s(cfg: &ZacConfig, xs: &[f32], approx: bool) -> (Vec<f32>, RunOutput) {
     let bytes = crate::trace::f32s_to_bytes(xs);
     let lines = bytes_to_chip_words(&bytes);
@@ -194,32 +215,32 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Spawn the per-chip workers with queue `capacity` (in lines;
-    /// rounded up to whole chunks).
+    /// Spawn the per-chip workers for a legacy config with queue
+    /// `capacity` (in lines; rounded up to whole chunks).
     pub fn new(cfg: &ZacConfig, capacity: usize) -> Pipeline {
+        Self::with_codecs(
+            (0..CHIPS).map(|_| Codec::from_config(cfg)).collect(),
+            capacity,
+        )
+    }
+
+    /// Spawn the per-chip workers around pre-built codecs (one per
+    /// chip) — the registry-driven construction path
+    /// [`Session`](crate::session::Session) uses for pipelined runs.
+    pub fn with_codecs(codecs: Vec<Codec>, capacity: usize) -> Pipeline {
+        assert_eq!(codecs.len(), CHIPS, "pipeline needs one codec per chip");
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(CHIPS);
         let mut workers = Vec::with_capacity(CHIPS);
-        for _ in 0..CHIPS {
+        for codec in codecs {
             let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
                 sync_channel(chunk_capacity);
-            let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                let (mut enc, mut dec) = make_codec(&cfg);
-                let mut chan = ChipChannel::new();
-                let mut stats = EncodeStats::default();
-                let mut decoded = Vec::new();
-                let mut wires = [WireWord::raw(0); ENCODE_BATCH];
+                let mut lane = ChipLane::new(codec);
                 while let Ok((words, approx)) = rx.recv() {
-                    for (wc, ac) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
-                        let buf = &mut wires[..wc.len()];
-                        enc.encode_batch(wc, ac, buf);
-                        chan.transmit_batch(buf);
-                        stats.record_batch(buf, wc);
-                        dec.decode_batch(buf, &mut decoded);
-                    }
+                    lane.drive(&words, &approx);
                 }
-                (decoded, *chan.energy(), stats)
+                lane.finish()
             }));
             senders.push(tx);
         }
@@ -380,5 +401,76 @@ mod tests {
             assert!(b.abs() < a.abs() * 2.0 + 1e-12, "{a} -> {b}");
         }
         assert!(out.stats.total() > 0);
+    }
+
+    #[test]
+    fn prop_weight_chip_masks_reassemble_the_lane_mask_exactly() {
+        // Chip j carries byte j % 4 of every f32, so the four distinct
+        // per-chip masks must (a) replicate their lane byte across all 8
+        // beats, (b) reassemble the 32-bit lane mask exactly — every
+        // lane bit covered once across chips 0..4 — and (c) repeat for
+        // the mirror chips 4..8.
+        crate::util::prop::check(
+            "weight_chip_configs masks reassemble the lane mask",
+            106,
+            |r| vec![r.next_u64()],
+            |v| {
+                let lane_mask = (v[0] & 0xFFFF_FFFF) as u32;
+                let mut base = ZacConfig::zac_weights(60);
+                base.tolerance_mask_override = Some(lane_mask as u64);
+                let cfgs = weight_chip_configs(&base);
+                if cfgs.len() != CHIPS {
+                    return Err(format!("{} configs for {CHIPS} chips", cfgs.len()));
+                }
+                let mut reassembled = 0u32;
+                for (j, cfg) in cfgs.iter().enumerate() {
+                    let m = cfg
+                        .tolerance_mask_override
+                        .ok_or_else(|| format!("chip {j}: override dropped"))?;
+                    let want_byte = ((lane_mask >> (8 * (j % 4))) & 0xFF) as u64;
+                    for beat in 0..8 {
+                        let got = (m >> (beat * 8)) & 0xFF;
+                        if got != want_byte {
+                            return Err(format!(
+                                "chip {j} beat {beat}: {got:#04x} != {want_byte:#04x}"
+                            ));
+                        }
+                    }
+                    cfg.validate().map_err(|e| format!("chip {j}: {e}"))?;
+                    if j < 4 {
+                        reassembled |= ((m & 0xFF) as u32) << (8 * j);
+                    } else if cfg.tolerance_mask_override != cfgs[j - 4].tolerance_mask_override {
+                        return Err(format!("chip {j} differs from its mirror chip {}", j - 4));
+                    }
+                }
+                if reassembled != lane_mask {
+                    return Err(format!(
+                        "reassembled {reassembled:#010x} != lane mask {lane_mask:#010x}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn default_weight_mask_pins_sign_exponent_chips() {
+        // Default sign+exponent lane mask 0xFF80_0000: float byte 3
+        // (sign + exp[7:1]) pins chips 3/7 entirely, float byte 2
+        // (exp[0] in bit 7) pins bit 7 of every byte on chips 2/6, and
+        // the mantissa chips 0/1/4/5 are unconstrained.
+        let cfgs = weight_chip_configs(&ZacConfig {
+            tolerance_mask_override: None,
+            ..ZacConfig::zac_weights(60)
+        });
+        for j in [3usize, 7] {
+            assert_eq!(cfgs[j].tolerance_mask(), u64::MAX, "chip {j} fully pinned");
+        }
+        for j in [2usize, 6] {
+            assert_eq!(cfgs[j].tolerance_mask(), 0x8080_8080_8080_8080, "chip {j}");
+        }
+        for j in [0usize, 1, 4, 5] {
+            assert_eq!(cfgs[j].tolerance_mask(), 0, "chip {j} unconstrained");
+        }
     }
 }

@@ -125,6 +125,17 @@ impl ChipDecoder for BdeOrgDecoder {
     }
 }
 
+/// Self-register BDE_ORG in a [`CodecRegistry`](super::registry::CodecRegistry).
+pub fn register(reg: &mut super::registry::CodecRegistry) {
+    reg.register("BDE_ORG", |spec| {
+        let t = spec.table_size();
+        Ok(super::registry::Codec::new(
+            Box::new(BdeOrgEncoder::new(t)),
+            Box::new(BdeOrgDecoder::new(t)),
+        ))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

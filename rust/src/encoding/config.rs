@@ -1,6 +1,15 @@
-//! Scheme taxonomy (paper Table I) and the ZAC-DEST configuration knobs.
+//! Scheme taxonomy (paper Table I) and the legacy `ZacConfig` knob
+//! struct.
+//!
+//! **Deprecated shim:** `ZacConfig` is the v1 god-struct — ZAC-only
+//! knobs leaking into every scheme. New code describes codecs with a
+//! [`CodecSpec`](super::registry::CodecSpec) carrying per-scheme
+//! [`Knobs`](super::knobs::Knobs) instead; `ZacConfig` remains for the
+//! legacy free-function paths and the ZAC encoder internals, and
+//! delegates all derived-mask/validation logic to
+//! [`ZacKnobs`](super::knobs::ZacKnobs) so the rules live in one place.
 
-use crate::util::bits::{lsb_chunk_mask, msb_chunk_mask};
+use super::knobs::ZacKnobs;
 
 /// Encoding schemes under evaluation (paper Table I).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -162,74 +171,45 @@ impl ZacConfig {
     }
 
     /// ZAC-DEST configured for IEEE-754 f32 weight traffic: 32-bit chunks
-    /// with sign+exponent (top 9 bits of each float) as the tolerance mask
-    /// (§VIII-G: approximating even the last exponent bit costs ~60%
-    /// output quality, so those bits are always pinned).
+    /// with sign+exponent as the tolerance mask (§VIII-G: approximating
+    /// even the last exponent bit costs ~60% output quality, so those
+    /// bits are always pinned). Delegates to [`ZacKnobs::weights`], the
+    /// one definition of the weights-mode geometry.
     pub fn zac_weights(limit_pct: u32) -> Self {
-        ZacConfig {
-            scheme: Scheme::ZacDest,
-            similarity_limit_pct: limit_pct,
-            chunk_width: 32,
-            tolerance_mask_override: Some(msb_chunk_mask(32, 9)),
-            ..Default::default()
-        }
+        ZacKnobs::weights(limit_pct).to_config()
+    }
+
+    /// The typed ZAC knob struct these fields carry (the v2 canonical
+    /// form; all derived-mask logic lives there).
+    pub fn knobs(&self) -> ZacKnobs {
+        ZacKnobs::from_config(self)
     }
 
     /// Maximum number of dissimilar bits for the skip to fire:
     /// `ceil(64 * (100 - limit) / 100)`. Reproduces the paper's mapping
     /// 90→7, 80→13, 75→16, 70→20 (strict `<` comparison in Alg. 2).
     pub fn dissimilar_threshold(&self) -> u32 {
-        let num = 64 * (100 - self.similarity_limit_pct);
-        num.div_ceil(100).max(1)
+        self.knobs().dissimilar_threshold()
     }
 
     /// Effective tolerance mask (bits that must match exactly).
     pub fn tolerance_mask(&self) -> u64 {
-        if let Some(m) = self.tolerance_mask_override {
-            return m;
-        }
-        msb_chunk_mask(self.chunk_width, self.tolerance_bits)
+        self.knobs().tolerance_mask()
     }
 
     /// Truncation mask (bits zeroed / excluded from comparison).
     pub fn truncation_mask(&self) -> u64 {
-        lsb_chunk_mask(self.chunk_width, self.truncation_bits)
+        self.knobs().truncation_mask()
     }
 
     /// Total truncated bits per 64-bit word.
     pub fn truncated_bits_total(&self) -> u32 {
-        self.truncation_mask().count_ones()
+        self.knobs().truncated_bits_total()
     }
 
     /// Validate invariants (chunk sizes, knob ranges, mask disjointness).
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            matches!(self.chunk_width, 8 | 16 | 32 | 64),
-            "chunk_width must be 8/16/32/64, got {}",
-            self.chunk_width
-        );
-        anyhow::ensure!(
-            (50..=100).contains(&self.similarity_limit_pct),
-            "similarity limit {}% out of range [50,100]",
-            self.similarity_limit_pct
-        );
-        anyhow::ensure!(
-            self.tolerance_bits + self.truncation_bits <= self.chunk_width,
-            "tolerance {} + truncation {} exceed chunk width {}",
-            self.tolerance_bits,
-            self.truncation_bits,
-            self.chunk_width
-        );
-        anyhow::ensure!(
-            self.table_size > 0 && self.table_size <= 64,
-            "table_size {} out of range (OHE index must fit 64 data lines)",
-            self.table_size
-        );
-        anyhow::ensure!(
-            self.tolerance_mask() & self.truncation_mask() == 0,
-            "tolerance and truncation masks overlap"
-        );
-        Ok(())
+        self.knobs().validate()
     }
 
     /// Short config label for figure legends, e.g. `ZAC(L80,T16,O8)`.

@@ -89,6 +89,16 @@ impl ChipDecoder for DbiDecoder {
     fn reset(&mut self) {}
 }
 
+/// Self-register DBI in a [`CodecRegistry`](super::registry::CodecRegistry).
+pub fn register(reg: &mut super::registry::CodecRegistry) {
+    reg.register("DBI", |_spec| {
+        Ok(super::registry::Codec::new(
+            Box::new(DbiEncoder::new()),
+            Box::new(DbiDecoder::new()),
+        ))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

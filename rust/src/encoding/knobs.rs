@@ -1,0 +1,277 @@
+//! Per-scheme knob structs — the typed replacement for the `ZacConfig`
+//! god-struct at every v2 API boundary.
+//!
+//! Each built-in scheme declares exactly the knobs it understands:
+//! [`ZacKnobs`] for ZAC-DEST (similarity limit, chunk geometry,
+//! tolerance/truncation, table size, ablation switches), [`TableKnobs`]
+//! for the table-based exact coders (BDE / BDE_ORG), and nothing for
+//! ORG / DBI. A [`Knobs`] value rides inside a
+//! [`CodecSpec`](super::registry::CodecSpec) and is validated at every
+//! ingestion boundary (CLI flags, run-config TOML, sweep TOML,
+//! environment overrides) before any codec is constructed — a knob a
+//! scheme does not have can no longer leak into it.
+//!
+//! The legacy [`ZacConfig`] keeps its shape for the deprecated shim
+//! paths but delegates all derived-mask/validation logic here, so the
+//! rules live in exactly one place.
+
+use crate::util::bits::{lsb_chunk_mask, msb_chunk_mask};
+
+use super::config::{Ablation, Scheme, ZacConfig};
+
+/// ZAC-DEST knobs (paper §V-B/§VIII-G plus the §IV/§V ablation switches).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ZacKnobs {
+    /// Similarity limit in percent (50..=100).
+    pub similarity_limit_pct: u32,
+    /// Chunk width in bits: 8, 16, 32 or 64 (the data element width).
+    pub chunk_width: u32,
+    /// Tolerance bits per chunk (MSB side); paper circuit offers {0, W/8, W/4}.
+    pub tolerance_bits: u32,
+    /// Truncation bits per chunk (LSB side); {0, W/8, W/4}.
+    pub truncation_bits: u32,
+    /// Optional explicit tolerance mask overriding the per-chunk MSB rule
+    /// (used for IEEE-754 weights: sign+exponent bits, Fig. 19).
+    pub tolerance_mask_override: Option<u64>,
+    /// Data-table entries per chip (paper: 64).
+    pub table_size: usize,
+    /// Design-choice ablation switches (paper defaults normally).
+    pub ablation: Ablation,
+}
+
+impl Default for ZacKnobs {
+    fn default() -> Self {
+        ZacKnobs {
+            similarity_limit_pct: 80,
+            chunk_width: 8,
+            tolerance_bits: 0,
+            truncation_bits: 0,
+            tolerance_mask_override: None,
+            table_size: 64,
+            ablation: Ablation::default(),
+        }
+    }
+}
+
+impl ZacKnobs {
+    /// Knobs with a similarity limit only (the common case).
+    pub fn limit(similarity_limit_pct: u32) -> Self {
+        ZacKnobs {
+            similarity_limit_pct,
+            ..Default::default()
+        }
+    }
+
+    /// All three §V knobs (chunk width 8, byte data).
+    pub fn full(limit_pct: u32, truncation_bits: u32, tolerance_bits: u32) -> Self {
+        ZacKnobs {
+            similarity_limit_pct: limit_pct,
+            truncation_bits,
+            tolerance_bits,
+            ..Default::default()
+        }
+    }
+
+    /// IEEE-754 f32 weight traffic: 32-bit chunks with sign+exponent as
+    /// the tolerance mask (§VIII-G). The one definition of the protected
+    /// field set lives in
+    /// [`float_layout::weight_tolerance_mask`](crate::trace::float_layout::weight_tolerance_mask).
+    pub fn weights(limit_pct: u32) -> Self {
+        ZacKnobs {
+            similarity_limit_pct: limit_pct,
+            chunk_width: 32,
+            tolerance_mask_override: Some(crate::trace::float_layout::weight_tolerance_mask()),
+            ..Default::default()
+        }
+    }
+
+    /// Maximum number of dissimilar bits for the skip to fire:
+    /// `ceil(64 * (100 - limit) / 100)` (strict `<` in Alg. 2).
+    pub fn dissimilar_threshold(&self) -> u32 {
+        let num = 64 * (100 - self.similarity_limit_pct);
+        num.div_ceil(100).max(1)
+    }
+
+    /// Effective tolerance mask (bits that must match exactly).
+    pub fn tolerance_mask(&self) -> u64 {
+        if let Some(m) = self.tolerance_mask_override {
+            return m;
+        }
+        msb_chunk_mask(self.chunk_width, self.tolerance_bits)
+    }
+
+    /// Truncation mask (bits zeroed / excluded from comparison).
+    pub fn truncation_mask(&self) -> u64 {
+        lsb_chunk_mask(self.chunk_width, self.truncation_bits)
+    }
+
+    /// Total truncated bits per 64-bit word.
+    pub fn truncated_bits_total(&self) -> u32 {
+        self.truncation_mask().count_ones()
+    }
+
+    /// Validate invariants (chunk sizes, knob ranges, mask disjointness).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(self.chunk_width, 8 | 16 | 32 | 64),
+            "chunk_width must be 8/16/32/64, got {}",
+            self.chunk_width
+        );
+        anyhow::ensure!(
+            (50..=100).contains(&self.similarity_limit_pct),
+            "similarity limit {}% out of range [50,100]",
+            self.similarity_limit_pct
+        );
+        anyhow::ensure!(
+            self.tolerance_bits + self.truncation_bits <= self.chunk_width,
+            "tolerance {} + truncation {} exceed chunk width {}",
+            self.tolerance_bits,
+            self.truncation_bits,
+            self.chunk_width
+        );
+        anyhow::ensure!(
+            self.table_size > 0 && self.table_size <= 64,
+            "table_size {} out of range (OHE index must fit 64 data lines)",
+            self.table_size
+        );
+        anyhow::ensure!(
+            self.tolerance_mask() & self.truncation_mask() == 0,
+            "tolerance and truncation masks overlap"
+        );
+        Ok(())
+    }
+
+    /// The legacy god-struct carrying these knobs (shim paths and the
+    /// ZAC encoder internals still speak [`ZacConfig`]).
+    pub fn to_config(&self) -> ZacConfig {
+        ZacConfig {
+            scheme: Scheme::ZacDest,
+            similarity_limit_pct: self.similarity_limit_pct,
+            chunk_width: self.chunk_width,
+            tolerance_bits: self.tolerance_bits,
+            truncation_bits: self.truncation_bits,
+            tolerance_mask_override: self.tolerance_mask_override,
+            table_size: self.table_size,
+            ablation: self.ablation,
+        }
+    }
+
+    /// Extract the ZAC knobs out of a legacy [`ZacConfig`].
+    pub fn from_config(cfg: &ZacConfig) -> ZacKnobs {
+        ZacKnobs {
+            similarity_limit_pct: cfg.similarity_limit_pct,
+            chunk_width: cfg.chunk_width,
+            tolerance_bits: cfg.tolerance_bits,
+            truncation_bits: cfg.truncation_bits,
+            tolerance_mask_override: cfg.tolerance_mask_override,
+            table_size: cfg.table_size,
+            ablation: cfg.ablation,
+        }
+    }
+}
+
+/// Knobs of the table-based exact coders (BDE / BDE_ORG).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TableKnobs {
+    /// Data-table entries per chip (paper: 64).
+    pub table_size: usize,
+}
+
+impl Default for TableKnobs {
+    fn default() -> Self {
+        TableKnobs { table_size: 64 }
+    }
+}
+
+impl TableKnobs {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.table_size > 0 && self.table_size <= 64,
+            "table_size {} out of range 1..=64",
+            self.table_size
+        );
+        Ok(())
+    }
+}
+
+/// The knob bag a [`CodecSpec`](super::registry::CodecSpec) carries:
+/// exactly the knobs its scheme understands.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Knobs {
+    /// Knob-free schemes (ORG, DBI) and out-of-tree codecs whose
+    /// factories carry their own configuration.
+    None,
+    /// Table-based exact coders (BDE, BDE_ORG).
+    Table(TableKnobs),
+    /// ZAC-DEST.
+    Zac(ZacKnobs),
+}
+
+impl Knobs {
+    /// The default knob bag for a built-in scheme.
+    pub fn for_scheme(scheme: Scheme) -> Knobs {
+        match scheme {
+            Scheme::ZacDest => Knobs::Zac(ZacKnobs::default()),
+            Scheme::Bde | Scheme::BdeOrg => Knobs::Table(TableKnobs::default()),
+            Scheme::Org | Scheme::Dbi => Knobs::None,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            Knobs::None => Ok(()),
+            Knobs::Table(t) => t.validate(),
+            Knobs::Zac(z) => z.validate(),
+        }
+    }
+
+    /// The table size every table-carrying variant agrees on (the
+    /// paper's 64 for knob-free schemes).
+    pub fn table_size(&self) -> usize {
+        match self {
+            Knobs::None => 64,
+            Knobs::Table(t) => t.table_size,
+            Knobs::Zac(z) => z.table_size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zac_knobs_mirror_legacy_config() {
+        let k = ZacKnobs::weights(60);
+        let cfg = k.to_config();
+        assert_eq!(cfg.scheme, Scheme::ZacDest);
+        assert_eq!(cfg.tolerance_mask(), 0xFF80_0000_FF80_0000);
+        assert_eq!(ZacKnobs::from_config(&cfg), k);
+        assert_eq!(k.dissimilar_threshold(), cfg.dissimilar_threshold());
+    }
+
+    #[test]
+    fn knob_validation_matches_config_validation() {
+        let mut k = ZacKnobs::default();
+        k.chunk_width = 12;
+        assert!(k.validate().is_err());
+        let mut k = ZacKnobs::default();
+        k.tolerance_bits = 6;
+        k.truncation_bits = 4;
+        assert!(k.validate().is_err());
+        assert!(TableKnobs { table_size: 0 }.validate().is_err());
+        assert!(TableKnobs { table_size: 65 }.validate().is_err());
+        assert!(TableKnobs { table_size: 16 }.validate().is_ok());
+        assert!(Knobs::None.validate().is_ok());
+    }
+
+    #[test]
+    fn per_scheme_defaults() {
+        assert_eq!(Knobs::for_scheme(Scheme::Org), Knobs::None);
+        assert_eq!(Knobs::for_scheme(Scheme::Dbi), Knobs::None);
+        assert!(matches!(Knobs::for_scheme(Scheme::Bde), Knobs::Table(_)));
+        assert!(matches!(Knobs::for_scheme(Scheme::BdeOrg), Knobs::Table(_)));
+        assert!(matches!(Knobs::for_scheme(Scheme::ZacDest), Knobs::Zac(_)));
+        assert_eq!(Knobs::for_scheme(Scheme::Org).table_size(), 64);
+    }
+}

@@ -1,0 +1,138 @@
+//! The one shared chip drive loop. Every driver — the legacy
+//! [`run_chip_stream`](super::run_chip_stream), the batch coordinator,
+//! the [`Pipeline`](crate::coordinator::Pipeline) workers, the
+//! channel-array shard service loops and [`Session`](crate::session::Session)
+//! runs — moves words through the same
+//! encode_batch → transmit_batch → record_batch → decode_batch body,
+//! so the batch contract (bit-identical to scalar, stateful across
+//! calls, no allocation) is enforced in exactly one place.
+
+use crate::channel::{ChipChannel, EnergyCounts};
+
+use super::registry::Codec;
+use super::stats::EncodeStats;
+use super::wire::WireWord;
+use super::ENCODE_BATCH;
+
+/// Drive a word stream through one chip's codec and channel in
+/// [`ENCODE_BATCH`]-sized chunks over the caller's buffers. `wires`
+/// must hold at least `min(words.len(), ENCODE_BATCH)` slots; decoded
+/// words append to `out`.
+pub fn drive_batches(
+    codec: &mut Codec,
+    chan: &mut ChipChannel,
+    stats: &mut EncodeStats,
+    words: &[u64],
+    approx: &[bool],
+    wires: &mut [WireWord],
+    out: &mut Vec<u64>,
+) {
+    assert_eq!(words.len(), approx.len());
+    assert!(wires.len() >= words.len().min(ENCODE_BATCH));
+    for (wc, ac) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
+        let buf = &mut wires[..wc.len()];
+        codec.encoder.encode_batch(wc, ac, buf);
+        chan.transmit_batch(buf);
+        stats.record_batch(buf, wc);
+        codec.decoder.decode_batch(buf, out);
+    }
+}
+
+/// One chip's full lane state: codec + channel + stats + decoded output
+/// and the reusable wire buffer. Workers own one `ChipLane` per chip and
+/// feed it word runs of any length.
+pub struct ChipLane {
+    codec: Codec,
+    chan: ChipChannel,
+    stats: EncodeStats,
+    decoded: Vec<u64>,
+    wires: [WireWord; ENCODE_BATCH],
+}
+
+impl ChipLane {
+    pub fn new(codec: Codec) -> ChipLane {
+        ChipLane::with_capacity(codec, 0)
+    }
+
+    /// Lane with the decoded buffer preallocated for `nwords` words.
+    pub fn with_capacity(codec: Codec, nwords: usize) -> ChipLane {
+        ChipLane {
+            codec,
+            chan: ChipChannel::new(),
+            stats: EncodeStats::default(),
+            decoded: Vec::with_capacity(nwords),
+            wires: [WireWord::raw(0); ENCODE_BATCH],
+        }
+    }
+
+    /// Encode → transmit → record → decode a run of words (chunked
+    /// internally; state carries across calls).
+    pub fn drive(&mut self, words: &[u64], approx: &[bool]) {
+        drive_batches(
+            &mut self.codec,
+            &mut self.chan,
+            &mut self.stats,
+            words,
+            approx,
+            &mut self.wires,
+            &mut self.decoded,
+        );
+    }
+
+    /// Words decoded so far.
+    pub fn decoded_len(&self) -> usize {
+        self.decoded.len()
+    }
+
+    /// Tear down into (decoded words, energy counts, encode stats).
+    pub fn finish(self) -> (Vec<u64>, EnergyCounts, EncodeStats) {
+        (self.decoded, *self.chan.energy(), self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::registry::CodecSpec;
+    use crate::encoding::{default_registry, make_codec, ZacConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lane_matches_hand_rolled_scalar_loop() {
+        let mut r = Rng::new(77);
+        let words: Vec<u64> = (0..700)
+            .map(|i| if i % 9 == 0 { 0 } else { r.next_u64() & 0xFFF })
+            .collect();
+        let approx: Vec<bool> = (0..words.len()).map(|_| r.chance(0.7)).collect();
+
+        let cfg = ZacConfig::zac_full(75, 1, 1);
+        let (mut enc, mut dec) = make_codec(&cfg);
+        let mut chan = ChipChannel::new();
+        let mut stats = EncodeStats::default();
+        let mut want = Vec::new();
+        for (&w, &a) in words.iter().zip(&approx) {
+            let wire = enc.encode(w, a);
+            chan.transmit(&wire);
+            stats.record(&wire, w);
+            want.push(dec.decode(&wire));
+        }
+
+        let codec = default_registry()
+            .build(&CodecSpec::from_config(&cfg))
+            .unwrap();
+        let mut lane = ChipLane::with_capacity(codec, words.len());
+        // Irregular run lengths: chunk boundaries land everywhere.
+        let (mut i, mut k) = (0usize, 0usize);
+        while i < words.len() {
+            let n = [3usize, ENCODE_BATCH, 1, 17][k % 4].min(words.len() - i);
+            k += 1;
+            lane.drive(&words[i..i + n], &approx[i..i + n]);
+            i += n;
+        }
+        assert_eq!(lane.decoded_len(), words.len());
+        let (decoded, counts, lane_stats) = lane.finish();
+        assert_eq!(decoded, want);
+        assert_eq!(counts, *chan.energy());
+        assert_eq!(lane_stats, stats);
+    }
+}

@@ -175,6 +175,18 @@ impl ChipDecoder for MbdcDecoder {
     }
 }
 
+/// Self-register MBDC (Table I "BDE") in a
+/// [`CodecRegistry`](super::registry::CodecRegistry).
+pub fn register(reg: &mut super::registry::CodecRegistry) {
+    reg.register("BDE", |spec| {
+        let t = spec.table_size();
+        Ok(super::registry::Codec::new(
+            Box::new(MbdcEncoder::new(t)),
+            Box::new(MbdcDecoder::new(t)),
+        ))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

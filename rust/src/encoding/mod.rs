@@ -32,19 +32,40 @@
 //! * **No allocation.** `encode_batch` writes into a caller-provided
 //!   slice of exactly `words.len()`; `decode_batch` appends to a
 //!   caller-provided `Vec` (reserve up front for zero growth).
+//!
+//! # v2 construction path
+//!
+//! Codecs are described by a [`CodecSpec`] (scheme name + per-scheme
+//! [`Knobs`]) and constructed through a [`CodecRegistry`] of factory
+//! functions into a [`Codec`] handle owning the matched encoder/decoder
+//! pair. The five built-in schemes self-register
+//! ([`CodecRegistry::with_builtins`]); `registry.register(...)` admits
+//! out-of-tree schemes with no dispatch `match` to edit here. The one
+//! shared drive loop lives in [`lane`] ([`ChipLane`] /
+//! [`lane::drive_batches`]) and is what every driver — coordinator,
+//! pipeline, channel array, [`Session`](crate::session::Session) — runs.
+//!
+//! [`make_codec`] and [`run_chip_stream`] remain as thin deprecated
+//! shims over the registry + lane for v1 callers.
 
 pub mod bde_org;
 pub mod config;
 pub mod data_table;
 pub mod dbi;
+pub mod knobs;
+pub mod lane;
 pub mod mbdc;
 pub mod org;
+pub mod registry;
 pub mod stats;
 pub mod wire;
 pub mod zac_dest;
 
 pub use config::{Scheme, ZacConfig};
 pub use data_table::DataTable;
+pub use knobs::{Knobs, TableKnobs, ZacKnobs};
+pub use lane::ChipLane;
+pub use registry::{default_registry, Codec, CodecRegistry, CodecSpec};
 pub use stats::{EncodeStats, Outcome};
 pub use wire::WireWord;
 
@@ -101,36 +122,20 @@ pub trait ChipDecoder: Send {
     fn reset(&mut self);
 }
 
-/// Construct the (encoder, decoder) pair for a scheme.
+/// **Deprecated shim** — construct the (encoder, decoder) pair for a
+/// legacy [`ZacConfig`]. New code resolves a [`CodecSpec`] through a
+/// [`CodecRegistry`] into a [`Codec`] handle instead; this delegates to
+/// exactly that path, so the closed `match` is gone.
 pub fn make_codec(cfg: &ZacConfig) -> (Box<dyn ChipEncoder>, Box<dyn ChipDecoder>) {
-    match cfg.scheme {
-        Scheme::Org => (
-            Box::new(org::OrgEncoder::new()),
-            Box::new(org::OrgDecoder::new()),
-        ),
-        Scheme::Dbi => (
-            Box::new(dbi::DbiEncoder::new()),
-            Box::new(dbi::DbiDecoder::new()),
-        ),
-        Scheme::BdeOrg => (
-            Box::new(bde_org::BdeOrgEncoder::new(cfg.table_size)),
-            Box::new(bde_org::BdeOrgDecoder::new(cfg.table_size)),
-        ),
-        Scheme::Bde => (
-            Box::new(mbdc::MbdcEncoder::new(cfg.table_size)),
-            Box::new(mbdc::MbdcDecoder::new(cfg.table_size)),
-        ),
-        Scheme::ZacDest => (
-            Box::new(zac_dest::ZacDestEncoder::new(cfg.clone())),
-            Box::new(zac_dest::ZacDestDecoder::new(cfg.clone())),
-        ),
-    }
+    let codec = Codec::from_config(cfg);
+    (codec.encoder, codec.decoder)
 }
 
-/// Convenience: run a word stream through one chip's encoder + channel +
-/// decoder, returning reconstructed words and accumulating stats/energy.
-/// Batch-first: fixed [`ENCODE_BATCH`]-word chunks over preallocated
-/// buffers, no per-word dispatch or channel calls.
+/// **Deprecated shim** — run a word stream through one chip's encoder +
+/// channel + decoder, returning reconstructed words and accumulating
+/// stats/energy into the caller's `chan`/`stats`. Delegates to the one
+/// shared batch loop ([`lane::drive_batches`]); prefer
+/// [`Session`](crate::session::Session) for whole-trace runs.
 pub fn run_chip_stream(
     cfg: &ZacConfig,
     words: &[u64],
@@ -138,17 +143,10 @@ pub fn run_chip_stream(
     chan: &mut ChipChannel,
     stats: &mut EncodeStats,
 ) -> Vec<u64> {
-    assert_eq!(words.len(), approx.len());
-    let (mut enc, mut dec) = make_codec(cfg);
+    let mut codec = Codec::from_config(cfg);
     let mut out = Vec::with_capacity(words.len());
     let mut wires = [WireWord::raw(0); ENCODE_BATCH];
-    for (wchunk, achunk) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
-        let buf = &mut wires[..wchunk.len()];
-        enc.encode_batch(wchunk, achunk, buf);
-        chan.transmit_batch(buf);
-        stats.record_batch(buf, wchunk);
-        dec.decode_batch(buf, &mut out);
-    }
+    lane::drive_batches(&mut codec, chan, stats, words, approx, &mut wires, &mut out);
     out
 }
 

@@ -52,6 +52,16 @@ impl ChipDecoder for OrgDecoder {
     fn reset(&mut self) {}
 }
 
+/// Self-register ORG in a [`CodecRegistry`](super::registry::CodecRegistry).
+pub fn register(reg: &mut super::registry::CodecRegistry) {
+    reg.register("ORG", |_spec| {
+        Ok(super::registry::Codec::new(
+            Box::new(OrgEncoder::new()),
+            Box::new(OrgDecoder::new()),
+        ))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,422 @@
+//! Open codec registry: a string-keyed table of factory functions that
+//! resolves a [`CodecSpec`] into a [`Codec`] handle (the matched
+//! encoder/decoder pair).
+//!
+//! The five built-in schemes self-register
+//! ([`CodecRegistry::with_builtins`] calls each scheme module's
+//! `register`), and `registry.register("NAME", factory)` admits
+//! out-of-tree schemes without touching any dispatch `match` in
+//! `encoding/mod.rs` — the closed [`make_codec`](super::make_codec)
+//! construction path is now a thin shim over this registry.
+//!
+//! A [`CodecSpec`] is the uniform codec description every ingestion
+//! boundary produces (CLI flags, run-config TOML, sweep TOML, env
+//! overrides): a scheme name plus the per-scheme [`Knobs`] bag, with
+//! [`CodecSpec::validate`] enforced before any factory runs.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+use super::config::{Scheme, ZacConfig};
+use super::knobs::{Knobs, TableKnobs, ZacKnobs};
+use super::{ChipDecoder, ChipEncoder};
+
+/// The matched sender-side encoder and receiver-side decoder of one
+/// chip's codec — constructed together so their mirrored table state
+/// can never be paired across schemes or knob settings.
+pub struct Codec {
+    pub encoder: Box<dyn ChipEncoder>,
+    pub decoder: Box<dyn ChipDecoder>,
+}
+
+impl Codec {
+    pub fn new(encoder: Box<dyn ChipEncoder>, decoder: Box<dyn ChipDecoder>) -> Codec {
+        Codec { encoder, decoder }
+    }
+
+    /// Build the codec a legacy [`ZacConfig`] describes, through the
+    /// default registry (the shim path under
+    /// [`make_codec`](super::make_codec)). Panics on an invalid config
+    /// — the legacy free functions had no error channel, and the ZAC
+    /// encoder constructor already panicked on bad knobs in v1; the
+    /// panic message carries the real validation error.
+    pub fn from_config(cfg: &ZacConfig) -> Codec {
+        default_registry()
+            .build(&CodecSpec::from_config(cfg))
+            .unwrap_or_else(|e| panic!("legacy ZacConfig codec construction failed: {e}"))
+    }
+
+    /// Reset both sides (tables; channel line state is channel-side).
+    pub fn reset(&mut self) {
+        self.encoder.reset();
+        self.decoder.reset();
+    }
+
+    /// The scheme label the encoder reports (wire-stat bucketing).
+    pub fn scheme(&self) -> Scheme {
+        self.encoder.scheme()
+    }
+}
+
+/// A codec description: registry key plus the knobs that scheme
+/// understands. Parsed uniformly from CLI flags, env overrides and
+/// sweep/run TOML via [`CodecSpec::set_knob`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodecSpec {
+    /// Registry key (Table I label for the built-ins, e.g. `"OHE"`;
+    /// aliases like `"zac-dest"` resolve through [`Scheme::parse`]).
+    pub scheme: String,
+    /// Per-scheme knob bag.
+    pub knobs: Knobs,
+}
+
+impl CodecSpec {
+    /// Spec for a scheme by name, with that scheme's default knobs
+    /// (out-of-tree names get [`Knobs::None`]; their factories carry
+    /// their own configuration).
+    pub fn named(scheme: &str) -> CodecSpec {
+        let knobs = match Scheme::parse(scheme) {
+            Some(s) => Knobs::for_scheme(s),
+            None => Knobs::None,
+        };
+        CodecSpec {
+            scheme: scheme.to_string(),
+            knobs,
+        }
+    }
+
+    /// Spec with an explicit knob bag.
+    pub fn with_knobs(scheme: &str, knobs: Knobs) -> CodecSpec {
+        CodecSpec {
+            scheme: scheme.to_string(),
+            knobs,
+        }
+    }
+
+    /// ZAC-DEST at a similarity limit (other knobs at paper defaults).
+    pub fn zac(similarity_limit_pct: u32) -> CodecSpec {
+        CodecSpec::with_knobs("OHE", Knobs::Zac(ZacKnobs::limit(similarity_limit_pct)))
+    }
+
+    /// ZAC-DEST with all three §V knobs (chunk width 8, byte data).
+    pub fn zac_full(limit_pct: u32, truncation_bits: u32, tolerance_bits: u32) -> CodecSpec {
+        CodecSpec::with_knobs(
+            "OHE",
+            Knobs::Zac(ZacKnobs::full(limit_pct, truncation_bits, tolerance_bits)),
+        )
+    }
+
+    /// ZAC-DEST for IEEE-754 f32 weight traffic (sign+exponent pinned).
+    pub fn zac_weights(limit_pct: u32) -> CodecSpec {
+        CodecSpec::with_knobs("OHE", Knobs::Zac(ZacKnobs::weights(limit_pct)))
+    }
+
+    /// The ZAC knobs, when this spec carries them.
+    pub fn zac_knobs(&self) -> Option<ZacKnobs> {
+        match self.knobs {
+            Knobs::Zac(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Mutable access to the ZAC knobs, when this spec carries them.
+    pub fn zac_knobs_mut(&mut self) -> Option<&mut ZacKnobs> {
+        match &mut self.knobs {
+            Knobs::Zac(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Table size (64 for knob-free schemes).
+    pub fn table_size(&self) -> usize {
+        self.knobs.table_size()
+    }
+
+    /// Validate the spec (non-empty scheme name + knob invariants).
+    /// Every ingestion boundary calls this before a codec is built.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.scheme.trim().is_empty(), "empty codec scheme name");
+        self.knobs.validate()
+    }
+
+    /// Apply one knob by key — the single ingestion path shared by CLI
+    /// flags, run-config TOML and env overrides. Keys a scheme does not
+    /// have are rejected (the old god-struct silently absorbed them).
+    pub fn set_knob(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        fn num(key: &str, value: &str) -> anyhow::Result<u64> {
+            value
+                .trim()
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("knob {key} = {value:?}: {e}"))
+        }
+        fn boolean(key: &str, value: &str) -> anyhow::Result<bool> {
+            match value.trim() {
+                "true" | "1" => Ok(true),
+                "false" | "0" => Ok(false),
+                other => Err(anyhow::anyhow!("knob {key} = {other:?}: expected true/false")),
+            }
+        }
+        match (&mut self.knobs, key) {
+            (Knobs::Zac(k), "limit" | "similarity_limit") => {
+                k.similarity_limit_pct = num(key, value)? as u32;
+            }
+            (Knobs::Zac(k), "chunk_width") => k.chunk_width = num(key, value)? as u32,
+            (Knobs::Zac(k), "truncation") => k.truncation_bits = num(key, value)? as u32,
+            (Knobs::Zac(k), "tolerance") => k.tolerance_bits = num(key, value)? as u32,
+            (Knobs::Zac(k), "table_size") => k.table_size = num(key, value)? as usize,
+            (Knobs::Zac(k), "weights_mode") => {
+                if boolean(key, value)? {
+                    // One definition of the weights-mode geometry/mask.
+                    let w = ZacKnobs::weights(k.similarity_limit_pct);
+                    k.chunk_width = w.chunk_width;
+                    k.tolerance_mask_override = w.tolerance_mask_override;
+                }
+            }
+            (Knobs::Table(k), "table_size") => k.table_size = num(key, value)? as usize,
+            _ => anyhow::bail!(
+                "scheme {:?} has no knob {key:?} (per-scheme knobs replaced the ZacConfig god-struct)",
+                self.scheme
+            ),
+        }
+        Ok(())
+    }
+
+    /// Short label for figure legends / sweep rows, e.g. `ZAC(L80,T16,O8)`.
+    pub fn label(&self) -> String {
+        match &self.knobs {
+            Knobs::Zac(k) => format!(
+                "ZAC(L{},T{},O{})",
+                k.similarity_limit_pct,
+                k.truncated_bits_total(),
+                k.tolerance_mask().count_ones()
+            ),
+            _ => match Scheme::parse(&self.scheme) {
+                Some(s) => s.label().to_string(),
+                None => self.scheme.clone(),
+            },
+        }
+    }
+
+    /// The spec a legacy [`ZacConfig`] describes.
+    pub fn from_config(cfg: &ZacConfig) -> CodecSpec {
+        let knobs = match cfg.scheme {
+            Scheme::ZacDest => Knobs::Zac(ZacKnobs::from_config(cfg)),
+            Scheme::Bde | Scheme::BdeOrg => Knobs::Table(TableKnobs {
+                table_size: cfg.table_size,
+            }),
+            Scheme::Org | Scheme::Dbi => Knobs::None,
+        };
+        CodecSpec {
+            scheme: cfg.scheme.label().to_string(),
+            knobs,
+        }
+    }
+
+    /// The legacy [`ZacConfig`] equivalent (errors for out-of-tree
+    /// schemes, which have no god-struct representation).
+    pub fn to_config(&self) -> anyhow::Result<ZacConfig> {
+        let scheme = Scheme::parse(&self.scheme).ok_or_else(|| {
+            anyhow::anyhow!("scheme {:?} has no legacy ZacConfig equivalent", self.scheme)
+        })?;
+        let mut cfg = match self.knobs {
+            Knobs::Zac(k) => k.to_config(),
+            Knobs::Table(t) => {
+                let mut c = ZacConfig::scheme(scheme);
+                c.table_size = t.table_size;
+                c
+            }
+            Knobs::None => ZacConfig::scheme(scheme),
+        };
+        cfg.scheme = scheme;
+        Ok(cfg)
+    }
+}
+
+/// A codec factory: builds the matched encoder/decoder pair for one
+/// chip from a validated spec.
+pub type CodecFactory = Arc<dyn Fn(&CodecSpec) -> anyhow::Result<Codec> + Send + Sync>;
+
+/// String-keyed factory table. Cloning is cheap (the factories are
+/// shared), so sessions and worker threads each hold their own handle.
+#[derive(Clone, Default)]
+pub struct CodecRegistry {
+    factories: BTreeMap<String, CodecFactory>,
+}
+
+fn canonical(scheme: &str) -> String {
+    scheme.trim().to_ascii_uppercase()
+}
+
+impl CodecRegistry {
+    /// An empty registry (no schemes).
+    pub fn empty() -> CodecRegistry {
+        CodecRegistry::default()
+    }
+
+    /// Registry with the five paper schemes, each registered by its own
+    /// module — no central dispatch `match` to extend.
+    pub fn with_builtins() -> CodecRegistry {
+        let mut reg = CodecRegistry::empty();
+        super::org::register(&mut reg);
+        super::dbi::register(&mut reg);
+        super::bde_org::register(&mut reg);
+        super::mbdc::register(&mut reg);
+        super::zac_dest::register(&mut reg);
+        reg
+    }
+
+    /// Register (or replace) a scheme factory under `scheme`
+    /// (case-insensitive). This is the extension point for out-of-tree
+    /// codecs: registering requires no edits to `encoding/`.
+    pub fn register<F>(&mut self, scheme: &str, factory: F)
+    where
+        F: Fn(&CodecSpec) -> anyhow::Result<Codec> + Send + Sync + 'static,
+    {
+        self.factories.insert(canonical(scheme), Arc::new(factory));
+    }
+
+    fn lookup(&self, scheme: &str) -> Option<&CodecFactory> {
+        if let Some(f) = self.factories.get(&canonical(scheme)) {
+            return Some(f);
+        }
+        // Built-in aliases ("ZAC", "zac-dest", "MBDC", ...) resolve to
+        // the canonical Table I label.
+        Scheme::parse(scheme).and_then(|s| self.factories.get(s.label()))
+    }
+
+    /// Whether `scheme` (or a built-in alias of it) is registered.
+    pub fn contains(&self, scheme: &str) -> bool {
+        self.lookup(scheme).is_some()
+    }
+
+    /// Registered scheme keys, sorted.
+    pub fn schemes(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Validate `spec` and build its codec.
+    pub fn build(&self, spec: &CodecSpec) -> anyhow::Result<Codec> {
+        spec.validate()?;
+        let factory = self.lookup(&spec.scheme).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown codec scheme {:?}; registered: {:?}",
+                spec.scheme,
+                self.schemes()
+            )
+        })?;
+        factory(spec)
+    }
+}
+
+/// The process-wide registry of built-in schemes. Sessions clone it and
+/// may extend their copy without affecting other callers.
+pub fn default_registry() -> &'static CodecRegistry {
+    static DEFAULT: OnceLock<CodecRegistry> = OnceLock::new();
+    DEFAULT.get_or_init(CodecRegistry::with_builtins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::wire::WireWord;
+
+    #[test]
+    fn builtins_register_all_five_schemes() {
+        let reg = CodecRegistry::with_builtins();
+        for s in Scheme::all() {
+            assert!(reg.contains(s.label()), "{} missing", s.label());
+            let codec = reg.build(&CodecSpec::named(s.label())).unwrap();
+            assert_eq!(codec.scheme(), s, "{}", s.label());
+        }
+        assert_eq!(reg.schemes().len(), 5);
+    }
+
+    #[test]
+    fn aliases_resolve_to_builtins() {
+        let reg = CodecRegistry::with_builtins();
+        for alias in ["zac-dest", "ZAC", "ohe", "mbdc", "BdeOrg"] {
+            assert!(reg.contains(alias), "{alias}");
+            reg.build(&CodecSpec::named(alias)).unwrap();
+        }
+        assert!(!reg.contains("NOPE"));
+    }
+
+    #[test]
+    fn build_validates_the_spec_first() {
+        let reg = CodecRegistry::with_builtins();
+        let mut spec = CodecSpec::zac(80);
+        spec.zac_knobs_mut().unwrap().similarity_limit_pct = 200;
+        let err = reg.build(&spec).unwrap_err().to_string();
+        assert!(err.contains("similarity limit"), "{err}");
+        let err = reg
+            .build(&CodecSpec::named("UNREGISTERED"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("registered"), "{err}");
+    }
+
+    #[test]
+    fn set_knob_rejects_foreign_knobs() {
+        let mut spec = CodecSpec::named("BDE");
+        spec.set_knob("table_size", "16").unwrap();
+        assert_eq!(spec.table_size(), 16);
+        let err = spec.set_knob("limit", "80").unwrap_err().to_string();
+        assert!(err.contains("no knob"), "{err}");
+        let mut org = CodecSpec::named("ORG");
+        assert!(org.set_knob("table_size", "16").is_err());
+        let mut zac = CodecSpec::zac(80);
+        zac.set_knob("weights_mode", "true").unwrap();
+        assert_eq!(
+            zac.zac_knobs().unwrap().tolerance_mask_override,
+            Some(0xFF80_0000_FF80_0000)
+        );
+        assert!(zac.set_knob("limit", "eighty").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_through_legacy_config() {
+        for spec in [
+            CodecSpec::named("ORG"),
+            CodecSpec::named("DBI"),
+            CodecSpec::named("BDE"),
+            CodecSpec::named("BDE_ORG"),
+            CodecSpec::zac(75),
+            CodecSpec::zac_full(70, 2, 1),
+            CodecSpec::zac_weights(60),
+        ] {
+            let cfg = spec.to_config().unwrap();
+            assert_eq!(CodecSpec::from_config(&cfg), spec, "{}", spec.label());
+            assert_eq!(cfg.label(), spec.label(), "{}", spec.label());
+        }
+        assert!(CodecSpec::named("CUSTOM").to_config().is_err());
+    }
+
+    #[test]
+    fn out_of_tree_factory_registers_and_builds() {
+        struct XorEnc;
+        impl crate::encoding::ChipEncoder for XorEnc {
+            fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+                WireWord::raw(word ^ 0xA5A5_A5A5_A5A5_A5A5)
+            }
+            fn scheme(&self) -> Scheme {
+                Scheme::Org // closed legacy enum: reuse the nearest label
+            }
+            fn reset(&mut self) {}
+        }
+        struct XorDec;
+        impl crate::encoding::ChipDecoder for XorDec {
+            fn decode(&mut self, wire: &WireWord) -> u64 {
+                wire.data ^ 0xA5A5_A5A5_A5A5_A5A5
+            }
+            fn reset(&mut self) {}
+        }
+        let mut reg = CodecRegistry::with_builtins();
+        reg.register("XOR_MASK", |_spec| {
+            Ok(Codec::new(Box::new(XorEnc), Box::new(XorDec)))
+        });
+        assert_eq!(reg.schemes().len(), 6);
+        let mut codec = reg.build(&CodecSpec::named("xor_mask")).unwrap();
+        let wire = codec.encoder.encode(42, true);
+        assert_eq!(codec.decoder.decode(&wire), 42);
+    }
+}

@@ -231,6 +231,21 @@ impl ChipDecoder for ZacDestDecoder {
     }
 }
 
+/// Self-register ZAC-DEST (Table I "OHE") in a
+/// [`CodecRegistry`](super::registry::CodecRegistry).
+pub fn register(reg: &mut super::registry::CodecRegistry) {
+    reg.register("OHE", |spec| {
+        let knobs = spec.zac_knobs().ok_or_else(|| {
+            anyhow::anyhow!("OHE codec requires ZAC knobs, got {:?}", spec.knobs)
+        })?;
+        let cfg = knobs.to_config();
+        Ok(super::registry::Codec::new(
+            Box::new(ZacDestEncoder::new(cfg.clone())),
+            Box::new(ZacDestDecoder::new(cfg)),
+        ))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,16 +8,15 @@
 
 use anyhow::Result;
 
-use super::FigureCtx;
-use crate::coordinator::simulate_bytes;
-use crate::encoding::{config::Ablation, Scheme, ZacConfig};
+use super::{simulate, FigureCtx};
+use crate::encoding::{config::Ablation, CodecSpec};
 use crate::util::table::{pct, TextTable};
 use crate::workloads::Kind;
 
-fn with_ablation(limit: u32, ab: Ablation) -> ZacConfig {
-    let mut cfg = ZacConfig::zac(limit);
-    cfg.ablation = ab;
-    cfg
+fn with_ablation(limit: u32, ab: Ablation) -> CodecSpec {
+    let mut spec = CodecSpec::zac(limit);
+    spec.zac_knobs_mut().expect("zac spec").ablation = ab;
+    spec
 }
 
 /// Render the full ablation table.
@@ -27,8 +26,8 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
     let sparse = ctx.workload_trace(Kind::Svm);
 
     // Baselines.
-    let base_img = simulate_bytes(&ZacConfig::zac(70), &image, true);
-    let base_sparse = simulate_bytes(&ZacConfig::zac(70), &sparse, true);
+    let base_img = simulate(&CodecSpec::zac(70), &image)?;
+    let base_sparse = simulate(&CodecSpec::zac(70), &sparse)?;
 
     let row = |t: &mut TextTable, name: &str, trace: &str, ones: u64, base: u64| {
         let delta = 100.0 * (ones as f64 / base as f64 - 1.0);
@@ -53,7 +52,7 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
         ohe_index: false,
         ..Ablation::default()
     };
-    let out = simulate_bytes(&with_ablation(70, ab), &image, true);
+    let out = simulate(&with_ablation(70, ab), &image)?;
     row(
         &mut t,
         "binary skip index (no OHE)",
@@ -74,7 +73,7 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
         zero_skip: false,
         ..Ablation::default()
     };
-    let out = simulate_bytes(&with_ablation(70, ab), &sparse, true);
+    let out = simulate(&with_ablation(70, ab), &sparse)?;
     row(
         &mut t,
         "no zero bypass",
@@ -88,7 +87,7 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
         dedup_update: false,
         ..Ablation::default()
     };
-    let out = simulate_bytes(&with_ablation(70, ab), &image, true);
+    let out = simulate(&with_ablation(70, ab), &image)?;
     row(
         &mut t,
         "update-always table (no dedup)",
@@ -99,9 +98,9 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
 
     // 4. Table size sweep.
     for size in [16usize, 32, 64] {
-        let mut cfg = ZacConfig::zac(70);
-        cfg.table_size = size;
-        let out = simulate_bytes(&cfg, &image, true);
+        let mut spec = CodecSpec::zac(70);
+        spec.zac_knobs_mut().expect("zac spec").table_size = size;
+        let out = simulate(&spec, &image)?;
         row(
             &mut t,
             &format!("table size {size}"),
@@ -112,7 +111,7 @@ pub fn ablations(ctx: &FigureCtx) -> Result<String> {
     }
 
     // Context: BDE baseline for scale.
-    let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &image, true);
+    let bde = simulate(&CodecSpec::named("BDE"), &image)?;
     Ok(format!(
         "Ablations — each §IV/§V design choice isolated (L70, vs the\n\
          paper-default configuration; BDE on the same image trace: {} 1s,\n\
@@ -143,8 +142,8 @@ mod tests {
     #[test]
     fn ohe_index_saves_ones_vs_binary() {
         let bytes = image_like(65536, 1);
-        let default = simulate_bytes(&ZacConfig::zac(70), &bytes, true);
-        let binary = simulate_bytes(
+        let default = simulate(&CodecSpec::zac(70), &bytes).unwrap();
+        let binary = simulate(
             &with_ablation(
                 70,
                 Ablation {
@@ -153,8 +152,8 @@ mod tests {
                 },
             ),
             &bytes,
-            true,
-        );
+        )
+        .unwrap();
         // Reconstructions identical (index encoding is energy-only)...
         assert_eq!(default.bytes, binary.bytes);
         // ...but the one-hot index costs fewer 1s (§IV-B: ≤6 → exactly 1).
@@ -174,8 +173,8 @@ mod tests {
             let p = r.range(0, bytes.len());
             bytes[p] = r.next_u32() as u8;
         }
-        let on = simulate_bytes(&ZacConfig::zac(70), &bytes, true);
-        let off = simulate_bytes(
+        let on = simulate(&CodecSpec::zac(70), &bytes).unwrap();
+        let off = simulate(
             &with_ablation(
                 70,
                 Ablation {
@@ -184,8 +183,8 @@ mod tests {
                 },
             ),
             &bytes,
-            true,
-        );
+        )
+        .unwrap();
         assert!(
             on.counts.termination_ones <= off.counts.termination_ones,
             "zero bypass must not cost energy on sparse traffic"
@@ -197,22 +196,28 @@ mod tests {
         // Correctness must hold under every ablation combination: exact
         // traffic round-trips, approx stays within the envelope.
         let bytes = image_like(16384, 3);
-        let cfg0 = ZacConfig::zac(75);
         for ohe in [true, false] {
             for zero in [true, false] {
                 for dedup in [true, false] {
-                    let mut cfg = cfg0.clone();
-                    cfg.ablation = Ablation {
-                        ohe_index: ohe,
-                        zero_skip: zero,
-                        dedup_update: dedup,
-                    };
-                    // Exact traffic is always exact.
-                    let exact = simulate_bytes(&cfg, &bytes, false);
+                    let spec = with_ablation(
+                        75,
+                        Ablation {
+                            ohe_index: ohe,
+                            zero_skip: zero,
+                            dedup_update: dedup,
+                        },
+                    );
+                    // Exact traffic is always exact (Critical session).
+                    let exact = crate::session::Session::builder()
+                        .codec(spec.clone())
+                        .build()
+                        .unwrap()
+                        .run(&crate::session::Trace::from_bytes(bytes.clone()))
+                        .unwrap();
                     assert_eq!(exact.bytes, bytes, "ohe={ohe} zero={zero} dedup={dedup}");
                     // Approx stays within the envelope.
-                    let out = simulate_bytes(&cfg, &bytes, true);
-                    let thr = cfg.dissimilar_threshold();
+                    let out = simulate(&spec, &bytes).unwrap();
+                    let thr = spec.zac_knobs().unwrap().dissimilar_threshold();
                     let a = crate::trace::bytes_to_chip_words(&bytes);
                     let b = crate::trace::bytes_to_chip_words(&out.bytes);
                     for (wa, wb) in a.iter().zip(&b) {
@@ -233,9 +238,9 @@ mod tests {
         let bytes = image_like(65536, 4);
         let mut prev = u64::MAX;
         for size in [16usize, 32, 64] {
-            let mut cfg = ZacConfig::zac(70);
-            cfg.table_size = size;
-            let out = simulate_bytes(&cfg, &bytes, true);
+            let mut spec = CodecSpec::zac(70);
+            spec.zac_knobs_mut().unwrap().table_size = size;
+            let out = simulate(&spec, &bytes).unwrap();
             // Bigger CAM → more skip opportunities → allow small jitter.
             assert!(
                 out.counts.termination_ones <= prev + prev / 10,

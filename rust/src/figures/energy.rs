@@ -3,10 +3,9 @@
 
 use anyhow::Result;
 
-use super::FigureCtx;
+use super::{simulate, simulate_weights, FigureCtx};
 use crate::channel::energy::Ddr4Breakdown;
-use crate::coordinator::simulate_bytes;
-use crate::encoding::{Outcome, Scheme, ZacConfig};
+use crate::encoding::{CodecSpec, Outcome, Scheme};
 use crate::util::table::{pct, TextTable};
 use crate::workloads::Kind;
 
@@ -51,11 +50,11 @@ pub fn fig10(ctx: &FigureCtx) -> Result<String> {
     let mut mean = [[0.0f64; 2]; 3];
     for kind in Kind::all() {
         let bytes = ctx.workload_trace(kind);
-        let base = simulate_bytes(&ZacConfig::scheme(Scheme::Org), &bytes, true);
+        let base = simulate(&CodecSpec::named("ORG"), &bytes)?;
         let mut row = vec![kind.label().to_string()];
         let mut sw_cells = Vec::new();
         for (i, s) in schemes.iter().enumerate() {
-            let out = simulate_bytes(&ZacConfig::scheme(*s), &bytes, true);
+            let out = simulate(&CodecSpec::named(s.label()), &bytes)?;
             let ts = out.counts.termination_savings_vs(&base.counts);
             let ss = out.counts.switching_savings_vs(&base.counts);
             mean[i][0] += ts / 5.0;
@@ -94,11 +93,11 @@ pub fn fig14(ctx: &FigureCtx) -> Result<String> {
     let mut mean = [[0.0f64; 2]; 4];
     for kind in Kind::all() {
         let bytes = ctx.workload_trace(kind);
-        let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+        let base = simulate(&CodecSpec::named("BDE"), &bytes)?;
         let mut row = vec![kind.label().to_string()];
         let mut sw = Vec::new();
         for (i, l) in limits.iter().enumerate() {
-            let out = simulate_bytes(&ZacConfig::zac(*l), &bytes, true);
+            let out = simulate(&CodecSpec::zac(*l), &bytes)?;
             let ts = out.counts.termination_savings_vs(&base.counts);
             let ss = out.counts.switching_savings_vs(&base.counts);
             mean[i][0] += ts / 5.0;
@@ -141,7 +140,7 @@ pub fn fig22(ctx: &FigureCtx) -> Result<String> {
         crate::trace::f32s_to_bytes(&xs)
     };
     for (traffic, bytes) in [("images", &img_bytes), ("weights", &weight_bytes)] {
-        let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), bytes, true);
+        let bde = simulate(&CodecSpec::named("BDE"), bytes)?;
         t.row(vec![
             traffic.into(),
             "BDE".into(),
@@ -151,16 +150,11 @@ pub fn fig22(ctx: &FigureCtx) -> Result<String> {
             pct(100.0 * bde.stats.fraction(Outcome::Raw)),
         ]);
         for limit in [90u32, 80, 75, 70] {
-            let cfg = if traffic == "weights" {
-                ZacConfig::zac_weights(limit)
-            } else {
-                ZacConfig::zac(limit)
-            };
             let out = if traffic == "weights" {
                 let xs = crate::trace::bytes_to_f32s(bytes);
-                crate::coordinator::simulate_f32s(&cfg, &xs, true).1
+                simulate_weights(&CodecSpec::zac_weights(limit), &xs)?
             } else {
-                simulate_bytes(&cfg, bytes, true)
+                simulate(&CodecSpec::zac(limit), bytes)?
             };
             t.row(vec![
                 traffic.into(),
@@ -193,9 +187,9 @@ mod tests {
         let mut means = [0.0f64; 3];
         for kind in Kind::all() {
             let bytes = ctx.workload_trace(kind);
-            let base = simulate_bytes(&ZacConfig::scheme(Scheme::Org), &bytes, true);
+            let base = simulate(&CodecSpec::named("ORG"), &bytes).unwrap();
             for (i, s) in [Scheme::Dbi, Scheme::BdeOrg, Scheme::Bde].iter().enumerate() {
-                let out = simulate_bytes(&ZacConfig::scheme(*s), &bytes, true);
+                let out = simulate(&CodecSpec::named(s.label()), &bytes).unwrap();
                 means[i] += out.counts.termination_savings_vs(&base.counts) / 5.0;
             }
         }
@@ -209,10 +203,10 @@ mod tests {
     fn fig14_savings_increase_as_limit_drops() {
         let ctx = FigureCtx::new(42, SuiteBudget::quick());
         let bytes = ctx.workload_trace(Kind::ImageNet);
-        let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
+        let base = simulate(&CodecSpec::named("BDE"), &bytes).unwrap();
         let mut prev = -1.0;
         for l in [90u32, 80, 75, 70] {
-            let out = simulate_bytes(&ZacConfig::zac(l), &bytes, true);
+            let out = simulate(&CodecSpec::zac(l), &bytes).unwrap();
             let s = out.counts.termination_savings_vs(&base.counts);
             assert!(s >= prev, "L{l}: savings {s} < previous {prev}");
             prev = s;
@@ -224,7 +218,7 @@ mod tests {
     fn fig22_most_accesses_encoded() {
         let ctx = FigureCtx::new(42, SuiteBudget::quick());
         let bytes = ctx.workload_trace(Kind::ImageNet);
-        let out = simulate_bytes(&ZacConfig::zac(80), &bytes, true);
+        let out = simulate(&CodecSpec::zac(80), &bytes).unwrap();
         // Paper: only ~6.5% of accesses stay unencoded.
         assert!(
             out.stats.unencoded_fraction() < 0.5,

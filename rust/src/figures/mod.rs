@@ -17,8 +17,30 @@ use std::sync::OnceLock;
 use anyhow::Result;
 
 use crate::datasets;
+use crate::encoding::CodecSpec;
 use crate::runtime::Runtime;
+use crate::session::{RunReport, Session, Trace, TrafficClass};
 use crate::workloads::{Kind, Suite, SuiteBudget};
+
+/// Drive a byte trace through a single-channel approximate-traffic
+/// [`Session`] — the one simulate call every figure generator shares.
+pub(crate) fn simulate(spec: &CodecSpec, bytes: &[u8]) -> Result<RunReport> {
+    Session::builder()
+        .codec(spec.clone())
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .run(&Trace::from_bytes(bytes.to_vec()))
+}
+
+/// Same for f32 weight traffic: the spec's tolerance-mask override is
+/// projected per chip by the session's weights codec path.
+pub(crate) fn simulate_weights(spec: &CodecSpec, xs: &[f32]) -> Result<RunReport> {
+    Session::builder()
+        .codec_weights(spec.clone())
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .run(&Trace::from_f32s(xs))
+}
 
 pub use ablations::ablations;
 pub use energy::{fig10, fig14, fig2, fig22, table1};

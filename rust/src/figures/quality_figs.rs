@@ -3,9 +3,8 @@
 
 use anyhow::Result;
 
-use super::FigureCtx;
-use crate::coordinator::simulate_bytes;
-use crate::encoding::{Scheme, ZacConfig};
+use super::{simulate, FigureCtx};
+use crate::encoding::CodecSpec;
 use crate::quality::psnr_u8;
 use crate::util::table::{f, pct, TextTable};
 use crate::workloads::{cnn, Kind};
@@ -19,7 +18,7 @@ pub fn fig11(ctx: &FigureCtx) -> Result<String> {
     let mut t = TextTable::new(&["model", "original", "L90", "L80", "L75", "L70"]);
     let mut recon_sets = Vec::new();
     for l in LIMITS {
-        recon_sets.push(suite.reconstruct_images(&ZacConfig::zac(l), &suite.test_images).0);
+        recon_sets.push(suite.reconstruct_images(&CodecSpec::zac(l), &suite.test_images)?.0);
     }
     for (m, (params, &clean)) in suite.zoo.iter().zip(&suite.zoo_clean_acc).enumerate() {
         let mut row = vec![format!("cnn-{m}"), f(clean, 3)];
@@ -44,7 +43,7 @@ pub fn fig12(ctx: &FigureCtx) -> Result<String> {
     let mut t = TextTable::new(&["similarity limit", "PSNR (dB)"]);
     t.row(vec!["original".into(), "inf".into()]);
     for l in LIMITS {
-        let out = simulate_bytes(&ZacConfig::zac(l), &img.data, true);
+        let out = simulate(&CodecSpec::zac(l), &img.data)?;
         let rec = img.with_data(out.bytes.clone());
         let p = psnr_u8(&img.data, &rec.data);
         if std::env::var("ZAC_DUMP_IMAGES").is_ok() {
@@ -66,7 +65,7 @@ pub fn fig13(ctx: &FigureCtx) -> Result<String> {
     for kind in Kind::all() {
         let mut row = vec![kind.label().to_string()];
         for l in LIMITS {
-            let r = suite.eval(&ZacConfig::zac(l), kind)?;
+            let r = suite.eval(&CodecSpec::zac(l), kind)?;
             row.push(f(r.quality, 3));
         }
         t.row(row);
@@ -89,17 +88,17 @@ pub fn fig15(ctx: &FigureCtx) -> Result<String> {
     ]);
     for l in LIMITS {
         for tr in truncs {
-            let cfg = ZacConfig::zac_full(l, tr, 0);
+            let spec = CodecSpec::zac_full(l, tr, 0);
             let mut term = 0.0;
             let mut sw = 0.0;
             let mut q = 0.0;
             for kind in Kind::all() {
                 let bytes = ctx.workload_trace(kind);
-                let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
-                let out = simulate_bytes(&cfg, &bytes, true);
+                let base = simulate(&CodecSpec::named("BDE"), &bytes)?;
+                let out = simulate(&spec, &bytes)?;
                 term += out.counts.termination_savings_vs(&base.counts) / 5.0;
                 sw += out.counts.switching_savings_vs(&base.counts) / 5.0;
-                q += suite.eval(&cfg, kind)?.quality / 5.0;
+                q += suite.eval(&spec, kind)?.quality / 5.0;
             }
             t.row(vec![
                 format!("L{l} T{}", tr * 8),
@@ -128,15 +127,15 @@ pub fn fig16(ctx: &FigureCtx) -> Result<String> {
     for l in LIMITS {
         for tr in [0u32, 1, 2] {
             for tol in [0u32, 1, 2] {
-                let cfg = ZacConfig::zac_full(l, tr, tol);
+                let spec = CodecSpec::zac_full(l, tr, tol);
                 let mut term = 0.0;
                 let mut q = 0.0;
                 for kind in Kind::all() {
                     let bytes = ctx.workload_trace(kind);
-                    let base = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &bytes, true);
-                    let out = simulate_bytes(&cfg, &bytes, true);
+                    let base = simulate(&CodecSpec::named("BDE"), &bytes)?;
+                    let out = simulate(&spec, &bytes)?;
                     term += out.counts.termination_savings_vs(&base.counts) / 5.0;
-                    q += suite.eval(&cfg, kind)?.quality / 5.0;
+                    q += suite.eval(&spec, kind)?.quality / 5.0;
                 }
                 t.row(vec![
                     format!("{l}"),
@@ -162,9 +161,9 @@ pub fn fig17(ctx: &FigureCtx) -> Result<String> {
     let mut t = TextTable::new(&["config", "ImageNet quality", "ResNet quality"]);
     for l in LIMITS {
         for tr in [0u32, 2] {
-            let cfg = ZacConfig::zac_full(l, tr, 0);
-            let a = suite.eval(&cfg, Kind::ImageNet)?;
-            let b = suite.eval(&cfg, Kind::ResNet)?;
+            let spec = CodecSpec::zac_full(l, tr, 0);
+            let a = suite.eval(&spec, Kind::ImageNet)?;
+            let b = suite.eval(&spec, Kind::ResNet)?;
             t.row(vec![
                 format!("L{l} T{}", tr * 8),
                 f(a.quality, 3),

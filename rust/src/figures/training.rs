@@ -3,9 +3,8 @@
 
 use anyhow::Result;
 
-use super::FigureCtx;
-use crate::coordinator::{simulate_bytes, simulate_f32s};
-use crate::encoding::{Scheme, ZacConfig};
+use super::{simulate, simulate_weights, FigureCtx};
+use crate::encoding::CodecSpec;
 use crate::util::table::{f, pct, TextTable};
 use crate::workloads::Kind;
 
@@ -23,9 +22,9 @@ pub fn fig18(ctx: &FigureCtx) -> Result<String> {
     // trained-on-original model collapses and ZAC-aware training shows
     // its largest recovery (paper: up to 9x).
     for (l, tr) in [(80u32, 0u32), (75, 0), (70, 0), (70, 2), (70, 4)] {
-        let cfg = ZacConfig::zac_full(l, tr, 0);
-        let base = suite.eval(&cfg, Kind::ResNet)?;
-        let retrained = suite.resnet_trained_on_recon(&cfg)?;
+        let spec = CodecSpec::zac_full(l, tr, 0);
+        let base = suite.eval(&spec, Kind::ResNet)?;
+        let retrained = suite.resnet_trained_on_recon(&spec)?;
         let imp = if base.quality > 0.0 {
             retrained.quality / base.quality
         } else if retrained.quality > 0.0 {
@@ -53,18 +52,18 @@ pub fn fig18(ctx: &FigureCtx) -> Result<String> {
 /// reporting weight-trace termination savings vs BDE and quality.
 pub fn fig20(ctx: &FigureCtx) -> Result<String> {
     let suite = ctx.suite()?;
-    let img_cfg = ZacConfig::zac(90);
+    let img_spec = CodecSpec::zac(90);
     let flat = suite.resnet.flatten();
     let weight_bytes = crate::trace::f32s_to_bytes(&flat);
-    let bde = simulate_bytes(&ZacConfig::scheme(Scheme::Bde), &weight_bytes, true);
+    let bde = simulate(&CodecSpec::named("BDE"), &weight_bytes)?;
     let mut t = TextTable::new(&[
         "weight limit",
         "term savings vs BDE (weights)",
         "quality (img L90)",
     ]);
     for l in [70u32, 65, 60, 50] {
-        let wcfg = ZacConfig::zac_weights(l);
-        let r = suite.resnet_with_approx_weights(&wcfg, Some(&img_cfg))?;
+        let wspec = CodecSpec::zac_weights(l);
+        let r = suite.resnet_with_approx_weights(&wspec, Some(&img_spec))?;
         t.row(vec![
             format!("L{l}"),
             pct(r.run.counts.termination_savings_vs(&bde.counts)),
@@ -91,15 +90,15 @@ pub fn fig21(ctx: &FigureCtx) -> Result<String> {
         "recon-trained q",
     ]);
     for (wl, il) in [(70u32, 90u32), (60, 80), (50, 75)] {
-        let wcfg = ZacConfig::zac_weights(wl);
-        let icfg = ZacConfig::zac(il);
+        let wspec = CodecSpec::zac_weights(wl);
+        let ispec = CodecSpec::zac(il);
         // Original-trained model, approx weights + images.
-        let base = suite.resnet_with_approx_weights(&wcfg, Some(&icfg))?;
+        let base = suite.resnet_with_approx_weights(&wspec, Some(&ispec))?;
         // Re-trained on reconstructed images, then the same weight
         // approximation applied at inference.
-        let retrained = suite.resnet_trained_on_recon(&icfg)?;
+        let retrained = suite.resnet_trained_on_recon(&ispec)?;
         // Apply weight approximation to the retrained parameters.
-        let (recon_train, _) = suite.reconstruct_images(&icfg, &suite.train_images);
+        let (recon_train, _) = suite.reconstruct_images(&ispec, &suite.train_images)?;
         let (p, _) = crate::workloads::cnn::train(
             &suite.rt,
             &recon_train,
@@ -107,9 +106,9 @@ pub fn fig21(ctx: &FigureCtx) -> Result<String> {
             suite.budget.lr,
             suite.seed ^ 0x18,
         )?;
-        let (wf, _) = simulate_f32s(&wcfg, &p.flatten(), true);
+        let wf = simulate_weights(&wspec, &p.flatten())?.to_f32s();
         let p2 = p.unflatten(&wf);
-        let (recon_test, _) = suite.reconstruct_images(&icfg, &suite.test_images);
+        let (recon_test, _) = suite.reconstruct_images(&ispec, &suite.test_images)?;
         let acc = crate::workloads::cnn::accuracy(&suite.rt, &p2, &recon_test)?;
         let retrained_q =
             crate::quality::quality_ratio(acc, suite.resnet_clean_acc);

@@ -6,12 +6,13 @@
 //! The crate is the Layer-3 rust coordinator of a three-layer stack:
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: the DRAM-channel
-//!   data-encoding engines ([`encoding`]), the channel energy model
-//!   ([`channel`]), the trace/reconstruction machinery ([`trace`]), the
-//!   gate-level circuit overhead model ([`circuits`]), the streaming
-//!   [`coordinator`] that drives whole-workload simulations, and the
-//!   multi-channel [`system`] layer (sharded channel array + scenario
-//!   sweep engine) on top of it.
+//!   data-encoding engines ([`encoding`], constructed through the open
+//!   codec registry), the channel energy model ([`channel`]), the
+//!   trace/reconstruction machinery ([`trace`]), the gate-level circuit
+//!   overhead model ([`circuits`]), the [`coordinator`] and multi-channel
+//!   [`system`] execution engines, and the unified [`session`] API
+//!   (`Session::builder()` over every simulate path — see
+//!   `ARCHITECTURE.md`).
 //! * **Layer 2** — JAX compute graphs for the five evaluation workloads,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through
 //!   [`runtime`] (PJRT CPU client; python never runs on the request path).
@@ -29,6 +30,7 @@ pub mod encoding;
 pub mod figures;
 pub mod quality;
 pub mod runtime;
+pub mod session;
 pub mod system;
 pub mod trace;
 pub mod util;

@@ -4,7 +4,9 @@
 //! * `figure <id>`   — regenerate a paper figure/table (see DESIGN.md §6)
 //! * `figures`       — regenerate every figure
 //! * `encode`        — encode a hex trace (or a synthetic stream) and
-//!                     report energy + outcome statistics
+//!                     report energy + outcome statistics, optionally
+//!                     sharded across channels
+//! * `schemes`       — list the registered codec schemes
 //! * `workload <k>`  — evaluate one workload under a config
 //! * `run --config`  — full run from a TOML config file
 //! * `sweep`         — multi-channel scenario grid (channels × scheme ×
@@ -13,13 +15,19 @@
 //!                     `ZAC_BENCH_BYTES`
 //! * `circuit`       — §VI circuit-overhead report
 //! * `artifacts`     — list/verify the AOT artifacts
+//!
+//! Every codec flag funnels through the uniform `CodecSpec` ingestion
+//! path (`CodecSpec::set_knob` + `validate()`), the same one the TOML
+//! configs and env overrides use — a bad knob is an error, never a
+//! silent fallback.
 
 use anyhow::Result;
 
-use zac_dest::coordinator::{simulate_bytes, RunConfig};
-use zac_dest::encoding::{Outcome, Scheme, ZacConfig};
+use zac_dest::coordinator::RunConfig;
+use zac_dest::encoding::{default_registry, CodecSpec, Knobs, Outcome, Scheme};
 use zac_dest::figures::{self, FigureCtx};
 use zac_dest::runtime::Runtime;
+use zac_dest::session::{Session, Trace, TrafficClass};
 use zac_dest::util::cli::Command;
 use zac_dest::util::table::{pct, TextTable};
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
@@ -41,13 +49,16 @@ fn app() -> Command {
         .subcommand(
             Command::new("encode", "encode a trace and report energy")
                 .opt("input", "-", "hex trace file ('-' = synthetic stream)")
-                .opt("scheme", "OHE", "ORG | DBI | BDE_ORG | BDE | OHE")
+                .opt("scheme", "OHE", "any registered scheme (see `schemes`)")
                 .opt("limit", "80", "similarity limit %")
                 .opt("truncation", "0", "truncation bits per 8-bit chunk")
                 .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
+                .opt("table-size", "64", "data-table entries per chip")
+                .opt("channels", "1", "8-chip channels to shard across")
                 .opt("bytes", "1048576", "synthetic stream size")
                 .opt("seed", "42", "synthetic stream seed"),
         )
+        .subcommand(Command::new("schemes", "list the registered codec schemes"))
         .subcommand(
             Command::new("workload", "evaluate one workload under a config")
                 .positional("kind", "imagenet | resnet | quant | eigen | svm")
@@ -140,6 +151,23 @@ fn main() -> Result<()> {
             }
         }
         Some("encode") => cmd_encode(&m)?,
+        Some("schemes") => {
+            let reg = default_registry();
+            let mut t = TextTable::new(&["scheme", "knobs", "description"]);
+            for name in reg.schemes() {
+                let spec = CodecSpec::named(&name);
+                let knobs = match spec.knobs {
+                    Knobs::None => "-",
+                    Knobs::Table(_) => "table_size",
+                    Knobs::Zac(_) => "limit, truncation, tolerance, table_size, ...",
+                };
+                let desc = Scheme::parse(&name)
+                    .map(|s| s.description().to_string())
+                    .unwrap_or_else(|| "(registered out-of-tree)".into());
+                t.row(vec![name, knobs.into(), desc]);
+            }
+            println!("{}", t.render());
+        }
         Some("workload") => {
             let kind = m
                 .positionals
@@ -148,22 +176,22 @@ fn main() -> Result<()> {
                 .ok_or_else(|| {
                     anyhow::anyhow!("workload kind required (imagenet|resnet|quant|eigen|svm)")
                 })?;
-            let cfg = ZacConfig::zac_full(
-                m.get_usize("limit")? as u32,
-                m.get_usize("truncation")? as u32,
-                m.get_usize("tolerance")? as u32,
-            );
+            let mut spec = CodecSpec::named("OHE");
+            spec.set_knob("limit", m.get_or("limit", "80"))?;
+            spec.set_knob("truncation", m.get_or("truncation", "0"))?;
+            spec.set_knob("tolerance", m.get_or("tolerance", "0"))?;
+            spec.validate()?;
             let rt = Runtime::load(Runtime::default_dir())?;
             let suite = Suite::build(
                 rt,
                 m.get_usize("seed")? as u64,
                 budget(m.get_or("budget", "quick")),
             )?;
-            let r = suite.eval(&cfg, kind)?;
+            let r = suite.eval(&spec, kind)?;
             println!(
                 "{} under {}:\n  quality ratio  {:.3}  (original {:.3} -> approx {:.3})\n  termination 1s {}  switching {}  unencoded {:.1}%",
                 kind.label(),
-                cfg.label(),
+                spec.label(),
                 r.quality,
                 r.original_metric,
                 r.approx_metric,
@@ -213,16 +241,42 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
-    let scheme = Scheme::parse(m.get_or("scheme", "OHE"))
-        .ok_or_else(|| anyhow::anyhow!("bad scheme"))?;
-    let mut cfg = ZacConfig::zac_full(
-        m.get_usize("limit")? as u32,
-        m.get_usize("truncation")? as u32,
-        m.get_usize("tolerance")? as u32,
+/// Build the codec spec the `encode` flags describe, through the
+/// uniform `CodecSpec` ingestion path. A flag left at its declared
+/// default is applied only when the scheme has that knob; a flag set
+/// to any other value must be accepted by the scheme or it is an
+/// error — the same "no silent knob absorption" contract as the TOML
+/// path.
+fn encode_spec(m: &zac_dest::util::cli::Matches) -> Result<CodecSpec> {
+    let scheme = m.get_or("scheme", "OHE");
+    let mut spec = CodecSpec::named(scheme);
+    anyhow::ensure!(
+        default_registry().contains(&spec.scheme),
+        "unknown scheme {scheme:?}; registered: {:?}",
+        default_registry().schemes()
     );
-    cfg.scheme = scheme;
-    cfg.validate()?;
+    for (flag, key, default) in [
+        ("limit", "limit", "80"),
+        ("truncation", "truncation", "0"),
+        ("tolerance", "tolerance", "0"),
+        ("table-size", "table_size", "64"),
+    ] {
+        let value = m.get_or(flag, default);
+        let supported = match key {
+            "table_size" => !matches!(spec.knobs, Knobs::None),
+            _ => spec.zac_knobs().is_some(),
+        };
+        if supported || value != default {
+            spec.set_knob(key, value)?;
+        }
+    }
+    spec.validate()?;
+    Ok(spec)
+}
+
+fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    let spec = encode_spec(m)?;
+    let channels = m.get_usize("channels")?;
     let input = m.get_or("input", "-");
     let bytes = if input == "-" {
         // Synthetic image-like stream.
@@ -240,11 +294,24 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         let lines = zac_dest::trace::hex::parse(&text)?;
         zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64)
     };
+    let trace = Trace::from_bytes(bytes);
+    let session = Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .traffic(TrafficClass::Approximate)
+        .build()?;
     let t0 = std::time::Instant::now();
-    let out = simulate_bytes(&cfg, &bytes, true);
+    let out = session.run(&trace)?;
     let dt = t0.elapsed();
-    let base = simulate_bytes(&ZacConfig::scheme(Scheme::Org), &bytes, true);
-    println!("scheme        : {}", cfg.label());
+    let base = Session::builder()
+        .codec(CodecSpec::named("ORG"))
+        .channels(channels)
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .run(&trace)?;
+    let bytes = trace.bytes();
+    println!("scheme        : {}", spec.label());
+    println!("channels      : {channels}");
     println!("bytes         : {}", bytes.len());
     println!(
         "termination 1s: {} ({} vs ORG)",
@@ -265,11 +332,17 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         bytes.len() / 64,
         dt.as_secs_f64() * 1e3
     );
+    if channels > 1 {
+        println!("\n{}", out.render());
+    }
     Ok(())
 }
 
 fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
-    use zac_dest::system::{channels_from_env, parse_channel_list, run_sweep, synthetic_trace, SweepSpec};
+    use zac_dest::system::{
+        bench_bytes_from_env, channels_from_env, parse_channel_list, run_sweep, synthetic_trace,
+        SweepSpec,
+    };
     let mut spec = match m.get_or("spec", "-") {
         "-" => SweepSpec::default(),
         path => SweepSpec::from_file(path)?,
@@ -286,11 +359,10 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let bytes = m.get_usize("bytes")?;
     if bytes > 0 {
         spec.bytes = bytes;
-    } else if let Ok(v) = std::env::var("ZAC_BENCH_BYTES") {
-        // A set-but-malformed value must error, not silently fall back.
-        spec.bytes = v
-            .parse::<usize>()
-            .map_err(|e| anyhow::anyhow!("ZAC_BENCH_BYTES {v:?}: {e}"))?;
+    } else if let Some(n) = bench_bytes_from_env()? {
+        // A set-but-malformed value errors inside the helper, never a
+        // silent fallback.
+        spec.bytes = n;
     }
     let seed = m.get_usize("seed")? as u64;
     if seed > 0 {
@@ -311,6 +383,51 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
         report.write_json(out)?;
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matches(line: &str) -> zac_dest::util::cli::Matches {
+        let argv: Vec<String> = line.split_whitespace().map(|s| s.to_string()).collect();
+        app().parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn cli_flags_build_a_validated_spec() {
+        let spec = encode_spec(&matches("encode --limit 75 --truncation 2")).unwrap();
+        let k = spec.zac_knobs().unwrap();
+        assert_eq!(k.similarity_limit_pct, 75);
+        assert_eq!(k.truncation_bits, 2);
+        let spec = encode_spec(&matches("encode --scheme BDE --table-size 32")).unwrap();
+        assert_eq!(spec.scheme, "BDE");
+        assert_eq!(spec.table_size(), 32);
+        // Knob-free schemes ignore the zac defaults, as before.
+        let spec = encode_spec(&matches("encode --scheme ORG")).unwrap();
+        assert_eq!(spec.knobs, Knobs::None);
+    }
+
+    #[test]
+    fn cli_rejects_bad_specs() {
+        // Satellite: validate() runs (and surfaces an error, not a
+        // panic) on the CLI flag ingestion path.
+        let err = encode_spec(&matches("encode --limit 200"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("similarity limit"), "{err}");
+        assert!(encode_spec(&matches("encode --truncation 9")).is_err());
+        assert!(encode_spec(&matches("encode --scheme BDE --table-size 0")).is_err());
+        assert!(encode_spec(&matches("encode --scheme NOPE")).is_err());
+        assert!(encode_spec(&matches("encode --limit eighty")).is_err());
+        // An explicitly non-default knob a scheme doesn't have is an
+        // error, not silently dropped (same contract as the TOML path).
+        let err = encode_spec(&matches("encode --scheme BDE --limit 75"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no knob"), "{err}");
+        assert!(encode_spec(&matches("encode --scheme ORG --table-size 32")).is_err());
+    }
 }
 
 fn cmd_run(path: &str) -> Result<()> {

@@ -13,8 +13,8 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
-use crate::channel::{ChipChannel, EnergyCounts, CHIPS};
-use crate::encoding::{make_codec, EncodeStats, WireWord, ZacConfig, ENCODE_BATCH};
+use crate::channel::{EnergyCounts, CHIPS};
+use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::trace::{chip_words_to_bytes, gather_chip_lane, ChipWords};
 use crate::util::table::TextTable;
 
@@ -116,14 +116,27 @@ impl ChannelArray {
     pub fn with_chip_configs(cfgs: &[ZacConfig], shards: usize, capacity: usize) -> ChannelArray {
         assert_eq!(cfgs.len(), CHIPS);
         assert!(shards >= 1, "channel array needs at least one shard");
+        let sets = (0..shards)
+            .map(|_| cfgs.iter().map(Codec::from_config).collect())
+            .collect();
+        Self::with_codec_sets(sets, capacity)
+    }
+
+    /// Spawn the array around pre-built codecs: one `Vec<Codec>` (one
+    /// codec per chip) per shard — the registry-driven construction
+    /// path [`Session`](crate::session::Session) uses, and the seam
+    /// out-of-tree schemes shard through.
+    pub fn with_codec_sets(codec_sets: Vec<Vec<Codec>>, capacity: usize) -> ChannelArray {
+        let shards = codec_sets.len();
+        assert!(shards >= 1, "channel array needs at least one shard");
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
-        for _ in 0..shards {
+        for codecs in codec_sets {
+            assert_eq!(codecs.len(), CHIPS, "each shard needs one codec per chip");
             let (tx, rx): (SyncSender<ShardChunk>, Receiver<ShardChunk>) =
                 sync_channel(chunk_capacity);
-            let cfgs = cfgs.to_vec();
-            workers.push(std::thread::spawn(move || shard_service_loop(&cfgs, rx)));
+            workers.push(std::thread::spawn(move || shard_service_loop(codecs, rx)));
             senders.push(tx);
         }
         ChannelArray {
@@ -241,38 +254,32 @@ impl ChannelArray {
 
 /// The per-shard service loop: receive boxed line chunks until the
 /// mailbox closes, driving all 8 chips of this shard's channel through
-/// the batch codec path (per-batch lane gather, no stream clones).
-fn shard_service_loop(cfgs: &[ZacConfig], rx: Receiver<ShardChunk>) -> ShardResult {
-    let mut codecs: Vec<_> = cfgs.iter().map(make_codec).collect();
-    let mut chans = vec![ChipChannel::new(); CHIPS];
-    let mut stats = EncodeStats::default();
-    let mut decoded: Vec<Vec<u64>> = (0..CHIPS).map(|_| Vec::new()).collect();
+/// the one shared [`ChipLane`] drive loop (per-batch lane gather, no
+/// stream clones).
+fn shard_service_loop(codecs: Vec<Codec>, rx: Receiver<ShardChunk>) -> ShardResult {
+    let mut lanes: Vec<ChipLane> = codecs.into_iter().map(ChipLane::new).collect();
     let mut words = [0u64; ENCODE_BATCH];
-    let mut wires = [WireWord::raw(0); ENCODE_BATCH];
     while let Ok((lines, approx)) = rx.recv() {
         for (lc, ac) in lines.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
             let n = lc.len();
-            for j in 0..CHIPS {
+            for (j, lane) in lanes.iter_mut().enumerate() {
                 gather_chip_lane(lc, j, &mut words[..n]);
-                let (enc, dec) = &mut codecs[j];
-                enc.encode_batch(&words[..n], &ac[..n], &mut wires[..n]);
-                chans[j].transmit_batch(&wires[..n]);
-                stats.record_batch(&wires[..n], &words[..n]);
-                dec.decode_batch(&wires[..n], &mut decoded[j]);
+                lane.drive(&words[..n], &ac[..n]);
             }
         }
     }
-    let nlines = decoded[0].len();
+    let nlines = lanes[0].decoded_len();
     let mut lines_out = vec![[0u64; CHIPS]; nlines];
-    for (j, lane) in decoded.into_iter().enumerate() {
-        debug_assert_eq!(lane.len(), nlines);
-        for (l, w) in lane.into_iter().enumerate() {
+    let mut counts = EnergyCounts::default();
+    let mut stats = EncodeStats::default();
+    for (j, lane) in lanes.into_iter().enumerate() {
+        let (decoded, c, s) = lane.finish();
+        debug_assert_eq!(decoded.len(), nlines);
+        for (l, w) in decoded.into_iter().enumerate() {
             lines_out[l][j] = w;
         }
-    }
-    let mut counts = EnergyCounts::default();
-    for c in &chans {
-        counts.merge(c.energy());
+        counts.merge(&c);
+        stats.merge(&s);
     }
     (lines_out, counts, stats)
 }

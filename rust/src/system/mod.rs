@@ -17,7 +17,9 @@
 //! * [`scenario`] — [`SweepSpec`]: a declarative (channels × scheme ×
 //!   knob-grid) sweep, parsed from a TOML subset via
 //!   [`toml_lite`](crate::util::toml_lite) or built from the default
-//!   grid, fanned out over the array by [`run_sweep`].
+//!   grid; every concrete cell is a validated
+//!   [`CodecSpec`](crate::encoding::CodecSpec) run through a sharded
+//!   [`Session`](crate::session::Session) by [`run_sweep`].
 //! * [`report`] — [`SweepReport`]: per-scenario energy savings, outcome
 //!   mix and trace-level quality, rendered as a text table and persisted
 //!   as machine-readable `BENCH_system.json`.
@@ -37,5 +39,6 @@ pub mod scenario;
 pub use array::{shard_of_line, ChannelArray, ShardReport, SystemOutput};
 pub use report::{ScenarioResult, SweepReport};
 pub use scenario::{
-    channels_from_env, parse_channel_list, run_sweep, synthetic_trace, Scenario, SweepSpec,
+    bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list, run_sweep,
+    synthetic_trace, Scenario, SweepSpec,
 };

@@ -1,7 +1,7 @@
 //! Declarative sweep engine: a (channels × scheme × knob-grid) spec,
-//! expanded into concrete scenarios and fanned out over the
-//! [`ChannelArray`]. The spec is a TOML subset (parsed with
-//! [`toml_lite`](crate::util::toml_lite)):
+//! expanded into concrete validated [`CodecSpec`] scenarios and fanned
+//! out over sharded [`Session`] runs. The spec is a TOML subset (parsed
+//! with [`toml_lite`](crate::util::toml_lite)):
 //!
 //! ```toml
 //! name = "smoke"
@@ -27,11 +27,10 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::encoding::{Outcome, Scheme, ZacConfig};
+use crate::encoding::{CodecSpec, Outcome, Scheme};
 use crate::quality::psnr_u8;
-use crate::system::array::ChannelArray;
+use crate::session::{Execution, RunReport, Session, Trace, TrafficClass};
 use crate::system::report::{ScenarioResult, SweepReport};
-use crate::trace::bytes_to_chip_words;
 use crate::util::toml_lite;
 
 /// A declarative sweep: the grid axes plus trace parameters.
@@ -78,16 +77,17 @@ impl Default for SweepSpec {
     }
 }
 
-/// One concrete cell of the sweep grid.
+/// One concrete cell of the sweep grid: a validated codec spec at a
+/// channel count.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub channels: usize,
-    pub cfg: ZacConfig,
+    pub spec: CodecSpec,
 }
 
 impl Scenario {
     pub fn label(&self) -> String {
-        format!("{}@{}ch", self.cfg.label(), self.channels)
+        format!("{}@{}ch", self.spec.label(), self.channels)
     }
 }
 
@@ -143,6 +143,10 @@ impl SweepSpec {
             }
         }
         spec.validate()?;
+        // Validate every concrete grid cell at the ingestion boundary,
+        // not at run time: a bad limit/knob in the TOML is rejected
+        // before any simulation starts.
+        spec.scenarios()?;
         Ok(spec)
     }
 
@@ -180,16 +184,16 @@ impl SweepSpec {
                     for &limit in &self.limits {
                         for &trunc in &self.truncations {
                             for &tol in &self.tolerances {
-                                let cfg = ZacConfig::zac_full(limit, trunc, tol);
-                                cfg.validate()?;
-                                out.push(Scenario { channels, cfg });
+                                let spec = CodecSpec::zac_full(limit, trunc, tol);
+                                spec.validate()?;
+                                out.push(Scenario { channels, spec });
                             }
                         }
                     }
                 } else {
                     out.push(Scenario {
                         channels,
-                        cfg: ZacConfig::scheme(scheme),
+                        spec: CodecSpec::named(scheme.label()),
                     });
                 }
             }
@@ -248,6 +252,28 @@ pub fn channels_from_env() -> anyhow::Result<Option<Vec<usize>>> {
     }
 }
 
+/// Parse a trace-size override value (the `ZAC_BENCH_BYTES` format).
+pub fn parse_bench_bytes(text: &str) -> anyhow::Result<usize> {
+    let n: usize = text
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad byte count {text:?}: {e}"))?;
+    anyhow::ensure!(n > 0, "byte count must be positive, got {text:?}");
+    Ok(n)
+}
+
+/// The `ZAC_BENCH_BYTES` override, shared by `zac-dest sweep` and the
+/// bench smokes. `Ok(None)` when unset; a set-but-malformed value is an
+/// error, never a silent fallback.
+pub fn bench_bytes_from_env() -> anyhow::Result<Option<usize>> {
+    match std::env::var("ZAC_BENCH_BYTES") {
+        Err(_) => Ok(None),
+        Ok(v) => parse_bench_bytes(&v)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("ZAC_BENCH_BYTES: {e}")),
+    }
+}
+
 /// The standard image-like synthetic trace (slowly varying byte walk)
 /// used by the CLI, benches and CI smokes.
 pub fn synthetic_trace(n: usize, seed: u64) -> Vec<u8> {
@@ -261,36 +287,53 @@ pub fn synthetic_trace(n: usize, seed: u64) -> Vec<u8> {
         .collect()
 }
 
+/// Run one grid cell through a sharded [`Session`].
+fn run_cell(
+    spec: &CodecSpec,
+    channels: usize,
+    approx: bool,
+    trace: &Trace,
+) -> anyhow::Result<RunReport> {
+    Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .traffic(TrafficClass::from_approx_flag(approx))
+        .execution(Execution::Sharded)
+        .build()?
+        .run(trace)
+}
+
 /// Run every scenario of the grid over `trace`, measuring energy savings
 /// against the baseline scheme at the same channel count plus the
-/// trace-level quality of the reconstructed stream.
+/// trace-level quality of the reconstructed stream. Every cell runs
+/// through the unified [`Session`] API over the sharded channel array.
 pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> {
     let scenarios = spec.scenarios()?;
-    let lines = bytes_to_chip_words(trace);
+    let trace_obj = Trace::from_bytes(trace.to_vec());
 
     // One baseline run per channel count: sharding splits the table
     // history, so the fair baseline shards the same way. The full
-    // output (+ wall time) is kept so a grid scenario that IS the
+    // report (+ wall time) is kept so a grid scenario that IS the
     // baseline config reuses it instead of simulating twice.
-    let mut baselines: BTreeMap<usize, (crate::system::array::SystemOutput, f64)> =
-        BTreeMap::new();
-    let base_cfg = ZacConfig::scheme(spec.baseline);
+    let base_spec = CodecSpec::named(spec.baseline.label());
+    let mut baselines: BTreeMap<usize, (RunReport, f64)> = BTreeMap::new();
     for &c in &spec.channels {
-        baselines.entry(c).or_insert_with(|| {
-            let t0 = Instant::now();
-            let out = ChannelArray::run(&base_cfg, c, &lines, spec.approx, trace.len());
-            (out, t0.elapsed().as_secs_f64())
-        });
+        if baselines.contains_key(&c) {
+            continue;
+        }
+        let t0 = Instant::now();
+        let out = run_cell(&base_spec, c, spec.approx, &trace_obj)?;
+        baselines.insert(c, (out, t0.elapsed().as_secs_f64()));
     }
 
     let mut results = Vec::with_capacity(scenarios.len());
     for sc in &scenarios {
-        let (out, wall) = if sc.cfg == base_cfg {
+        let (out, wall) = if sc.spec == base_spec {
             let (o, w) = &baselines[&sc.channels];
             (o.clone(), *w)
         } else {
             let t0 = Instant::now();
-            let o = ChannelArray::run(&sc.cfg, sc.channels, &lines, spec.approx, trace.len());
+            let o = run_cell(&sc.spec, sc.channels, spec.approx, &trace_obj)?;
             (o, t0.elapsed().as_secs_f64())
         };
         let base = &baselines[&sc.channels].0.counts;
@@ -306,17 +349,13 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
         };
         let psnr = psnr_u8(trace, &out.bytes);
         let fracs = Outcome::all().map(|o| out.stats.fraction(o));
-        let (limit, trunc, tol) = match sc.cfg.scheme {
-            Scheme::ZacDest => (
-                sc.cfg.similarity_limit_pct,
-                sc.cfg.truncation_bits,
-                sc.cfg.tolerance_bits,
-            ),
-            _ => (0, 0, 0),
+        let (limit, trunc, tol) = match sc.spec.zac_knobs() {
+            Some(k) => (k.similarity_limit_pct, k.truncation_bits, k.tolerance_bits),
+            None => (0, 0, 0),
         };
         results.push(ScenarioResult {
             label: sc.label(),
-            scheme: sc.cfg.scheme.label().to_string(),
+            scheme: sc.spec.scheme.clone(),
             channels: sc.channels,
             limit,
             truncation_bits: trunc,
@@ -355,8 +394,10 @@ mod tests {
         assert!(sc.len() >= 6, "only {} scenarios", sc.len());
         // Every channel count × every scheme is represented.
         for &c in &spec.channels {
-            assert!(sc.iter().any(|x| x.channels == c && x.cfg.scheme == Scheme::Bde));
-            assert!(sc.iter().any(|x| x.channels == c && x.cfg.scheme == Scheme::ZacDest));
+            assert!(sc.iter().any(|x| x.channels == c && x.spec.scheme == "BDE"));
+            assert!(sc
+                .iter()
+                .any(|x| x.channels == c && x.spec.zac_knobs().is_some()));
         }
     }
 
@@ -394,6 +435,27 @@ mod tests {
         let mut spec = SweepSpec::default();
         spec.limits.clear();
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn toml_ingestion_rejects_invalid_codec_knobs() {
+        // Satellite: validate() runs at the TOML ingestion boundary —
+        // a knob the codec layer would reject fails at parse time.
+        let err = SweepSpec::from_toml("[grid]\nlimits = [200]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("similarity limit"), "{err}");
+        assert!(SweepSpec::from_toml("[grid]\ntruncations = [9]\n").is_err());
+    }
+
+    #[test]
+    fn bench_bytes_parsing_rejects_garbage() {
+        assert_eq!(parse_bench_bytes("65536").unwrap(), 65536);
+        assert_eq!(parse_bench_bytes(" 1024 ").unwrap(), 1024);
+        assert!(parse_bench_bytes("64KiB").is_err());
+        assert!(parse_bench_bytes("").is_err());
+        assert!(parse_bench_bytes("0").is_err());
+        assert!(parse_bench_bytes("-1").is_err());
     }
 
     #[test]

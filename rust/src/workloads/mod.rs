@@ -18,11 +18,11 @@ pub mod svm;
 
 use anyhow::Result;
 
-use crate::coordinator::{simulate_bytes, simulate_f32s, RunOutput};
 use crate::datasets::{self, Image};
-use crate::encoding::ZacConfig;
+use crate::encoding::CodecSpec;
 use crate::quality::quality_ratio;
 use crate::runtime::Runtime;
+use crate::session::{RunReport, Session, Trace, TrafficClass};
 
 /// Workload identifiers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -70,7 +70,7 @@ pub struct WorkloadResult {
     pub original_metric: f64,
     pub approx_metric: f64,
     /// Channel counts + encoding stats of the workload's input trace.
-    pub run: RunOutput,
+    pub run: RunReport,
 }
 
 /// Training/evaluation budget (sized so the full suite builds in
@@ -218,16 +218,26 @@ impl Suite {
         })
     }
 
-    /// Reconstruct a set of images through the channel under `cfg`,
+    /// Reconstruct a set of images through the channel under `spec`,
     /// returning the approximate images plus the trace energy/stats.
-    pub fn reconstruct_images(&self, cfg: &ZacConfig, images: &[Image]) -> (Vec<Image>, RunOutput) {
+    /// Runs through the unified [`Session`] API (image traffic is the
+    /// paper's error-resilient class).
+    pub fn reconstruct_images(
+        &self,
+        spec: &CodecSpec,
+        images: &[Image],
+    ) -> Result<(Vec<Image>, RunReport)> {
         // One concatenated trace: better table locality and one energy
         // figure for the whole set, as in the paper's methodology.
         let mut bytes = Vec::new();
         for img in images {
             bytes.extend_from_slice(&img.data);
         }
-        let out = simulate_bytes(cfg, &bytes, true);
+        let out = Session::builder()
+            .codec(spec.clone())
+            .traffic(TrafficClass::Approximate)
+            .build()?
+            .run(&Trace::from_bytes(bytes))?;
         let mut rebuilt = Vec::with_capacity(images.len());
         let mut off = 0usize;
         for img in images {
@@ -235,14 +245,14 @@ impl Suite {
             rebuilt.push(img.with_data(out.bytes[off..off + n].to_vec()));
             off += n;
         }
-        (rebuilt, out)
+        Ok((rebuilt, out))
     }
 
     /// Evaluate one workload under one encoder configuration.
-    pub fn eval(&self, cfg: &ZacConfig, kind: Kind) -> Result<WorkloadResult> {
+    pub fn eval(&self, spec: &CodecSpec, kind: Kind) -> Result<WorkloadResult> {
         match kind {
             Kind::ImageNet => {
-                let (recon, run) = self.reconstruct_images(cfg, &self.test_images);
+                let (recon, run) = self.reconstruct_images(spec, &self.test_images)?;
                 let mut ratios = Vec::new();
                 let mut approx_mean = 0.0;
                 for (p, &clean) in self.zoo.iter().zip(&self.zoo_clean_acc) {
@@ -260,7 +270,7 @@ impl Suite {
                 })
             }
             Kind::ResNet => {
-                let (recon, run) = self.reconstruct_images(cfg, &self.test_images);
+                let (recon, run) = self.reconstruct_images(spec, &self.test_images)?;
                 let acc = cnn::accuracy(&self.rt, &self.resnet, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -271,7 +281,7 @@ impl Suite {
                 })
             }
             Kind::Quant => {
-                let (recon, run) = self.reconstruct_images(cfg, &self.kodak);
+                let (recon, run) = self.reconstruct_images(spec, &self.kodak)?;
                 let mut q = 0.0;
                 let mut approx = 0.0;
                 for ((r, orig), &clean) in
@@ -291,7 +301,7 @@ impl Suite {
                 })
             }
             Kind::Eigen => {
-                let (recon, run) = self.reconstruct_images(cfg, &self.faces_test);
+                let (recon, run) = self.reconstruct_images(spec, &self.faces_test)?;
                 let acc = self.eigen_model.identify_accuracy(&self.rt, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -302,7 +312,7 @@ impl Suite {
                 })
             }
             Kind::Svm => {
-                let (recon, run) = self.reconstruct_images(cfg, &self.fmnist_test);
+                let (recon, run) = self.reconstruct_images(spec, &self.fmnist_test)?;
                 let acc = svm::accuracy(&self.rt, &self.svm_w, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -317,9 +327,9 @@ impl Suite {
 
     /// Fig. 18/21: train a fresh ResNet *on reconstructed* training
     /// images and evaluate it on reconstructed test images.
-    pub fn resnet_trained_on_recon(&self, cfg: &ZacConfig) -> Result<WorkloadResult> {
-        let (recon_train, _) = self.reconstruct_images(cfg, &self.train_images);
-        let (recon_test, run) = self.reconstruct_images(cfg, &self.test_images);
+    pub fn resnet_trained_on_recon(&self, spec: &CodecSpec) -> Result<WorkloadResult> {
+        let (recon_train, _) = self.reconstruct_images(spec, &self.train_images)?;
+        let (recon_test, run) = self.reconstruct_images(spec, &self.test_images)?;
         let (p, _) = cnn::train(
             &self.rt,
             &recon_train,
@@ -338,19 +348,24 @@ impl Suite {
     }
 
     /// Fig. 20/21: approximate the *weights* of the ResNet with a
-    /// weights-mode config (sign+exponent pinned), optionally also
-    /// approximating the input images, and measure accuracy + the
-    /// weight-trace energy.
+    /// weights-mode spec (sign+exponent pinned, projected per chip by
+    /// the session's weights codec path), optionally also approximating
+    /// the input images, and measure accuracy + the weight-trace energy.
     pub fn resnet_with_approx_weights(
         &self,
-        weight_cfg: &ZacConfig,
-        image_cfg: Option<&ZacConfig>,
+        weight_spec: &CodecSpec,
+        image_spec: Option<&CodecSpec>,
     ) -> Result<WorkloadResult> {
         let flat = self.resnet.flatten();
-        let (recon_w, run) = simulate_f32s(weight_cfg, &flat, true);
+        let run = Session::builder()
+            .codec_weights(weight_spec.clone())
+            .traffic(TrafficClass::Approximate)
+            .build()?
+            .run(&Trace::from_f32s(&flat))?;
+        let recon_w = run.to_f32s();
         let params = self.resnet.unflatten(&recon_w);
-        let images = match image_cfg {
-            Some(icfg) => self.reconstruct_images(icfg, &self.test_images).0,
+        let images = match image_spec {
+            Some(ispec) => self.reconstruct_images(ispec, &self.test_images)?.0,
             None => self.test_images.clone(),
         };
         let acc = cnn::accuracy(&self.rt, &params, &images)?;

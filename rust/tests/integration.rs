@@ -3,8 +3,12 @@
 //! the energy-figure pipelines.
 
 use zac_dest::channel::{EnergyCounts, CHIPS};
-use zac_dest::coordinator::{simulate_bytes, simulate_f32s, simulate_lines, Pipeline};
-use zac_dest::encoding::{EncodeStats, Outcome, Scheme, ZacConfig};
+use zac_dest::coordinator::{
+    simulate_bytes, simulate_f32s, simulate_lines, simulate_lines_per_chip, weight_chip_configs,
+    Pipeline,
+};
+use zac_dest::encoding::{CodecSpec, EncodeStats, Outcome, Scheme, ZacConfig};
+use zac_dest::session::{weight_chip_specs, Execution, Session, Trace, TrafficClass};
 use zac_dest::system::ChannelArray;
 use zac_dest::trace::{bytes_to_chip_words, chip_words_to_bytes, hex, ChipWords};
 use zac_dest::util::prop;
@@ -307,6 +311,153 @@ fn sweep_engine_grid_runs_end_to_end() {
     for r in report.scenarios.iter().filter(|r| r.scheme == "BDE") {
         assert_eq!(r.quality_ratio, 1.0, "{}", r.label);
     }
+}
+
+/// The codec matrix the v2 acceptance pins: every scheme plus ZAC
+/// variants exercising truncation, tolerance and the weights mask.
+fn spec_matrix() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::named("ORG"),
+        CodecSpec::named("DBI"),
+        CodecSpec::named("BDE_ORG"),
+        CodecSpec::named("BDE"),
+        CodecSpec::zac(80),
+        CodecSpec::zac_full(75, 2, 1),
+        CodecSpec::zac_weights(60),
+    ]
+}
+
+#[test]
+fn session_pinned_bit_identical_to_legacy_paths_across_codec_matrix() {
+    // Acceptance: Session::run must be bit-identical (bytes,
+    // EncodeStats, EnergyCounts) to the legacy simulate_lines /
+    // ChannelArray paths for every spec in the matrix at 1/2/4 channels.
+    let bytes = image_like(300 * 64 + 32, 21);
+    let lines = bytes_to_chip_words(&bytes);
+    let trace = Trace::from_bytes(bytes.clone());
+    for spec in spec_matrix() {
+        let cfg = spec.to_config().unwrap();
+        let single = simulate_lines(&cfg, &lines, true, bytes.len());
+        for channels in [1usize, 2, 4] {
+            let report = Session::builder()
+                .codec(spec.clone())
+                .channels(channels)
+                .traffic(TrafficClass::Approximate)
+                .build()
+                .unwrap()
+                .run(&trace)
+                .unwrap();
+            let legacy = ChannelArray::run(&cfg, channels, &lines, true, bytes.len());
+            assert_eq!(report.bytes, legacy.bytes, "{} x{channels}", spec.label());
+            assert_eq!(report.counts, legacy.counts, "{} x{channels}", spec.label());
+            assert_eq!(report.stats, legacy.stats, "{} x{channels}", spec.label());
+            if channels == 1 {
+                assert_eq!(report.bytes, single.bytes, "{}", spec.label());
+                assert_eq!(report.counts, single.counts, "{}", spec.label());
+                assert_eq!(report.stats, single.stats, "{}", spec.label());
+            }
+            assert_eq!(report.channels(), channels, "{}", spec.label());
+        }
+    }
+}
+
+#[test]
+fn prop_session_equals_legacy_on_random_traces() {
+    let matrix = spec_matrix();
+    prop::check(
+        "Session::run ≡ legacy simulate/ChannelArray",
+        107,
+        |r| {
+            let nlines = r.range(1, 40);
+            let which = r.range(0, 7);
+            let channels = [1u64, 2, 4][r.range(0, 3)];
+            vec![nlines as u64, which as u64, channels, r.next_u64()]
+        },
+        |v| {
+            let nlines = (v[0] as usize).clamp(1, 64);
+            let spec = &matrix[(v[1] as usize) % matrix.len()];
+            let channels = (v[2] as usize).clamp(1, 4);
+            let bytes = image_like(nlines * 64, v[3]);
+            let lines = bytes_to_chip_words(&bytes);
+            let cfg = spec.to_config().unwrap();
+            let legacy = ChannelArray::run(&cfg, channels, &lines, true, bytes.len());
+            let report = Session::builder()
+                .codec(spec.clone())
+                .channels(channels)
+                .traffic(TrafficClass::Approximate)
+                .build()
+                .map_err(|e| e.to_string())?
+                .run(&Trace::from_bytes(bytes))
+                .map_err(|e| e.to_string())?;
+            if report.bytes != legacy.bytes {
+                return Err(format!("{} x{channels}: bytes diverge", spec.label()));
+            }
+            if report.counts != legacy.counts {
+                return Err(format!("{} x{channels}: counts diverge", spec.label()));
+            }
+            if report.stats != legacy.stats {
+                return Err(format!("{} x{channels}: stats diverge", spec.label()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn session_per_chip_specs_match_legacy_simulate_lines_per_chip() {
+    // The weights projection: per-chip specs through a Session must
+    // equal the legacy weight_chip_configs + simulate_lines_per_chip.
+    let mut r = Rng::new(23);
+    let xs: Vec<f32> = (0..2048).map(|_| r.normal_f32(0.0, 0.05)).collect();
+    let spec = CodecSpec::zac_weights(60);
+    let cfg = spec.to_config().unwrap();
+    let trace = Trace::from_f32s(&xs);
+    let cfgs = weight_chip_configs(&cfg);
+    let legacy = simulate_lines_per_chip(&cfgs, trace.lines(), true, trace.byte_len());
+    let report = Session::builder()
+        .codec_per_chip(weight_chip_specs(&spec).unwrap())
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .unwrap()
+        .run(&trace)
+        .unwrap();
+    assert_eq!(report.bytes, legacy.bytes);
+    assert_eq!(report.counts, legacy.counts);
+    assert_eq!(report.stats, legacy.stats);
+    // And the codec_weights convenience is the same projection.
+    let via_weights = Session::builder()
+        .codec_weights(spec)
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .unwrap()
+        .run(&trace)
+        .unwrap();
+    assert_eq!(via_weights.bytes, report.bytes);
+    assert_eq!(via_weights.counts, report.counts);
+}
+
+#[test]
+fn session_pipelined_execution_matches_legacy_pipeline() {
+    let bytes = image_like(16384, 25);
+    let lines = bytes_to_chip_words(&bytes);
+    let cfg = ZacConfig::zac(75);
+    let mut p = Pipeline::new(&cfg, 8);
+    for l in &lines {
+        p.push_line(*l, true);
+    }
+    let legacy = p.finish(bytes.len());
+    let report = Session::builder()
+        .codec(CodecSpec::zac(75))
+        .execution(Execution::Pipelined)
+        .capacity_lines(8)
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .unwrap()
+        .run(&Trace::from_bytes(bytes))
+        .unwrap();
+    assert_eq!(report.bytes, legacy.bytes);
+    assert_eq!(report.counts, legacy.counts);
+    assert_eq!(report.stats, legacy.stats);
 }
 
 #[test]

@@ -4,7 +4,7 @@
 //! fail, so the hermetic CI stays green while full coverage runs
 //! wherever PJRT is available.
 
-use zac_dest::encoding::{Scheme, ZacConfig};
+use zac_dest::encoding::CodecSpec;
 use zac_dest::runtime::Runtime;
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
 
@@ -43,7 +43,7 @@ fn workloads_train_above_chance_and_quality_degrades_gracefully() {
 
     // Exact scheme ⇒ quality exactly 1.0 for every workload.
     for kind in Kind::all() {
-        let r = s.eval(&ZacConfig::scheme(Scheme::Bde), kind).unwrap();
+        let r = s.eval(&CodecSpec::named("BDE"), kind).unwrap();
         assert!(
             (r.quality - 1.0).abs() < 1e-9,
             "{}: exact scheme must give quality 1.0, got {}",
@@ -55,14 +55,14 @@ fn workloads_train_above_chance_and_quality_degrades_gracefully() {
     // Approximation: quality stays in [0, ~1.2] and the conservative
     // L90 config stays close to 1.
     for kind in Kind::all() {
-        let r90 = s.eval(&ZacConfig::zac(90), kind).unwrap();
+        let r90 = s.eval(&CodecSpec::zac(90), kind).unwrap();
         assert!(
             r90.quality > 0.6,
             "{}: L90 quality {} too low",
             kind.label(),
             r90.quality
         );
-        let r70 = s.eval(&ZacConfig::zac_full(70, 2, 0), kind).unwrap();
+        let r70 = s.eval(&CodecSpec::zac_full(70, 2, 0), kind).unwrap();
         assert!(
             (0.0..=1.5).contains(&r70.quality),
             "{}: L70T16 quality {} out of range",
@@ -80,7 +80,7 @@ fn workloads_train_above_chance_and_quality_degrades_gracefully() {
 fn weight_approximation_keeps_model_usable_at_high_limits() {
     let Some(s) = suite() else { return };
     let r = s
-        .resnet_with_approx_weights(&ZacConfig::zac_weights(70), None)
+        .resnet_with_approx_weights(&CodecSpec::zac_weights(70), None)
         .unwrap();
     // Sign+exponent are pinned, so a 70% weight limit must not destroy
     // the model.
