@@ -80,5 +80,21 @@ fn main() -> anyhow::Result<()> {
     for o in zac_dest::encoding::Outcome::all() {
         println!("  {:<10} {:>6.1}%", o.label(), 100.0 * zac.stats.fraction(o));
     }
+
+    // Fault injection: the same run over voltage-scaled approximate
+    // DRAM (EDEN-style 1.05 V bin — the CLI equivalent is
+    // `zac-dest encode --faults voltage:1050`). Energy is identical by
+    // construction (injection happens after the transfer was paid
+    // for); only the quality axis moves, and critical traffic would
+    // bypass injection entirely.
+    let faulty = Session::builder()
+        .codec(spec)
+        .traffic(TrafficClass::Approximate)
+        .faults(zac_dest::faults::FaultSpec::voltage(1050))
+        .build()?
+        .run(&trace)?;
+    assert_eq!(faulty.counts, zac.counts, "energy is fault-invariant");
+    println!("\nunder 1.05 V approximate DRAM:");
+    println!("  {}", faulty.quality_delta());
     Ok(())
 }

@@ -9,19 +9,8 @@
 use zac_dest::encoding::{CodecSpec, Scheme};
 use zac_dest::session::{Session, Trace, TrafficClass};
 use zac_dest::system::bench_bytes_from_env;
+use zac_dest::system::synthetic_trace as image_like;
 use zac_dest::util::bench::Bencher;
-use zac_dest::util::rng::Rng;
-
-fn image_like(n: usize, seed: u64) -> Vec<u8> {
-    let mut r = Rng::new(seed);
-    let mut v = 128i32;
-    (0..n)
-        .map(|_| {
-            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
-            v as u8
-        })
-        .collect()
-}
 
 fn size_label(n: usize) -> String {
     if n >= (1 << 20) && n % (1 << 20) == 0 {

@@ -8,11 +8,11 @@ use zac_dest::runtime::{pack_words_i32, Runtime, Tensor};
 use zac_dest::session::{Execution, Session, Trace, TrafficClass};
 use zac_dest::trace::bytes_to_chip_words;
 use zac_dest::util::bench::Bencher;
-use zac_dest::util::rng::Rng;
+use zac_dest::util::rng::seeded_rng;
 
 fn main() {
     let mut b = Bencher::new();
-    let mut r = Rng::new(9);
+    let mut r = seeded_rng(9);
     let mut v = 100i32;
     let bytes: Vec<u8> = (0..1 << 19)
         .map(|_| {

@@ -7,11 +7,11 @@ use zac_dest::encoding::{
     CodecRegistry, CodecSpec, DataTable, EncodeStats, WireWord, ENCODE_BATCH,
 };
 use zac_dest::util::bench::Bencher;
-use zac_dest::util::rng::Rng;
+use zac_dest::util::rng::seeded_rng;
 
 fn main() {
     let mut b = Bencher::new();
-    let mut r = Rng::new(7);
+    let mut r = seeded_rng(7);
     let queries: Vec<u64> = (0..4096).map(|_| r.next_u64()).collect();
     for size in [16usize, 32, 64] {
         let mut table = DataTable::new(size);

@@ -5,6 +5,7 @@
 //! identically, and `validate()` runs before the config is accepted.
 
 use crate::encoding::CodecSpec;
+use crate::faults::FaultSpec;
 use crate::util::json_lite::Json;
 use crate::util::toml_lite;
 
@@ -14,6 +15,9 @@ pub struct RunConfig {
     pub name: String,
     pub seed: u64,
     pub encoder: CodecSpec,
+    /// Fault model the channel runs under (`faults = "voltage:1050"`;
+    /// default: perfect channel).
+    pub faults: FaultSpec,
     /// Workloads to run (imagenet / resnet / quant / eigen / svm).
     pub workloads: Vec<String>,
     /// Images per workload evaluation.
@@ -30,6 +34,7 @@ impl Default for RunConfig {
             name: "default".into(),
             seed: 42,
             encoder: CodecSpec::named("OHE"),
+            faults: FaultSpec::perfect(),
             workloads: vec![
                 "imagenet".into(),
                 "resnet".into(),
@@ -55,6 +60,7 @@ impl RunConfig {
                 "name" => cfg.name = v.as_str()?.to_string(),
                 "seed" => cfg.seed = v.as_f64()? as u64,
                 "encoder" => cfg.encoder = parse_encoder(v)?,
+                "faults" => cfg.faults = FaultSpec::parse(v.as_str()?)?,
                 "workload" => parse_workload(v, &mut cfg)?,
                 other => anyhow::bail!("unknown top-level key {other:?}"),
             }
@@ -169,6 +175,17 @@ mod tests {
         let knobs = cfg.encoder.zac_knobs().unwrap();
         assert_eq!(knobs.chunk_width, 32);
         assert_eq!(knobs.tolerance_mask_override, Some(0xFF80_0000_FF80_0000));
+    }
+
+    #[test]
+    fn faults_key_parses_and_rejects_garbage() {
+        let cfg = RunConfig::from_toml("faults = \"voltage:1050\"\n").unwrap();
+        assert_eq!(cfg.faults.label(), "vdd1050mV");
+        let cfg = RunConfig::from_toml("faults = \"uniform:1e-4@9\"\n").unwrap();
+        assert_eq!(cfg.faults.seed, 9);
+        assert_eq!(RunConfig::default().faults, FaultSpec::perfect());
+        assert!(RunConfig::from_toml("faults = \"wat\"\n").is_err());
+        assert!(RunConfig::from_toml("faults = \"voltage:100\"\n").is_err());
     }
 
     #[test]

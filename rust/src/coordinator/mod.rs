@@ -35,6 +35,7 @@ use std::thread::JoinHandle;
 
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
+use crate::faults::{FaultSpec, FaultStats};
 use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords};
 
 /// Result of a trace simulation.
@@ -46,6 +47,9 @@ pub struct RunOutput {
     pub counts: EnergyCounts,
     /// Encoding outcome statistics (summed over chips).
     pub stats: EncodeStats,
+    /// Fault-injection + end-to-end error statistics (summed over
+    /// chips; all-zero injection under a perfect channel).
+    pub faults: FaultStats,
 }
 
 /// **Deprecated shim** — batch simulation of a byte stream under one
@@ -88,24 +92,31 @@ pub fn simulate_lines_per_chip(
         lines,
         approx,
         byte_len,
+        &FaultSpec::perfect(),
     )
 }
 
 /// The shared batch engine: one worker per chip over the shared line
 /// matrix, each batch gathering its lane into a fixed buffer (no
 /// per-chip clone of the whole stream) and running the one
-/// [`ChipLane`] drive loop. Both the legacy shims above and
+/// [`ChipLane`] drive loop with its per-chip fault model. Both the
+/// legacy shims above (perfect channel) and
 /// [`Session`](crate::session::Session) batch execution land here.
 pub(crate) fn drive_lines(
     codecs: Vec<Codec>,
     lines: &[ChipWords],
     approx: bool,
     byte_len: usize,
+    fault_spec: &FaultSpec,
 ) -> RunOutput {
     assert_eq!(codecs.len(), CHIPS);
-    let chips: Vec<(usize, Codec)> = codecs.into_iter().enumerate().collect();
-    let results = crate::util::par::par_map(chips, CHIPS, |(j, codec)| {
-        let mut lane = ChipLane::with_capacity(codec, lines.len());
+    let chips: Vec<(usize, Codec, Box<dyn crate::faults::FaultModel>)> = codecs
+        .into_iter()
+        .enumerate()
+        .map(|(j, codec)| (j, codec, fault_spec.build(0, j)))
+        .collect();
+    let results = crate::util::par::par_map(chips, CHIPS, |(j, codec, faults)| {
+        let mut lane = ChipLane::with_faults(codec, lines.len(), faults);
         let mut words = [0u64; ENCODE_BATCH];
         let flags = [approx; ENCODE_BATCH];
         for chunk in lines.chunks(ENCODE_BATCH) {
@@ -147,16 +158,18 @@ pub fn weight_chip_configs(base: &ZacConfig) -> Vec<ZacConfig> {
 }
 
 fn assemble(
-    results: Vec<(Vec<u64>, EnergyCounts, EncodeStats)>,
+    results: Vec<(Vec<u64>, EnergyCounts, EncodeStats, FaultStats)>,
     nlines: usize,
     byte_len: usize,
 ) -> RunOutput {
     let mut counts = EnergyCounts::default();
     let mut stats = EncodeStats::default();
+    let mut faults = FaultStats::default();
     let mut out_lines = vec![[0u64; CHIPS]; nlines];
-    for (j, (decoded, c, s)) in results.into_iter().enumerate() {
+    for (j, (decoded, c, s, f)) in results.into_iter().enumerate() {
         counts.merge(&c);
         stats.merge(&s);
+        faults.merge(&f);
         for (l, w) in decoded.into_iter().enumerate() {
             out_lines[l][j] = w;
         }
@@ -165,6 +178,7 @@ fn assemble(
         bytes: chip_words_to_bytes(&out_lines, byte_len),
         counts,
         stats,
+        faults,
     }
 }
 
@@ -206,7 +220,7 @@ type LineChunk = (Box<[u64]>, Box<[bool]>);
 /// one partially-filled pending chunk ahead of the workers.
 pub struct Pipeline {
     senders: Vec<SyncSender<LineChunk>>,
-    workers: Vec<JoinHandle<(Vec<u64>, EnergyCounts, EncodeStats)>>,
+    workers: Vec<JoinHandle<(Vec<u64>, EnergyCounts, EncodeStats, FaultStats)>>,
     /// Per-chip words awaiting the next chunk flush.
     pending: Vec<Vec<u64>>,
     /// Approx flags for the pending lines (shared across chips).
@@ -225,18 +239,30 @@ impl Pipeline {
     }
 
     /// Spawn the per-chip workers around pre-built codecs (one per
-    /// chip) — the registry-driven construction path
-    /// [`Session`](crate::session::Session) uses for pipelined runs.
+    /// chip) over a perfect channel — the registry-driven construction
+    /// path legacy callers use for pipelined runs.
     pub fn with_codecs(codecs: Vec<Codec>, capacity: usize) -> Pipeline {
+        Self::with_codecs_and_faults(codecs, capacity, &FaultSpec::perfect())
+    }
+
+    /// Spawn the per-chip workers with each chip's wire running through
+    /// the fault model `fault_spec` describes — what
+    /// [`Session`](crate::session::Session) uses for pipelined runs.
+    pub fn with_codecs_and_faults(
+        codecs: Vec<Codec>,
+        capacity: usize,
+        fault_spec: &FaultSpec,
+    ) -> Pipeline {
         assert_eq!(codecs.len(), CHIPS, "pipeline needs one codec per chip");
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(CHIPS);
         let mut workers = Vec::with_capacity(CHIPS);
-        for codec in codecs {
+        for (j, codec) in codecs.into_iter().enumerate() {
+            let faults = fault_spec.build(0, j);
             let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
                 sync_channel(chunk_capacity);
             workers.push(std::thread::spawn(move || {
-                let mut lane = ChipLane::new(codec);
+                let mut lane = ChipLane::with_faults(codec, 0, faults);
                 while let Ok((words, approx)) = rx.recv() {
                     lane.drive(&words, &approx);
                 }

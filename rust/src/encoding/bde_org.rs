@@ -109,7 +109,9 @@ impl ChipDecoder for BdeOrgDecoder {
     fn decode(&mut self, wire: &WireWord) -> u64 {
         match wire.outcome {
             Outcome::Bde => {
-                let entry = self.table.get(wire.index_line as usize);
+                // Total over fault-corrupted wires: an index the mirror
+                // has not written reads as zero (see MbdcDecoder).
+                let entry = self.table.get_or_zero(wire.index_line as usize);
                 wire.data ^ entry
             }
             _ => {

@@ -99,6 +99,20 @@ impl DataTable {
         self.entries[index]
     }
 
+    /// Entry at a wire index, or 0 when the index points outside the
+    /// valid entries. This is the total variant the fault-tolerant
+    /// decode paths use: wire-level injection can synthesize an address
+    /// the encoder never produced, and a real receiver reads *some*
+    /// deterministic value rather than faulting (an unwritten CAM row
+    /// reads as zeros here).
+    pub fn get_or_zero(&self, index: usize) -> u64 {
+        if index < self.len {
+            self.entries[index]
+        } else {
+            0
+        }
+    }
+
     /// CAM search: the valid entry with minimum hamming distance to
     /// `word`; ties resolve to the lowest index. `None` when empty.
     ///

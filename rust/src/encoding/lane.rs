@@ -6,8 +6,27 @@
 //! encode_batch → transmit_batch → record_batch → decode_batch body,
 //! so the batch contract (bit-identical to scalar, stateful across
 //! calls, no allocation) is enforced in exactly one place.
+//!
+//! Fault injection also lives here, at the only correct point: **after**
+//! `transmit_batch` (the energy was already spent driving the true
+//! bits) and **before** `decode_batch` (the receiver senses the
+//! corrupted lines). Words flagged non-approximate — critical traffic —
+//! are never corrupted *directly* (SparkXD's criticality split), and a
+//! [`PerfectChannel`] skips the whole pass.
+//!
+//! Scope of the criticality guarantee: injection is gated per access,
+//! so an all-critical stream (what
+//! [`TrafficClass::Critical`](crate::session::TrafficClass) produces —
+//! the only session-level knob) is bit-exact end to end. In a *mixed*
+//! per-word stream, a corrupted approximate transfer can still
+//! desynchronize the shared mirrored table of a table-based codec and
+//! thereby perturb a *later* critical decode — faithful to the
+//! hardware, where per-access protection of a shared CAM would require
+//! criticality-partitioned tables (a future fault-aware codec family;
+//! see ROADMAP).
 
 use crate::channel::{ChipChannel, EnergyCounts};
+use crate::faults::{FaultModel, FaultStats, PerfectChannel};
 
 use super::registry::Codec;
 use super::stats::EncodeStats;
@@ -15,13 +34,18 @@ use super::wire::WireWord;
 use super::ENCODE_BATCH;
 
 /// Drive a word stream through one chip's codec and channel in
-/// [`ENCODE_BATCH`]-sized chunks over the caller's buffers. `wires`
-/// must hold at least `min(words.len(), ENCODE_BATCH)` slots; decoded
-/// words append to `out`.
+/// [`ENCODE_BATCH`]-sized chunks over the caller's buffers, applying
+/// `faults` to the wire for approximate words. `wires` must hold at
+/// least `min(words.len(), ENCODE_BATCH)` slots; decoded words append
+/// to `out`; injection and end-to-end error counts accumulate into
+/// `fstats`.
+#[allow(clippy::too_many_arguments)]
 pub fn drive_batches(
     codec: &mut Codec,
     chan: &mut ChipChannel,
     stats: &mut EncodeStats,
+    faults: &mut dyn FaultModel,
+    fstats: &mut FaultStats,
     words: &[u64],
     approx: &[bool],
     wires: &mut [WireWord],
@@ -29,49 +53,83 @@ pub fn drive_batches(
 ) {
     assert_eq!(words.len(), approx.len());
     assert!(wires.len() >= words.len().min(ENCODE_BATCH));
+    let active = faults.is_active();
     for (wc, ac) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
         let buf = &mut wires[..wc.len()];
         codec.encoder.encode_batch(wc, ac, buf);
         chan.transmit_batch(buf);
         stats.record_batch(buf, wc);
+        if active {
+            // Wire-level injection: the energy above reflects the true
+            // bits; only what the receiver senses is corrupted, and
+            // only on error-resilient accesses.
+            for (wire, &a) in buf.iter_mut().zip(ac) {
+                if a {
+                    let flips = faults.corrupt(wire);
+                    if flips > 0 {
+                        fstats.injected_bits += flips as u64;
+                        fstats.injected_words += 1;
+                    }
+                }
+            }
+        }
+        let start = out.len();
         codec.decoder.decode_batch(buf, out);
+        for (&orig, &dec) in wc.iter().zip(&out[start..]) {
+            fstats.observed_error_bits += (orig ^ dec).count_ones() as u64;
+        }
+        fstats.words += wc.len() as u64;
     }
 }
 
-/// One chip's full lane state: codec + channel + stats + decoded output
-/// and the reusable wire buffer. Workers own one `ChipLane` per chip and
-/// feed it word runs of any length.
+/// One chip's full lane state: codec + channel + fault model + stats +
+/// decoded output and the reusable wire buffer. Workers own one
+/// `ChipLane` per chip and feed it word runs of any length.
 pub struct ChipLane {
     codec: Codec,
     chan: ChipChannel,
     stats: EncodeStats,
+    faults: Box<dyn FaultModel>,
+    fstats: FaultStats,
     decoded: Vec<u64>,
     wires: [WireWord; ENCODE_BATCH],
 }
 
 impl ChipLane {
+    /// Lane over a perfect (fault-free) channel.
     pub fn new(codec: Codec) -> ChipLane {
         ChipLane::with_capacity(codec, 0)
     }
 
-    /// Lane with the decoded buffer preallocated for `nwords` words.
+    /// Perfect-channel lane with the decoded buffer preallocated for
+    /// `nwords` words.
     pub fn with_capacity(codec: Codec, nwords: usize) -> ChipLane {
+        ChipLane::with_faults(codec, nwords, Box::new(PerfectChannel))
+    }
+
+    /// Lane whose wire runs through `faults` (built per (shard, chip)
+    /// by [`FaultSpec::build`](crate::faults::FaultSpec::build)).
+    pub fn with_faults(codec: Codec, nwords: usize, faults: Box<dyn FaultModel>) -> ChipLane {
         ChipLane {
             codec,
             chan: ChipChannel::new(),
             stats: EncodeStats::default(),
+            faults,
+            fstats: FaultStats::default(),
             decoded: Vec::with_capacity(nwords),
             wires: [WireWord::raw(0); ENCODE_BATCH],
         }
     }
 
-    /// Encode → transmit → record → decode a run of words (chunked
-    /// internally; state carries across calls).
+    /// Encode → transmit → record → inject → decode a run of words
+    /// (chunked internally; state carries across calls).
     pub fn drive(&mut self, words: &[u64], approx: &[bool]) {
         drive_batches(
             &mut self.codec,
             &mut self.chan,
             &mut self.stats,
+            self.faults.as_mut(),
+            &mut self.fstats,
             words,
             approx,
             &mut self.wires,
@@ -84,9 +142,10 @@ impl ChipLane {
         self.decoded.len()
     }
 
-    /// Tear down into (decoded words, energy counts, encode stats).
-    pub fn finish(self) -> (Vec<u64>, EnergyCounts, EncodeStats) {
-        (self.decoded, *self.chan.energy(), self.stats)
+    /// Tear down into (decoded words, energy counts, encode stats,
+    /// fault stats).
+    pub fn finish(self) -> (Vec<u64>, EnergyCounts, EncodeStats, FaultStats) {
+        (self.decoded, *self.chan.energy(), self.stats, self.fstats)
     }
 }
 
@@ -95,11 +154,12 @@ mod tests {
     use super::*;
     use crate::encoding::registry::CodecSpec;
     use crate::encoding::{default_registry, make_codec, ZacConfig};
-    use crate::util::rng::Rng;
+    use crate::faults::FaultSpec;
+    use crate::util::rng::seeded_rng;
 
     #[test]
     fn lane_matches_hand_rolled_scalar_loop() {
-        let mut r = Rng::new(77);
+        let mut r = seeded_rng(77);
         let words: Vec<u64> = (0..700)
             .map(|i| if i % 9 == 0 { 0 } else { r.next_u64() & 0xFFF })
             .collect();
@@ -130,9 +190,75 @@ mod tests {
             i += n;
         }
         assert_eq!(lane.decoded_len(), words.len());
-        let (decoded, counts, lane_stats) = lane.finish();
+        let (decoded, counts, lane_stats, fstats) = lane.finish();
         assert_eq!(decoded, want);
         assert_eq!(counts, *chan.energy());
         assert_eq!(lane_stats, stats);
+        // Perfect channel: nothing injected; observed errors are the
+        // pure codec approximation.
+        assert_eq!(fstats.injected_bits, 0);
+        assert_eq!(fstats.injected_words, 0);
+        assert_eq!(fstats.words, words.len() as u64);
+        let approx_err: u64 = words
+            .iter()
+            .zip(&want)
+            .map(|(&w, &d)| (w ^ d).count_ones() as u64)
+            .sum();
+        assert_eq!(fstats.observed_error_bits, approx_err);
+    }
+
+    #[test]
+    fn injection_corrupts_approx_words_and_counts_them() {
+        let mut r = seeded_rng(78);
+        let words: Vec<u64> = (0..2048).map(|_| r.next_u64()).collect();
+        let approx = vec![true; words.len()];
+        let spec = FaultSpec::uniform(0.01).with_seed(5);
+
+        // ORG is a passthrough, so every injected flip surfaces 1:1 in
+        // the decoded stream.
+        let build = || {
+            default_registry()
+                .build(&CodecSpec::named("ORG"))
+                .unwrap()
+        };
+        let mut clean = ChipLane::with_capacity(build(), words.len());
+        clean.drive(&words, &approx);
+        let (clean_out, clean_counts, _, clean_f) = clean.finish();
+        assert_eq!(clean_out, words);
+        assert_eq!(clean_f.injected_bits, 0);
+
+        let mut faulty = ChipLane::with_faults(build(), words.len(), spec.build(0, 0));
+        faulty.drive(&words, &approx);
+        let (out, counts, _, fstats) = faulty.finish();
+        assert!(fstats.injected_bits > 0, "no flips at 1% BER");
+        assert_eq!(fstats.observed_error_bits, fstats.injected_bits);
+        let hamming: u64 = words
+            .iter()
+            .zip(&out)
+            .map(|(&w, &d)| (w ^ d).count_ones() as u64)
+            .sum();
+        assert_eq!(hamming, fstats.injected_bits);
+        // Energy is counted at transmit time, before injection.
+        assert_eq!(counts, clean_counts);
+    }
+
+    #[test]
+    fn critical_words_bypass_injection() {
+        let mut r = seeded_rng(79);
+        let words: Vec<u64> = (0..1024).map(|_| r.next_u64()).collect();
+        let approx = vec![false; words.len()];
+        let codec = default_registry()
+            .build(&CodecSpec::named("ORG"))
+            .unwrap();
+        let mut lane = ChipLane::with_faults(
+            codec,
+            words.len(),
+            FaultSpec::uniform(0.5).with_seed(6).build(0, 0),
+        );
+        lane.drive(&words, &approx);
+        let (out, _, _, fstats) = lane.finish();
+        assert_eq!(out, words, "critical traffic must be exact");
+        assert_eq!(fstats.injected_bits, 0);
+        assert_eq!(fstats.observed_error_bits, 0);
     }
 }

@@ -137,11 +137,18 @@ impl MbdcDecoder {
     }
 
     /// Decode with an explicit update policy mirroring the encoder's.
+    ///
+    /// Total over corrupted wires: under fault injection the data lines
+    /// can lie, which may desynchronize the mirrored table (the dedup
+    /// decision rides on `wire.data`); an index the mirror has not
+    /// written yet then reads as zero instead of faulting — fault
+    /// propagation is simulated, never a panic. Fault-free streams
+    /// always present valid indices, so behaviour there is unchanged.
     pub(crate) fn decode_word_policy(table: &mut DataTable, wire: &WireWord, dedup: bool) -> u64 {
         match wire.outcome {
             Outcome::ZeroSkip => 0, // no table update for zeros
             Outcome::Bde => {
-                let entry = table.get(wire.index_line as usize);
+                let entry = table.get_or_zero(wire.index_line as usize);
                 let word = wire.data ^ entry;
                 // Encoder pushed iff search distance != 0; under BDE the
                 // xor on the wire *is* the distance pattern, so data != 0

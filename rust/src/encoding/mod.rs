@@ -146,7 +146,19 @@ pub fn run_chip_stream(
     let mut codec = Codec::from_config(cfg);
     let mut out = Vec::with_capacity(words.len());
     let mut wires = [WireWord::raw(0); ENCODE_BATCH];
-    lane::drive_batches(&mut codec, chan, stats, words, approx, &mut wires, &mut out);
+    let mut faults = crate::faults::PerfectChannel;
+    let mut fstats = crate::faults::FaultStats::default();
+    lane::drive_batches(
+        &mut codec,
+        chan,
+        stats,
+        &mut faults,
+        &mut fstats,
+        words,
+        approx,
+        &mut wires,
+        &mut out,
+    );
     out
 }
 

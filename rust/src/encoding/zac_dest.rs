@@ -207,12 +207,22 @@ impl ChipDecoder for ZacDestDecoder {
                     // Ablation path: binary index on the sideband.
                     wire.index_line as usize
                 } else {
+                    // A fault-free OHE word has exactly one 1; under
+                    // wire-level fault injection the hot bit can be
+                    // cleared or an extra one raised. The receiver's
+                    // priority decoder resolves the lowest driven line
+                    // (matching the CAM's tie-break); an all-low burst
+                    // addresses no row and reads as zero.
                     let ohe = dbi_decode(wire.data, wire.dbi_mask);
-                    debug_assert_eq!(ohe.count_ones(), 1, "OHE word must have one 1");
+                    if ohe == 0 {
+                        return 0;
+                    }
                     ohe.trailing_zeros() as usize
                 };
-                // Approximate reconstruction: the mirrored entry, no update.
-                self.table.get(index)
+                // Approximate reconstruction: the mirrored entry, no
+                // update. Total over fault-synthesized indices (an
+                // unwritten row reads as zero).
+                self.table.get_or_zero(index)
             }
             Outcome::Bde | Outcome::Raw => {
                 let mut undone = *wire;

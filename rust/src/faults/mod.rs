@@ -1,0 +1,486 @@
+//! Approximate-DRAM fault-injection layer (EDEN / SparkXD-style error
+//! models).
+//!
+//! The repo's channel was perfect until this module: nothing ever
+//! flipped a bit, so the paper's quality-loss axis on *error resilient*
+//! applications was unreproducible. EDEN (arXiv:1910.05340) models
+//! voltage/latency-scaled DRAM as a bit-error-rate that rises roughly
+//! one decade per ~50 mV below nominal, weighted toward 1→0 flips
+//! (charge loss in true cells); SparkXD (arXiv:2103.00421) splits
+//! traffic by criticality so only error-resilient accesses ride the
+//! scaled (faulty) path.
+//!
+//! Both ideas land here:
+//!
+//! * [`FaultModel`] — the deterministic, seed-driven corruption hook
+//!   the one shared drive loop ([`crate::encoding::lane::drive_batches`])
+//!   applies to the wire **between** `transmit_batch` and
+//!   `decode_batch`. Energy accounting is untouched by construction
+//!   (the transfer already happened); only what the receiver *senses*
+//!   changes.
+//! * [`FaultSpec`] — the serializable knob bag every ingestion boundary
+//!   (CLI `--faults`, run/sweep TOML, `Session::builder().faults(..)`)
+//!   parses and validates, mirroring the `CodecSpec` contract: a bad
+//!   spec is an error at the boundary, never a silent fallback.
+//! * Criticality split: the drive loop only corrupts words whose
+//!   per-access flag marks them error-resilient —
+//!   [`TrafficClass::Critical`](crate::session::TrafficClass) streams
+//!   bypass injection entirely, SparkXD-style. (The guarantee is
+//!   per-access *injection*; in a mixed per-word stream, corruption of
+//!   an approximate transfer can propagate through a table-based
+//!   codec's shared mirror state into later words — see
+//!   `encoding::lane` for the exact scope.)
+//!
+//! Determinism contract: a model's flip sequence is a pure function of
+//! `(spec seed, shard, chip, words seen so far)`. There is no wall-clock
+//! or OS entropy anywhere, so a fixed-seed run is byte-for-byte
+//! reproducible at any channel count, and `FaultSpec::perfect()` is
+//! pinned bit-identical to the historical no-fault path by property
+//! tests (`rust/tests/faults.rs`).
+
+pub mod model;
+pub mod profile;
+
+pub use model::{FaultModel, PerLaneBer, PerfectChannel, UniformBer};
+pub use profile::FaultProfile;
+
+/// Per-stream fault-injection statistics, merged across chips and
+/// shards exactly like [`EncodeStats`](crate::encoding::EncodeStats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Wire data bits flipped by the model.
+    pub injected_bits: u64,
+    /// Transfers with at least one injected flip.
+    pub injected_words: u64,
+    /// End-to-end error bits: Σ hamming(original word, decoded word).
+    /// Includes codec approximation *and* fault propagation, so with a
+    /// perfect channel this is the pure approximation error.
+    pub observed_error_bits: u64,
+    /// Words driven (denominator for the rates below).
+    pub words: u64,
+}
+
+impl FaultStats {
+    /// Merge another stream's stats (per-chip / per-shard aggregation).
+    pub fn merge(&mut self, o: &FaultStats) {
+        self.injected_bits += o.injected_bits;
+        self.injected_words += o.injected_words;
+        self.observed_error_bits += o.observed_error_bits;
+        self.words += o.words;
+    }
+
+    /// Injected flips per transferred data bit (the measured BER).
+    pub fn injected_ber(&self) -> f64 {
+        if self.words == 0 {
+            0.0
+        } else {
+            self.injected_bits as f64 / (self.words as f64 * 64.0)
+        }
+    }
+
+    /// End-to-end error bits per data bit (the quality-delta rate).
+    pub fn observed_error_rate(&self) -> f64 {
+        if self.words == 0 {
+            0.0
+        } else {
+            self.observed_error_bits as f64 / (self.words as f64 * 64.0)
+        }
+    }
+}
+
+/// Which error model a [`FaultSpec`] builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// No corruption — the historical behaviour, and the default.
+    Perfect,
+    /// Uniform BER across all lanes with 1→0/0→1 asymmetry.
+    Uniform {
+        /// Overall bit-error rate in [0, 1].
+        ber: f64,
+        /// Fraction of flips that are 1→0 on balanced data, in [0, 1]
+        /// (charge-loss asymmetry; EDEN's default here is 0.75).
+        one_to_zero_fraction: f64,
+    },
+    /// EDEN-style voltage-binned profile: the supply-voltage knob maps
+    /// to a per-lane BER through [`FaultProfile`].
+    Voltage {
+        /// DRAM supply voltage in millivolts
+        /// ([`FaultProfile::MIN_MV`]..=[`FaultProfile::NOMINAL_MV`]).
+        millivolts: u32,
+    },
+}
+
+/// A validated, serializable fault-model description: the fault-layer
+/// analogue of [`CodecSpec`](crate::encoding::CodecSpec).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Base seed; each (shard, chip) lane derives a decorrelated
+    /// sub-stream from it.
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::perfect()
+    }
+}
+
+impl FaultSpec {
+    /// Default injection seed (any fixed value works; this one is just
+    /// recognizable in reports).
+    pub const DEFAULT_SEED: u64 = 0x5EED_FA17;
+
+    /// The charge-loss asymmetry used when a spec doesn't pick its own:
+    /// three of four flips discharge a stored 1.
+    pub const DEFAULT_ONE_TO_ZERO_FRACTION: f64 = 0.75;
+
+    /// No corruption (the historical behaviour).
+    pub fn perfect() -> FaultSpec {
+        FaultSpec {
+            kind: FaultKind::Perfect,
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// Uniform BER with the default 1→0 bias.
+    pub fn uniform(ber: f64) -> FaultSpec {
+        FaultSpec {
+            kind: FaultKind::Uniform {
+                ber,
+                one_to_zero_fraction: Self::DEFAULT_ONE_TO_ZERO_FRACTION,
+            },
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// EDEN-style voltage-scaled profile at `millivolts`.
+    pub fn voltage(millivolts: u32) -> FaultSpec {
+        FaultSpec {
+            kind: FaultKind::Voltage { millivolts },
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
+    /// Same spec with an explicit base seed.
+    pub fn with_seed(mut self, seed: u64) -> FaultSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Whether this spec can never flip a bit (lets every layer keep
+    /// the historical fast path).
+    pub fn is_perfect(&self) -> bool {
+        match self.kind {
+            FaultKind::Perfect => true,
+            FaultKind::Uniform { ber, .. } => ber <= 0.0,
+            FaultKind::Voltage { millivolts } => {
+                FaultProfile::ber_at(millivolts) <= 0.0
+            }
+        }
+    }
+
+    /// Validate the spec. Every ingestion boundary calls this before a
+    /// model is built — mirrors `CodecSpec::validate`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self.kind {
+            FaultKind::Perfect => Ok(()),
+            FaultKind::Uniform {
+                ber,
+                one_to_zero_fraction,
+            } => {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&ber) && ber.is_finite(),
+                    "fault BER {ber} out of range [0, 1]"
+                );
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&one_to_zero_fraction),
+                    "1->0 fraction {one_to_zero_fraction} out of range [0, 1]"
+                );
+                Ok(())
+            }
+            FaultKind::Voltage { millivolts } => {
+                anyhow::ensure!(
+                    (FaultProfile::MIN_MV..=FaultProfile::NOMINAL_MV)
+                        .contains(&millivolts),
+                    "supply voltage {millivolts} mV outside the modelled \
+                     scaling range [{}, {}] mV",
+                    FaultProfile::MIN_MV,
+                    FaultProfile::NOMINAL_MV
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Short label for scenario rows / figure legends, e.g. `perfect`,
+    /// `ber1e-4`, `vdd1050mV`. Faithful and collision-free: the exact
+    /// BER is printed (no rounding), a non-default 1→0 fraction is
+    /// appended as `:f<frac>` and a non-default seed as `@<seed>`, so
+    /// distinct sweep cells never collapse to one label.
+    pub fn label(&self) -> String {
+        let mut label = match self.kind {
+            FaultKind::Perfect => "perfect".to_string(),
+            FaultKind::Uniform {
+                ber,
+                one_to_zero_fraction,
+            } => {
+                let mut l = format!("ber{ber:e}");
+                if one_to_zero_fraction != Self::DEFAULT_ONE_TO_ZERO_FRACTION {
+                    l.push_str(&format!(":f{one_to_zero_fraction}"));
+                }
+                l
+            }
+            FaultKind::Voltage { millivolts } => format!("vdd{millivolts}mV"),
+        };
+        if self.seed != Self::DEFAULT_SEED && !self.is_perfect() {
+            label.push_str(&format!("@{}", self.seed));
+        }
+        label
+    }
+
+    /// Parse the uniform textual form shared by CLI flags and TOML:
+    ///
+    /// * `perfect`
+    /// * `uniform:<ber>` or `uniform:<ber>:<one_to_zero_fraction>`
+    /// * `voltage:<millivolts>`
+    ///
+    /// any of which may carry an `@<seed>` suffix (`voltage:1050@7`).
+    /// Unknown model names and malformed numbers are rejected — same
+    /// "no silent knob absorption" contract as `CodecSpec::set_knob`.
+    pub fn parse(text: &str) -> anyhow::Result<FaultSpec> {
+        let text = text.trim();
+        let (body, seed) = match text.split_once('@') {
+            Some((body, s)) => {
+                let seed: u64 = s
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault seed {s:?}: {e}"))?;
+                (body.trim(), seed)
+            }
+            None => (text, Self::DEFAULT_SEED),
+        };
+        let mut parts = body.split(':');
+        let name = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+        let args: Vec<&str> = parts.map(|p| p.trim()).collect();
+        let num = |what: &str, s: &str| -> anyhow::Result<f64> {
+            s.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("fault {what} {s:?}: {e}"))
+        };
+        let spec = match name.as_str() {
+            "perfect" | "none" => {
+                anyhow::ensure!(args.is_empty(), "perfect takes no arguments");
+                FaultSpec::perfect()
+            }
+            "uniform" | "ber" => {
+                anyhow::ensure!(
+                    (1..=2).contains(&args.len()),
+                    "uniform needs uniform:<ber>[:<one_to_zero_fraction>]"
+                );
+                let ber = num("BER", args[0])?;
+                let frac = match args.get(1) {
+                    Some(s) => num("1->0 fraction", s)?,
+                    None => Self::DEFAULT_ONE_TO_ZERO_FRACTION,
+                };
+                FaultSpec {
+                    kind: FaultKind::Uniform {
+                        ber,
+                        one_to_zero_fraction: frac,
+                    },
+                    seed: Self::DEFAULT_SEED,
+                }
+            }
+            "voltage" | "vdd" => {
+                anyhow::ensure!(
+                    args.len() == 1,
+                    "voltage needs voltage:<millivolts>"
+                );
+                let mv = num("voltage", args[0])?;
+                anyhow::ensure!(
+                    mv >= 0.0 && mv.fract() == 0.0,
+                    "voltage must be a whole number of millivolts, got {mv}"
+                );
+                FaultSpec::voltage(mv as u32)
+            }
+            other => anyhow::bail!(
+                "unknown fault model {other:?}; known: perfect, \
+                 uniform:<ber>[:<frac>], voltage:<mV> (each optionally @<seed>)"
+            ),
+        };
+        let spec = spec.with_seed(seed);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a comma-separated fault axis, e.g.
+    /// `perfect,voltage:1050,uniform:1e-4`.
+    pub fn parse_list(text: &str) -> anyhow::Result<Vec<FaultSpec>> {
+        let list: Vec<FaultSpec> = text
+            .split(',')
+            .map(FaultSpec::parse)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!list.is_empty(), "empty fault list");
+        Ok(list)
+    }
+
+    /// Build the model instance for one lane. Each `(shard, chip)` pair
+    /// gets a decorrelated sub-seed, so lanes inject independent
+    /// streams while the whole run stays a pure function of the base
+    /// seed.
+    pub fn build(&self, shard: usize, chip: usize) -> Box<dyn FaultModel> {
+        let seed = lane_seed(self.seed, shard, chip);
+        match self.kind {
+            FaultKind::Perfect => Box::new(PerfectChannel),
+            FaultKind::Uniform {
+                ber,
+                one_to_zero_fraction,
+            } => Box::new(UniformBer::new(seed, ber, one_to_zero_fraction)),
+            FaultKind::Voltage { millivolts } => {
+                Box::new(FaultProfile::eden(millivolts).model(seed))
+            }
+        }
+    }
+}
+
+/// Decorrelate one lane's injection stream from its siblings: mix the
+/// (shard, chip) coordinates in with a golden-ratio stride before the
+/// RNG's own splitmix seeding. Adjacent base seeds and adjacent lanes
+/// both land far apart.
+fn lane_seed(seed: u64, shard: usize, chip: usize) -> u64 {
+    let lane = ((shard as u64) << 8) | (chip as u64 + 1);
+    seed ^ lane.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::WireWord;
+
+    #[test]
+    fn parse_accepts_the_documented_forms() {
+        assert_eq!(FaultSpec::parse("perfect").unwrap(), FaultSpec::perfect());
+        let u = FaultSpec::parse("uniform:1e-3").unwrap();
+        assert_eq!(
+            u.kind,
+            FaultKind::Uniform {
+                ber: 1e-3,
+                one_to_zero_fraction: FaultSpec::DEFAULT_ONE_TO_ZERO_FRACTION
+            }
+        );
+        let u = FaultSpec::parse("uniform:0.01:0.9@77").unwrap();
+        assert_eq!(u.seed, 77);
+        assert_eq!(
+            u.kind,
+            FaultKind::Uniform {
+                ber: 0.01,
+                one_to_zero_fraction: 0.9
+            }
+        );
+        let v = FaultSpec::parse(" voltage:1050 ").unwrap();
+        assert_eq!(v.kind, FaultKind::Voltage { millivolts: 1050 });
+        assert!(!v.is_perfect());
+        assert!(FaultSpec::parse("vdd:1250@3").unwrap().is_perfect());
+        assert_eq!(
+            FaultSpec::parse_list("perfect,voltage:1050").unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn parse_rejects_unknown_models_and_bad_numbers() {
+        for bad in [
+            "wat",
+            "uniform",
+            "uniform:lots",
+            "uniform:2.0", // BER out of range
+            "uniform:1e-3:1.5",
+            "voltage",
+            "voltage:12.5",
+            "voltage:400", // below modelled range
+            "voltage:1050@zzz",
+            "perfect:1",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} accepted");
+        }
+        assert!(FaultSpec::parse_list("").is_err());
+    }
+
+    #[test]
+    fn labels_are_stable_faithful_and_collision_free() {
+        assert_eq!(FaultSpec::perfect().label(), "perfect");
+        assert_eq!(FaultSpec::uniform(1e-4).label(), "ber1e-4");
+        assert_eq!(FaultSpec::voltage(1050).label(), "vdd1050mV");
+        // The exact BER is printed, never rounded to one digit.
+        assert_eq!(FaultSpec::uniform(1.5e-4).label(), "ber1.5e-4");
+        // Distinct fractions / seeds get distinct labels.
+        let a = FaultSpec::parse("uniform:1e-3:0.5").unwrap().label();
+        let b = FaultSpec::parse("uniform:1e-3:0.9").unwrap().label();
+        assert_ne!(a, b);
+        assert_eq!(a, "ber1e-3:f0.5");
+        let c = FaultSpec::parse("uniform:1e-3@1").unwrap().label();
+        let d = FaultSpec::parse("uniform:1e-3@2").unwrap().label();
+        assert_ne!(c, d);
+        assert_eq!(d, "ber1e-3@2");
+        assert_eq!(FaultSpec::voltage(1000).with_seed(9).label(), "vdd1000mV@9");
+        // A non-default seed on a perfect spec changes nothing, so the
+        // label stays clean.
+        assert_eq!(FaultSpec::perfect().with_seed(9).label(), "perfect");
+    }
+
+    #[test]
+    fn lane_seeds_decorrelate() {
+        let mut seen = std::collections::BTreeSet::new();
+        for shard in 0..4 {
+            for chip in 0..8 {
+                assert!(seen.insert(lane_seed(42, shard, chip)));
+            }
+        }
+        assert_ne!(lane_seed(1, 0, 0), lane_seed(2, 0, 0));
+    }
+
+    #[test]
+    fn stats_merge_adds() {
+        let mut a = FaultStats {
+            injected_bits: 3,
+            injected_words: 2,
+            observed_error_bits: 5,
+            words: 10,
+        };
+        let b = FaultStats {
+            injected_bits: 1,
+            injected_words: 1,
+            observed_error_bits: 2,
+            words: 6,
+        };
+        a.merge(&b);
+        assert_eq!(a.injected_bits, 4);
+        assert_eq!(a.injected_words, 3);
+        assert_eq!(a.observed_error_bits, 7);
+        assert_eq!(a.words, 16);
+        assert!((a.injected_ber() - 4.0 / (16.0 * 64.0)).abs() < 1e-15);
+        assert!(FaultStats::default().injected_ber() == 0.0);
+    }
+
+    #[test]
+    fn built_models_are_deterministic_per_lane() {
+        let spec = FaultSpec::uniform(0.05).with_seed(9);
+        let mut a = spec.build(1, 3);
+        let mut b = spec.build(1, 3);
+        let mut c = spec.build(1, 4);
+        let mut same = true;
+        let mut diff = false;
+        for i in 0..256u64 {
+            let word = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut wa = WireWord::raw(word);
+            let mut wb = WireWord::raw(word);
+            let mut wc = WireWord::raw(word);
+            a.corrupt(&mut wa);
+            b.corrupt(&mut wb);
+            c.corrupt(&mut wc);
+            same &= wa == wb;
+            diff |= wa != wc;
+        }
+        assert!(same, "same lane + seed must corrupt identically");
+        assert!(diff, "sibling lanes must inject independent streams");
+    }
+}

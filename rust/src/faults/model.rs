@@ -1,0 +1,288 @@
+//! The fault models themselves: deterministic, seed-driven corruption
+//! of the 8 data lines of one chip transfer.
+//!
+//! Scope: only the **data lines** (`WireWord::data`) are corrupted. The
+//! sidebands (DBI, index, flag) are one line each and assumed hardened
+//! — the same modelling choice SparkXD makes for its control metadata —
+//! so a corrupted transfer is always a well-formed wire word whose
+//! payload bits lie. The decoders are total over such words (a
+//! fault-flipped one-hot index resolves through the receiver's priority
+//! decoder, see [`crate::encoding::zac_dest`]), which is what lets
+//! fault propagation through the mirrored tables be simulated instead
+//! of panicking.
+
+use crate::encoding::WireWord;
+use crate::util::rng::Rng;
+
+/// Deterministic wire-corruption hook. The one shared drive loop calls
+/// [`FaultModel::corrupt`] once per *error-resilient* transfer, between
+/// `transmit_batch` (energy already counted) and `decode_batch`.
+///
+/// Determinism contract: the flip sequence must be a pure function of
+/// the model's seed and the calls made so far — no wall-clock or OS
+/// entropy — so fixed-seed runs are byte-for-byte reproducible.
+pub trait FaultModel: Send {
+    /// Corrupt the data lines of one transfer in place; returns the
+    /// number of bits flipped.
+    fn corrupt(&mut self, wire: &mut WireWord) -> u32;
+
+    /// False when the model can never flip a bit — lets the drive loop
+    /// skip the per-word call entirely on the perfect path.
+    fn is_active(&self) -> bool {
+        true
+    }
+}
+
+/// The historical no-fault channel.
+pub struct PerfectChannel;
+
+impl FaultModel for PerfectChannel {
+    fn corrupt(&mut self, _wire: &mut WireWord) -> u32 {
+        0
+    }
+
+    fn is_active(&self) -> bool {
+        false
+    }
+}
+
+/// 64 i.i.d. Bernoulli(p) draws over the low `bits` positions, packed
+/// into a mask — sampled with geometric gap skipping, so the cost is
+/// O(expected flips) RNG draws (one draw when nothing flips), not one
+/// draw per bit. Exact per-bit distribution: P(bit set) = p.
+pub(crate) fn bernoulli_mask(rng: &mut Rng, p: f64, bits: u32) -> u64 {
+    debug_assert!(bits >= 1 && bits <= 64);
+    let full = if bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    };
+    if p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return full;
+    }
+    let ln_q = (1.0 - p).ln(); // < 0
+    let mut mask = 0u64;
+    let mut i = 0u32;
+    while i < bits {
+        let u = rng.f64();
+        if u <= 0.0 {
+            break; // ln(0) -> gap beyond any word
+        }
+        // gap ~ Geometric(p): failures before the next success.
+        let gap = (u.ln() / ln_q).floor();
+        if gap >= (bits - i) as f64 {
+            break;
+        }
+        i += gap as u32;
+        mask |= 1u64 << i;
+        i += 1;
+    }
+    mask
+}
+
+/// Split an overall BER and a 1→0 fraction into per-polarity rates.
+/// On balanced data, a fraction `f` of all flips being 1→0 means the
+/// stored-1 rate is `2 f · ber` and the stored-0 rate `2 (1-f) · ber`
+/// (each polarity holds half the bits). Rates are clamped to [0, 1].
+pub(crate) fn polarity_rates(ber: f64, one_to_zero_fraction: f64) -> (f64, f64) {
+    let p_one = (2.0 * one_to_zero_fraction * ber).clamp(0.0, 1.0);
+    let p_zero = (2.0 * (1.0 - one_to_zero_fraction) * ber).clamp(0.0, 1.0);
+    (p_one, p_zero)
+}
+
+/// Uniform-BER model: every data line shares one bit-error rate, with
+/// the 1→0/0→1 asymmetry of charge-loss errors.
+pub struct UniformBer {
+    rng: Rng,
+    /// Flip probability for driven 1s (charge loss).
+    p_one: f64,
+    /// Flip probability for driven 0s.
+    p_zero: f64,
+}
+
+impl UniformBer {
+    pub fn new(seed: u64, ber: f64, one_to_zero_fraction: f64) -> UniformBer {
+        let (p_one, p_zero) = polarity_rates(ber, one_to_zero_fraction);
+        UniformBer {
+            rng: Rng::new(seed),
+            p_one,
+            p_zero,
+        }
+    }
+}
+
+impl FaultModel for UniformBer {
+    fn corrupt(&mut self, wire: &mut WireWord) -> u32 {
+        let ones = wire.data;
+        let m10 = bernoulli_mask(&mut self.rng, self.p_one, 64) & ones;
+        let m01 = bernoulli_mask(&mut self.rng, self.p_zero, 64) & !ones;
+        let flips = m10 | m01;
+        wire.data ^= flips;
+        flips.count_ones()
+    }
+
+    fn is_active(&self) -> bool {
+        self.p_one > 0.0 || self.p_zero > 0.0
+    }
+}
+
+/// Per-lane BER model: each of the chip's 8 data lines carries its own
+/// flip probabilities (weak-column variation — the shape EDEN's DRAM
+/// characterization reports). Bit `8·beat + line` of `WireWord::data`
+/// rides line `line`, so lane `l`'s candidate positions are the bits
+/// `l, l+8, …, l+56`.
+pub struct PerLaneBer {
+    rng: Rng,
+    /// Per-line flip probability for driven 1s.
+    p_one: [f64; 8],
+    /// Per-line flip probability for driven 0s.
+    p_zero: [f64; 8],
+}
+
+impl PerLaneBer {
+    pub fn new(seed: u64, p_one: [f64; 8], p_zero: [f64; 8]) -> PerLaneBer {
+        PerLaneBer {
+            rng: Rng::new(seed),
+            p_one,
+            p_zero,
+        }
+    }
+}
+
+/// Deposit bit `b` of an 8-bit beat mask at word position `8·b` (line 0
+/// of every flagged beat); shift by the line index to address line `l`.
+fn spread_beats(m8: u64) -> u64 {
+    let mut out = 0u64;
+    let mut x = m8;
+    while x != 0 {
+        let b = x.trailing_zeros();
+        out |= 1u64 << (8 * b);
+        x &= x - 1;
+    }
+    out
+}
+
+impl FaultModel for PerLaneBer {
+    fn corrupt(&mut self, wire: &mut WireWord) -> u32 {
+        let mut flips = 0u64;
+        for l in 0..8 {
+            let c1 = spread_beats(bernoulli_mask(&mut self.rng, self.p_one[l], 8)) << l;
+            let c0 = spread_beats(bernoulli_mask(&mut self.rng, self.p_zero[l], 8)) << l;
+            flips |= (c1 & wire.data) | (c0 & !wire.data);
+        }
+        wire.data ^= flips;
+        flips.count_ones()
+    }
+
+    fn is_active(&self) -> bool {
+        self.p_one.iter().chain(&self.p_zero).any(|&p| p > 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::seeded_rng;
+
+    #[test]
+    fn bernoulli_mask_edge_probabilities() {
+        let mut r = seeded_rng(1);
+        assert_eq!(bernoulli_mask(&mut r, 0.0, 64), 0);
+        assert_eq!(bernoulli_mask(&mut r, 1.0, 64), u64::MAX);
+        assert_eq!(bernoulli_mask(&mut r, 1.0, 8), 0xFF);
+        for _ in 0..1000 {
+            assert_eq!(bernoulli_mask(&mut r, 0.3, 8) & !0xFF, 0);
+        }
+    }
+
+    #[test]
+    fn bernoulli_mask_rate_matches_p() {
+        let mut r = seeded_rng(2);
+        for p in [0.01f64, 0.1, 0.5, 0.9] {
+            let n = 4000;
+            let set: u64 = (0..n)
+                .map(|_| bernoulli_mask(&mut r, p, 64).count_ones() as u64)
+                .sum();
+            let rate = set as f64 / (n as f64 * 64.0);
+            assert!(
+                (rate - p).abs() < 0.02,
+                "p={p}: measured {rate}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_ber_respects_polarity_asymmetry() {
+        // All-ones words can only lose bits at p_one; all-zero words can
+        // only gain bits at p_zero. With a 0.75 bias the 1->0 rate is
+        // three times the 0->1 rate.
+        let mut m = UniformBer::new(3, 0.05, 0.75);
+        let (mut ones_flips, mut zeros_flips) = (0u64, 0u64);
+        for _ in 0..4000 {
+            let mut w = crate::encoding::WireWord::raw(u64::MAX);
+            ones_flips += m.corrupt(&mut w) as u64;
+            assert_eq!(w.data | u64::MAX, u64::MAX); // only 1->0 possible
+            let mut z = crate::encoding::WireWord::raw(0);
+            zeros_flips += m.corrupt(&mut z) as u64;
+        }
+        assert!(ones_flips > 0 && zeros_flips > 0);
+        let ratio = ones_flips as f64 / zeros_flips as f64;
+        assert!(
+            (2.0..4.5).contains(&ratio),
+            "1->0 / 0->1 ratio {ratio} far from 3"
+        );
+    }
+
+    #[test]
+    fn corrupt_reports_exact_flip_count() {
+        let mut m = UniformBer::new(5, 0.2, 0.5);
+        for i in 0..500u64 {
+            let orig = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut w = crate::encoding::WireWord::raw(orig);
+            let n = m.corrupt(&mut w);
+            assert_eq!((w.data ^ orig).count_ones(), n);
+            // Sidebands untouched.
+            assert_eq!(w.dbi_mask, 0);
+            assert!(!w.index_used);
+        }
+    }
+
+    #[test]
+    fn per_lane_model_confines_flips_to_hot_lanes() {
+        let mut p_one = [0.0; 8];
+        let mut p_zero = [0.0; 8];
+        p_one[3] = 0.5;
+        p_zero[3] = 0.5;
+        let mut m = PerLaneBer::new(7, p_one, p_zero);
+        let lane3 = 0x0101_0101_0101_0101u64 << 3;
+        let mut flipped = 0u64;
+        for i in 0..500u64 {
+            let orig = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut w = crate::encoding::WireWord::raw(orig);
+            m.corrupt(&mut w);
+            flipped |= w.data ^ orig;
+        }
+        assert_ne!(flipped, 0);
+        assert_eq!(flipped & !lane3, 0, "flips escaped lane 3");
+    }
+
+    #[test]
+    fn spread_beats_deposits_one_bit_per_beat() {
+        assert_eq!(spread_beats(0), 0);
+        assert_eq!(spread_beats(0b1), 1);
+        assert_eq!(spread_beats(0b1000_0001), (1u64 << 56) | 1);
+        assert_eq!(spread_beats(0xFF), 0x0101_0101_0101_0101);
+    }
+
+    #[test]
+    fn perfect_channel_is_inert() {
+        let mut p = PerfectChannel;
+        let mut w = crate::encoding::WireWord::raw(0xDEAD_BEEF);
+        assert_eq!(p.corrupt(&mut w), 0);
+        assert_eq!(w.data, 0xDEAD_BEEF);
+        assert!(!p.is_active());
+    }
+}

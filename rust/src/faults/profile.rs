@@ -1,0 +1,155 @@
+//! EDEN-style voltage-binned DRAM error profiles: the supply-voltage
+//! knob maps to a base bit-error rate, which is then spread across the
+//! chip's 8 data lanes with deterministic weak-column variation.
+//!
+//! Shape (EDEN, arXiv:1910.05340, Fig. 4): DRAM is error-free at the
+//! nominal 1.25 V; as V_dd scales down the raw BER rises roughly one
+//! decade per ~50 mV once cells start failing, saturating around 1e-2
+//! at the lowest voltages characterized. Errors are dominated by charge
+//! loss, i.e. weighted toward 1→0 flips.
+
+use super::model::{polarity_rates, PerLaneBer};
+use crate::util::rng::Rng;
+
+/// A voltage-binned fault profile: base BER at a supply voltage plus
+/// the per-lane weighting that turns it into a [`PerLaneBer`] model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Supply voltage this profile models.
+    pub millivolts: u32,
+    /// Raw BER of the bin (per stored bit, before lane weighting).
+    pub base_ber: f64,
+    /// Fraction of flips that are 1→0 (charge loss).
+    pub one_to_zero_fraction: f64,
+}
+
+impl FaultProfile {
+    /// Nominal DDR4 V_dd (error-free).
+    pub const NOMINAL_MV: u32 = 1250;
+    /// Lowest supply voltage the bins model.
+    pub const MIN_MV: u32 = 900;
+
+    /// The voltage → BER bin table (lower bound of each bin, BER).
+    /// Stepwise like EDEN's per-module characterization tables; the
+    /// exact decades are representative, not device-specific.
+    const BINS: [(u32, f64); 8] = [
+        (1250, 0.0),
+        (1200, 1e-7),
+        (1150, 1e-6),
+        (1100, 1e-5),
+        (1050, 1e-4),
+        (1000, 1e-3),
+        (950, 5e-3),
+        (900, 1e-2),
+    ];
+
+    /// Base BER for a supply voltage: the bin whose lower bound the
+    /// voltage reaches. `>= 1250 mV` is error-free.
+    pub fn ber_at(millivolts: u32) -> f64 {
+        for &(mv, ber) in &Self::BINS {
+            if millivolts >= mv {
+                return ber;
+            }
+        }
+        // Below the modelled range; validation rejects this earlier,
+        // but stay total and saturate.
+        Self::BINS[Self::BINS.len() - 1].1
+    }
+
+    /// The profile for a supply voltage with the default charge-loss
+    /// asymmetry.
+    pub fn eden(millivolts: u32) -> FaultProfile {
+        FaultProfile {
+            millivolts,
+            base_ber: Self::ber_at(millivolts),
+            one_to_zero_fraction: super::FaultSpec::DEFAULT_ONE_TO_ZERO_FRACTION,
+        }
+    }
+
+    /// Deterministic per-lane weakness weights in [0.25, 2.5): most
+    /// lanes sit near the base rate, a few are markedly weaker — the
+    /// squared-uniform skew gives the long tail DRAM column
+    /// characterization shows. Pure function of `seed`.
+    pub fn lane_weights(seed: u64) -> [f64; 8] {
+        let mut r = Rng::new(seed ^ 0x1a_e5_ca_1e);
+        let mut w = [0.0; 8];
+        for slot in w.iter_mut() {
+            let u = r.f64();
+            *slot = 0.25 + 2.25 * u * u;
+        }
+        w
+    }
+
+    /// Build the per-lane model this profile describes for one lane
+    /// seed (already decorrelated per (shard, chip) by the caller).
+    pub fn model(&self, seed: u64) -> PerLaneBer {
+        let weights = Self::lane_weights(seed);
+        let mut p_one = [0.0; 8];
+        let mut p_zero = [0.0; 8];
+        for l in 0..8 {
+            let (p1, p0) =
+                polarity_rates(self.base_ber * weights[l], self.one_to_zero_fraction);
+            p_one[l] = p1;
+            p_zero[l] = p0;
+        }
+        PerLaneBer::new(seed, p_one, p_zero)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::model::FaultModel;
+
+    #[test]
+    fn nominal_voltage_is_error_free() {
+        assert_eq!(FaultProfile::ber_at(1250), 0.0);
+        assert_eq!(FaultProfile::ber_at(1300), 0.0);
+        assert!(!FaultProfile::eden(1250).model(1).is_active());
+    }
+
+    #[test]
+    fn ber_rises_monotonically_as_voltage_drops() {
+        let mut prev = -1.0;
+        for mv in (900..=1250).rev().step_by(50) {
+            let ber = FaultProfile::ber_at(mv);
+            assert!(ber >= prev, "{mv} mV: {ber} < {prev}");
+            prev = ber;
+        }
+        assert_eq!(FaultProfile::ber_at(1050), 1e-4);
+        assert_eq!(FaultProfile::ber_at(1049), 1e-3);
+        assert_eq!(FaultProfile::ber_at(900), 1e-2);
+    }
+
+    #[test]
+    fn lane_weights_are_deterministic_and_bounded() {
+        let a = FaultProfile::lane_weights(42);
+        let b = FaultProfile::lane_weights(42);
+        let c = FaultProfile::lane_weights(43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        for w in a {
+            assert!((0.25..2.5).contains(&w), "{w}");
+        }
+    }
+
+    #[test]
+    fn scaled_profile_injects_and_is_seed_stable() {
+        let p = FaultProfile::eden(1000);
+        assert_eq!(p.base_ber, 1e-3);
+        let mut m1 = p.model(7);
+        let mut m2 = p.model(7);
+        assert!(m1.is_active());
+        let mut flips = 0;
+        for i in 0..20_000u64 {
+            let word = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut w = crate::encoding::WireWord::raw(word);
+            let mut w2 = crate::encoding::WireWord::raw(word);
+            flips += m1.corrupt(&mut w);
+            m2.corrupt(&mut w2);
+            assert_eq!(w, w2);
+        }
+        // 20k words x 64 bits x ~1e-3 weighted ~ O(1e3) flips.
+        assert!(flips > 200, "only {flips} flips at 1e-3 BER");
+    }
+}

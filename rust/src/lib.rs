@@ -27,11 +27,13 @@ pub mod circuits;
 pub mod coordinator;
 pub mod datasets;
 pub mod encoding;
+pub mod faults;
 pub mod figures;
 pub mod quality;
 pub mod runtime;
 pub mod session;
 pub mod system;
+pub mod testkit;
 pub mod trace;
 pub mod util;
 pub mod workloads;

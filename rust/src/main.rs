@@ -25,6 +25,7 @@ use anyhow::Result;
 
 use zac_dest::coordinator::RunConfig;
 use zac_dest::encoding::{default_registry, CodecSpec, Knobs, Outcome, Scheme};
+use zac_dest::faults::FaultSpec;
 use zac_dest::figures::{self, FigureCtx};
 use zac_dest::runtime::Runtime;
 use zac_dest::session::{Session, Trace, TrafficClass};
@@ -56,7 +57,12 @@ fn app() -> Command {
                 .opt("table-size", "64", "data-table entries per chip")
                 .opt("channels", "1", "8-chip channels to shard across")
                 .opt("bytes", "1048576", "synthetic stream size")
-                .opt("seed", "42", "synthetic stream seed"),
+                .opt("seed", "42", "synthetic stream seed")
+                .opt(
+                    "faults",
+                    "perfect",
+                    "fault model: perfect | uniform:<ber>[:<frac>] | voltage:<mV> (suffix @<seed>)",
+                ),
         )
         .subcommand(Command::new("schemes", "list the registered codec schemes"))
         .subcommand(
@@ -66,7 +72,8 @@ fn app() -> Command {
                 .opt("truncation", "0", "truncation bits per 8-bit chunk")
                 .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
                 .opt("seed", "42", "experiment seed")
-                .opt("budget", "quick", "suite budget: quick | full"),
+                .opt("budget", "quick", "suite budget: quick | full")
+                .opt("faults", "perfect", "fault model under the channel"),
         )
         .subcommand(
             Command::new("run", "full run from a TOML config file")
@@ -78,6 +85,11 @@ fn app() -> Command {
                 .opt("channels", "", "channel counts, e.g. 1,2,4 (overrides spec)")
                 .opt("bytes", "0", "synthetic trace bytes (0 = spec/env value)")
                 .opt("seed", "0", "synthetic trace seed (0 = spec value)")
+                .opt(
+                    "faults",
+                    "",
+                    "fault axis, e.g. perfect,voltage:1050 (overrides spec)",
+                )
                 .opt("out", "BENCH_system.json", "JSON report path ('-' = skip)")
                 .env(
                     "ZAC_CHANNELS",
@@ -181,23 +193,26 @@ fn main() -> Result<()> {
             spec.set_knob("truncation", m.get_or("truncation", "0"))?;
             spec.set_knob("tolerance", m.get_or("tolerance", "0"))?;
             spec.validate()?;
+            let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
             let rt = Runtime::load(Runtime::default_dir())?;
             let suite = Suite::build(
                 rt,
                 m.get_usize("seed")? as u64,
                 budget(m.get_or("budget", "quick")),
             )?;
-            let r = suite.eval(&spec, kind)?;
+            let r = suite.eval_under(&spec, &faults, kind)?;
             println!(
-                "{} under {}:\n  quality ratio  {:.3}  (original {:.3} -> approx {:.3})\n  termination 1s {}  switching {}  unencoded {:.1}%",
+                "{} under {} ({} channel):\n  quality ratio  {:.3}  (original {:.3} -> approx {:.3})\n  termination 1s {}  switching {}  unencoded {:.1}%\n  {}",
                 kind.label(),
                 spec.label(),
+                faults.label(),
                 r.quality,
                 r.original_metric,
                 r.approx_metric,
                 r.run.counts.termination_ones,
                 r.run.counts.switching_transitions,
                 100.0 * r.run.stats.unencoded_fraction(),
+                r.run.quality_delta(),
             );
         }
         Some("run") => cmd_run(m.get("config").unwrap())?,
@@ -276,6 +291,7 @@ fn encode_spec(m: &zac_dest::util::cli::Matches) -> Result<CodecSpec> {
 
 fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let spec = encode_spec(m)?;
+    let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
     let channels = m.get_usize("channels")?;
     let input = m.get_or("input", "-");
     let bytes = if input == "-" {
@@ -299,6 +315,7 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         .codec(spec.clone())
         .channels(channels)
         .traffic(TrafficClass::Approximate)
+        .faults(faults)
         .build()?;
     let t0 = std::time::Instant::now();
     let out = session.run(&trace)?;
@@ -312,6 +329,7 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let bytes = trace.bytes();
     println!("scheme        : {}", spec.label());
     println!("channels      : {channels}");
+    println!("faults        : {}", faults.label());
     println!("bytes         : {}", bytes.len());
     println!(
         "termination 1s: {} ({} vs ORG)",
@@ -332,6 +350,9 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         bytes.len() / 64,
         dt.as_secs_f64() * 1e3
     );
+    if out.faults.injected_bits > 0 {
+        println!("{}", out.quality_delta());
+    }
     if channels > 1 {
         println!("\n{}", out.render());
     }
@@ -368,13 +389,18 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if seed > 0 {
         spec.seed = seed;
     }
+    let faults_flag = m.get_or("faults", "");
+    if !faults_flag.is_empty() {
+        spec.faults = FaultSpec::parse_list(faults_flag)?;
+    }
     let trace = synthetic_trace(spec.bytes, spec.seed);
     eprintln!(
-        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}",
+        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}",
         spec.name,
         spec.channels,
         trace.len(),
-        spec.baseline.label()
+        spec.baseline.label(),
+        spec.faults.iter().map(|f| f.label()).collect::<Vec<_>>()
     );
     let report = run_sweep(&spec, &trace)?;
     println!("{}", report.render_table());
@@ -428,15 +454,30 @@ mod tests {
         assert!(err.contains("no knob"), "{err}");
         assert!(encode_spec(&matches("encode --scheme ORG --table-size 32")).is_err());
     }
+
+    #[test]
+    fn cli_fault_flag_parses_and_rejects_garbage() {
+        let m = matches("encode --faults voltage:1050@3");
+        let f = FaultSpec::parse(m.get_or("faults", "perfect")).unwrap();
+        assert_eq!(f.label(), "vdd1050mV");
+        assert_eq!(f.seed, 3);
+        let m = matches("encode");
+        assert!(FaultSpec::parse(m.get_or("faults", "perfect"))
+            .unwrap()
+            .is_perfect());
+        let m = matches("encode --faults banana");
+        assert!(FaultSpec::parse(m.get_or("faults", "perfect")).is_err());
+    }
 }
 
 fn cmd_run(path: &str) -> Result<()> {
     let rc = RunConfig::from_file(path)?;
     println!(
-        "run {:?}: {} over {:?}",
+        "run {:?}: {} over {:?} ({} channel)",
         rc.name,
         rc.encoder.label(),
-        rc.workloads
+        rc.workloads,
+        rc.faults.label()
     );
     let rt = Runtime::load(Runtime::default_dir())?;
     let mut b = SuiteBudget::full();
@@ -444,16 +485,24 @@ fn cmd_run(path: &str) -> Result<()> {
     b.train_steps = rc.train_steps;
     b.lr = rc.lr;
     let suite = Suite::build(rt, rc.seed, b)?;
-    let mut t = TextTable::new(&["workload", "quality", "term 1s", "switching", "unencoded"]);
+    let mut t = TextTable::new(&[
+        "workload",
+        "quality",
+        "term 1s",
+        "switching",
+        "unencoded",
+        "flips",
+    ]);
     for w in &rc.workloads {
         let kind = Kind::parse(w).ok_or_else(|| anyhow::anyhow!("unknown workload {w:?}"))?;
-        let r = suite.eval(&rc.encoder, kind)?;
+        let r = suite.eval_under(&rc.encoder, &rc.faults, kind)?;
         t.row(vec![
             kind.label().into(),
             format!("{:.3}", r.quality),
             format!("{}", r.run.counts.termination_ones),
             format!("{}", r.run.counts.switching_transitions),
             pct(100.0 * r.run.stats.unencoded_fraction()),
+            format!("{}", r.run.faults.injected_bits),
         ]);
     }
     println!("{}", t.render());

@@ -341,7 +341,9 @@ mod tests {
     #[test]
     fn trace_stats_executes_and_matches_popcount() {
         let Some(rt) = runtime() else { return };
-        let words: Vec<u64> = (0..8192u64).map(|i| i.wrapping_mul(0x9E3779B97F4A7C15)).collect();
+        // Seed-audit: the canonical seeded_rng stream, not an ad-hoc stride.
+        let mut r = crate::util::rng::seeded_rng(0x57A7);
+        let words: Vec<u64> = (0..8192).map(|_| r.next_u64()).collect();
         let t = Tensor::i32(pack_words_i32(&words), &[8192, 2]);
         let out = rt.exec("trace_stats", &[t]).unwrap();
         let per_word = out[0].as_i32().unwrap();
@@ -365,7 +367,7 @@ mod tests {
         use crate::encoding::DataTable;
         let Some(rt) = runtime() else { return };
         let mut table = DataTable::new(64);
-        let mut r = crate::util::rng::Rng::new(7);
+        let mut r = crate::util::rng::seeded_rng(7);
         for _ in 0..64 {
             table.push(r.next_u64());
         }

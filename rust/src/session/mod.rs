@@ -35,6 +35,7 @@ use crate::coordinator::{drive_lines, weight_chip_configs, Pipeline, RunOutput};
 use crate::encoding::{
     default_registry, Codec, CodecRegistry, CodecSpec, EncodeStats, ENCODE_BATCH,
 };
+use crate::faults::{FaultSpec, FaultStats};
 use crate::system::array::{ChannelArray, ShardReport, SystemOutput};
 use crate::trace::{bytes_to_chip_words, bytes_to_f32s, f32s_to_bytes, ChipWords};
 use crate::util::table::TextTable;
@@ -137,6 +138,9 @@ pub struct RunReport {
     pub counts: crate::channel::EnergyCounts,
     /// Encode statistics merged over all chips and shards.
     pub stats: EncodeStats,
+    /// Fault-injection + end-to-end error statistics merged over all
+    /// chips and shards (all-zero injection under a perfect channel).
+    pub faults: FaultStats,
     /// Per-shard breakdown, indexed by shard id.
     pub shards: Vec<ShardReport>,
 }
@@ -149,11 +153,13 @@ impl RunReport {
             lines,
             counts: out.counts,
             stats: out.stats.clone(),
+            faults: out.faults,
         };
         RunReport {
             bytes: out.bytes,
             counts: out.counts,
             stats: out.stats,
+            faults: out.faults,
             shards: vec![shard],
         }
     }
@@ -164,6 +170,7 @@ impl RunReport {
             bytes: sys.bytes,
             counts: sys.counts,
             stats: sys.stats,
+            faults: sys.faults,
             shards: sys.shards,
         }
     }
@@ -185,7 +192,23 @@ impl RunReport {
             bytes: self.bytes,
             counts: self.counts,
             stats: self.stats,
+            faults: self.faults,
         }
+    }
+
+    /// The quality-delta section: what injection did to the stream.
+    /// Meaningful even on a perfect channel (pure approximation error).
+    pub fn quality_delta(&self) -> String {
+        format!(
+            "quality delta: injected {} bit flips in {} transfers (BER {:.2e}); \
+             end-to-end error {} bits over {} words ({:.2e} per bit)",
+            self.faults.injected_bits,
+            self.faults.injected_words,
+            self.faults.injected_ber(),
+            self.faults.observed_error_bits,
+            self.faults.words,
+            self.faults.observed_error_rate()
+        )
     }
 
     /// Render the per-shard report table (one row per shard + totals).
@@ -207,11 +230,17 @@ impl RunReport {
             format!("{}", self.counts.termination_ones),
             format!("{}", self.counts.switching_transitions),
         ]);
+        let faults = if self.faults.injected_bits > 0 {
+            format!("\n{}", self.quality_delta())
+        } else {
+            String::new()
+        };
         format!(
-            "run report: {} channel(s), unencoded {:.1}%\n{}",
+            "run report: {} channel(s), unencoded {:.1}%\n{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
-            t.render()
+            t.render(),
+            faults
         )
     }
 }
@@ -238,6 +267,7 @@ pub struct Session {
     traffic: TrafficClass,
     execution: Execution,
     capacity: usize,
+    faults: FaultSpec,
 }
 
 impl Session {
@@ -256,6 +286,11 @@ impl Session {
 
     pub fn traffic(&self) -> TrafficClass {
         self.traffic
+    }
+
+    /// The fault model the wires run through (perfect by default).
+    pub fn faults(&self) -> &FaultSpec {
+        &self.faults
     }
 
     fn build_codecs(&self) -> anyhow::Result<Vec<Codec>> {
@@ -278,11 +313,21 @@ impl Session {
         match mode {
             Execution::Batch => {
                 let codecs = self.build_codecs()?;
-                let out = drive_lines(codecs, trace.lines(), approx, trace.byte_len());
+                let out = drive_lines(
+                    codecs,
+                    trace.lines(),
+                    approx,
+                    trace.byte_len(),
+                    &self.faults,
+                );
                 Ok(RunReport::from_output(out, trace.line_count()))
             }
             Execution::Pipelined => {
-                let mut p = Pipeline::with_codecs(self.build_codecs()?, self.capacity);
+                let mut p = Pipeline::with_codecs_and_faults(
+                    self.build_codecs()?,
+                    self.capacity,
+                    &self.faults,
+                );
                 for l in trace.lines() {
                     p.push_line(*l, approx);
                 }
@@ -295,7 +340,8 @@ impl Session {
                 let sets = (0..self.channels)
                     .map(|_| self.build_codecs())
                     .collect::<anyhow::Result<Vec<_>>>()?;
-                let mut a = ChannelArray::with_codec_sets(sets, self.capacity);
+                let mut a =
+                    ChannelArray::with_codec_sets_and_faults(sets, self.capacity, &self.faults);
                 for l in trace.lines() {
                     a.push_line(*l, approx);
                 }
@@ -321,6 +367,7 @@ pub struct SessionBuilder {
     traffic: TrafficClass,
     execution: Execution,
     capacity: Option<usize>,
+    faults: FaultSpec,
 }
 
 impl SessionBuilder {
@@ -375,6 +422,15 @@ impl SessionBuilder {
     /// five; pass an extended clone for out-of-tree schemes).
     pub fn registry(mut self, registry: CodecRegistry) -> SessionBuilder {
         self.registry = Some(registry);
+        self
+    }
+
+    /// Fault model applied to every lane's wire between transmit and
+    /// decode (default: [`FaultSpec::perfect`], the historical no-fault
+    /// channel). Only [`TrafficClass::Approximate`] words are ever
+    /// corrupted — critical traffic bypasses injection.
+    pub fn faults(mut self, spec: FaultSpec) -> SessionBuilder {
+        self.faults = spec;
         self
     }
 
@@ -434,6 +490,9 @@ impl SessionBuilder {
                 self.execution
             );
         }
+        self.faults
+            .validate()
+            .map_err(|e| anyhow::anyhow!("fault spec: {e}"))?;
         Ok(Session {
             specs,
             registry,
@@ -441,6 +500,7 @@ impl SessionBuilder {
             traffic: self.traffic,
             execution: self.execution,
             capacity: self.capacity.unwrap_or(4 * ENCODE_BATCH).max(1),
+            faults: self.faults,
         })
     }
 }
@@ -450,18 +510,8 @@ mod tests {
     use super::*;
     use crate::coordinator::{simulate_bytes, simulate_f32s};
     use crate::encoding::{ChipDecoder, ChipEncoder, Scheme, WireWord};
+    use crate::system::scenario::synthetic_trace as image_like;
     use crate::util::rng::Rng;
-
-    fn image_like(n: usize, seed: u64) -> Vec<u8> {
-        let mut r = Rng::new(seed);
-        let mut v = 128i32;
-        (0..n)
-            .map(|_| {
-                v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
-                v as u8
-            })
-            .collect()
-    }
 
     #[test]
     fn builder_rejects_bad_inputs() {
@@ -494,6 +544,29 @@ mod tests {
             .execution(Execution::Batch)
             .build()
             .is_err());
+        assert!(
+            Session::builder()
+                .codec(CodecSpec::zac(80))
+                .faults(FaultSpec::uniform(2.0)) // BER out of range
+                .build()
+                .is_err(),
+            "invalid fault spec must be rejected at build time"
+        );
+    }
+
+    #[test]
+    fn critical_traffic_is_exact_even_under_aggressive_faults() {
+        let bytes = image_like(8192, 42);
+        let report = Session::builder()
+            .codec(CodecSpec::zac(70))
+            .faults(FaultSpec::uniform(0.5))
+            .build()
+            .unwrap()
+            .run(&Trace::from_bytes(bytes.clone()))
+            .unwrap();
+        assert_eq!(report.bytes, bytes, "critical traffic bypasses injection");
+        assert_eq!(report.faults.injected_bits, 0);
+        assert!(report.quality_delta().contains("injected 0 bit flips"));
     }
 
     #[test]

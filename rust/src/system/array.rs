@@ -15,6 +15,7 @@ use std::thread::JoinHandle;
 
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
+use crate::faults::{FaultModel, FaultSpec, FaultStats};
 use crate::trace::{chip_words_to_bytes, gather_chip_lane, ChipWords};
 use crate::util::table::TextTable;
 
@@ -28,8 +29,8 @@ pub fn shard_of_line(line: usize, shards: usize) -> usize {
 type ShardChunk = (Box<[ChipWords]>, Box<[bool]>);
 
 /// What a shard worker hands back: its decoded lines (in shard-local
-/// order), channel-wide energy counts and encode statistics.
-type ShardResult = (Vec<ChipWords>, EnergyCounts, EncodeStats);
+/// order), channel-wide energy counts, encode and fault statistics.
+type ShardResult = (Vec<ChipWords>, EnergyCounts, EncodeStats, FaultStats);
 
 /// Per-shard slice of the system report.
 #[derive(Clone, Debug)]
@@ -40,6 +41,8 @@ pub struct ShardReport {
     pub counts: EnergyCounts,
     /// Encode statistics summed over the shard's 8 chips.
     pub stats: EncodeStats,
+    /// Fault-injection statistics summed over the shard's 8 chips.
+    pub faults: FaultStats,
 }
 
 /// Result of a channel-array run: the reassembled receiver-side stream
@@ -52,6 +55,8 @@ pub struct SystemOutput {
     pub counts: EnergyCounts,
     /// System-wide encode statistics (merged over shards).
     pub stats: EncodeStats,
+    /// System-wide fault-injection statistics (merged over shards).
+    pub faults: FaultStats,
     /// Per-shard breakdown, indexed by shard id.
     pub shards: Vec<ShardReport>,
 }
@@ -77,11 +82,24 @@ impl SystemOutput {
             format!("{}", self.counts.termination_ones),
             format!("{}", self.counts.switching_transitions),
         ]);
+        let faults = if self.faults.injected_bits > 0 {
+            format!(
+                "\nfaults: {} bits flipped in {} transfers (BER {:.2e}), \
+                 end-to-end error {:.2e} bits/bit",
+                self.faults.injected_bits,
+                self.faults.injected_words,
+                self.faults.injected_ber(),
+                self.faults.observed_error_rate()
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "system report: {} channel(s), unencoded {:.1}%\n{}",
+            "system report: {} channel(s), unencoded {:.1}%\n{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
-            t.render()
+            t.render(),
+            faults
         )
     }
 }
@@ -122,21 +140,38 @@ impl ChannelArray {
         Self::with_codec_sets(sets, capacity)
     }
 
-    /// Spawn the array around pre-built codecs: one `Vec<Codec>` (one
-    /// codec per chip) per shard — the registry-driven construction
-    /// path [`Session`](crate::session::Session) uses, and the seam
-    /// out-of-tree schemes shard through.
+    /// Spawn the array around pre-built codecs over a perfect channel:
+    /// one `Vec<Codec>` (one codec per chip) per shard — the
+    /// registry-driven construction path legacy callers use, and the
+    /// seam out-of-tree schemes shard through.
     pub fn with_codec_sets(codec_sets: Vec<Vec<Codec>>, capacity: usize) -> ChannelArray {
+        Self::with_codec_sets_and_faults(codec_sets, capacity, &FaultSpec::perfect())
+    }
+
+    /// Spawn the array with every (shard, chip) lane's wire running
+    /// through the fault model `fault_spec` describes — what
+    /// [`Session`](crate::session::Session) uses for sharded runs. Each
+    /// lane derives its own decorrelated injection stream from the base
+    /// seed, so runs are reproducible at any shard count.
+    pub fn with_codec_sets_and_faults(
+        codec_sets: Vec<Vec<Codec>>,
+        capacity: usize,
+        fault_spec: &FaultSpec,
+    ) -> ChannelArray {
         let shards = codec_sets.len();
         assert!(shards >= 1, "channel array needs at least one shard");
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
-        for codecs in codec_sets {
+        for (s, codecs) in codec_sets.into_iter().enumerate() {
             assert_eq!(codecs.len(), CHIPS, "each shard needs one codec per chip");
+            let models: Vec<Box<dyn FaultModel>> =
+                (0..CHIPS).map(|j| fault_spec.build(s, j)).collect();
             let (tx, rx): (SyncSender<ShardChunk>, Receiver<ShardChunk>) =
                 sync_channel(chunk_capacity);
-            workers.push(std::thread::spawn(move || shard_service_loop(codecs, rx)));
+            workers.push(std::thread::spawn(move || {
+                shard_service_loop(codecs, models, rx)
+            }));
             senders.push(tx);
         }
         ChannelArray {
@@ -215,23 +250,27 @@ impl ChannelArray {
         let mut reports = Vec::with_capacity(shards);
         let mut counts = EnergyCounts::default();
         let mut stats = EncodeStats::default();
-        for (s, (decoded, c, st)) in results.into_iter().enumerate() {
+        let mut faults = FaultStats::default();
+        for (s, (decoded, c, st, f)) in results.into_iter().enumerate() {
             debug_assert_eq!(decoded.len(), (lines_pushed + shards - 1 - s) / shards);
             for (i, line) in decoded.iter().enumerate() {
                 out_lines[i * shards + s] = *line;
             }
             counts.merge(&c);
             stats.merge(&st);
+            faults.merge(&f);
             reports.push(ShardReport {
                 lines: decoded.len(),
                 counts: c,
                 stats: st,
+                faults: f,
             });
         }
         SystemOutput {
             bytes: chip_words_to_bytes(&out_lines, byte_len),
             counts,
             stats,
+            faults,
             shards: reports,
         }
     }
@@ -255,9 +294,17 @@ impl ChannelArray {
 /// The per-shard service loop: receive boxed line chunks until the
 /// mailbox closes, driving all 8 chips of this shard's channel through
 /// the one shared [`ChipLane`] drive loop (per-batch lane gather, no
-/// stream clones).
-fn shard_service_loop(codecs: Vec<Codec>, rx: Receiver<ShardChunk>) -> ShardResult {
-    let mut lanes: Vec<ChipLane> = codecs.into_iter().map(ChipLane::new).collect();
+/// stream clones), each chip's wire through its own fault model.
+fn shard_service_loop(
+    codecs: Vec<Codec>,
+    models: Vec<Box<dyn FaultModel>>,
+    rx: Receiver<ShardChunk>,
+) -> ShardResult {
+    let mut lanes: Vec<ChipLane> = codecs
+        .into_iter()
+        .zip(models)
+        .map(|(codec, m)| ChipLane::with_faults(codec, 0, m))
+        .collect();
     let mut words = [0u64; ENCODE_BATCH];
     while let Ok((lines, approx)) = rx.recv() {
         for (lc, ac) in lines.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
@@ -272,16 +319,18 @@ fn shard_service_loop(codecs: Vec<Codec>, rx: Receiver<ShardChunk>) -> ShardResu
     let mut lines_out = vec![[0u64; CHIPS]; nlines];
     let mut counts = EnergyCounts::default();
     let mut stats = EncodeStats::default();
+    let mut faults = FaultStats::default();
     for (j, lane) in lanes.into_iter().enumerate() {
-        let (decoded, c, s) = lane.finish();
+        let (decoded, c, s, f) = lane.finish();
         debug_assert_eq!(decoded.len(), nlines);
         for (l, w) in decoded.into_iter().enumerate() {
             lines_out[l][j] = w;
         }
         counts.merge(&c);
         stats.merge(&s);
+        faults.merge(&f);
     }
-    (lines_out, counts, stats)
+    (lines_out, counts, stats, faults)
 }
 
 #[cfg(test)]

@@ -20,6 +20,14 @@ pub struct ScenarioResult {
     pub limit: u32,
     pub truncation_bits: u32,
     pub tolerance_bits: u32,
+    /// Fault-model label (`"perfect"` when no injection ran).
+    pub fault_label: String,
+    /// Wire bits flipped by the fault model.
+    pub injected_bits: u64,
+    /// Transfers with at least one injected flip.
+    pub injected_words: u64,
+    /// End-to-end error bits (approximation + fault propagation).
+    pub observed_error_bits: u64,
     /// Merged system-wide energy counts.
     pub counts: EnergyCounts,
     /// Savings vs the spec's baseline scheme at the same channel count.
@@ -50,6 +58,13 @@ impl ScenarioResult {
             ("limit", num(self.limit as f64)),
             ("truncation_bits", num(self.truncation_bits as f64)),
             ("tolerance_bits", num(self.tolerance_bits as f64)),
+            ("faults", s(&self.fault_label)),
+            ("injected_bits", num(self.injected_bits as f64)),
+            ("injected_words", num(self.injected_words as f64)),
+            (
+                "observed_error_bits",
+                num(self.observed_error_bits as f64),
+            ),
             ("termination_ones", num(self.counts.termination_ones as f64)),
             (
                 "switching_transitions",
@@ -117,10 +132,12 @@ impl SweepReport {
         let mut t = TextTable::new(&[
             "scenario",
             "ch",
+            "faults",
             "term save",
             "switch save",
             "ohe",
             "unenc",
+            "flips",
             "quality",
             "MB/s",
         ]);
@@ -128,10 +145,12 @@ impl SweepReport {
             t.row(vec![
                 r.label.clone(),
                 format!("{}", r.channels),
+                r.fault_label.clone(),
                 pct(r.term_savings_pct),
                 pct(r.switch_savings_pct),
                 pct(100.0 * r.outcome_fracs[1]),
                 pct(100.0 * r.outcome_fracs[3]),
+                format!("{}", r.injected_bits),
                 f(r.quality_ratio, 4),
                 f(r.bytes_per_sec / 1e6, 1),
             ]);
@@ -163,6 +182,10 @@ mod tests {
                 limit: 80,
                 truncation_bits: 0,
                 tolerance_bits: 0,
+                fault_label: "vdd1050mV".into(),
+                injected_bits: 17,
+                injected_words: 12,
+                observed_error_bits: 40,
                 counts: EnergyCounts {
                     termination_ones: 100,
                     switching_transitions: 50,
@@ -191,6 +214,13 @@ mod tests {
         assert_eq!(
             sc.get("shard_lines").unwrap().as_arr().unwrap().len(),
             2
+        );
+        // Fault fields persist into BENCH_system.json.
+        assert_eq!(sc.get("faults").unwrap().as_str().unwrap(), "vdd1050mV");
+        assert_eq!(sc.get("injected_bits").unwrap().as_usize().unwrap(), 17);
+        assert_eq!(
+            sc.get("observed_error_bits").unwrap().as_usize().unwrap(),
+            40
         );
     }
 

@@ -28,6 +28,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::encoding::{CodecSpec, Outcome, Scheme};
+use crate::faults::FaultSpec;
 use crate::quality::psnr_u8;
 use crate::session::{Execution, RunReport, Session, Trace, TrafficClass};
 use crate::system::report::{ScenarioResult, SweepReport};
@@ -54,6 +55,10 @@ pub struct SweepSpec {
     pub truncations: Vec<u32>,
     /// ZAC tolerance knob values (bits per 8-bit chunk).
     pub tolerances: Vec<u32>,
+    /// Fault-model axis (EDEN/SparkXD error models; default: perfect
+    /// channel only). Every codec cell runs once per fault spec, so the
+    /// report carries energy-vs-quality frontiers.
+    pub faults: Vec<FaultSpec>,
     /// Savings reference scheme.
     pub baseline: Scheme,
 }
@@ -72,22 +77,33 @@ impl Default for SweepSpec {
             limits: vec![90, 80, 75],
             truncations: vec![0],
             tolerances: vec![0],
+            faults: vec![FaultSpec::perfect()],
             baseline: Scheme::Bde,
         }
     }
 }
 
 /// One concrete cell of the sweep grid: a validated codec spec at a
-/// channel count.
+/// channel count under one fault model.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub channels: usize,
     pub spec: CodecSpec,
+    pub faults: FaultSpec,
 }
 
 impl Scenario {
     pub fn label(&self) -> String {
-        format!("{}@{}ch", self.spec.label(), self.channels)
+        if self.faults.is_perfect() {
+            format!("{}@{}ch", self.spec.label(), self.channels)
+        } else {
+            format!(
+                "{}@{}ch+{}",
+                self.spec.label(),
+                self.channels,
+                self.faults.label()
+            )
+        }
     }
 }
 
@@ -130,6 +146,13 @@ impl SweepSpec {
                             "limits" => spec.limits = parse_u32_list(gv)?,
                             "truncations" => spec.truncations = parse_u32_list(gv)?,
                             "tolerances" => spec.tolerances = parse_u32_list(gv)?,
+                            "faults" => {
+                                spec.faults = gv
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| FaultSpec::parse(x.as_str()?))
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
                             "baseline" => {
                                 let name = gv.as_str()?;
                                 spec.baseline = Scheme::parse(name)
@@ -166,6 +189,10 @@ impl SweepSpec {
             self.channels
         );
         anyhow::ensure!(!self.schemes.is_empty(), "empty schemes axis");
+        anyhow::ensure!(!self.faults.is_empty(), "empty faults axis");
+        for f in &self.faults {
+            f.validate()?;
+        }
         if self.schemes.contains(&Scheme::ZacDest) {
             anyhow::ensure!(!self.limits.is_empty(), "ZAC in grid but no limits");
             anyhow::ensure!(!self.truncations.is_empty(), "ZAC in grid but no truncations");
@@ -178,23 +205,30 @@ impl SweepSpec {
     pub fn scenarios(&self) -> anyhow::Result<Vec<Scenario>> {
         self.validate()?;
         let mut out = Vec::new();
-        for &channels in &self.channels {
-            for &scheme in &self.schemes {
-                if scheme == Scheme::ZacDest {
-                    for &limit in &self.limits {
-                        for &trunc in &self.truncations {
-                            for &tol in &self.tolerances {
-                                let spec = CodecSpec::zac_full(limit, trunc, tol);
-                                spec.validate()?;
-                                out.push(Scenario { channels, spec });
+        for &faults in &self.faults {
+            for &channels in &self.channels {
+                for &scheme in &self.schemes {
+                    if scheme == Scheme::ZacDest {
+                        for &limit in &self.limits {
+                            for &trunc in &self.truncations {
+                                for &tol in &self.tolerances {
+                                    let spec = CodecSpec::zac_full(limit, trunc, tol);
+                                    spec.validate()?;
+                                    out.push(Scenario {
+                                        channels,
+                                        spec,
+                                        faults,
+                                    });
+                                }
                             }
                         }
+                    } else {
+                        out.push(Scenario {
+                            channels,
+                            spec: CodecSpec::named(scheme.label()),
+                            faults,
+                        });
                     }
-                } else {
-                    out.push(Scenario {
-                        channels,
-                        spec: CodecSpec::named(scheme.label()),
-                    });
                 }
             }
         }
@@ -292,6 +326,7 @@ fn run_cell(
     spec: &CodecSpec,
     channels: usize,
     approx: bool,
+    faults: &FaultSpec,
     trace: &Trace,
 ) -> anyhow::Result<RunReport> {
     Session::builder()
@@ -299,6 +334,7 @@ fn run_cell(
         .channels(channels)
         .traffic(TrafficClass::from_approx_flag(approx))
         .execution(Execution::Sharded)
+        .faults(*faults)
         .build()?
         .run(trace)
 }
@@ -322,18 +358,21 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
             continue;
         }
         let t0 = Instant::now();
-        let out = run_cell(&base_spec, c, spec.approx, &trace_obj)?;
+        let out = run_cell(&base_spec, c, spec.approx, &FaultSpec::perfect(), &trace_obj)?;
         baselines.insert(c, (out, t0.elapsed().as_secs_f64()));
     }
 
     let mut results = Vec::with_capacity(scenarios.len());
     for sc in &scenarios {
-        let (out, wall) = if sc.spec == base_spec {
+        // A cell that IS the baseline config may reuse the baseline run
+        // — but only on a perfect channel: a faulty cell has different
+        // receiver-side bytes (energy would match, quality would not).
+        let (out, wall) = if sc.spec == base_spec && sc.faults.is_perfect() {
             let (o, w) = &baselines[&sc.channels];
             (o.clone(), *w)
         } else {
             let t0 = Instant::now();
-            let o = run_cell(&sc.spec, sc.channels, spec.approx, &trace_obj)?;
+            let o = run_cell(&sc.spec, sc.channels, spec.approx, &sc.faults, &trace_obj)?;
             (o, t0.elapsed().as_secs_f64())
         };
         let base = &baselines[&sc.channels].0.counts;
@@ -360,6 +399,10 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
             limit,
             truncation_bits: trunc,
             tolerance_bits: tol,
+            fault_label: sc.faults.label(),
+            injected_bits: out.faults.injected_bits,
+            injected_words: out.faults.injected_words,
+            observed_error_bits: out.faults.observed_error_bits,
             counts: out.counts,
             term_savings_pct: out.counts.termination_savings_vs(base),
             switch_savings_pct: out.counts.switching_savings_vs(base),
@@ -503,6 +546,58 @@ mod tests {
             report.scenarios.len()
         );
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn faults_axis_parses_and_expands_the_grid() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            name = "faulty"
+            bytes = 8192
+            [grid]
+            channels = [1]
+            schemes = ["BDE"]
+            faults = ["perfect", "voltage:1050", "uniform:1e-3@7"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.faults.len(), 3);
+        assert_eq!(spec.faults[2].seed, 7);
+        let sc = spec.scenarios().unwrap();
+        assert_eq!(sc.len(), 3);
+        assert!(sc.iter().any(|s| s.label() == "BDE@1ch"));
+        assert!(sc.iter().any(|s| s.label() == "BDE@1ch+vdd1050mV"));
+        // Bad fault strings are rejected at the TOML boundary.
+        assert!(
+            SweepSpec::from_toml("[grid]\nfaults = [\"wat\"]\n").is_err(),
+            "unknown fault model accepted"
+        );
+        assert!(SweepSpec::from_toml("[grid]\nfaults = []\n").is_err());
+    }
+
+    #[test]
+    fn faulty_sweep_keeps_energy_and_degrades_quality() {
+        let mut spec = SweepSpec::default();
+        spec.bytes = 16384;
+        spec.channels = vec![2];
+        spec.schemes = vec![Scheme::Bde];
+        spec.faults = vec![FaultSpec::perfect(), FaultSpec::uniform(1e-2)];
+        let trace = synthetic_trace(spec.bytes, spec.seed);
+        let report = run_sweep(&spec, &trace).unwrap();
+        assert_eq!(report.scenarios.len(), 2);
+        let perfect = &report.scenarios[0];
+        let faulty = &report.scenarios[1];
+        assert_eq!(perfect.injected_bits, 0);
+        assert_eq!(perfect.quality_ratio, 1.0);
+        assert!(faulty.injected_bits > 0, "no flips at 1e-2 BER");
+        // Injection happens after transmit: energy identical.
+        assert_eq!(faulty.counts, perfect.counts);
+        assert!(
+            faulty.quality_ratio < 1.0,
+            "faults must cost quality, got {}",
+            faulty.quality_ratio
+        );
+        assert!(report.render_table().contains("vdd") || report.render_table().contains("ber"));
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Registry conformance testkit: the invariants **every** codec behind
+//! a [`CodecSpec`] must keep — built-in or out-of-tree — packaged as a
+//! reusable harness so future registry schemes (including fault-aware
+//! ones) get their contract checked for free.
+//!
+//! The contract, distilled from three PRs of codec/session surface:
+//!
+//! 1. **Critical traffic is exact.** `decode(encode(w, approx=false))
+//!    == w` for every word, even interleaved with approximate traffic —
+//!    the `TrafficClass::Critical` guarantee every driver relies on.
+//! 2. **Batch ≡ scalar.** `encode_batch`/`decode_batch` over any
+//!    chunking produce exactly the scalar sequence's wires and decodes,
+//!    including all table side effects (the hot-path contract from the
+//!    batch-first PR).
+//! 3. **Zero words ride free.** An all-zero word crosses the wire with
+//!    all-zero data lines and decodes back to zero, from any table
+//!    state (the paper's §V-A zero-skip economics; exact schemes
+//!    satisfy it trivially).
+//! 4. **Construction + reset are deterministic.** Two codecs built
+//!    from the same spec produce identical wire streams, and `reset()`
+//!    restores a codec to its freshly-built behaviour — no hidden
+//!    entropy, no state surviving reset.
+//! 5. **Unknown knobs are rejected.** `CodecSpec::set_knob` with a key
+//!    the scheme does not have errors instead of silently absorbing it.
+//!
+//! Usage (also in `ARCHITECTURE.md`):
+//!
+//! ```
+//! use zac_dest::encoding::CodecSpec;
+//! use zac_dest::testkit::assert_codec_conforms;
+//!
+//! assert_codec_conforms(&CodecSpec::zac(80)); // panics with a
+//!                                             // scheme-named message
+//! ```
+//!
+//! Out-of-tree codecs pass their registry:
+//! `assert_codec_conforms_in(&my_registry, &CodecSpec::named("ROT1"))`.
+//! The full run is exercised against all five built-ins plus the ROT1
+//! fixture (and a deliberately broken codec) in
+//! `rust/tests/conformance.rs`.
+
+use crate::encoding::{
+    default_registry, Codec, CodecRegistry, CodecSpec, WireWord, ENCODE_BATCH,
+};
+use crate::util::rng::seeded_rng;
+
+/// Number of words each conformance stream drives (long enough to wrap
+/// a 64-entry table several times).
+const STREAM_LEN: usize = 600;
+
+/// Assert conformance against the default (built-in) registry. Panics
+/// with a scheme-named message on the first violated invariant.
+pub fn assert_codec_conforms(spec: &CodecSpec) {
+    assert_codec_conforms_in(default_registry(), spec);
+}
+
+/// Assert conformance against an explicit registry (out-of-tree
+/// schemes). Panics with a scheme-named message on violation.
+pub fn assert_codec_conforms_in(registry: &CodecRegistry, spec: &CodecSpec) {
+    if let Err(msg) = check_codec_conforms(registry, spec) {
+        panic!(
+            "codec scheme {:?} ({}) failed conformance: {msg}",
+            spec.scheme,
+            spec.label()
+        );
+    }
+}
+
+/// The non-panicking core: run every invariant, returning the first
+/// violation as a message naming the check and the offending word.
+pub fn check_codec_conforms(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+) -> Result<(), String> {
+    spec.validate()
+        .map_err(|e| format!("spec validation failed: {e}"))?;
+    if !registry.contains(&spec.scheme) {
+        return Err(format!(
+            "scheme not registered (known: {:?})",
+            registry.schemes()
+        ));
+    }
+    critical_traffic_is_exact(registry, spec)?;
+    batch_matches_scalar(registry, spec)?;
+    zero_words_ride_free(registry, spec)?;
+    construction_and_reset_are_deterministic(registry, spec)?;
+    unknown_knobs_are_rejected(spec)?;
+    Ok(())
+}
+
+fn build(registry: &CodecRegistry, spec: &CodecSpec) -> Result<Codec, String> {
+    registry
+        .build(spec)
+        .map_err(|e| format!("factory failed: {e}"))
+}
+
+/// Deterministic conformance stream: zeros, repeats, 1-bit neighbours,
+/// sparse words, all-ones and full-entropy words — every codec path.
+fn stream(seed: u64) -> Vec<u64> {
+    let mut r = seeded_rng(seed);
+    let mut base = r.next_u64();
+    (0..STREAM_LEN)
+        .map(|i| match i % 7 {
+            0 => 0,
+            1 => base,
+            2 => {
+                if i % 21 == 2 {
+                    base = r.next_u64();
+                }
+                base ^ (1u64 << r.below(64))
+            }
+            3 => r.next_u64() & 0x0F0F_0F0F,
+            4 => u64::MAX,
+            _ => r.next_u64(),
+        })
+        .collect()
+}
+
+/// Mixed criticality flags for the stream (deterministic).
+fn flags(seed: u64) -> Vec<bool> {
+    let mut r = seeded_rng(seed ^ 0xF1A6);
+    (0..STREAM_LEN).map(|_| r.chance(0.6)).collect()
+}
+
+fn critical_traffic_is_exact(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+) -> Result<(), String> {
+    let words = stream(11);
+    let approx = flags(11);
+    let mut codec = build(registry, spec)?;
+    for (i, (&w, &a)) in words.iter().zip(&approx).enumerate() {
+        let wire = codec.encoder.encode(w, a);
+        let got = codec.decoder.decode(&wire);
+        if !a && got != w {
+            return Err(format!(
+                "critical traffic not exact: word {i} ({w:#018x}) decoded \
+                 to {got:#018x} with approx=false"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn batch_matches_scalar(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+) -> Result<(), String> {
+    let words = stream(13);
+    let approx = flags(13);
+
+    let mut scalar = build(registry, spec)?;
+    let scalar_wires: Vec<WireWord> = words
+        .iter()
+        .zip(&approx)
+        .map(|(&w, &a)| scalar.encoder.encode(w, a))
+        .collect();
+    let scalar_out: Vec<u64> = scalar_wires
+        .iter()
+        .map(|w| scalar.decoder.decode(w))
+        .collect();
+
+    // Irregular chunk sizes: boundaries land everywhere, including a
+    // full ENCODE_BATCH and single words.
+    let mut batch = build(registry, spec)?;
+    let mut wires = vec![WireWord::raw(0); words.len()];
+    let mut out = Vec::new();
+    let (mut i, mut k) = (0usize, 0usize);
+    while i < words.len() {
+        let n = [1usize, 7, ENCODE_BATCH, 64, 3][k % 5].min(words.len() - i);
+        k += 1;
+        let buf = &mut wires[i..i + n];
+        batch.encoder.encode_batch(&words[i..i + n], &approx[i..i + n], buf);
+        batch.decoder.decode_batch(buf, &mut out);
+        i += n;
+    }
+    for (i, (s, b)) in scalar_wires.iter().zip(&wires).enumerate() {
+        if s != b {
+            return Err(format!(
+                "batch != scalar: wire {i} diverged ({s:?} vs {b:?})"
+            ));
+        }
+    }
+    for (i, (s, b)) in scalar_out.iter().zip(&out).enumerate() {
+        if s != b {
+            return Err(format!(
+                "batch != scalar: decode {i} diverged ({s:#018x} vs {b:#018x})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn zero_words_ride_free(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+) -> Result<(), String> {
+    for approx in [false, true] {
+        let mut codec = build(registry, spec)?;
+        // Warm the tables with a realistic prefix, keeping the decoder
+        // mirror in sync, then check a zero from this state.
+        for (&w, &a) in stream(17).iter().zip(&flags(17)) {
+            let wire = codec.encoder.encode(w, a);
+            codec.decoder.decode(&wire);
+        }
+        let wire = codec.encoder.encode(0, approx);
+        if wire.data != 0 {
+            return Err(format!(
+                "zero word drove data lines {:#018x} (approx={approx}); \
+                 zeros must ride the wire as all-zero data",
+                wire.data
+            ));
+        }
+        let got = codec.decoder.decode(&wire);
+        if got != 0 {
+            return Err(format!(
+                "zero word decoded to {got:#018x} (approx={approx})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn construction_and_reset_are_deterministic(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+) -> Result<(), String> {
+    let words = stream(19);
+    let approx = flags(19);
+    let run = |codec: &mut Codec| -> Vec<WireWord> {
+        words
+            .iter()
+            .zip(&approx)
+            .map(|(&w, &a)| {
+                let wire = codec.encoder.encode(w, a);
+                codec.decoder.decode(&wire);
+                wire
+            })
+            .collect()
+    };
+    let mut a = build(registry, spec)?;
+    let mut b = build(registry, spec)?;
+    let first = run(&mut a);
+    if first != run(&mut b) {
+        return Err(
+            "two codecs built from the same spec produced different wire \
+             streams (nondeterministic construction)"
+                .into(),
+        );
+    }
+    a.reset();
+    if first != run(&mut a) {
+        return Err(
+            "reset() did not restore freshly-built behaviour (state \
+             survived reset)"
+                .into(),
+        );
+    }
+    Ok(())
+}
+
+fn unknown_knobs_are_rejected(spec: &CodecSpec) -> Result<(), String> {
+    let mut probe = spec.clone();
+    if probe.set_knob("__testkit_bogus_knob__", "1").is_ok() {
+        return Err(
+            "set_knob silently absorbed an unknown knob key (the god-struct \
+             behaviour the per-scheme knob bags removed)"
+                .into(),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Scheme;
+
+    #[test]
+    fn all_five_builtins_conform() {
+        for scheme in Scheme::all() {
+            assert_codec_conforms(&CodecSpec::named(scheme.label()));
+        }
+    }
+
+    #[test]
+    fn knobbed_zac_variants_conform() {
+        for spec in [
+            CodecSpec::zac(90),
+            CodecSpec::zac(70),
+            CodecSpec::zac_full(75, 2, 1),
+            CodecSpec::zac_weights(60),
+        ] {
+            assert_codec_conforms(&spec);
+        }
+    }
+
+    #[test]
+    fn unregistered_scheme_is_reported_by_name() {
+        let err = check_codec_conforms(default_registry(), &CodecSpec::named("NOPE"))
+            .unwrap_err();
+        assert!(err.contains("not registered"), "{err}");
+    }
+
+    #[test]
+    fn invalid_spec_fails_before_any_stream_runs() {
+        let mut spec = CodecSpec::zac(80);
+        spec.zac_knobs_mut().unwrap().similarity_limit_pct = 200;
+        let err = check_codec_conforms(default_registry(), &spec).unwrap_err();
+        assert!(err.contains("spec validation"), "{err}");
+    }
+
+    #[test]
+    fn conformance_streams_are_deterministic() {
+        assert_eq!(stream(7), stream(7));
+        assert_ne!(stream(7), stream(8));
+        assert_eq!(flags(7), flags(7));
+        // The stream exercises zeros, all-ones and dense words.
+        let s = stream(7);
+        assert!(s.contains(&0));
+        assert!(s.contains(&u64::MAX));
+    }
+}

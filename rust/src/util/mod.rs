@@ -23,3 +23,5 @@ pub mod prop;
 pub mod rng;
 pub mod table;
 pub mod toml_lite;
+
+pub use rng::seeded_rng;

@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use crate::datasets::{self, Image};
 use crate::encoding::CodecSpec;
+use crate::faults::FaultSpec;
 use crate::quality::quality_ratio;
 use crate::runtime::Runtime;
 use crate::session::{RunReport, Session, Trace, TrafficClass};
@@ -218,13 +219,25 @@ impl Suite {
         })
     }
 
-    /// Reconstruct a set of images through the channel under `spec`,
-    /// returning the approximate images plus the trace energy/stats.
-    /// Runs through the unified [`Session`] API (image traffic is the
-    /// paper's error-resilient class).
+    /// Reconstruct a set of images through the (perfect) channel under
+    /// `spec`, returning the approximate images plus the trace
+    /// energy/stats. Runs through the unified [`Session`] API (image
+    /// traffic is the paper's error-resilient class).
     pub fn reconstruct_images(
         &self,
         spec: &CodecSpec,
+        images: &[Image],
+    ) -> Result<(Vec<Image>, RunReport)> {
+        self.reconstruct_images_under(spec, &FaultSpec::perfect(), images)
+    }
+
+    /// [`Suite::reconstruct_images`] with the channel running under a
+    /// fault model — the Fig. 9 workflow with an EDEN/SparkXD-style
+    /// approximate-DRAM channel instead of a perfect one.
+    pub fn reconstruct_images_under(
+        &self,
+        spec: &CodecSpec,
+        faults: &FaultSpec,
         images: &[Image],
     ) -> Result<(Vec<Image>, RunReport)> {
         // One concatenated trace: better table locality and one energy
@@ -236,6 +249,7 @@ impl Suite {
         let out = Session::builder()
             .codec(spec.clone())
             .traffic(TrafficClass::Approximate)
+            .faults(*faults)
             .build()?
             .run(&Trace::from_bytes(bytes))?;
         let mut rebuilt = Vec::with_capacity(images.len());
@@ -248,11 +262,25 @@ impl Suite {
         Ok((rebuilt, out))
     }
 
-    /// Evaluate one workload under one encoder configuration.
+    /// Evaluate one workload under one encoder configuration over a
+    /// perfect channel.
     pub fn eval(&self, spec: &CodecSpec, kind: Kind) -> Result<WorkloadResult> {
+        self.eval_under(spec, &FaultSpec::perfect(), kind)
+    }
+
+    /// Evaluate one workload with the channel running under a fault
+    /// model: output quality under injection, the paper's quality axis
+    /// extended with the EDEN error models.
+    pub fn eval_under(
+        &self,
+        spec: &CodecSpec,
+        faults: &FaultSpec,
+        kind: Kind,
+    ) -> Result<WorkloadResult> {
         match kind {
             Kind::ImageNet => {
-                let (recon, run) = self.reconstruct_images(spec, &self.test_images)?;
+                let (recon, run) =
+                    self.reconstruct_images_under(spec, faults, &self.test_images)?;
                 let mut ratios = Vec::new();
                 let mut approx_mean = 0.0;
                 for (p, &clean) in self.zoo.iter().zip(&self.zoo_clean_acc) {
@@ -270,7 +298,8 @@ impl Suite {
                 })
             }
             Kind::ResNet => {
-                let (recon, run) = self.reconstruct_images(spec, &self.test_images)?;
+                let (recon, run) =
+                    self.reconstruct_images_under(spec, faults, &self.test_images)?;
                 let acc = cnn::accuracy(&self.rt, &self.resnet, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -281,7 +310,7 @@ impl Suite {
                 })
             }
             Kind::Quant => {
-                let (recon, run) = self.reconstruct_images(spec, &self.kodak)?;
+                let (recon, run) = self.reconstruct_images_under(spec, faults, &self.kodak)?;
                 let mut q = 0.0;
                 let mut approx = 0.0;
                 for ((r, orig), &clean) in
@@ -301,7 +330,8 @@ impl Suite {
                 })
             }
             Kind::Eigen => {
-                let (recon, run) = self.reconstruct_images(spec, &self.faces_test)?;
+                let (recon, run) =
+                    self.reconstruct_images_under(spec, faults, &self.faces_test)?;
                 let acc = self.eigen_model.identify_accuracy(&self.rt, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -312,7 +342,8 @@ impl Suite {
                 })
             }
             Kind::Svm => {
-                let (recon, run) = self.reconstruct_images(spec, &self.fmnist_test)?;
+                let (recon, run) =
+                    self.reconstruct_images_under(spec, faults, &self.fmnist_test)?;
                 let acc = svm::accuracy(&self.rt, &self.svm_w, &recon)?;
                 Ok(WorkloadResult {
                     kind,
@@ -323,6 +354,45 @@ impl Suite {
                 })
             }
         }
+    }
+
+    /// The train/test-mismatch experiment, reshaped for fault injection
+    /// (EDEN §5 / SparkXD Fig. 8): evaluate the ResNet under a faulty
+    /// channel when it was trained (a) on clean data — *fault-oblivious*,
+    /// the paper's up-to-large quality loss — versus (b) on data
+    /// reconstructed through the *same* faulty channel — *fault-aware*
+    /// (curriculum = deployment), which recovers most of the loss.
+    /// Returns `(oblivious, aware)`.
+    pub fn resnet_fault_mismatch(
+        &self,
+        spec: &CodecSpec,
+        faults: &FaultSpec,
+    ) -> Result<(WorkloadResult, WorkloadResult)> {
+        let (recon_test, run) =
+            self.reconstruct_images_under(spec, faults, &self.test_images)?;
+        // (a) Fault-oblivious: the clean-trained model meets faults for
+        // the first time at evaluation.
+        let oblivious_acc = cnn::accuracy(&self.rt, &self.resnet, &recon_test)?;
+        // (b) Fault-aware: train a fresh model on the same faulty
+        // reconstruction pipeline it will be evaluated under.
+        let (recon_train, _) =
+            self.reconstruct_images_under(spec, faults, &self.train_images)?;
+        let (aware_params, _) = cnn::train(
+            &self.rt,
+            &recon_train,
+            self.budget.train_steps * 3 / 2,
+            self.budget.lr,
+            self.seed ^ 0xFA17,
+        )?;
+        let aware_acc = cnn::accuracy(&self.rt, &aware_params, &recon_test)?;
+        let result = |acc: f64, run: RunReport| WorkloadResult {
+            kind: Kind::ResNet,
+            quality: quality_ratio(acc, self.resnet_clean_acc),
+            original_metric: self.resnet_clean_acc,
+            approx_metric: acc,
+            run,
+        };
+        Ok((result(oblivious_acc, run.clone()), result(aware_acc, run)))
     }
 
     /// Fig. 18/21: train a fresh ResNet *on reconstructed* training

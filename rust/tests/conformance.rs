@@ -1,0 +1,215 @@
+//! Registry conformance: every built-in scheme, the out-of-tree ROT1
+//! fixture, and deliberately broken codecs that must *fail* the testkit
+//! with a scheme-named message.
+//!
+//! The `#[ignore]`d exhaustive grid runs in CI's
+//! `cargo test -- --include-ignored` conformance stage.
+
+use zac_dest::encoding::{
+    default_registry, ChipDecoder, ChipEncoder, Codec, CodecRegistry, CodecSpec, Scheme,
+    WireWord,
+};
+use zac_dest::testkit::{
+    assert_codec_conforms, assert_codec_conforms_in, check_codec_conforms,
+};
+
+// --- The out-of-tree fixture from the v2 acceptance, now held to the
+// --- same contract as the built-ins.
+
+struct Rot1Encoder;
+impl ChipEncoder for Rot1Encoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        WireWord::raw(word.rotate_left(1))
+    }
+    fn scheme(&self) -> Scheme {
+        Scheme::Org // stats bucketing only; legacy enum is closed
+    }
+    fn reset(&mut self) {}
+}
+
+struct Rot1Decoder;
+impl ChipDecoder for Rot1Decoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        wire.data.rotate_right(1)
+    }
+    fn reset(&mut self) {}
+}
+
+fn registry_with_rot1() -> CodecRegistry {
+    let mut reg = default_registry().clone();
+    reg.register("ROT1", |_spec| {
+        Ok(Codec::new(Box::new(Rot1Encoder), Box::new(Rot1Decoder)))
+    });
+    reg
+}
+
+#[test]
+fn all_five_builtin_schemes_conform() {
+    for scheme in Scheme::all() {
+        assert_codec_conforms(&CodecSpec::named(scheme.label()));
+    }
+}
+
+#[test]
+fn rot1_fixture_conforms_through_its_registry() {
+    assert_codec_conforms_in(&registry_with_rot1(), &CodecSpec::named("ROT1"));
+}
+
+#[test]
+fn small_table_variants_conform() {
+    let mut bde = CodecSpec::named("BDE");
+    bde.set_knob("table_size", "8").unwrap();
+    assert_codec_conforms(&bde);
+    let mut org_alg = CodecSpec::named("BDE_ORG");
+    org_alg.set_knob("table_size", "16").unwrap();
+    assert_codec_conforms(&org_alg);
+}
+
+// --- Broken fixtures: each violates exactly one invariant, and the
+// --- testkit must catch it with a message naming the scheme.
+
+/// Decoder drops the low bit: critical traffic is no longer exact.
+struct LossyDecoder;
+impl ChipDecoder for LossyDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        wire.data & !1
+    }
+    fn reset(&mut self) {}
+}
+
+/// Batch path diverges from scalar: the batch override XORs a marker.
+struct SplitBrainEncoder;
+impl ChipEncoder for SplitBrainEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        WireWord::raw(word)
+    }
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        assert_eq!(words.len(), approx.len());
+        for (&w, slot) in words.iter().zip(out.iter_mut()) {
+            *slot = WireWord::raw(w ^ 0x8000_0000_0000_0000);
+        }
+    }
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+    fn reset(&mut self) {}
+}
+
+/// Passthrough pieces for the broken fixtures.
+struct IdEncoder;
+impl ChipEncoder for IdEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        WireWord::raw(word)
+    }
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+    fn reset(&mut self) {}
+}
+struct IdDecoder;
+impl ChipDecoder for IdDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        wire.data
+    }
+    fn reset(&mut self) {}
+}
+
+/// Zero words cost data-line energy: encodes 0 as a nonzero sentinel.
+struct ExpensiveZeroEncoder;
+impl ChipEncoder for ExpensiveZeroEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        WireWord::raw(if word == 0 { 0xFFFF } else { word })
+    }
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+    fn reset(&mut self) {}
+}
+struct ExpensiveZeroDecoder;
+impl ChipDecoder for ExpensiveZeroDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        if wire.data == 0xFFFF {
+            0
+        } else {
+            wire.data
+        }
+    }
+    fn reset(&mut self) {}
+}
+
+fn broken_registry() -> CodecRegistry {
+    let mut reg = default_registry().clone();
+    reg.register("BROKEN_LOSSY", |_spec| {
+        Ok(Codec::new(Box::new(IdEncoder), Box::new(LossyDecoder)))
+    });
+    reg.register("BROKEN_BATCH", |_spec| {
+        Ok(Codec::new(Box::new(SplitBrainEncoder), Box::new(IdDecoder)))
+    });
+    reg.register("BROKEN_ZERO", |_spec| {
+        Ok(Codec::new(
+            Box::new(ExpensiveZeroEncoder),
+            Box::new(ExpensiveZeroDecoder),
+        ))
+    });
+    reg
+}
+
+#[test]
+fn broken_lossy_codec_fails_with_scheme_named_message() {
+    let reg = broken_registry();
+    let spec = CodecSpec::named("BROKEN_LOSSY");
+    let err = check_codec_conforms(&reg, &spec).unwrap_err();
+    assert!(err.contains("critical traffic"), "{err}");
+    // The panicking entry point names the scheme.
+    let panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        assert_codec_conforms_in(&reg, &spec);
+    }))
+    .unwrap_err();
+    let msg = panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .expect("panic payload is a string");
+    assert!(msg.contains("BROKEN_LOSSY"), "{msg}");
+    assert!(msg.contains("failed conformance"), "{msg}");
+}
+
+#[test]
+fn broken_batch_codec_is_caught_by_the_batch_contract() {
+    let err = check_codec_conforms(&broken_registry(), &CodecSpec::named("BROKEN_BATCH"))
+        .unwrap_err();
+    assert!(err.contains("batch != scalar"), "{err}");
+}
+
+#[test]
+fn broken_zero_codec_is_caught_by_zero_preservation() {
+    let err = check_codec_conforms(&broken_registry(), &CodecSpec::named("BROKEN_ZERO"))
+        .unwrap_err();
+    assert!(err.contains("zero word"), "{err}");
+}
+
+/// Exhaustive knob-grid conformance (the CI `--include-ignored` stage):
+/// the full paper grid of ZAC variants plus every table size worth
+/// having, each through the whole invariant suite.
+#[test]
+#[ignore = "exhaustive grid; run in the CI conformance stage"]
+fn exhaustive_knob_grid_conforms() {
+    for limit in [90u32, 80, 75, 70, 60, 50] {
+        for trunc in [0u32, 1, 2] {
+            for tol in [0u32, 1, 2] {
+                assert_codec_conforms(&CodecSpec::zac_full(limit, trunc, tol));
+            }
+        }
+        assert_codec_conforms(&CodecSpec::zac_weights(limit));
+    }
+    for table_size in [1usize, 2, 8, 16, 32, 64] {
+        for scheme in ["BDE", "BDE_ORG"] {
+            let mut spec = CodecSpec::named(scheme);
+            spec.set_knob("table_size", &table_size.to_string()).unwrap();
+            assert_codec_conforms(&spec);
+        }
+        let mut zac = CodecSpec::zac(80);
+        zac.set_knob("table_size", &table_size.to_string()).unwrap();
+        assert_codec_conforms(&zac);
+    }
+}

@@ -1,0 +1,267 @@
+//! Fault-layer acceptance: `FaultSpec::perfect()` is pinned
+//! bit-identical to the historical no-fault path across the codec
+//! matrix × Batch/Pipelined/Sharded execution, and fixed-seed injection
+//! is byte-for-byte reproducible at every channel count.
+
+use zac_dest::coordinator::simulate_lines;
+use zac_dest::encoding::CodecSpec;
+use zac_dest::faults::FaultSpec;
+use zac_dest::session::{Execution, Session, Trace, TrafficClass};
+use zac_dest::system::{synthetic_trace as image_like, ChannelArray};
+use zac_dest::trace::bytes_to_chip_words;
+use zac_dest::util::prop;
+
+/// The codec matrix the fault acceptance pins (same shape as the v2
+/// acceptance matrix).
+fn spec_matrix() -> Vec<CodecSpec> {
+    vec![
+        CodecSpec::named("ORG"),
+        CodecSpec::named("DBI"),
+        CodecSpec::named("BDE_ORG"),
+        CodecSpec::named("BDE"),
+        CodecSpec::zac(80),
+        CodecSpec::zac_full(75, 2, 1),
+        CodecSpec::zac_weights(60),
+    ]
+}
+
+fn run(
+    spec: &CodecSpec,
+    faults: FaultSpec,
+    exec: Execution,
+    channels: usize,
+    trace: &Trace,
+) -> zac_dest::session::RunReport {
+    Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .execution(exec)
+        .traffic(TrafficClass::Approximate)
+        .faults(faults)
+        .build()
+        .unwrap()
+        .run(trace)
+        .unwrap()
+}
+
+#[test]
+fn perfect_spec_is_bit_identical_to_the_no_fault_path_across_the_matrix() {
+    // Acceptance: FaultSpec::perfect() == today's no-fault path for
+    // every spec in the matrix under Batch, Pipelined and Sharded
+    // execution (bytes, energy counts, encode stats).
+    let bytes = image_like(300 * 64 + 32, 51);
+    let lines = bytes_to_chip_words(&bytes);
+    let trace = Trace::from_bytes(bytes.clone());
+    for spec in spec_matrix() {
+        let cfg = spec.to_config().unwrap();
+        let legacy = simulate_lines(&cfg, &lines, true, bytes.len());
+        for exec in [Execution::Batch, Execution::Pipelined, Execution::Sharded] {
+            let report = run(&spec, FaultSpec::perfect(), exec, 1, &trace);
+            assert_eq!(report.bytes, legacy.bytes, "{} {exec:?}", spec.label());
+            assert_eq!(report.counts, legacy.counts, "{} {exec:?}", spec.label());
+            assert_eq!(report.stats, legacy.stats, "{} {exec:?}", spec.label());
+            assert_eq!(report.faults.injected_bits, 0, "{}", spec.label());
+        }
+        for channels in [2usize, 4] {
+            let report = run(&spec, FaultSpec::perfect(), Execution::Sharded, channels, &trace);
+            let legacy_arr = ChannelArray::run(&cfg, channels, &lines, true, bytes.len());
+            assert_eq!(report.bytes, legacy_arr.bytes, "{} x{channels}", spec.label());
+            assert_eq!(report.counts, legacy_arr.counts, "{} x{channels}", spec.label());
+            assert_eq!(report.stats, legacy_arr.stats, "{} x{channels}", spec.label());
+        }
+    }
+}
+
+#[test]
+fn prop_perfect_spec_equals_no_fault_path_on_random_traces() {
+    let matrix = spec_matrix();
+    prop::check(
+        "FaultSpec::perfect() ≡ no-fault path",
+        108,
+        |r| {
+            let nlines = r.range(1, 40);
+            let which = r.range(0, 7);
+            let channels = [1u64, 2, 4][r.range(0, 3)];
+            vec![nlines as u64, which as u64, channels, r.next_u64()]
+        },
+        |v| {
+            let nlines = (v[0] as usize).clamp(1, 64);
+            let spec = &matrix[(v[1] as usize) % matrix.len()];
+            let channels = (v[2] as usize).clamp(1, 4);
+            let bytes = image_like(nlines * 64, v[3]);
+            let lines = bytes_to_chip_words(&bytes);
+            let cfg = spec.to_config().unwrap();
+            let legacy = ChannelArray::run(&cfg, channels, &lines, true, bytes.len());
+            let report = run(
+                spec,
+                FaultSpec::perfect(),
+                Execution::Sharded,
+                channels,
+                &Trace::from_bytes(bytes),
+            );
+            if report.bytes != legacy.bytes {
+                return Err(format!("{} x{channels}: bytes diverge", spec.label()));
+            }
+            if report.counts != legacy.counts {
+                return Err(format!("{} x{channels}: counts diverge", spec.label()));
+            }
+            if report.stats != legacy.stats {
+                return Err(format!("{} x{channels}: stats diverge", spec.label()));
+            }
+            if report.faults.injected_bits != 0 {
+                return Err("perfect channel injected flips".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fixed_seed_injection_is_reproducible_at_every_channel_count() {
+    // Acceptance: a fixed-seed injection run is byte-for-byte
+    // reproducible across 1/2/4 channels.
+    let bytes = image_like(200 * 64, 53);
+    let trace = Trace::from_bytes(bytes.clone());
+    let faults = FaultSpec::voltage(1000).with_seed(7);
+    for channels in [1usize, 2, 4] {
+        let a = run(&CodecSpec::zac(80), faults, Execution::Sharded, channels, &trace);
+        let b = run(&CodecSpec::zac(80), faults, Execution::Sharded, channels, &trace);
+        assert_eq!(a.bytes, b.bytes, "x{channels}: bytes not reproducible");
+        assert_eq!(a.counts, b.counts, "x{channels}");
+        assert_eq!(a.stats, b.stats, "x{channels}");
+        assert_eq!(a.faults, b.faults, "x{channels}");
+        assert!(
+            a.faults.injected_bits > 0,
+            "x{channels}: no flips at 1e-3-binned voltage"
+        );
+        assert_ne!(a.bytes, bytes, "x{channels}: faults left the stream exact");
+        // A different seed produces a different corruption pattern.
+        let c = run(
+            &CodecSpec::zac(80),
+            faults.with_seed(8),
+            Execution::Sharded,
+            channels,
+            &trace,
+        );
+        assert_ne!(a.bytes, c.bytes, "x{channels}: seed had no effect");
+    }
+}
+
+#[test]
+fn single_channel_executions_agree_under_injection() {
+    // Batch, Pipelined and 1-shard Sharded all drive lane (shard 0,
+    // chip j) over the same word order, so one fixed-seed fault spec
+    // must corrupt all three identically.
+    let trace = Trace::from_bytes(image_like(150 * 64, 55));
+    let faults = FaultSpec::uniform(1e-3).with_seed(11);
+    let batch = run(&CodecSpec::named("BDE"), faults, Execution::Batch, 1, &trace);
+    let piped = run(&CodecSpec::named("BDE"), faults, Execution::Pipelined, 1, &trace);
+    let sharded = run(&CodecSpec::named("BDE"), faults, Execution::Sharded, 1, &trace);
+    assert!(batch.faults.injected_bits > 0);
+    assert_eq!(batch.bytes, piped.bytes);
+    assert_eq!(batch.bytes, sharded.bytes);
+    assert_eq!(batch.faults, piped.faults);
+    assert_eq!(batch.faults, sharded.faults);
+}
+
+#[test]
+fn injection_never_changes_the_energy_accounting() {
+    // Faults fire after transmit: the paper's energy axis is invariant,
+    // only the quality axis moves.
+    let trace = Trace::from_bytes(image_like(128 * 64, 57));
+    for spec in spec_matrix() {
+        let clean = run(&spec, FaultSpec::perfect(), Execution::Batch, 1, &trace);
+        let faulty = run(
+            &spec,
+            FaultSpec::uniform(5e-3).with_seed(3),
+            Execution::Batch,
+            1,
+            &trace,
+        );
+        assert_eq!(clean.counts, faulty.counts, "{}", spec.label());
+        assert_eq!(clean.stats, faulty.stats, "{}", spec.label());
+        assert!(faulty.faults.injected_bits > 0, "{}", spec.label());
+        // Exact schemes have zero end-to-end error on a perfect channel,
+        // and any surfaced flip shows up in the observed count. (For
+        // ZAC the clean baseline already carries approximation error,
+        // so only the injection count is asserted above.)
+        if matches!(spec.scheme.as_str(), "ORG" | "DBI" | "BDE" | "BDE_ORG") {
+            assert_eq!(clean.faults.observed_error_bits, 0, "{}", spec.label());
+            assert!(
+                faulty.faults.observed_error_bits > 0,
+                "{}: injected flips never surfaced",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn charge_loss_asymmetry_shows_on_polarized_streams() {
+    // ORG is a passthrough, so injected flips surface 1:1. An all-ones
+    // stream only suffers 1->0 flips, an all-zero stream only 0->1;
+    // with the default 0.75 bias the former must see roughly 3x more.
+    let n = 64 * 1024;
+    let faults = FaultSpec::uniform(5e-3).with_seed(13);
+    let ones = run(
+        &CodecSpec::named("ORG"),
+        faults,
+        Execution::Batch,
+        1,
+        &Trace::from_bytes(vec![0xFF; n]),
+    );
+    let zeros = run(
+        &CodecSpec::named("ORG"),
+        faults,
+        Execution::Batch,
+        1,
+        &Trace::from_bytes(vec![0x00; n]),
+    );
+    assert!(ones.faults.injected_bits > 0);
+    assert!(zeros.faults.injected_bits > 0);
+    let ratio = ones.faults.injected_bits as f64 / zeros.faults.injected_bits as f64;
+    assert!(
+        (2.0..4.5).contains(&ratio),
+        "1->0 / 0->1 ratio {ratio} far from the 3x charge-loss bias"
+    );
+}
+
+#[test]
+fn critical_traffic_is_untouched_at_any_channel_count() {
+    let bytes = image_like(100 * 64, 59);
+    let trace = Trace::from_bytes(bytes.clone());
+    for channels in [1usize, 3] {
+        let report = Session::builder()
+            .codec(CodecSpec::zac(70))
+            .channels(channels)
+            .traffic(TrafficClass::Critical)
+            .faults(FaultSpec::uniform(0.25).with_seed(1))
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(report.bytes, bytes, "x{channels}");
+        assert_eq!(report.faults.injected_bits, 0, "x{channels}");
+        assert_eq!(report.faults.observed_error_bits, 0, "x{channels}");
+    }
+}
+
+#[test]
+fn faulty_zac_stays_decodable_and_bounded_under_heavy_injection() {
+    // Corrupted one-hot indices and xor payloads must decode to *some*
+    // word (total decoders, no panics) even at absurd BERs, and the
+    // stream shape survives: same length, deterministic result.
+    let bytes = image_like(200 * 64, 61);
+    let trace = Trace::from_bytes(bytes.clone());
+    for spec in spec_matrix() {
+        let report = run(
+            &spec,
+            FaultSpec::uniform(0.05).with_seed(17),
+            Execution::Sharded,
+            2,
+            &trace,
+        );
+        assert_eq!(report.bytes.len(), bytes.len(), "{}", spec.label());
+        assert!(report.faults.injected_bits > 0, "{}", spec.label());
+    }
+}

@@ -1,0 +1,205 @@
+//! Golden-vector fixtures: a small known input stream with the exact
+//! wire words each of the five schemes must produce, committed so a
+//! codec regression fails with a readable field-by-field diff instead
+//! of a property-test shrink.
+//!
+//! The expected values were derived from the scalar encode path
+//! (Table I semantics: ORG passthrough, DBI per-beat inversion, BDE_ORG
+//! Algorithm 1, MBDC zero-bypass/index-aware/dedup, ZAC-DEST Algorithm
+//! 2 with the final DBI stage) over this stream of eight words:
+//!
+//! | #  | word                  | why it is in the stream              |
+//! |----|-----------------------|--------------------------------------|
+//! | 0  | 0x0000000000000000    | zero-skip path, empty table          |
+//! | 1  | 0xFF00000000000000    | first dense word (table miss)        |
+//! | 2  | 0xFF00000000000000    | exact repeat (distance-0 hit)        |
+//! | 3  | 0xFF00000000000001    | 1-bit neighbour (BDE/skip hit)       |
+//! | 4  | 0x00000000000000F0    | sparse word where raw beats the xor  |
+//! | 5  | 0xFFFFFFFFFFFFFFFF    | all-ones (DBI everywhere, far hit)   |
+//! | 6  | 0x0000000000000000    | zero-skip with a warm table          |
+//! | 7  | 0xFF000000000000FF    | second-generation table hit          |
+
+use zac_dest::encoding::{default_registry, CodecSpec, Outcome, WireWord};
+
+const W0: u64 = 0x0000_0000_0000_0000;
+const W1: u64 = 0xFF00_0000_0000_0000;
+const W3: u64 = 0xFF00_0000_0000_0001;
+const W4: u64 = 0x0000_0000_0000_00F0;
+const W5: u64 = 0xFFFF_FFFF_FFFF_FFFF;
+const W7: u64 = 0xFF00_0000_0000_00FF;
+
+/// The golden input stream (every access marked error-resilient).
+const INPUT: [u64; 8] = [W0, W1, W1, W3, W4, W5, W0, W7];
+
+/// One expected wire transfer: (data, dbi_mask, index_line, index_used,
+/// outcome).
+type GoldenWire = (u64, u8, u8, bool, Outcome);
+
+fn wire(w: &GoldenWire) -> WireWord {
+    WireWord {
+        data: w.0,
+        dbi_mask: w.1,
+        index_line: w.2,
+        index_used: w.3,
+        outcome: w.4,
+    }
+}
+
+/// Run the scalar encode/decode path and diff against the fixture with
+/// a readable per-word message.
+fn check(spec: &CodecSpec, golden: &[GoldenWire; 8], decoded: &[u64; 8]) {
+    let mut codec = default_registry().build(spec).unwrap();
+    for (i, (&word, want)) in INPUT.iter().zip(golden).enumerate() {
+        let got = codec.encoder.encode(word, true);
+        let want = wire(want);
+        assert_eq!(
+            got,
+            want,
+            "\n{} word {i} (input {word:#018x}):\n  got  data={:#018x} dbi={:#04x} \
+             idx={} used={} outcome={:?}\n  want data={:#018x} dbi={:#04x} idx={} \
+             used={} outcome={:?}\n",
+            spec.label(),
+            got.data,
+            got.dbi_mask,
+            got.index_line,
+            got.index_used,
+            got.outcome,
+            want.data,
+            want.dbi_mask,
+            want.index_line,
+            want.index_used,
+            want.outcome,
+        );
+        let out = codec.decoder.decode(&got);
+        assert_eq!(
+            out, decoded[i],
+            "{} word {i}: decoded {out:#018x}, fixture says {:#018x}",
+            spec.label(),
+            decoded[i]
+        );
+    }
+}
+
+#[test]
+fn golden_org() {
+    let golden: [GoldenWire; 8] = [
+        (W0, 0, 0, false, Outcome::ZeroSkip),
+        (W1, 0, 0, false, Outcome::Raw),
+        (W1, 0, 0, false, Outcome::Raw),
+        (W3, 0, 0, false, Outcome::Raw),
+        (W4, 0, 0, false, Outcome::Raw),
+        (W5, 0, 0, false, Outcome::Raw),
+        (W0, 0, 0, false, Outcome::ZeroSkip),
+        (W7, 0, 0, false, Outcome::Raw),
+    ];
+    check(&CodecSpec::named("ORG"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_dbi() {
+    // Per beat (byte): more than four 1s inverts the byte and raises
+    // that beat's mask bit.
+    let golden: [GoldenWire; 8] = [
+        (0, 0x00, 0, false, Outcome::ZeroSkip),
+        (0x0000_0000_0000_0000, 0x80, 0, false, Outcome::Raw), // byte7 inverted
+        (0x0000_0000_0000_0000, 0x80, 0, false, Outcome::Raw),
+        (0x0000_0000_0000_0001, 0x80, 0, false, Outcome::Raw),
+        (W4, 0x00, 0, false, Outcome::Raw), // 0xF0 has exactly 4 ones: kept
+        (0x0000_0000_0000_0000, 0xFF, 0, false, Outcome::Raw), // every byte inverted
+        (0, 0x00, 0, false, Outcome::ZeroSkip),
+        (0x0000_0000_0000_0000, 0x81, 0, false, Outcome::Raw), // bytes 0 and 7
+    ];
+    check(&CodecSpec::named("DBI"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_bde_org() {
+    // Algorithm 1: the index line carries an address in BOTH branches
+    // (raw branch = the FIFO slot the mirror must write); the table
+    // updates only on raw transfers.
+    let golden: [GoldenWire; 8] = [
+        // slot 0 <- 0 (raw; zero classified for stats)
+        (W0, 0, 0, true, Outcome::ZeroSkip),
+        // 8 ones vs xor-with-0 = 8 ones: raw wins ties; slot 1 <- W1
+        (W1, 0, 1, true, Outcome::Raw),
+        // exact repeat: xor = 0 against slot 1
+        (0x0000_0000_0000_0000, 0, 1, true, Outcome::Bde),
+        // 1-bit neighbour of slot 1
+        (0x0000_0000_0000_0001, 0, 1, true, Outcome::Bde),
+        // 4 ones vs best xor (vs zero entry) 4 ones: raw; slot 2 <- W4
+        (W4, 0, 2, true, Outcome::Raw),
+        // all-ones vs slot 1: xor has 56 ones < 64: encoded
+        (0x00FF_FFFF_FFFF_FFFF, 0, 1, true, Outcome::Bde),
+        // zero hits the zero entry in slot 0: xor = 0 ones, 0 > 0 is
+        // false: raw again; slot 3 <- 0
+        (W0, 0, 3, true, Outcome::ZeroSkip),
+        // 16 ones vs slot 1: xor = 0xFF (8 ones): encoded
+        (0x0000_0000_0000_00FF, 0, 1, true, Outcome::Bde),
+    ];
+    check(&CodecSpec::named("BDE_ORG"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_bde_mbdc() {
+    // MBDC: zero bypass (no index, no update), index-aware condition
+    // hamming(word) > hamming(xor) + hamming(index), dedup update at
+    // every non-zero access.
+    let golden: [GoldenWire; 8] = [
+        (0, 0, 0, false, Outcome::ZeroSkip), // zero bypass, table untouched
+        (W1, 0, 0, false, Outcome::Raw),     // miss: raw, table <- W1 (slot 0)
+        // repeat: 8 > 0 + hamming(idx 0) = 0: encoded; dist 0 so no push
+        (0x0000_0000_0000_0000, 0, 0, true, Outcome::Bde),
+        // neighbour: 9 > 1 + 0: encoded; table <- W3 (slot 1)
+        (0x0000_0000_0000_0001, 0, 0, true, Outcome::Bde),
+        // 4 ones vs xor 12 ones: raw; table <- W4 (slot 2)
+        (W4, 0, 0, false, Outcome::Raw),
+        // all-ones vs W3 (55-one xor, index 1 = 1 one): 64 > 56: encoded;
+        // table <- W5 (slot 3)
+        (0x00FF_FFFF_FFFF_FFFE, 0, 1, true, Outcome::Bde),
+        (0, 0, 0, false, Outcome::ZeroSkip),
+        // W7 vs W3: xor 0xFE (7 ones) + index 1 (1 one) < 16 ones: encoded
+        (0x0000_0000_0000_00FE, 0, 1, true, Outcome::Bde),
+    ];
+    check(&CodecSpec::named("BDE"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_zac_dest_l80() {
+    // ZAC-DEST at L80 (threshold: fewer than 13 dissimilar bits skips),
+    // no truncation/tolerance, final DBI stage on everything that is
+    // not a zero-skip. The skip puts the table index one-hot on the
+    // data lines; exact fallbacks are MBDC + DBI.
+    let golden: [GoldenWire; 8] = [
+        (0, 0x00, 0, false, Outcome::ZeroSkip),
+        // miss -> MBDC raw -> DBI inverts byte 7; table <- W1 (slot 0)
+        (0x0000_0000_0000_0000, 0x80, 0, false, Outcome::Raw),
+        // repeat: distance 0 < 13 -> skip, one-hot slot 0 on the data lines
+        (0x0000_0000_0000_0001, 0x00, 0, false, Outcome::OheSkip),
+        // 1 dissimilar bit -> skip to slot 0 (reconstructs W1, not W3)
+        (0x0000_0000_0000_0001, 0x00, 0, false, Outcome::OheSkip),
+        // 12 dissimilar bits vs W1 -> still inside the L80 envelope: skip
+        (0x0000_0000_0000_0001, 0x00, 0, false, Outcome::OheSkip),
+        // 56 dissimilar bits -> no skip; MBDC xor vs slot 0 (56 ones),
+        // DBI inverts the seven 0xFF bytes; table <- W5 (slot 1)
+        (0x0000_0000_0000_0000, 0x7F, 0, true, Outcome::Bde),
+        (0, 0x00, 0, false, Outcome::ZeroSkip),
+        // 8 dissimilar bits vs slot 0 -> skip again
+        (0x0000_0000_0000_0001, 0x00, 0, false, Outcome::OheSkip),
+    ];
+    // The approximate reconstruction: skips substitute the table entry.
+    let decoded: [u64; 8] = [0, W1, W1, W1, W1, W5, 0, W1];
+    check(&CodecSpec::zac(80), &golden, &decoded);
+}
+
+/// The fixtures themselves round-trip: every exact scheme's decoded
+/// fixture is the input, and the wire helper preserves the fields.
+#[test]
+fn golden_fixture_sanity() {
+    let g: GoldenWire = (0xAB, 0x01, 2, true, Outcome::Bde);
+    let w = wire(&g);
+    assert_eq!(w.data, 0xAB);
+    assert_eq!(w.dbi_mask, 0x01);
+    assert_eq!(w.index_line, 2);
+    assert!(w.index_used);
+    assert_eq!(w.outcome, Outcome::Bde);
+}

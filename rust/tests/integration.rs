@@ -12,22 +12,14 @@ use zac_dest::session::{weight_chip_specs, Execution, Session, Trace, TrafficCla
 use zac_dest::system::ChannelArray;
 use zac_dest::trace::{bytes_to_chip_words, chip_words_to_bytes, hex, ChipWords};
 use zac_dest::util::prop;
-use zac_dest::util::rng::Rng;
+use zac_dest::util::rng::seeded_rng;
 
-fn image_like(n: usize, seed: u64) -> Vec<u8> {
-    let mut r = Rng::new(seed);
-    let mut v = 128i32;
-    (0..n)
-        .map(|_| {
-            v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
-            v as u8
-        })
-        .collect()
-}
+// The one canonical image-like stream generator (identical walk).
+use zac_dest::system::synthetic_trace as image_like;
 
 #[test]
 fn all_exact_schemes_lossless_on_all_traffic_shapes() {
-    let mut r = Rng::new(100);
+    let mut r = seeded_rng(100);
     let streams: Vec<Vec<u8>> = vec![
         image_like(8192, 1),
         vec![0u8; 4096],                                        // all zeros
@@ -183,7 +175,7 @@ fn tolerance_reduces_skip_rate_and_improves_fidelity() {
 fn zero_heavy_traffic_hits_zero_skip_path() {
     // Sparse FMNIST-like traffic: most lines all-zero.
     let mut bytes = vec![0u8; 65536];
-    let mut r = Rng::new(8);
+    let mut r = seeded_rng(8);
     for _ in 0..200 {
         let pos = r.range(0, bytes.len());
         bytes[pos] = r.next_u32() as u8;
@@ -407,7 +399,7 @@ fn prop_session_equals_legacy_on_random_traces() {
 fn session_per_chip_specs_match_legacy_simulate_lines_per_chip() {
     // The weights projection: per-chip specs through a Session must
     // equal the legacy weight_chip_configs + simulate_lines_per_chip.
-    let mut r = Rng::new(23);
+    let mut r = seeded_rng(23);
     let xs: Vec<f32> = (0..2048).map(|_| r.normal_f32(0.0, 0.05)).collect();
     let spec = CodecSpec::zac_weights(60);
     let cfg = spec.to_config().unwrap();
@@ -473,7 +465,7 @@ fn hex_trace_round_trips_through_simulation() {
 
 #[test]
 fn weights_never_flip_sign_or_explode() {
-    let mut r = Rng::new(12);
+    let mut r = seeded_rng(12);
     let xs: Vec<f32> = (0..8192).map(|_| r.normal_f32(0.0, 0.02)).collect();
     for limit in [70u32, 60, 50] {
         let (got, _) = simulate_f32s(&ZacConfig::zac_weights(limit), &xs, true);

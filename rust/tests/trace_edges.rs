@@ -1,0 +1,138 @@
+//! Edge-length coverage for the v2 `Trace` boundary: byte ⇄ line ⇄ f32
+//! round-trips at awkward lengths (0, 1, non-multiple-of-line,
+//! non-multiple-of-4 for f32), driven end-to-end through `Session`.
+
+use zac_dest::encoding::CodecSpec;
+use zac_dest::session::{Execution, Session, Trace, TrafficClass};
+use zac_dest::trace::LINE_BYTES;
+use zac_dest::util::rng::seeded_rng;
+
+fn bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut r = seeded_rng(seed);
+    (0..n).map(|_| r.next_u32() as u8).collect()
+}
+
+/// The awkward byte lengths: empty, single byte, one-under/exact/
+/// one-over a cache line, multi-line with ragged tails.
+const EDGE_LENS: [usize; 9] = [
+    0,
+    1,
+    LINE_BYTES - 1,
+    LINE_BYTES,
+    LINE_BYTES + 1,
+    2 * LINE_BYTES + 7,
+    5 * LINE_BYTES,
+    5 * LINE_BYTES + 63,
+    300 * LINE_BYTES + 32,
+];
+
+#[test]
+fn trace_round_trips_bytes_at_every_edge_length() {
+    for (i, &n) in EDGE_LENS.iter().enumerate() {
+        let data = bytes(n, 100 + i as u64);
+        let t = Trace::from_bytes(data.clone());
+        assert_eq!(t.byte_len(), n);
+        assert_eq!(t.line_count(), n.div_ceil(LINE_BYTES));
+        assert_eq!(t.bytes(), &data[..]);
+        // lines -> bytes -> lines is stable (padding is reproducible).
+        let t2 = Trace::from_lines(t.lines().to_vec(), n);
+        assert_eq!(t2.bytes(), t.bytes(), "len {n}");
+        assert_eq!(t2.lines(), t.lines(), "len {n}");
+    }
+}
+
+#[test]
+fn session_is_lossless_at_every_edge_length_and_execution() {
+    // An exact scheme through every execution engine must reproduce the
+    // stream bit-exactly at every edge length, including the padded
+    // tail trim.
+    for (i, &n) in EDGE_LENS.iter().enumerate() {
+        let data = bytes(n, 200 + i as u64);
+        let trace = Trace::from_bytes(data.clone());
+        for exec in [Execution::Batch, Execution::Pipelined, Execution::Sharded] {
+            let report = Session::builder()
+                .codec(CodecSpec::named("BDE"))
+                .execution(exec)
+                .traffic(TrafficClass::Approximate)
+                .build()
+                .unwrap()
+                .run(&trace)
+                .unwrap();
+            assert_eq!(report.bytes, data, "len {n} {exec:?}");
+            assert_eq!(
+                report.stats.total(),
+                (trace.line_count() * 8) as u64,
+                "len {n} {exec:?}: transfers"
+            );
+        }
+        // Sharded across more channels than (some traces have) lines.
+        let report = Session::builder()
+            .codec(CodecSpec::named("BDE"))
+            .channels(4)
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(report.bytes, data, "len {n} x4");
+        assert_eq!(
+            report.shards.iter().map(|s| s.lines).sum::<usize>(),
+            trace.line_count(),
+            "len {n} x4: shard coverage"
+        );
+    }
+}
+
+#[test]
+fn empty_trace_yields_empty_report() {
+    let report = Session::builder()
+        .codec(CodecSpec::zac(80))
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .unwrap()
+        .run(&Trace::from_bytes(Vec::new()))
+        .unwrap();
+    assert!(report.bytes.is_empty());
+    assert_eq!(report.stats.total(), 0);
+    assert_eq!(report.counts.transfers, 0);
+    assert_eq!(report.faults.words, 0);
+}
+
+#[test]
+fn f32_traces_round_trip_at_awkward_counts() {
+    for count in [0usize, 1, 3, 15, 16, 17, 1023] {
+        let mut r = seeded_rng(300 + count as u64);
+        let xs: Vec<f32> = (0..count).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let trace = Trace::from_f32s(&xs);
+        assert_eq!(trace.byte_len(), 4 * count);
+        let report = Session::builder()
+            .codec(CodecSpec::named("BDE"))
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(report.to_f32s(), xs, "{count} floats");
+    }
+}
+
+#[test]
+#[should_panic(expected = "4-byte aligned")]
+fn misaligned_f32_reinterpretation_panics_loudly() {
+    // A byte trace whose length is not a multiple of 4 cannot be viewed
+    // as f32s; the boundary fails loudly rather than truncating.
+    let report = Session::builder()
+        .codec(CodecSpec::named("ORG"))
+        .build()
+        .unwrap()
+        .run(&Trace::from_bytes(bytes(10, 9)))
+        .unwrap();
+    let _ = report.to_f32s();
+}
+
+#[test]
+fn from_lines_with_no_lines_is_empty() {
+    let t = Trace::from_lines(Vec::new(), 0);
+    assert_eq!(t.byte_len(), 0);
+    assert_eq!(t.line_count(), 0);
+}

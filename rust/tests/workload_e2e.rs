@@ -5,6 +5,7 @@
 //! wherever PJRT is available.
 
 use zac_dest::encoding::CodecSpec;
+use zac_dest::faults::FaultSpec;
 use zac_dest::runtime::Runtime;
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
 
@@ -74,6 +75,42 @@ fn workloads_train_above_chance_and_quality_degrades_gracefully() {
             r70.run.counts.termination_ones <= r90.run.counts.termination_ones
         );
     }
+}
+
+#[test]
+fn fault_injection_costs_quality_and_fault_aware_training_recovers() {
+    let Some(s) = suite() else { return };
+    let spec = CodecSpec::zac(90);
+    // Injection must cost measurable quality vs the perfect channel.
+    let clean = s.eval(&spec, Kind::ResNet).unwrap();
+    let faulty = s
+        .eval_under(&spec, &FaultSpec::voltage(1000), Kind::ResNet)
+        .unwrap();
+    assert!(faulty.run.faults.injected_bits > 0, "no flips injected");
+    assert_eq!(
+        faulty.run.counts, clean.run.counts,
+        "energy must be fault-invariant"
+    );
+    assert!(
+        faulty.quality <= clean.quality + 0.05,
+        "faults increased quality: {} vs {}",
+        faulty.quality,
+        clean.quality
+    );
+    // The paper-shaped mismatch experiment: training on the faulty
+    // pipeline (fault-aware) must not do worse than meeting the faults
+    // cold (fault-oblivious), minus training noise.
+    let (oblivious, aware) = s
+        .resnet_fault_mismatch(&spec, &FaultSpec::voltage(1000))
+        .unwrap();
+    assert!((0.0..=1.5).contains(&oblivious.quality));
+    assert!((0.0..=1.5).contains(&aware.quality));
+    assert!(
+        aware.quality >= oblivious.quality - 0.15,
+        "fault-aware training collapsed: aware {} vs oblivious {}",
+        aware.quality,
+        oblivious.quality
+    );
 }
 
 #[test]
