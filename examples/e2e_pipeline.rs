@@ -17,7 +17,7 @@
 use zac_dest::encoding::CodecSpec;
 use zac_dest::runtime::Runtime;
 use zac_dest::session::{Session, Trace, TrafficClass};
-use zac_dest::system::channels_from_env;
+use zac_dest::system::{channels_from_env, AddressSpec};
 use zac_dest::util::table::{f, pct, TextTable};
 use zac_dest::workloads::{cnn, Kind, Suite, SuiteBudget};
 
@@ -63,21 +63,31 @@ fn main() -> anyhow::Result<()> {
         }
         None => 2,
     };
+    // ZAC_ADDRESS picks the placement policy (round_robin | steer |
+    // capacity:<w0>/<w1>/...); steering routes similar pages to one
+    // channel so its DataTable history stays relevant.
+    let address = match std::env::var("ZAC_ADDRESS") {
+        Ok(v) => AddressSpec::parse(&v)?,
+        Err(_) => AddressSpec::round_robin(),
+    };
     let session = Session::builder()
         .codec(spec.clone())
         .channels(channels)
+        .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .capacity_lines(64)
         .build()?;
     let ts = std::time::Instant::now();
     let streamed = session.run(&trace)?;
     eprintln!(
-        "[e2e] streamed {} cache lines across {} channel(s) in {:.1} ms \
-         ({:.1} MB/s)",
+        "[e2e] streamed {} cache lines across {} channel(s) (address {}) in {:.1} ms \
+         ({:.1} MB/s, table hit rate {:.1}%)",
         trace.line_count(),
         channels,
+        address.label(),
         ts.elapsed().as_secs_f64() * 1e3,
         trace.byte_len() as f64 / ts.elapsed().as_secs_f64() / 1e6,
+        100.0 * streamed.stats.table_hit_rate(),
     );
     println!("\n{}", streamed.render());
 

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let ctx = FigureCtx::new(42, SuiteBudget::quick());
     let channels = channels_from_env()?.unwrap_or_else(|| vec![1]);
     println!(
-        "workload,channels,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac"
+        "workload,channels,address,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac"
     );
     for kind in Kind::all() {
         let bytes = ctx.workload_trace(kind);
@@ -35,9 +35,10 @@ fn main() -> anyhow::Result<()> {
         let report = run_sweep(&spec, &bytes)?;
         for r in &report.scenarios {
             println!(
-                "{},{},{},{},{},{:.2},{:.2},{:.4},{:.4}",
+                "{},{},{},{},{},{},{:.2},{:.2},{:.4},{:.4}",
                 kind.label(),
                 r.channels,
+                r.address,
                 r.limit,
                 r.truncation_bits * 8,
                 r.tolerance_bits * 8,

@@ -45,7 +45,7 @@ fn main() {
 
     // Multi-channel system layer: round-robin interleave across 1/2/4
     // independent 8-chip channels, one service-loop worker each, via
-    // the sharded Session path.
+    // the sharded Session path (zero-copy LineChunk views of the trace).
     for shards in [1usize, 2, 4] {
         let session = Session::builder()
             .codec(spec.clone())
@@ -59,6 +59,57 @@ fn main() {
             bytes.len() as u64,
             "B",
             || session.run(&trace).expect("sharded run"),
+        );
+    }
+
+    // Zero-copy bulk ingestion vs per-line streaming: the same
+    // 2-channel array fed by indexed views of the shared trace store
+    // (push_store, what Session ships) against the copying push_line
+    // path (the v1-shaped streaming interface; its chunks are also
+    // LineChunks now, so this isolates the ingestion copies, not the
+    // whole refactor).
+    {
+        use zac_dest::system::{AddressSpec, ChannelArray};
+        let session = Session::builder()
+            .codec(spec.clone())
+            .channels(2)
+            .execution(Execution::Sharded)
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .expect("sharded session");
+        b.bench_with_units(
+            "channel_array_512KiB_x2_zero_copy",
+            bytes.len() as u64,
+            "B",
+            || session.run(&trace).expect("zero-copy run"),
+        );
+        b.bench_with_units(
+            "channel_array_512KiB_x2_push_line_copy",
+            bytes.len() as u64,
+            "B",
+            || {
+                let mut a = ChannelArray::new(&cfg, 2, 1024);
+                for l in trace.lines() {
+                    a.push_line(*l, true);
+                }
+                a.finish(trace.byte_len())
+            },
+        );
+        // Locality steering at the same shard count: the DataTable
+        // hit-rate win has a throughput cost/benefit worth tracking.
+        let steer = Session::builder()
+            .codec(spec.clone())
+            .channels(2)
+            .address(AddressSpec::steer())
+            .execution(Execution::Sharded)
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .expect("steered session");
+        b.bench_with_units(
+            "channel_array_512KiB_x2_steer",
+            bytes.len() as u64,
+            "B",
+            || steer.run(&trace).expect("steered run"),
         );
     }
 

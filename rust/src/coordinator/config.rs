@@ -6,6 +6,7 @@
 
 use crate::encoding::CodecSpec;
 use crate::faults::FaultSpec;
+use crate::system::AddressSpec;
 use crate::util::json_lite::Json;
 use crate::util::toml_lite;
 
@@ -18,6 +19,12 @@ pub struct RunConfig {
     /// Fault model the channel runs under (`faults = "voltage:1050"`;
     /// default: perfect channel).
     pub faults: FaultSpec,
+    /// Channels the workload traces shard across (`channels = 2`;
+    /// default 1, the paper's single-channel setup).
+    pub channels: usize,
+    /// Address-mapping policy for sharded traffic (`address = "steer"`;
+    /// default: round-robin).
+    pub address: AddressSpec,
     /// Workloads to run (imagenet / resnet / quant / eigen / svm).
     pub workloads: Vec<String>,
     /// Images per workload evaluation.
@@ -35,6 +42,8 @@ impl Default for RunConfig {
             seed: 42,
             encoder: CodecSpec::named("OHE"),
             faults: FaultSpec::perfect(),
+            channels: 1,
+            address: AddressSpec::round_robin(),
             workloads: vec![
                 "imagenet".into(),
                 "resnet".into(),
@@ -61,6 +70,15 @@ impl RunConfig {
                 "seed" => cfg.seed = v.as_f64()? as u64,
                 "encoder" => cfg.encoder = parse_encoder(v)?,
                 "faults" => cfg.faults = FaultSpec::parse(v.as_str()?)?,
+                "channels" => {
+                    let n = v.as_usize()?;
+                    anyhow::ensure!(
+                        (1..=64).contains(&n),
+                        "channels {n} out of range 1..=64"
+                    );
+                    cfg.channels = n;
+                }
+                "address" => cfg.address = AddressSpec::parse(v.as_str()?)?,
                 "workload" => parse_workload(v, &mut cfg)?,
                 other => anyhow::bail!("unknown top-level key {other:?}"),
             }
@@ -186,6 +204,22 @@ mod tests {
         assert_eq!(RunConfig::default().faults, FaultSpec::perfect());
         assert!(RunConfig::from_toml("faults = \"wat\"\n").is_err());
         assert!(RunConfig::from_toml("faults = \"voltage:100\"\n").is_err());
+    }
+
+    #[test]
+    fn channels_and_address_keys_parse_and_reject_garbage() {
+        let cfg =
+            RunConfig::from_toml("channels = 2\naddress = \"steer\"\n").unwrap();
+        assert_eq!(cfg.channels, 2);
+        assert_eq!(cfg.address.label(), "steer");
+        let cfg = RunConfig::from_toml("address = \"capacity:2/1\"\n").unwrap();
+        assert_eq!(cfg.address.label(), "cap2/1");
+        assert_eq!(RunConfig::default().channels, 1);
+        assert!(RunConfig::default().address.is_round_robin());
+        assert!(RunConfig::from_toml("channels = 0\n").is_err());
+        assert!(RunConfig::from_toml("channels = 99\n").is_err());
+        assert!(RunConfig::from_toml("address = \"wat\"\n").is_err());
+        assert!(RunConfig::from_toml("address = \"capacity:0\"\n").is_err());
     }
 
     #[test]

@@ -16,10 +16,12 @@
 //!   per-batch lane gather ([`gather_chip_lane`]) instead of per-chip
 //!   stream clones.
 //! * [`Pipeline`] is the streaming engine: bounded per-chip queues
-//!   (`sync_channel`) of boxed [`ENCODE_BATCH`]-line chunks, giving real
-//!   backpressure when a producer outruns the encoder workers. The
-//!   multi-channel [`crate::system`] array reuses this chunked-queue
-//!   discipline per shard.
+//!   (`sync_channel`) of reference-counted
+//!   [`LineChunk`](crate::trace::LineChunk) views (up to
+//!   [`ENCODE_BATCH`] lines each), giving real backpressure when a
+//!   producer outruns the encoder workers without copying line data per
+//!   chip. The multi-channel [`crate::system`] array reuses this
+//!   chunked-queue discipline per shard.
 //!
 //! **Deprecated shims** (prefer `Session`): [`simulate_bytes`],
 //! [`simulate_lines`], [`simulate_lines_per_chip`], [`simulate_f32s`].
@@ -36,7 +38,9 @@ use std::thread::JoinHandle;
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::faults::{FaultSpec, FaultStats};
-use crate::trace::{bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords};
+use crate::trace::{
+    bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords, LineChunk,
+};
 
 /// Result of a trace simulation.
 #[derive(Clone, Debug)]
@@ -202,28 +206,28 @@ pub fn simulate_f32s(cfg: &ZacConfig, xs: &[f32], approx: bool) -> (Vec<f32>, Ru
     (floats, out)
 }
 
-/// One queue element: a chip's words for up to [`ENCODE_BATCH`] lines
-/// plus the matching approx flags, boxed so the channel moves two
-/// pointers instead of per-word tuples.
-type LineChunk = (Box<[u64]>, Box<[bool]>);
-
 /// Streaming pipeline: one worker thread per chip behind a bounded queue.
 ///
 /// `push_line` blocks when the chunk queue is full — backpressure toward
 /// the producer, exactly what a memory controller's write queue does.
-/// Lines accumulate in a pending buffer and ship as boxed
-/// [`ENCODE_BATCH`]-line chunks, so the `sync_channel` send/recv
-/// overhead amortizes ~256× and the workers run the batch codec path.
-/// Note the granularity change vs the per-word queue: backpressure now
-/// engages at whole-chunk boundaries, so a producer can run up to
+/// Lines accumulate in one shared pending buffer and ship as a single
+/// reference-counted [`LineChunk`] that all 8 chip workers view (the
+/// zero-copy currency: one Arc allocation per chunk instead of 8 boxed
+/// per-chip copies; each worker gathers its own lane straight from the
+/// shared lines). Bulk callers skip even that one allocation with
+/// [`push_chunk`](Pipeline::push_chunk), shipping borrowed windows of
+/// the trace store. The `sync_channel` send/recv overhead amortizes
+/// ~256× and the workers run the batch codec path. Note the granularity
+/// vs a per-word queue: backpressure engages at whole-chunk boundaries,
+/// so a producer can run up to
 /// `capacity.div_ceil(ENCODE_BATCH) * ENCODE_BATCH` queued lines plus
 /// one partially-filled pending chunk ahead of the workers.
 pub struct Pipeline {
     senders: Vec<SyncSender<LineChunk>>,
     workers: Vec<JoinHandle<(Vec<u64>, EnergyCounts, EncodeStats, FaultStats)>>,
-    /// Per-chip words awaiting the next chunk flush.
-    pending: Vec<Vec<u64>>,
-    /// Approx flags for the pending lines (shared across chips).
+    /// Lines awaiting the next chunk flush (shared across chips).
+    pending: Vec<ChipWords>,
+    /// Approx flags for the pending lines.
     pending_approx: Vec<bool>,
     lines_pushed: usize,
 }
@@ -263,8 +267,8 @@ impl Pipeline {
                 sync_channel(chunk_capacity);
             workers.push(std::thread::spawn(move || {
                 let mut lane = ChipLane::with_faults(codec, 0, faults);
-                while let Ok((words, approx)) = rx.recv() {
-                    lane.drive(&words, &approx);
+                while let Ok(chunk) = rx.recv() {
+                    lane.drive_chunk(j, &chunk);
                 }
                 lane.finish()
             }));
@@ -273,18 +277,18 @@ impl Pipeline {
         Pipeline {
             senders,
             workers,
-            pending: (0..CHIPS).map(|_| Vec::with_capacity(ENCODE_BATCH)).collect(),
+            pending: Vec::with_capacity(ENCODE_BATCH),
             pending_approx: Vec::with_capacity(ENCODE_BATCH),
             lines_pushed: 0,
         }
     }
 
     /// Enqueue one cache line (blocks when workers are behind and the
-    /// chunk queues are full).
+    /// chunk queues are full). Copies the line into the pending buffer —
+    /// the streaming path; bulk callers should prefer the zero-copy
+    /// [`push_chunk`](Self::push_chunk).
     pub fn push_line(&mut self, line: ChipWords, approx: bool) {
-        for (words, &w) in self.pending.iter_mut().zip(line.iter()) {
-            words.push(w);
-        }
+        self.pending.push(line);
         self.pending_approx.push(approx);
         self.lines_pushed += 1;
         if self.pending_approx.len() == ENCODE_BATCH {
@@ -292,20 +296,46 @@ impl Pipeline {
         }
     }
 
-    /// Ship the pending lines to the workers as one boxed chunk per chip.
+    /// Enqueue a reference-counted chunk view directly — the zero-copy
+    /// bulk path [`Session`](crate::session::Session) streams trace
+    /// windows through. Any pending `push_line` lines flush first so
+    /// ordering is preserved.
+    pub fn push_chunk(&mut self, chunk: LineChunk) {
+        self.flush();
+        if chunk.is_empty() {
+            return;
+        }
+        self.lines_pushed += chunk.len();
+        self.send_to_all(chunk);
+    }
+
+    /// Ship the pending lines as one shared chunk viewed by every chip
+    /// worker.
     fn flush(&mut self) {
         if self.pending_approx.is_empty() {
             return;
         }
-        let approx: Box<[bool]> = self.pending_approx.as_slice().into();
-        self.pending_approx.clear();
-        for (tx, words) in self.senders.iter().zip(self.pending.iter_mut()) {
-            let chunk = std::mem::replace(words, Vec::with_capacity(ENCODE_BATCH));
-            // A failed send means that chip's worker died (receiver
-            // dropped mid-panic). Don't panic here: keep feeding the
-            // healthy workers so their queues drain, and let `finish`
-            // join everyone and surface the original panic.
-            let _ = tx.send((chunk.into_boxed_slice(), approx.clone()));
+        let lines = std::mem::replace(&mut self.pending, Vec::with_capacity(ENCODE_BATCH));
+        let flags =
+            std::mem::replace(&mut self.pending_approx, Vec::with_capacity(ENCODE_BATCH));
+        self.send_to_all(LineChunk::from_lines(lines, flags));
+    }
+
+    /// Send refcounted clones of one chunk to all chip workers. A failed
+    /// send means that chip's worker died (receiver dropped mid-panic):
+    /// stop accepting lines, join every worker and re-raise the original
+    /// panic right here at the call site instead of silently dropping
+    /// the chunk.
+    fn send_to_all(&mut self, chunk: LineChunk) {
+        let dead = self
+            .senders
+            .iter()
+            .any(|tx| tx.send(chunk.clone()).is_err());
+        if dead {
+            self.senders.clear();
+            let workers = std::mem::take(&mut self.workers);
+            crate::util::par::join_all_reraise(workers);
+            panic!("pipeline worker exited without panicking (queue closed)");
         }
     }
 
@@ -396,6 +426,84 @@ mod tests {
         assert_eq!(streamed.bytes, batch.bytes);
         assert_eq!(streamed.counts, batch.counts);
         assert_eq!(streamed.stats.total(), batch.stats.total());
+    }
+
+    #[test]
+    fn push_chunk_windows_match_push_line_streaming() {
+        use std::sync::Arc;
+        // The zero-copy window path (what Session pipelined execution
+        // ships) must be bit-identical to per-line streaming.
+        let data = bytes(350 * 64 + 24, 17);
+        let cfg = ZacConfig::zac_full(75, 1, 0);
+        let lines = bytes_to_chip_words(&data);
+        let mut by_line = Pipeline::new(&cfg, 4);
+        for l in &lines {
+            by_line.push_line(*l, true);
+        }
+        let want = by_line.finish(data.len());
+
+        let store: Arc<[ChipWords]> = lines.into();
+        let mut by_chunk = Pipeline::new(&cfg, 4);
+        let mut pos = 0;
+        // Irregular window sizes, including one spanning several
+        // ENCODE_BATCH batches and an interleaved push_line.
+        for span in [300usize, 1, 0, 40] {
+            by_chunk.push_chunk(LineChunk::window(store.clone(), pos, span, true));
+            pos += span;
+        }
+        while pos < store.len() {
+            by_chunk.push_line(store[pos], true);
+            pos += 1;
+        }
+        assert_eq!(by_chunk.lines_pushed(), want_lines(&data));
+        let got = by_chunk.finish(data.len());
+        assert_eq!(got.bytes, want.bytes);
+        assert_eq!(got.counts, want.counts);
+        assert_eq!(got.stats, want.stats);
+    }
+
+    fn want_lines(data: &[u8]) -> usize {
+        data.len().div_ceil(64)
+    }
+
+    #[test]
+    fn dead_pipeline_worker_panic_surfaces_at_the_push_site() {
+        use crate::encoding::{ChipDecoder, ChipEncoder, Scheme, WireWord};
+        struct BoomEncoder;
+        impl ChipEncoder for BoomEncoder {
+            fn encode(&mut self, _word: u64, _approx: bool) -> WireWord {
+                panic!("pipeline worker boom");
+            }
+            fn scheme(&self) -> Scheme {
+                Scheme::Org
+            }
+            fn reset(&mut self) {}
+        }
+        struct NopDecoder;
+        impl ChipDecoder for NopDecoder {
+            fn decode(&mut self, wire: &WireWord) -> u64 {
+                wire.data
+            }
+            fn reset(&mut self) {}
+        }
+        let codecs = (0..CHIPS)
+            .map(|_| Codec::new(Box::new(BoomEncoder), Box::new(NopDecoder)))
+            .collect();
+        let mut p = Pipeline::with_codecs(codecs, 1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            for i in 0..64 * ENCODE_BATCH {
+                p.push_line([i as u64; CHIPS], true);
+            }
+            p.finish(0);
+        }));
+        let payload = caught.expect_err("dead worker must surface a panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("pipeline worker boom"), "payload: {msg:?}");
     }
 
     #[test]

@@ -94,6 +94,14 @@ impl EncodeStats {
         self.fraction(Outcome::Raw)
     }
 
+    /// `DataTable` hit rate: the fraction of transfers served as a
+    /// one-hot table address (ZAC-DEST skip). This is the metric the
+    /// address-mapping layer moves — steering similar lines onto the
+    /// same channel raises each channel's hit rate.
+    pub fn table_hit_rate(&self) -> f64 {
+        self.fraction(Outcome::OheSkip)
+    }
+
     /// Merge another stream's stats (per-chip aggregation).
     pub fn merge(&mut self, other: &EncodeStats) {
         for i in 0..4 {
@@ -119,6 +127,7 @@ mod tests {
         assert_eq!(s.total(), 2);
         assert_eq!(s.count(Outcome::Raw), 1);
         assert_eq!(s.fraction(Outcome::OheSkip), 0.5);
+        assert_eq!(s.table_hit_rate(), 0.5);
         assert_eq!(s.original_ones, 3 + 16);
         // ohe transfer drives 1 data one + 1 flag one.
         assert_eq!(s.wire_ones, 3 + 2);

@@ -29,6 +29,7 @@ use zac_dest::faults::FaultSpec;
 use zac_dest::figures::{self, FigureCtx};
 use zac_dest::runtime::Runtime;
 use zac_dest::session::{Session, Trace, TrafficClass};
+use zac_dest::system::AddressSpec;
 use zac_dest::util::cli::Command;
 use zac_dest::util::table::{pct, TextTable};
 use zac_dest::workloads::{Kind, Suite, SuiteBudget};
@@ -56,6 +57,11 @@ fn app() -> Command {
                 .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
                 .opt("table-size", "64", "data-table entries per chip")
                 .opt("channels", "1", "8-chip channels to shard across")
+                .opt(
+                    "address",
+                    "round_robin",
+                    "address map: round_robin | capacity:<w0>/<w1>/... | steer[:<pages>]",
+                )
                 .opt("bytes", "1048576", "synthetic stream size")
                 .opt("seed", "42", "synthetic stream seed")
                 .opt(
@@ -89,6 +95,11 @@ fn app() -> Command {
                     "faults",
                     "",
                     "fault axis, e.g. perfect,voltage:1050 (overrides spec)",
+                )
+                .opt(
+                    "address",
+                    "",
+                    "address axis, e.g. round_robin,steer (overrides spec)",
                 )
                 .opt("out", "BENCH_system.json", "JSON report path ('-' = skip)")
                 .env(
@@ -292,6 +303,7 @@ fn encode_spec(m: &zac_dest::util::cli::Matches) -> Result<CodecSpec> {
 fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let spec = encode_spec(m)?;
     let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
+    let address = AddressSpec::parse(m.get_or("address", "round_robin"))?;
     let channels = m.get_usize("channels")?;
     let input = m.get_or("input", "-");
     let bytes = if input == "-" {
@@ -314,6 +326,7 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let session = Session::builder()
         .codec(spec.clone())
         .channels(channels)
+        .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .faults(faults)
         .build()?;
@@ -323,12 +336,14 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let base = Session::builder()
         .codec(CodecSpec::named("ORG"))
         .channels(channels)
+        .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .build()?
         .run(&trace)?;
     let bytes = trace.bytes();
     println!("scheme        : {}", spec.label());
     println!("channels      : {channels}");
+    println!("address       : {}", address.label());
     println!("faults        : {}", faults.label());
     println!("bytes         : {}", bytes.len());
     println!(
@@ -393,14 +408,19 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if !faults_flag.is_empty() {
         spec.faults = FaultSpec::parse_list(faults_flag)?;
     }
+    let address_flag = m.get_or("address", "");
+    if !address_flag.is_empty() {
+        spec.address = AddressSpec::parse_list(address_flag)?;
+    }
     let trace = synthetic_trace(spec.bytes, spec.seed);
     eprintln!(
-        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}",
+        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}, address {:?}",
         spec.name,
         spec.channels,
         trace.len(),
         spec.baseline.label(),
-        spec.faults.iter().map(|f| f.label()).collect::<Vec<_>>()
+        spec.faults.iter().map(|f| f.label()).collect::<Vec<_>>(),
+        spec.address.iter().map(|a| a.label()).collect::<Vec<_>>()
     );
     let report = run_sweep(&spec, &trace)?;
     println!("{}", report.render_table());
@@ -456,6 +476,32 @@ mod tests {
     }
 
     #[test]
+    fn cli_address_flag_parses_and_rejects_garbage() {
+        let m = matches("encode --address steer --channels 2");
+        let a = AddressSpec::parse(m.get_or("address", "round_robin")).unwrap();
+        assert_eq!(a.label(), "steer");
+        let m = matches("encode --address capacity:2/1");
+        assert_eq!(
+            AddressSpec::parse(m.get_or("address", "round_robin"))
+                .unwrap()
+                .label(),
+            "cap2/1"
+        );
+        let m = matches("encode");
+        assert!(AddressSpec::parse(m.get_or("address", "round_robin"))
+            .unwrap()
+            .is_round_robin());
+        let m = matches("encode --address banana");
+        assert!(AddressSpec::parse(m.get_or("address", "round_robin")).is_err());
+        // The sweep axis form.
+        let m = matches("sweep --address round_robin,steer");
+        assert_eq!(
+            AddressSpec::parse_list(m.get_or("address", "")).unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
     fn cli_fault_flag_parses_and_rejects_garbage() {
         let m = matches("encode --faults voltage:1050@3");
         let f = FaultSpec::parse(m.get_or("faults", "perfect")).unwrap();
@@ -473,18 +519,22 @@ mod tests {
 fn cmd_run(path: &str) -> Result<()> {
     let rc = RunConfig::from_file(path)?;
     println!(
-        "run {:?}: {} over {:?} ({} channel)",
+        "run {:?}: {} over {:?} ({} channel, {} shard(s), address {})",
         rc.name,
         rc.encoder.label(),
         rc.workloads,
-        rc.faults.label()
+        rc.faults.label(),
+        rc.channels,
+        rc.address.label()
     );
     let rt = Runtime::load(Runtime::default_dir())?;
     let mut b = SuiteBudget::full();
     b.eval_images = rc.eval_images.max(32);
     b.train_steps = rc.train_steps;
     b.lr = rc.lr;
-    let suite = Suite::build(rt, rc.seed, b)?;
+    let mut suite = Suite::build(rt, rc.seed, b)?;
+    suite.channels = rc.channels;
+    suite.address = rc.address.clone();
     let mut t = TextTable::new(&[
         "workload",
         "quality",

@@ -20,9 +20,12 @@
 //!   default is [`TrafficClass::Critical`] (never approximate unless
 //!   the caller explicitly opts the stream in).
 //! * [`Execution`] selects batch / pipelined / sharded execution behind
-//!   the same `run`; `Auto` picks batch for one channel and the sharded
-//!   array otherwise. All three are pinned bit-identical to the legacy
-//!   paths by property tests (`rust/tests/integration.rs`).
+//!   the same `run`; `Auto` picks batch for one round-robin channel and
+//!   the sharded array otherwise (including whenever a non-default
+//!   [`AddressSpec`] asks for placement). All three are pinned
+//!   bit-identical to the legacy paths by property tests
+//!   (`rust/tests/integration.rs`), and all three exchange zero-copy
+//!   [`LineChunk`](crate::trace::LineChunk) views of the trace.
 //! * [`RunReport`] unifies the v1 `RunOutput`/`SystemOutput` pair:
 //!   merged energy + stats plus per-shard detail, for any execution.
 //!
@@ -30,14 +33,17 @@
 //! five), so an out-of-tree scheme registered at runtime runs through a
 //! `Session` end-to-end without touching `encoding/` dispatch.
 
+use std::sync::Arc;
+
 use crate::channel::CHIPS;
 use crate::coordinator::{drive_lines, weight_chip_configs, Pipeline, RunOutput};
 use crate::encoding::{
     default_registry, Codec, CodecRegistry, CodecSpec, EncodeStats, ENCODE_BATCH,
 };
 use crate::faults::{FaultSpec, FaultStats};
-use crate::system::array::{ChannelArray, ShardReport, SystemOutput};
-use crate::trace::{bytes_to_chip_words, bytes_to_f32s, f32s_to_bytes, ChipWords};
+use crate::system::address::AddressSpec;
+use crate::system::array::{load_imbalance, ChannelArray, ShardReport, SystemOutput};
+use crate::trace::{bytes_to_chip_words, bytes_to_f32s, f32s_to_bytes, ChipWords, LineChunk};
 use crate::util::table::TextTable;
 
 /// Error-resilience class of a whole stream (replaces the v1 bare
@@ -78,23 +84,28 @@ pub enum Execution {
     Batch,
     /// Bounded per-chip queues with backpressure (v1 `Pipeline`).
     Pipelined,
-    /// Round-robin interleaving across N channels (v1 `ChannelArray`).
+    /// Address-mapped interleaving across N channels (v1 `ChannelArray`
+    /// with round-robin; see
+    /// [`SessionBuilder::address`] for steering policies).
     Sharded,
 }
 
 /// A trace plus its cache-line view. Owns the bytes ⇄ per-chip-word
-/// conversion so drivers never hand-thread `byte_len`.
+/// conversion so drivers never hand-thread `byte_len`. The line buffer
+/// is reference-counted: every execution engine borrows
+/// [`LineChunk`](crate::trace::LineChunk) views of it instead of
+/// cloning line data per queue hop.
 #[derive(Clone, Debug)]
 pub struct Trace {
     bytes: Vec<u8>,
-    lines: Vec<ChipWords>,
+    lines: Arc<[ChipWords]>,
 }
 
 impl Trace {
     /// Trace over a byte stream (tail zero-padded to a full cache line;
     /// reconstruction trims back to the original length).
     pub fn from_bytes(bytes: Vec<u8>) -> Trace {
-        let lines = bytes_to_chip_words(&bytes);
+        let lines: Arc<[ChipWords]> = bytes_to_chip_words(&bytes).into();
         Trace { bytes, lines }
     }
 
@@ -107,7 +118,10 @@ impl Trace {
     /// tail, exactly like the v1 `byte_len` argument did).
     pub fn from_lines(lines: Vec<ChipWords>, byte_len: usize) -> Trace {
         let bytes = crate::trace::chip_words_to_bytes(&lines, byte_len);
-        Trace { bytes, lines }
+        Trace {
+            bytes,
+            lines: lines.into(),
+        }
     }
 
     pub fn bytes(&self) -> &[u8] {
@@ -116,6 +130,12 @@ impl Trace {
 
     pub fn lines(&self) -> &[ChipWords] {
         &self.lines
+    }
+
+    /// The shared line store the zero-copy chunk views borrow from
+    /// (a refcount bump, no copy).
+    pub fn line_store(&self) -> Arc<[ChipWords]> {
+        self.lines.clone()
     }
 
     pub fn byte_len(&self) -> usize {
@@ -211,9 +231,24 @@ impl RunReport {
         )
     }
 
-    /// Render the per-shard report table (one row per shard + totals).
+    /// Max/mean lines per shard (1.0 = perfectly balanced); the
+    /// load-balance cost an address-steering policy pays for locality.
+    pub fn load_imbalance(&self) -> f64 {
+        load_imbalance(&self.shards)
+    }
+
+    /// Render the per-shard report table (one row per shard + totals),
+    /// including each shard's `DataTable` hit rate and the system
+    /// load-balance figure.
     pub fn render(&self) -> String {
-        let mut t = TextTable::new(&["shard", "lines", "transfers", "term 1s", "switching"]);
+        let mut t = TextTable::new(&[
+            "shard",
+            "lines",
+            "transfers",
+            "term 1s",
+            "switching",
+            "tbl hit",
+        ]);
         for (i, s) in self.shards.iter().enumerate() {
             t.row(vec![
                 format!("{i}"),
@@ -221,6 +256,7 @@ impl RunReport {
                 format!("{}", s.counts.transfers),
                 format!("{}", s.counts.termination_ones),
                 format!("{}", s.counts.switching_transitions),
+                format!("{:.1}%", 100.0 * s.stats.table_hit_rate()),
             ]);
         }
         t.row(vec![
@@ -229,6 +265,7 @@ impl RunReport {
             format!("{}", self.counts.transfers),
             format!("{}", self.counts.termination_ones),
             format!("{}", self.counts.switching_transitions),
+            format!("{:.1}%", 100.0 * self.stats.table_hit_rate()),
         ]);
         let faults = if self.faults.injected_bits > 0 {
             format!("\n{}", self.quality_delta())
@@ -236,9 +273,10 @@ impl RunReport {
             String::new()
         };
         format!(
-            "run report: {} channel(s), unencoded {:.1}%\n{}{}",
+            "run report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
+            self.load_imbalance(),
             t.render(),
             faults
         )
@@ -268,6 +306,7 @@ pub struct Session {
     execution: Execution,
     capacity: usize,
     faults: FaultSpec,
+    address: AddressSpec,
 }
 
 impl Session {
@@ -293,16 +332,26 @@ impl Session {
         &self.faults
     }
 
+    /// The address-mapping policy sharded runs place lines with
+    /// (round-robin by default).
+    pub fn address(&self) -> &AddressSpec {
+        &self.address
+    }
+
     fn build_codecs(&self) -> anyhow::Result<Vec<Codec>> {
         self.specs.iter().map(|s| self.registry.build(s)).collect()
     }
 
     /// Drive `trace` through the configured codec/channel topology.
+    /// Every execution borrows zero-copy [`LineChunk`] views of the
+    /// trace's shared line store — no per-hop cloning of line data.
     pub fn run(&self, trace: &Trace) -> anyhow::Result<RunReport> {
         let approx = self.traffic.is_approximate();
         let mode = match self.execution {
             Execution::Auto => {
-                if self.channels > 1 {
+                // A non-default address policy needs the sharded engine
+                // even at one channel — never silently dropped.
+                if self.channels > 1 || !self.address.is_round_robin() {
                     Execution::Sharded
                 } else {
                     Execution::Batch
@@ -328,8 +377,12 @@ impl Session {
                     self.capacity,
                     &self.faults,
                 );
-                for l in trace.lines() {
-                    p.push_line(*l, approx);
+                let store = trace.line_store();
+                let mut pos = 0;
+                while pos < store.len() {
+                    let len = (store.len() - pos).min(ENCODE_BATCH);
+                    p.push_chunk(LineChunk::window(store.clone(), pos, len, approx));
+                    pos += len;
                 }
                 Ok(RunReport::from_output(
                     p.finish(trace.byte_len()),
@@ -340,11 +393,13 @@ impl Session {
                 let sets = (0..self.channels)
                     .map(|_| self.build_codecs())
                     .collect::<anyhow::Result<Vec<_>>>()?;
-                let mut a =
-                    ChannelArray::with_codec_sets_and_faults(sets, self.capacity, &self.faults);
-                for l in trace.lines() {
-                    a.push_line(*l, approx);
-                }
+                let mut a = ChannelArray::with_codec_sets_faults_and_address(
+                    sets,
+                    self.capacity,
+                    &self.faults,
+                    &self.address,
+                );
+                a.push_store(&trace.line_store(), approx);
                 Ok(RunReport::from_system(a.finish(trace.byte_len())))
             }
             Execution::Auto => unreachable!("Auto resolved above"),
@@ -368,6 +423,7 @@ pub struct SessionBuilder {
     execution: Execution,
     capacity: Option<usize>,
     faults: FaultSpec,
+    address: AddressSpec,
 }
 
 impl SessionBuilder {
@@ -434,6 +490,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Address-mapping policy for sharded execution (default:
+    /// [`AddressSpec::round_robin`], the v1 interleaving; `steer` routes
+    /// similar/hot pages to the same channel to raise each channel's
+    /// `DataTable` hit rate). A non-default policy makes `Auto`
+    /// execution pick the sharded engine even at one channel.
+    pub fn address(mut self, spec: AddressSpec) -> SessionBuilder {
+        self.address = spec;
+        self
+    }
+
     /// Validate everything and produce the session. Errors — not
     /// panics — surface invalid knobs, unknown schemes, bad channel
     /// counts and conflicting codec sources.
@@ -489,10 +555,19 @@ impl SessionBuilder {
                 "{:?} execution is single-channel; use Sharded (or Auto) for {channels} channels",
                 self.execution
             );
+            anyhow::ensure!(
+                self.address.is_round_robin(),
+                "{:?} execution has no address map; use Sharded (or Auto) for address {:?}",
+                self.execution,
+                self.address.label()
+            );
         }
         self.faults
             .validate()
             .map_err(|e| anyhow::anyhow!("fault spec: {e}"))?;
+        self.address
+            .validate()
+            .map_err(|e| anyhow::anyhow!("address spec: {e}"))?;
         Ok(Session {
             specs,
             registry,
@@ -501,6 +576,7 @@ impl SessionBuilder {
             execution: self.execution,
             capacity: self.capacity.unwrap_or(4 * ENCODE_BATCH).max(1),
             faults: self.faults,
+            address: self.address,
         })
     }
 }
@@ -552,6 +628,64 @@ mod tests {
                 .is_err(),
             "invalid fault spec must be rejected at build time"
         );
+    }
+
+    #[test]
+    fn builder_address_policy_is_validated_and_routed_to_the_sharded_engine() {
+        // A non-default address on a single-channel engine is an error,
+        // never silently dropped.
+        assert!(Session::builder()
+            .codec(CodecSpec::zac(80))
+            .address(AddressSpec::steer())
+            .execution(Execution::Batch)
+            .build()
+            .is_err());
+        assert!(Session::builder()
+            .codec(CodecSpec::zac(80))
+            .address(AddressSpec::steer())
+            .execution(Execution::Pipelined)
+            .build()
+            .is_err());
+        assert!(Session::builder()
+            .codec(CodecSpec::zac(80))
+            .address(AddressSpec::capacity(vec![]))
+            .build()
+            .is_err());
+        // Auto + steering resolves to the sharded engine even at one
+        // channel, and a 1-shard steered run is still lossless for an
+        // exact scheme.
+        let bytes = image_like(4096, 44);
+        let report = Session::builder()
+            .codec(CodecSpec::named("BDE"))
+            .address(AddressSpec::steer())
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .unwrap()
+            .run(&Trace::from_bytes(bytes.clone()))
+            .unwrap();
+        assert_eq!(report.bytes, bytes);
+        assert_eq!(report.channels(), 1);
+        assert_eq!(report.load_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn capacity_weighted_session_splits_load_by_weight() {
+        let bytes = image_like(400 * 64, 45);
+        let report = Session::builder()
+            .codec(CodecSpec::zac(80))
+            .channels(2)
+            .address(AddressSpec::capacity(vec![3, 1]))
+            .traffic(TrafficClass::Approximate)
+            .build()
+            .unwrap()
+            .run(&Trace::from_bytes(bytes))
+            .unwrap();
+        assert_eq!(
+            report.shards.iter().map(|s| s.lines).collect::<Vec<_>>(),
+            vec![300, 100]
+        );
+        assert!((report.load_imbalance() - 1.5).abs() < 1e-12);
+        assert!(report.render().contains("tbl hit"));
     }
 
     #[test]

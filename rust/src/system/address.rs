@@ -1,0 +1,578 @@
+//! Pluggable address mapping: which channel shard a cache line lands on.
+//!
+//! ZAC-DEST's savings come from the similarity between *recent transfers
+//! on the same channel* — each channel's `DataTable` CAM only helps if
+//! similar lines actually land on the same shard. The v1 array
+//! hard-coded round-robin line interleaving, which scatters
+//! spatially-similar neighborhoods across shards and dilutes per-channel
+//! similarity. This layer makes the placement a policy:
+//!
+//! * [`RoundRobin`] — line `l` on shard `l % shards`; the default,
+//!   pinned bit-identical to the v1 array by property tests.
+//! * [`CapacityWeighted`] — deterministic smooth weighted round-robin
+//!   for heterogeneous channels (a shard with weight 2 serves twice the
+//!   lines of a weight-1 shard, interleaved as evenly as possible).
+//! * [`LocalitySteer`] — hot/cold page steering: a small direct-mapped
+//!   per-page heat/signature tracker routes all lines of a page — and
+//!   revisits of warm pages — to one shard, and maps cold pages by a
+//!   content signature (mean byte value band), so similar neighborhoods
+//!   share a `DataTable` and the per-channel hit rate rises (EDEN's
+//!   structural point, arXiv:1910.05340: steering data by its
+//!   characteristics unlocks savings a uniform mapping cannot).
+//!
+//! [`AddressSpec`] is the serializable knob bag, parsed and validated
+//! uniformly at every ingestion boundary (CLI `--address`, run/sweep
+//! TOML, `Session::builder().address(..)`) — the addressing analogue of
+//! [`FaultSpec`](crate::faults::FaultSpec) / `CodecSpec`.
+
+use crate::trace::ChipWords;
+
+/// Cache lines per DRAM page/row buffer (4 KiB page of 64 B lines).
+pub const PAGE_LINES: usize = 64;
+
+/// Default number of direct-mapped slots in the page trackers.
+pub const DEFAULT_TRACKER_PAGES: usize = 1024;
+
+/// How the receiver reassembles trace order from the per-shard decoded
+/// streams — the inverse of the interleaving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inverse {
+    /// Closed form: trace line `l` is entry `l / shards` of shard
+    /// `l % shards`; no route log is kept.
+    RoundRobin,
+    /// No closed form — the sender records each line's shard and the
+    /// receiver walks that route log with one cursor per shard.
+    Recorded,
+}
+
+/// Deterministic placement of cache lines onto channel shards.
+///
+/// `shard_for` is called once per line, in trace order; `heat` is the
+/// number of times the line's page has been touched so far (from the
+/// array's shared [`PageHeat`] tracker). Implementations may keep
+/// internal state (trackers, credit counters) but must be a pure
+/// function of the call sequence — no wall-clock or OS entropy — so a
+/// run is byte-for-byte reproducible.
+pub trait AddressMap: Send {
+    /// The shard line `line_index` (with contents `line`) lands on.
+    fn shard_for(&mut self, line_index: usize, line: &ChipWords, heat: u32) -> usize;
+
+    /// Number of shards this map routes across.
+    fn shards(&self) -> usize;
+
+    /// The de-interleaving description the receiver uses.
+    fn inverse(&self) -> Inverse {
+        Inverse::Recorded
+    }
+
+    /// Slot count the shared page-heat tracker should use.
+    fn heat_slots(&self) -> usize {
+        DEFAULT_TRACKER_PAGES
+    }
+}
+
+/// Direct-mapped per-page access counter shared by every policy: the
+/// `heat` argument of [`AddressMap::shard_for`] is this tracker's count
+/// for the line's page (1 on first touch, saturating).
+pub struct PageHeat {
+    /// (page tag, touches) per slot.
+    slots: Vec<(u64, u32)>,
+}
+
+impl PageHeat {
+    pub fn new(slots: usize) -> PageHeat {
+        PageHeat {
+            slots: vec![(u64::MAX, 0); slots.max(1)],
+        }
+    }
+
+    /// Record a touch of `line_index`'s page and return its heat.
+    pub fn touch(&mut self, line_index: usize) -> u32 {
+        let page = (line_index / PAGE_LINES) as u64;
+        let slot = &mut self.slots[(page as usize) % self.slots.len()];
+        if slot.0 != page {
+            *slot = (page, 0);
+        }
+        slot.1 = slot.1.saturating_add(1);
+        slot.1
+    }
+}
+
+/// Round-robin line interleaving — the v1 behaviour and the default.
+pub struct RoundRobin {
+    shards: usize,
+}
+
+impl RoundRobin {
+    pub fn new(shards: usize) -> RoundRobin {
+        assert!(shards >= 1);
+        RoundRobin { shards }
+    }
+}
+
+impl AddressMap for RoundRobin {
+    fn shard_for(&mut self, line_index: usize, _line: &ChipWords, _heat: u32) -> usize {
+        super::array::shard_of_line(line_index, self.shards)
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn inverse(&self) -> Inverse {
+        Inverse::RoundRobin
+    }
+}
+
+/// Smooth weighted round-robin over non-uniform shard capacities: each
+/// call every shard earns its weight in credit, the richest shard wins
+/// the line and pays the total back. Over any `sum(weights)` consecutive
+/// lines shard `s` serves exactly `weights[s]` of them, interleaved as
+/// evenly as possible; with equal weights the schedule degenerates to
+/// exact round-robin.
+pub struct CapacityWeighted {
+    weights: Vec<u32>,
+    credit: Vec<i64>,
+    total: i64,
+}
+
+impl CapacityWeighted {
+    /// `weights` is cycled to cover `shards` entries (so a sweep can fix
+    /// `capacity:2/1` while the channel-count axis varies).
+    pub fn new(shards: usize, weights: &[u32]) -> CapacityWeighted {
+        assert!(shards >= 1);
+        assert!(!weights.is_empty() && weights.iter().all(|&w| w >= 1));
+        let weights: Vec<u32> = (0..shards).map(|s| weights[s % weights.len()]).collect();
+        let total = weights.iter().map(|&w| w as i64).sum();
+        CapacityWeighted {
+            credit: vec![0; shards],
+            weights,
+            total,
+        }
+    }
+}
+
+impl AddressMap for CapacityWeighted {
+    fn shard_for(&mut self, _line_index: usize, _line: &ChipWords, _heat: u32) -> usize {
+        for (c, &w) in self.credit.iter_mut().zip(&self.weights) {
+            *c += w as i64;
+        }
+        let mut best = 0;
+        for s in 1..self.credit.len() {
+            if self.credit[s] > self.credit[best] {
+                best = s;
+            }
+        }
+        self.credit[best] -= self.total;
+        best
+    }
+
+    fn shards(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+/// Hot/cold page steering: a direct-mapped page → shard tracker.
+///
+/// * A page with a live tracker entry that has been touched before
+///   (`heat > 1`) is *warm*: it stays on its shard, so all of its lines
+///   — and later revisits — meet the `DataTable` history of their own
+///   neighborhood (temporal locality).
+/// * A *cold* (or evicted) page is routed by content: the mean byte
+///   value of its first line picks one of `shards × BANDS` value bands,
+///   bands cycle across shards, so pages with similar content share a
+///   shard (spatial/content locality) while distinct value regions still
+///   spread system-wide.
+pub struct LocalitySteer {
+    shards: usize,
+    /// (page tag, shard) per direct-mapped slot.
+    slots: Vec<(u64, u32)>,
+}
+
+impl LocalitySteer {
+    /// Value bands per shard: narrow enough that one band is a genuinely
+    /// similar neighborhood, wide enough that a slow-varying stream
+    /// produces long same-shard runs.
+    pub const BANDS: usize = 4;
+
+    pub fn new(shards: usize, tracker_pages: usize) -> LocalitySteer {
+        assert!(shards >= 1);
+        LocalitySteer {
+            shards,
+            slots: vec![(u64::MAX, 0); tracker_pages.max(1)],
+        }
+    }
+}
+
+/// Mean byte value of a cache line (0..=255) — the content signature
+/// cold pages are steered by.
+pub fn line_signature(line: &ChipWords) -> u32 {
+    let sum: u32 = line
+        .iter()
+        .map(|w| w.to_le_bytes().iter().map(|&b| b as u32).sum::<u32>())
+        .sum();
+    sum / 64
+}
+
+impl AddressMap for LocalitySteer {
+    fn shard_for(&mut self, line_index: usize, line: &ChipWords, heat: u32) -> usize {
+        let page = (line_index / PAGE_LINES) as u64;
+        let slot = &mut self.slots[(page as usize) % self.slots.len()];
+        if slot.0 == page && heat > 1 {
+            return slot.1 as usize;
+        }
+        let band = (line_signature(line) as usize * self.shards * Self::BANDS) / 256;
+        let shard = band % self.shards;
+        *slot = (page, shard as u32);
+        shard
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn heat_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Which policy an [`AddressSpec`] builds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AddressPolicy {
+    /// Round-robin line interleaving (the v1 behaviour, default).
+    RoundRobin,
+    /// Smooth weighted round-robin; the weight list is cycled to the
+    /// shard count at build time.
+    CapacityWeighted { weights: Vec<u32> },
+    /// Hot/cold page steering with a `tracker_pages`-slot page tracker.
+    LocalitySteer { tracker_pages: usize },
+}
+
+/// A validated, serializable address-mapping description: the addressing
+/// analogue of [`FaultSpec`](crate::faults::FaultSpec).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AddressSpec {
+    pub policy: AddressPolicy,
+}
+
+impl Default for AddressSpec {
+    fn default() -> Self {
+        AddressSpec::round_robin()
+    }
+}
+
+impl AddressSpec {
+    /// The v1 round-robin interleaving (default).
+    pub fn round_robin() -> AddressSpec {
+        AddressSpec {
+            policy: AddressPolicy::RoundRobin,
+        }
+    }
+
+    /// Non-uniform shard capacities.
+    pub fn capacity(weights: Vec<u32>) -> AddressSpec {
+        AddressSpec {
+            policy: AddressPolicy::CapacityWeighted { weights },
+        }
+    }
+
+    /// Hot/cold page steering with the default tracker size.
+    pub fn steer() -> AddressSpec {
+        AddressSpec::steer_with(DEFAULT_TRACKER_PAGES)
+    }
+
+    /// Page steering with an explicit tracker size.
+    pub fn steer_with(tracker_pages: usize) -> AddressSpec {
+        AddressSpec {
+            policy: AddressPolicy::LocalitySteer { tracker_pages },
+        }
+    }
+
+    /// Whether this is the default (v1) interleaving.
+    pub fn is_round_robin(&self) -> bool {
+        self.policy == AddressPolicy::RoundRobin
+    }
+
+    /// Validate the spec; every ingestion boundary calls this before a
+    /// map is built — mirrors `CodecSpec::validate`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match &self.policy {
+            AddressPolicy::RoundRobin => Ok(()),
+            AddressPolicy::CapacityWeighted { weights } => {
+                anyhow::ensure!(!weights.is_empty(), "capacity weights must not be empty");
+                anyhow::ensure!(
+                    weights.iter().all(|&w| (1..=1024).contains(&w)),
+                    "capacity weights must be in 1..=1024, got {weights:?}"
+                );
+                Ok(())
+            }
+            AddressPolicy::LocalitySteer { tracker_pages } => {
+                anyhow::ensure!(
+                    (1..=1 << 20).contains(tracker_pages),
+                    "steer tracker size {tracker_pages} out of range 1..=2^20 pages"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Short label for scenario rows / report columns: `round_robin`,
+    /// `cap2/1`, `steer`, `steer:512`.
+    pub fn label(&self) -> String {
+        match &self.policy {
+            AddressPolicy::RoundRobin => "round_robin".into(),
+            AddressPolicy::CapacityWeighted { weights } => {
+                let parts: Vec<String> = weights.iter().map(|w| w.to_string()).collect();
+                format!("cap{}", parts.join("/"))
+            }
+            AddressPolicy::LocalitySteer { tracker_pages } => {
+                if *tracker_pages == DEFAULT_TRACKER_PAGES {
+                    "steer".into()
+                } else {
+                    format!("steer:{tracker_pages}")
+                }
+            }
+        }
+    }
+
+    /// Parse the uniform textual form shared by CLI flags and TOML:
+    ///
+    /// * `round_robin` (also `rr`)
+    /// * `capacity:<w0>/<w1>/...` (also `cap:`; `/`-separated so the
+    ///   comma stays the list separator)
+    /// * `steer` or `steer:<tracker_pages>`
+    ///
+    /// Unknown policies and malformed numbers are rejected — the same
+    /// "no silent knob absorption" contract as `CodecSpec::set_knob`.
+    pub fn parse(text: &str) -> anyhow::Result<AddressSpec> {
+        let text = text.trim();
+        let (name, args) = match text.split_once(':') {
+            Some((n, a)) => (n.trim().to_ascii_lowercase(), Some(a.trim())),
+            None => (text.to_ascii_lowercase(), None),
+        };
+        let spec = match name.as_str() {
+            "round_robin" | "roundrobin" | "rr" => {
+                anyhow::ensure!(args.is_none(), "round_robin takes no arguments");
+                AddressSpec::round_robin()
+            }
+            "capacity" | "cap" | "weighted" => {
+                let args = args
+                    .ok_or_else(|| anyhow::anyhow!("capacity needs capacity:<w0>/<w1>/..."))?;
+                let weights: Vec<u32> = args
+                    .split('/')
+                    .map(|p| {
+                        let p = p.trim();
+                        p.parse::<u32>()
+                            .map_err(|e| anyhow::anyhow!("capacity weight {p:?}: {e}"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                AddressSpec::capacity(weights)
+            }
+            "steer" => match args {
+                None => AddressSpec::steer(),
+                Some(a) => {
+                    let pages: usize = a
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("steer tracker size {a:?}: {e}"))?;
+                    AddressSpec::steer_with(pages)
+                }
+            },
+            other => anyhow::bail!(
+                "unknown address policy {other:?}; known: round_robin, \
+                 capacity:<w0>/<w1>/..., steer[:<tracker_pages>]"
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a comma-separated address axis, e.g. `round_robin,steer`.
+    pub fn parse_list(text: &str) -> anyhow::Result<Vec<AddressSpec>> {
+        let list: Vec<AddressSpec> = text
+            .split(',')
+            .map(AddressSpec::parse)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!list.is_empty(), "empty address list");
+        Ok(list)
+    }
+
+    /// Build the map instance for a concrete shard count. Capacity
+    /// weights are cycled to cover the shards, so the same spec works at
+    /// any point of a channel-count sweep axis.
+    pub fn build(&self, shards: usize) -> Box<dyn AddressMap> {
+        assert!(shards >= 1, "address map needs at least one shard");
+        match &self.policy {
+            AddressPolicy::RoundRobin => Box::new(RoundRobin::new(shards)),
+            AddressPolicy::CapacityWeighted { weights } => {
+                Box::new(CapacityWeighted::new(shards, weights))
+            }
+            AddressPolicy::LocalitySteer { tracker_pages } => {
+                Box::new(LocalitySteer::new(shards, *tracker_pages))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn route(map: &mut dyn AddressMap, n: usize) -> Vec<usize> {
+        let mut heat = PageHeat::new(map.heat_slots());
+        (0..n)
+            .map(|i| {
+                let line = [0u64; 8];
+                let h = heat.touch(i);
+                map.shard_for(i, &line, h)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_matches_modulo() {
+        let mut m = RoundRobin::new(4);
+        assert_eq!(route(&mut m, 8), vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        assert_eq!(m.inverse(), Inverse::RoundRobin);
+        let mut one = RoundRobin::new(1);
+        assert!(route(&mut one, 5).iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn equal_capacity_weights_degenerate_to_round_robin() {
+        for shards in [1usize, 2, 3, 4] {
+            let mut cap = CapacityWeighted::new(shards, &[3]);
+            let mut rr = RoundRobin::new(shards);
+            assert_eq!(route(&mut cap, 40), route(&mut rr, 40), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn capacity_weights_split_load_proportionally_and_deterministically() {
+        let mut m = CapacityWeighted::new(2, &[3, 1]);
+        let routes = route(&mut m, 400);
+        assert_eq!(routes.iter().filter(|&&s| s == 0).count(), 300);
+        assert_eq!(routes.iter().filter(|&&s| s == 1).count(), 100);
+        // Smooth: the weight-1 shard is served once per 4-line window,
+        // never starved to the end of the schedule.
+        for w in routes.chunks(4) {
+            assert_eq!(w.iter().filter(|&&s| s == 1).count(), 1, "{w:?}");
+        }
+        // Weight cycling: 2 weights over 4 shards.
+        let mut m = CapacityWeighted::new(4, &[2, 1]);
+        let routes = route(&mut m, 600);
+        assert_eq!(routes.iter().filter(|&&s| s == 0).count(), 200);
+        assert_eq!(routes.iter().filter(|&&s| s == 1).count(), 100);
+        assert_eq!(routes.iter().filter(|&&s| s == 2).count(), 200);
+        assert_eq!(routes.iter().filter(|&&s| s == 3).count(), 100);
+        assert_eq!(m.inverse(), Inverse::Recorded);
+    }
+
+    #[test]
+    fn steer_keeps_a_page_on_one_shard() {
+        let mut m = LocalitySteer::new(4, 64);
+        let mut heat = PageHeat::new(m.heat_slots());
+        let mut shards = Vec::new();
+        for i in 0..(3 * PAGE_LINES) {
+            // Line content varies within the page; the page must not move.
+            let line = [(i as u64).wrapping_mul(0x9E37_79B9); 8];
+            let h = heat.touch(i);
+            shards.push(m.shard_for(i, &line, h));
+        }
+        for p in 0..3 {
+            let page = &shards[p * PAGE_LINES..(p + 1) * PAGE_LINES];
+            assert!(page.iter().all(|&s| s == page[0]), "page {p} moved shards");
+        }
+    }
+
+    #[test]
+    fn steer_routes_similar_content_together_and_distinct_content_apart() {
+        let mut m = LocalitySteer::new(2, 64);
+        let low = [[0x0101_0101_0101_0101u64; 8]; 1]; // mean 1
+        let high = [[0xF0F0_F0F0_F0F0_F0F0u64; 8]; 1]; // mean 240
+        // Cold first touches of different pages (heat 1 each).
+        let a = m.shard_for(0, &low[0], 1);
+        let b = m.shard_for(PAGE_LINES, &low[0], 1);
+        let c = m.shard_for(2 * PAGE_LINES, &high[0], 1);
+        assert_eq!(a, b, "similar pages must share a shard");
+        assert_ne!(a, c, "distinct value regions must spread");
+    }
+
+    #[test]
+    fn page_heat_counts_touches_per_page() {
+        let mut h = PageHeat::new(8);
+        assert_eq!(h.touch(0), 1);
+        assert_eq!(h.touch(1), 2); // same page
+        assert_eq!(h.touch(PAGE_LINES), 1); // next page
+        assert_eq!(h.touch(2), 3);
+    }
+
+    #[test]
+    fn line_signature_is_the_mean_byte() {
+        assert_eq!(line_signature(&[0u64; 8]), 0);
+        assert_eq!(line_signature(&[u64::MAX; 8]), 255);
+        let mut half = [0u64; 8];
+        half[0] = u64::MAX;
+        half[1] = u64::MAX;
+        half[2] = u64::MAX;
+        half[3] = u64::MAX;
+        assert_eq!(line_signature(&half), 127);
+    }
+
+    #[test]
+    fn spec_parses_validates_and_labels() {
+        assert!(AddressSpec::parse("round_robin").unwrap().is_round_robin());
+        assert!(AddressSpec::parse(" rr ").unwrap().is_round_robin());
+        let cap = AddressSpec::parse("capacity:2/1").unwrap();
+        assert_eq!(
+            cap.policy,
+            AddressPolicy::CapacityWeighted {
+                weights: vec![2, 1]
+            }
+        );
+        assert_eq!(cap.label(), "cap2/1");
+        let st = AddressSpec::parse("steer").unwrap();
+        assert_eq!(st.label(), "steer");
+        assert_eq!(AddressSpec::parse("steer:512").unwrap().label(), "steer:512");
+        assert_eq!(AddressSpec::default().label(), "round_robin");
+        assert_eq!(
+            AddressSpec::parse_list("round_robin,steer").unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn spec_rejects_unknown_policies_and_bad_numbers() {
+        for bad in [
+            "wat",
+            "rr:1",
+            "capacity",
+            "capacity:",
+            "capacity:0/1",
+            "capacity:a/b",
+            "capacity:9999",
+            "steer:0",
+            "steer:zzz",
+        ] {
+            assert!(AddressSpec::parse(bad).is_err(), "{bad:?} accepted");
+        }
+        assert!(AddressSpec::parse_list("").is_err());
+        assert!(AddressSpec::capacity(vec![]).validate().is_err());
+    }
+
+    #[test]
+    fn built_maps_cover_exactly_the_declared_shards() {
+        for spec in [
+            AddressSpec::round_robin(),
+            AddressSpec::capacity(vec![2, 1]),
+            AddressSpec::steer_with(16),
+        ] {
+            for shards in [1usize, 2, 4] {
+                let mut map = spec.build(shards);
+                assert_eq!(map.shards(), shards, "{}", spec.label());
+                for s in route(map.as_mut(), 300) {
+                    assert!(s < shards, "{}: shard {s} out of range", spec.label());
+                }
+            }
+        }
+    }
+}

@@ -1,22 +1,27 @@
 //! Sharded channel array: N independent 8-chip channels behind bounded
 //! chunk mailboxes, one service-loop worker thread per shard.
 //!
-//! Address interleaving is round-robin at cache-line granularity: line
-//! `l` lands on shard `l % shards` ([`shard_of_line`]). Each shard owns
-//! its own codecs (data tables) and [`ChipChannel`] line state, so its
+//! Line placement is a pluggable [`AddressMap`] policy (see
+//! [`super::address`]): round-robin interleaving (the default, pinned
+//! bit-identical to the v1 array), capacity-weighted interleaving, or
+//! locality steering. Each shard owns its own codecs (data tables) and
+//! [`ChipChannel`](crate::channel::ChipChannel) line state, so its
 //! behaviour over its subsequence is bit-identical to a single-channel
 //! [`simulate_lines`](crate::coordinator::simulate_lines) run on that
 //! subsequence — the shard worker is the same batch encode → transmit →
-//! record → decode path, just fed from a mailbox of boxed
-//! [`ENCODE_BATCH`]-line chunks instead of a slice.
+//! record → decode path, fed from a mailbox of reference-counted
+//! [`LineChunk`] views (up to [`ENCODE_BATCH`] lines each) instead of
+//! owned boxed copies.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::faults::{FaultModel, FaultSpec, FaultStats};
-use crate::trace::{chip_words_to_bytes, gather_chip_lane, ChipWords};
+use crate::system::address::{AddressMap, AddressSpec, Inverse, PageHeat};
+use crate::trace::{chip_words_to_bytes, ChipWords, LineChunk};
 use crate::util::table::TextTable;
 
 /// The shard a cache line lands on under round-robin interleaving.
@@ -24,9 +29,6 @@ use crate::util::table::TextTable;
 pub fn shard_of_line(line: usize, shards: usize) -> usize {
     line % shards
 }
-
-/// One mailbox element: a boxed block of cache lines plus approx flags.
-type ShardChunk = (Box<[ChipWords]>, Box<[bool]>);
 
 /// What a shard worker hands back: its decoded lines (in shard-local
 /// order), channel-wide energy counts, encode and fault statistics.
@@ -43,6 +45,17 @@ pub struct ShardReport {
     pub stats: EncodeStats,
     /// Fault-injection statistics summed over the shard's 8 chips.
     pub faults: FaultStats,
+}
+
+/// Load-balance metric over a set of shard reports: max/mean lines per
+/// shard (1.0 = perfectly balanced; higher = hotter hottest shard).
+pub fn load_imbalance(shards: &[ShardReport]) -> f64 {
+    let total: usize = shards.iter().map(|s| s.lines).sum();
+    if total == 0 || shards.is_empty() {
+        return 1.0;
+    }
+    let mean = total as f64 / shards.len() as f64;
+    shards.iter().map(|s| s.lines).max().unwrap_or(0) as f64 / mean
 }
 
 /// Result of a channel-array run: the reassembled receiver-side stream
@@ -62,10 +75,24 @@ pub struct SystemOutput {
 }
 
 impl SystemOutput {
+    /// Max/mean lines per shard (1.0 = perfectly balanced).
+    pub fn load_imbalance(&self) -> f64 {
+        load_imbalance(&self.shards)
+    }
+
     /// Render the system-level report: one row per shard + the merged
-    /// totals (the table `examples/e2e_pipeline.rs` prints).
+    /// totals (the table `examples/e2e_pipeline.rs` prints). Per-shard
+    /// `DataTable` hit rates and the load-balance line make the effect
+    /// of the address-mapping policy visible.
     pub fn report(&self) -> String {
-        let mut t = TextTable::new(&["shard", "lines", "transfers", "term 1s", "switching"]);
+        let mut t = TextTable::new(&[
+            "shard",
+            "lines",
+            "transfers",
+            "term 1s",
+            "switching",
+            "tbl hit",
+        ]);
         for (i, s) in self.shards.iter().enumerate() {
             t.row(vec![
                 format!("{i}"),
@@ -73,6 +100,7 @@ impl SystemOutput {
                 format!("{}", s.counts.transfers),
                 format!("{}", s.counts.termination_ones),
                 format!("{}", s.counts.switching_transitions),
+                format!("{:.1}%", 100.0 * s.stats.table_hit_rate()),
             ]);
         }
         t.row(vec![
@@ -81,6 +109,7 @@ impl SystemOutput {
             format!("{}", self.counts.transfers),
             format!("{}", self.counts.termination_ones),
             format!("{}", self.counts.switching_transitions),
+            format!("{:.1}%", 100.0 * self.stats.table_hit_rate()),
         ]);
         let faults = if self.faults.injected_bits > 0 {
             format!(
@@ -95,27 +124,61 @@ impl SystemOutput {
             String::new()
         };
         format!(
-            "system report: {} channel(s), unencoded {:.1}%\n{}{}",
+            "system report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
+            self.load_imbalance(),
             t.render(),
             faults
         )
     }
 }
 
-/// N independent 8-chip channels fed by round-robin address interleaving.
+/// A shard's lines awaiting the next chunk flush: either owned copies
+/// (streaming `push_line`) or indices into a shared store (the
+/// zero-copy `push_store` path).
+enum Pending {
+    Copied {
+        lines: Vec<ChipWords>,
+        flags: Vec<bool>,
+    },
+    Indexed {
+        store: Arc<[ChipWords]>,
+        indices: Vec<u32>,
+        approx: bool,
+    },
+}
+
+impl Pending {
+    fn is_empty(&self) -> bool {
+        match self {
+            Pending::Copied { lines, .. } => lines.is_empty(),
+            Pending::Indexed { indices, .. } => indices.is_empty(),
+        }
+    }
+}
+
+/// N independent 8-chip channels fed by an [`AddressMap`] placement
+/// policy (round-robin by default).
 ///
 /// `push_line` routes each line to its shard's pending buffer; full
 /// [`ENCODE_BATCH`]-line chunks ship to that shard's bounded mailbox
 /// (blocking when the shard is behind — per-shard backpressure, exactly
-/// the memory controller's per-channel write queue). `finish` drains the
-/// tails, joins every worker and merges the per-shard stats.
+/// the memory controller's per-channel write queue). `push_store` is the
+/// zero-copy bulk path: lines stay in the shared store and each shard
+/// receives an indexed [`LineChunk`] view. `finish` drains the tails,
+/// joins every worker and merges the per-shard stats.
 pub struct ChannelArray {
-    senders: Vec<SyncSender<ShardChunk>>,
+    senders: Vec<SyncSender<LineChunk>>,
     workers: Vec<JoinHandle<ShardResult>>,
-    /// Per-shard lines + approx flags awaiting the next chunk flush.
-    pending: Vec<(Vec<ChipWords>, Vec<bool>)>,
+    map: Box<dyn AddressMap>,
+    heat: PageHeat,
+    /// Per-shard lines awaiting the next chunk flush.
+    pending: Vec<Option<Pending>>,
+    /// Shard routed per line, in push order — the recorded inverse the
+    /// receiver de-interleaves with (`None` under the analytic
+    /// round-robin inverse).
+    routes: Option<Vec<u32>>,
     lines_pushed: usize,
 }
 
@@ -140,26 +203,45 @@ impl ChannelArray {
         Self::with_codec_sets(sets, capacity)
     }
 
-    /// Spawn the array around pre-built codecs over a perfect channel:
-    /// one `Vec<Codec>` (one codec per chip) per shard — the
-    /// registry-driven construction path legacy callers use, and the
-    /// seam out-of-tree schemes shard through.
+    /// Spawn the array around pre-built codecs over a perfect channel
+    /// with round-robin placement: one `Vec<Codec>` (one codec per chip)
+    /// per shard — the registry-driven construction path legacy callers
+    /// use, and the seam out-of-tree schemes shard through.
     pub fn with_codec_sets(codec_sets: Vec<Vec<Codec>>, capacity: usize) -> ChannelArray {
         Self::with_codec_sets_and_faults(codec_sets, capacity, &FaultSpec::perfect())
     }
 
-    /// Spawn the array with every (shard, chip) lane's wire running
-    /// through the fault model `fault_spec` describes — what
-    /// [`Session`](crate::session::Session) uses for sharded runs. Each
-    /// lane derives its own decorrelated injection stream from the base
-    /// seed, so runs are reproducible at any shard count.
+    /// Round-robin array with every (shard, chip) lane's wire running
+    /// through the fault model `fault_spec` describes.
     pub fn with_codec_sets_and_faults(
         codec_sets: Vec<Vec<Codec>>,
         capacity: usize,
         fault_spec: &FaultSpec,
     ) -> ChannelArray {
+        Self::with_codec_sets_faults_and_address(
+            codec_sets,
+            capacity,
+            fault_spec,
+            &AddressSpec::round_robin(),
+        )
+    }
+
+    /// The fully-general constructor: pre-built codecs, fault model and
+    /// address-mapping policy — what [`Session`](crate::session::Session)
+    /// uses for sharded runs. Each lane derives its own decorrelated
+    /// injection stream from the base seed, so runs are reproducible at
+    /// any shard count; the address map decides which shard serves each
+    /// line and how the receiver de-interleaves.
+    pub fn with_codec_sets_faults_and_address(
+        codec_sets: Vec<Vec<Codec>>,
+        capacity: usize,
+        fault_spec: &FaultSpec,
+        address: &AddressSpec,
+    ) -> ChannelArray {
         let shards = codec_sets.len();
         assert!(shards >= 1, "channel array needs at least one shard");
+        let map = address.build(shards);
+        debug_assert_eq!(map.shards(), shards);
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
@@ -167,19 +249,24 @@ impl ChannelArray {
             assert_eq!(codecs.len(), CHIPS, "each shard needs one codec per chip");
             let models: Vec<Box<dyn FaultModel>> =
                 (0..CHIPS).map(|j| fault_spec.build(s, j)).collect();
-            let (tx, rx): (SyncSender<ShardChunk>, Receiver<ShardChunk>) =
+            let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
                 sync_channel(chunk_capacity);
             workers.push(std::thread::spawn(move || {
                 shard_service_loop(codecs, models, rx)
             }));
             senders.push(tx);
         }
+        let routes = match map.inverse() {
+            Inverse::RoundRobin => None,
+            Inverse::Recorded => Some(Vec::new()),
+        };
         ChannelArray {
             senders,
             workers,
-            pending: (0..shards)
-                .map(|_| (Vec::with_capacity(ENCODE_BATCH), Vec::with_capacity(ENCODE_BATCH)))
-                .collect(),
+            heat: PageHeat::new(map.heat_slots()),
+            map,
+            pending: (0..shards).map(|_| None).collect(),
+            routes,
             lines_pushed: 0,
         }
     }
@@ -194,12 +281,35 @@ impl ChannelArray {
         self.lines_pushed
     }
 
-    /// Route one cache line to its shard (blocks when that shard's
-    /// mailbox is full).
-    pub fn push_line(&mut self, line: ChipWords, approx: bool) {
-        let s = shard_of_line(self.lines_pushed, self.shards());
+    /// Route the next line through the address map, returning its shard.
+    fn route(&mut self, line: &ChipWords) -> usize {
+        let idx = self.lines_pushed;
+        let heat = self.heat.touch(idx);
+        let s = self.map.shard_for(idx, line, heat);
+        assert!(s < self.shards(), "address map routed to shard {s}");
+        if let Some(routes) = &mut self.routes {
+            routes.push(s as u32);
+        }
         self.lines_pushed += 1;
-        let (lines, flags) = &mut self.pending[s];
+        s
+    }
+
+    /// Route one cache line to its shard (blocks when that shard's
+    /// mailbox is full). Copies the line into the shard's pending
+    /// buffer — the streaming path; bulk callers should prefer the
+    /// zero-copy [`push_store`](Self::push_store).
+    pub fn push_line(&mut self, line: ChipWords, approx: bool) {
+        let s = self.route(&line);
+        if !matches!(self.pending[s], Some(Pending::Copied { .. })) {
+            self.flush_shard(s);
+            self.pending[s] = Some(Pending::Copied {
+                lines: Vec::with_capacity(ENCODE_BATCH),
+                flags: Vec::with_capacity(ENCODE_BATCH),
+            });
+        }
+        let Some(Pending::Copied { lines, flags }) = &mut self.pending[s] else {
+            unreachable!("pending buffer was just set to Copied");
+        };
         lines.push(line);
         flags.push(approx);
         if lines.len() == ENCODE_BATCH {
@@ -207,24 +317,68 @@ impl ChannelArray {
         }
     }
 
-    /// Ship shard `s`'s pending lines as one boxed chunk.
+    /// Zero-copy bulk ingestion: route every line of a shared store
+    /// without copying line data — each shard's mailbox receives
+    /// [`LineChunk`] index views into `store` (4 bytes per line instead
+    /// of a 64-byte copy). Interleaves correctly with `push_line`.
+    pub fn push_store(&mut self, store: &Arc<[ChipWords]>, approx: bool) {
+        for i in 0..store.len() {
+            let s = self.route(&store[i]);
+            let reuse = matches!(
+                &self.pending[s],
+                Some(Pending::Indexed { store: st, approx: a, .. })
+                    if Arc::ptr_eq(st, store) && *a == approx
+            );
+            if !reuse {
+                self.flush_shard(s);
+                self.pending[s] = Some(Pending::Indexed {
+                    store: store.clone(),
+                    indices: Vec::with_capacity(ENCODE_BATCH),
+                    approx,
+                });
+            }
+            let Some(Pending::Indexed { indices, .. }) = &mut self.pending[s] else {
+                unreachable!("pending buffer was just set to Indexed");
+            };
+            indices.push(i as u32);
+            if indices.len() == ENCODE_BATCH {
+                self.flush_shard(s);
+            }
+        }
+    }
+
+    /// Ship shard `s`'s pending lines as one chunk. A failed send means
+    /// the shard worker died (receiver dropped mid-panic): the array
+    /// stops accepting lines, joins every worker and re-raises the
+    /// original shard panic right here at the call site — a dead worker
+    /// can no longer silently swallow a whole chunk until `finish`.
     fn flush_shard(&mut self, s: usize) {
-        let (lines, flags) = &mut self.pending[s];
-        if lines.is_empty() {
+        let Some(pending) = self.pending[s].take() else {
+            return;
+        };
+        if pending.is_empty() {
             return;
         }
-        let chunk: Box<[ChipWords]> =
-            std::mem::replace(lines, Vec::with_capacity(ENCODE_BATCH)).into_boxed_slice();
-        let approx: Box<[bool]> =
-            std::mem::replace(flags, Vec::with_capacity(ENCODE_BATCH)).into_boxed_slice();
-        // A failed send means the shard worker died (receiver dropped);
-        // keep accepting traffic so the healthy shards drain normally —
-        // `finish` joins every worker and surfaces the original panic.
-        let _ = self.senders[s].send((chunk, approx));
+        let chunk = match pending {
+            Pending::Copied { lines, flags } => LineChunk::from_lines(lines, flags),
+            Pending::Indexed {
+                store,
+                indices,
+                approx,
+            } => LineChunk::indexed(store, indices, approx),
+        };
+        if self.senders[s].send(chunk).is_err() {
+            self.senders.clear();
+            let workers = std::mem::take(&mut self.workers);
+            crate::util::par::join_all_reraise(workers);
+            panic!("shard {s} worker exited without panicking (mailbox closed)");
+        }
     }
 
     /// Close the mailboxes, join every worker, merge the shard results
-    /// and de-interleave the decoded stream back into trace order.
+    /// and de-interleave the decoded stream back into trace order via
+    /// the address map's inverse (closed-form for round-robin, the
+    /// recorded route log otherwise).
     ///
     /// If a shard worker panicked, every other worker is still joined
     /// (drained) first, then the original panic payload is re-raised —
@@ -237,6 +391,7 @@ impl ChannelArray {
         let ChannelArray {
             senders,
             workers,
+            routes,
             lines_pushed,
             ..
         } = self;
@@ -244,18 +399,36 @@ impl ChannelArray {
         let shards = workers.len();
         let results = crate::util::par::join_all_reraise(workers);
 
-        // De-interleave: line l of the trace is entry l / shards of
-        // shard l % shards.
         let mut out_lines = vec![[0u64; CHIPS]; lines_pushed];
+        match &routes {
+            // Analytic round-robin inverse: line l of the trace is entry
+            // l / shards of shard l % shards.
+            None => {
+                for (s, (decoded, ..)) in results.iter().enumerate() {
+                    debug_assert_eq!(decoded.len(), (lines_pushed + shards - 1 - s) / shards);
+                    for (i, line) in decoded.iter().enumerate() {
+                        out_lines[i * shards + s] = *line;
+                    }
+                }
+            }
+            // Recorded inverse: walk the route log with one cursor per
+            // shard.
+            Some(routes) => {
+                debug_assert_eq!(routes.len(), lines_pushed);
+                let mut cursors = vec![0usize; shards];
+                for (l, &s) in routes.iter().enumerate() {
+                    let s = s as usize;
+                    out_lines[l] = results[s].0[cursors[s]];
+                    cursors[s] += 1;
+                }
+            }
+        }
+
         let mut reports = Vec::with_capacity(shards);
         let mut counts = EnergyCounts::default();
         let mut stats = EncodeStats::default();
         let mut faults = FaultStats::default();
-        for (s, (decoded, c, st, f)) in results.into_iter().enumerate() {
-            debug_assert_eq!(decoded.len(), (lines_pushed + shards - 1 - s) / shards);
-            for (i, line) in decoded.iter().enumerate() {
-                out_lines[i * shards + s] = *line;
-            }
+        for (decoded, c, st, f) in results {
             counts.merge(&c);
             stats.merge(&st);
             faults.merge(&f);
@@ -275,7 +448,9 @@ impl ChannelArray {
         }
     }
 
-    /// Batch driver: run a whole pre-split trace through a fresh array.
+    /// Batch driver: run a whole pre-split trace through a fresh
+    /// round-robin array via the streaming (copying) path — kept as the
+    /// v1-shaped reference the zero-copy path is pinned against.
     pub fn run(
         cfg: &ZacConfig,
         shards: usize,
@@ -291,28 +466,24 @@ impl ChannelArray {
     }
 }
 
-/// The per-shard service loop: receive boxed line chunks until the
-/// mailbox closes, driving all 8 chips of this shard's channel through
-/// the one shared [`ChipLane`] drive loop (per-batch lane gather, no
-/// stream clones), each chip's wire through its own fault model.
+/// The per-shard service loop: receive chunk views until the mailbox
+/// closes, driving all 8 chips of this shard's channel through the one
+/// shared [`ChipLane`] drive loop (per-batch lane gather straight out of
+/// the shared store — no stream clones), each chip's wire through its
+/// own fault model.
 fn shard_service_loop(
     codecs: Vec<Codec>,
     models: Vec<Box<dyn FaultModel>>,
-    rx: Receiver<ShardChunk>,
+    rx: Receiver<LineChunk>,
 ) -> ShardResult {
     let mut lanes: Vec<ChipLane> = codecs
         .into_iter()
         .zip(models)
         .map(|(codec, m)| ChipLane::with_faults(codec, 0, m))
         .collect();
-    let mut words = [0u64; ENCODE_BATCH];
-    while let Ok((lines, approx)) = rx.recv() {
-        for (lc, ac) in lines.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
-            let n = lc.len();
-            for (j, lane) in lanes.iter_mut().enumerate() {
-                gather_chip_lane(lc, j, &mut words[..n]);
-                lane.drive(&words[..n], &ac[..n]);
-            }
+    while let Ok(chunk) = rx.recv() {
+        for (j, lane) in lanes.iter_mut().enumerate() {
+            lane.drive_chunk(j, &chunk);
         }
     }
     let nlines = lanes[0].decoded_len();
@@ -395,6 +566,51 @@ mod tests {
     }
 
     #[test]
+    fn push_store_is_bit_identical_to_push_line() {
+        // The zero-copy bulk path must equal the streaming copy path for
+        // every address policy — chunk representation (window / indexed
+        // / owned) must never leak into results.
+        let bytes = image_like(550 * 64 + 16, 39);
+        let store: Arc<[ChipWords]> = bytes_to_chip_words(&bytes).into();
+        let cfg = ZacConfig::zac(80);
+        for address in [
+            AddressSpec::round_robin(),
+            AddressSpec::capacity(vec![2, 1]),
+            AddressSpec::steer(),
+        ] {
+            for shards in [1usize, 3] {
+                let build = |addr: &AddressSpec| {
+                    let sets = (0..shards)
+                        .map(|_| (0..CHIPS).map(|_| Codec::from_config(&cfg)).collect())
+                        .collect();
+                    ChannelArray::with_codec_sets_faults_and_address(
+                        sets,
+                        ENCODE_BATCH,
+                        &FaultSpec::perfect(),
+                        addr,
+                    )
+                };
+                let mut streamed = build(&address);
+                for l in store.iter() {
+                    streamed.push_line(*l, true);
+                }
+                let a = streamed.finish(bytes.len());
+                let mut bulk = build(&address);
+                bulk.push_store(&store, true);
+                let b = bulk.finish(bytes.len());
+                let label = format!("{} x{shards}", address.label());
+                assert_eq!(a.bytes, b.bytes, "{label}");
+                assert_eq!(a.counts, b.counts, "{label}");
+                assert_eq!(a.stats, b.stats, "{label}");
+                for (x, y) in a.shards.iter().zip(&b.shards) {
+                    assert_eq!(x.lines, y.lines, "{label}");
+                    assert_eq!(x.stats, y.stats, "{label}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn exact_schemes_lossless_for_every_shard_count() {
         let bytes = image_like(4096, 35);
         let lines = bytes_to_chip_words(&bytes);
@@ -421,6 +637,8 @@ mod tests {
             vec![26, 26, 26, 25]
         );
         assert!(out.report().contains("TOTAL"));
+        assert!(out.report().contains("tbl hit"));
+        assert!((out.load_imbalance() - 26.0 / 25.75).abs() < 1e-12);
     }
 
     #[test]
@@ -429,5 +647,50 @@ mod tests {
         assert!(out.bytes.is_empty());
         assert_eq!(out.stats.total(), 0);
         assert_eq!(out.shards.len(), 3);
+        assert_eq!(out.load_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn dead_shard_worker_panic_surfaces_at_the_push_site() {
+        use crate::encoding::{ChipDecoder, ChipEncoder, WireWord};
+        struct BoomEncoder;
+        impl ChipEncoder for BoomEncoder {
+            fn encode(&mut self, _word: u64, _approx: bool) -> WireWord {
+                panic!("shard worker boom");
+            }
+            fn scheme(&self) -> Scheme {
+                Scheme::Org
+            }
+            fn reset(&mut self) {}
+        }
+        struct NopDecoder;
+        impl ChipDecoder for NopDecoder {
+            fn decode(&mut self, wire: &WireWord) -> u64 {
+                wire.data
+            }
+            fn reset(&mut self) {}
+        }
+
+        let sets = vec![(0..CHIPS)
+            .map(|_| Codec::new(Box::new(BoomEncoder), Box::new(NopDecoder)))
+            .collect()];
+        let mut array = ChannelArray::with_codec_sets(sets, 1);
+        // Regression (the v1 array swallowed the send error until
+        // finish): pushing into a dead shard must re-raise the worker's
+        // own panic at the push call site, not lose chunks silently.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            for i in 0..64 * ENCODE_BATCH {
+                array.push_line([i as u64; CHIPS], true);
+            }
+            array.finish(0);
+        }));
+        let payload = caught.expect_err("dead worker must surface a panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("shard worker boom"), "payload: {msg:?}");
     }
 }

@@ -3,13 +3,20 @@
 //! engine (ROADMAP: "shard the line stream across multiple 8-chip
 //! channels, async service loop over the chunked queues").
 //!
-//! Three pieces:
+//! Four pieces:
 //!
+//! * [`address`] — [`AddressMap`]: the pluggable line-placement policy
+//!   ([`RoundRobin`](address::RoundRobin) default,
+//!   [`CapacityWeighted`](address::CapacityWeighted),
+//!   [`LocalitySteer`](address::LocalitySteer)), described by the
+//!   serializable [`AddressSpec`] every ingestion boundary parses
+//!   (`--address`, TOML, `Session::builder().address(..)`).
 //! * [`array`] — [`ChannelArray`]: N independent 8-chip channels, the
-//!   line stream sharded across them by deterministic round-robin
-//!   address interleaving. Each shard runs a service loop on its own
-//!   worker thread, consuming boxed [`ENCODE_BATCH`]-line chunks from a
-//!   bounded mailbox (the same chunked-queue discipline as
+//!   line stream sharded across them by the address map. Each shard
+//!   runs a service loop on its own worker thread, consuming
+//!   reference-counted [`LineChunk`](crate::trace::LineChunk) views (up
+//!   to [`ENCODE_BATCH`] lines each) from a bounded mailbox (the same
+//!   chunked-queue discipline as
 //!   [`Pipeline`](crate::coordinator::Pipeline)); per-shard
 //!   [`EncodeStats`](crate::encoding::EncodeStats) /
 //!   [`EnergyCounts`](crate::channel::EnergyCounts) merge into one
@@ -32,11 +39,13 @@
 //!
 //! [`ENCODE_BATCH`]: crate::encoding::ENCODE_BATCH
 
+pub mod address;
 pub mod array;
 pub mod report;
 pub mod scenario;
 
-pub use array::{shard_of_line, ChannelArray, ShardReport, SystemOutput};
+pub use address::{AddressMap, AddressPolicy, AddressSpec, Inverse, PageHeat};
+pub use array::{load_imbalance, shard_of_line, ChannelArray, ShardReport, SystemOutput};
 pub use report::{ScenarioResult, SweepReport};
 pub use scenario::{
     bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list, run_sweep,

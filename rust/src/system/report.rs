@@ -22,6 +22,14 @@ pub struct ScenarioResult {
     pub tolerance_bits: u32,
     /// Fault-model label (`"perfect"` when no injection ran).
     pub fault_label: String,
+    /// Address-mapping policy label (`"round_robin"` = the v1 default).
+    pub address: String,
+    /// System-wide `DataTable` hit rate (OHE-skip fraction) — the metric
+    /// the address policy moves.
+    pub table_hit_rate: f64,
+    /// Max/mean lines per shard (1.0 = perfectly balanced) — the
+    /// load-balance cost a steering policy pays for locality.
+    pub load_imbalance: f64,
     /// Wire bits flipped by the fault model.
     pub injected_bits: u64,
     /// Transfers with at least one injected flip.
@@ -59,6 +67,9 @@ impl ScenarioResult {
             ("truncation_bits", num(self.truncation_bits as f64)),
             ("tolerance_bits", num(self.tolerance_bits as f64)),
             ("faults", s(&self.fault_label)),
+            ("address", s(&self.address)),
+            ("table_hit_rate", num(self.table_hit_rate)),
+            ("load_imbalance", num(self.load_imbalance)),
             ("injected_bits", num(self.injected_bits as f64)),
             ("injected_words", num(self.injected_words as f64)),
             (
@@ -132,10 +143,12 @@ impl SweepReport {
         let mut t = TextTable::new(&[
             "scenario",
             "ch",
+            "addr",
             "faults",
             "term save",
             "switch save",
-            "ohe",
+            "tbl hit",
+            "imbal",
             "unenc",
             "flips",
             "quality",
@@ -145,10 +158,12 @@ impl SweepReport {
             t.row(vec![
                 r.label.clone(),
                 format!("{}", r.channels),
+                r.address.clone(),
                 r.fault_label.clone(),
                 pct(r.term_savings_pct),
                 pct(r.switch_savings_pct),
-                pct(100.0 * r.outcome_fracs[1]),
+                pct(100.0 * r.table_hit_rate),
+                f(r.load_imbalance, 2),
                 pct(100.0 * r.outcome_fracs[3]),
                 format!("{}", r.injected_bits),
                 f(r.quality_ratio, 4),
@@ -183,6 +198,9 @@ mod tests {
                 truncation_bits: 0,
                 tolerance_bits: 0,
                 fault_label: "vdd1050mV".into(),
+                address: "steer".into(),
+                table_hit_rate: 0.4,
+                load_imbalance: 1.25,
                 injected_bits: 17,
                 injected_words: 12,
                 observed_error_bits: 40,
@@ -218,6 +236,10 @@ mod tests {
         // Fault fields persist into BENCH_system.json.
         assert_eq!(sc.get("faults").unwrap().as_str().unwrap(), "vdd1050mV");
         assert_eq!(sc.get("injected_bits").unwrap().as_usize().unwrap(), 17);
+        // Address-policy fields persist too (the CI smoke greps them).
+        assert_eq!(sc.get("address").unwrap().as_str().unwrap(), "steer");
+        assert!((sc.get("table_hit_rate").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-12);
+        assert!((sc.get("load_imbalance").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-12);
         assert_eq!(
             sc.get("observed_error_bits").unwrap().as_usize().unwrap(),
             40
@@ -238,6 +260,8 @@ mod tests {
         let out = sample().render_table();
         assert!(out.contains("ZAC(L80,T0,O0)@2ch"), "{out}");
         assert!(out.contains("term save"), "{out}");
+        assert!(out.contains("tbl hit"), "{out}");
+        assert!(out.contains("steer"), "{out}");
     }
 
     #[test]

@@ -31,6 +31,8 @@ use crate::encoding::{CodecSpec, Outcome, Scheme};
 use crate::faults::FaultSpec;
 use crate::quality::psnr_u8;
 use crate::session::{Execution, RunReport, Session, Trace, TrafficClass};
+use crate::system::address::AddressSpec;
+use crate::system::array::load_imbalance;
 use crate::system::report::{ScenarioResult, SweepReport};
 use crate::util::toml_lite;
 
@@ -59,6 +61,10 @@ pub struct SweepSpec {
     /// channel only). Every codec cell runs once per fault spec, so the
     /// report carries energy-vs-quality frontiers.
     pub faults: Vec<FaultSpec>,
+    /// Address-mapping axis (default: round-robin only). Every codec
+    /// cell runs once per policy, so the report carries per-policy
+    /// `DataTable` hit rates and termination energy side by side.
+    pub address: Vec<AddressSpec>,
     /// Savings reference scheme.
     pub baseline: Scheme,
 }
@@ -78,32 +84,32 @@ impl Default for SweepSpec {
             truncations: vec![0],
             tolerances: vec![0],
             faults: vec![FaultSpec::perfect()],
+            address: vec![AddressSpec::round_robin()],
             baseline: Scheme::Bde,
         }
     }
 }
 
 /// One concrete cell of the sweep grid: a validated codec spec at a
-/// channel count under one fault model.
+/// channel count under one fault model and one address policy.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub channels: usize,
     pub spec: CodecSpec,
     pub faults: FaultSpec,
+    pub address: AddressSpec,
 }
 
 impl Scenario {
     pub fn label(&self) -> String {
-        if self.faults.is_perfect() {
-            format!("{}@{}ch", self.spec.label(), self.channels)
-        } else {
-            format!(
-                "{}@{}ch+{}",
-                self.spec.label(),
-                self.channels,
-                self.faults.label()
-            )
+        let mut label = format!("{}@{}ch", self.spec.label(), self.channels);
+        if !self.faults.is_perfect() {
+            label.push_str(&format!("+{}", self.faults.label()));
         }
+        if !self.address.is_round_robin() {
+            label.push_str(&format!("+{}", self.address.label()));
+        }
+        label
     }
 }
 
@@ -153,6 +159,13 @@ impl SweepSpec {
                                     .map(|x| FaultSpec::parse(x.as_str()?))
                                     .collect::<anyhow::Result<_>>()?;
                             }
+                            "address" => {
+                                spec.address = gv
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| AddressSpec::parse(x.as_str()?))
+                                    .collect::<anyhow::Result<_>>()?;
+                            }
                             "baseline" => {
                                 let name = gv.as_str()?;
                                 spec.baseline = Scheme::parse(name)
@@ -193,6 +206,10 @@ impl SweepSpec {
         for f in &self.faults {
             f.validate()?;
         }
+        anyhow::ensure!(!self.address.is_empty(), "empty address axis");
+        for a in &self.address {
+            a.validate()?;
+        }
         if self.schemes.contains(&Scheme::ZacDest) {
             anyhow::ensure!(!self.limits.is_empty(), "ZAC in grid but no limits");
             anyhow::ensure!(!self.truncations.is_empty(), "ZAC in grid but no truncations");
@@ -207,27 +224,31 @@ impl SweepSpec {
         let mut out = Vec::new();
         for &faults in &self.faults {
             for &channels in &self.channels {
-                for &scheme in &self.schemes {
-                    if scheme == Scheme::ZacDest {
-                        for &limit in &self.limits {
-                            for &trunc in &self.truncations {
-                                for &tol in &self.tolerances {
-                                    let spec = CodecSpec::zac_full(limit, trunc, tol);
-                                    spec.validate()?;
-                                    out.push(Scenario {
-                                        channels,
-                                        spec,
-                                        faults,
-                                    });
+                for address in &self.address {
+                    for &scheme in &self.schemes {
+                        if scheme == Scheme::ZacDest {
+                            for &limit in &self.limits {
+                                for &trunc in &self.truncations {
+                                    for &tol in &self.tolerances {
+                                        let spec = CodecSpec::zac_full(limit, trunc, tol);
+                                        spec.validate()?;
+                                        out.push(Scenario {
+                                            channels,
+                                            spec,
+                                            faults,
+                                            address: address.clone(),
+                                        });
+                                    }
                                 }
                             }
+                        } else {
+                            out.push(Scenario {
+                                channels,
+                                spec: CodecSpec::named(scheme.label()),
+                                faults,
+                                address: address.clone(),
+                            });
                         }
-                    } else {
-                        out.push(Scenario {
-                            channels,
-                            spec: CodecSpec::named(scheme.label()),
-                            faults,
-                        });
                     }
                 }
             }
@@ -327,6 +348,7 @@ fn run_cell(
     channels: usize,
     approx: bool,
     faults: &FaultSpec,
+    address: &AddressSpec,
     trace: &Trace,
 ) -> anyhow::Result<RunReport> {
     Session::builder()
@@ -335,47 +357,68 @@ fn run_cell(
         .traffic(TrafficClass::from_approx_flag(approx))
         .execution(Execution::Sharded)
         .faults(*faults)
+        .address(address.clone())
         .build()?
         .run(trace)
 }
 
 /// Run every scenario of the grid over `trace`, measuring energy savings
-/// against the baseline scheme at the same channel count plus the
-/// trace-level quality of the reconstructed stream. Every cell runs
-/// through the unified [`Session`] API over the sharded channel array.
+/// against the baseline scheme at the same channel count and address
+/// policy plus the trace-level quality of the reconstructed stream.
+/// Every cell runs through the unified [`Session`] API over the sharded
+/// channel array.
 pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> {
     let scenarios = spec.scenarios()?;
     let trace_obj = Trace::from_bytes(trace.to_vec());
 
-    // One baseline run per channel count: sharding splits the table
-    // history, so the fair baseline shards the same way. The full
-    // report (+ wall time) is kept so a grid scenario that IS the
-    // baseline config reuses it instead of simulating twice.
+    // One baseline run per (channel count, address policy): sharding
+    // and placement both shape the per-table history, so the fair
+    // baseline shards and places the same way. The full report (+ wall
+    // time) is kept so a grid scenario that IS the baseline config
+    // reuses it instead of simulating twice.
     let base_spec = CodecSpec::named(spec.baseline.label());
-    let mut baselines: BTreeMap<usize, (RunReport, f64)> = BTreeMap::new();
+    let mut baselines: BTreeMap<(usize, String), (RunReport, f64)> = BTreeMap::new();
     for &c in &spec.channels {
-        if baselines.contains_key(&c) {
-            continue;
+        for a in &spec.address {
+            let key = (c, a.label());
+            if baselines.contains_key(&key) {
+                continue;
+            }
+            let t0 = Instant::now();
+            let out = run_cell(
+                &base_spec,
+                c,
+                spec.approx,
+                &FaultSpec::perfect(),
+                a,
+                &trace_obj,
+            )?;
+            baselines.insert(key, (out, t0.elapsed().as_secs_f64()));
         }
-        let t0 = Instant::now();
-        let out = run_cell(&base_spec, c, spec.approx, &FaultSpec::perfect(), &trace_obj)?;
-        baselines.insert(c, (out, t0.elapsed().as_secs_f64()));
     }
 
     let mut results = Vec::with_capacity(scenarios.len());
     for sc in &scenarios {
+        let base_key = (sc.channels, sc.address.label());
         // A cell that IS the baseline config may reuse the baseline run
         // — but only on a perfect channel: a faulty cell has different
         // receiver-side bytes (energy would match, quality would not).
         let (out, wall) = if sc.spec == base_spec && sc.faults.is_perfect() {
-            let (o, w) = &baselines[&sc.channels];
+            let (o, w) = &baselines[&base_key];
             (o.clone(), *w)
         } else {
             let t0 = Instant::now();
-            let o = run_cell(&sc.spec, sc.channels, spec.approx, &sc.faults, &trace_obj)?;
+            let o = run_cell(
+                &sc.spec,
+                sc.channels,
+                spec.approx,
+                &sc.faults,
+                &sc.address,
+                &trace_obj,
+            )?;
             (o, t0.elapsed().as_secs_f64())
         };
-        let base = &baselines[&sc.channels].0.counts;
+        let base = &baselines[&base_key].0.counts;
         let mae = if trace.is_empty() {
             0.0
         } else {
@@ -400,6 +443,9 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
             truncation_bits: trunc,
             tolerance_bits: tol,
             fault_label: sc.faults.label(),
+            address: sc.address.label(),
+            table_hit_rate: out.stats.table_hit_rate(),
+            load_imbalance: load_imbalance(&out.shards),
             injected_bits: out.faults.injected_bits,
             injected_words: out.faults.injected_words,
             observed_error_bits: out.faults.observed_error_bits,
@@ -512,8 +558,10 @@ mod tests {
 
     #[test]
     fn sweep_runs_end_to_end_and_writes_json() {
-        let mut spec = SweepSpec::default();
-        spec.bytes = 8192;
+        let spec = SweepSpec {
+            bytes: 8192,
+            ..SweepSpec::default()
+        };
         let trace = synthetic_trace(spec.bytes, spec.seed);
         let report = run_sweep(&spec, &trace).unwrap();
         assert!(report.scenarios.len() >= 6);
@@ -577,11 +625,13 @@ mod tests {
 
     #[test]
     fn faulty_sweep_keeps_energy_and_degrades_quality() {
-        let mut spec = SweepSpec::default();
-        spec.bytes = 16384;
-        spec.channels = vec![2];
-        spec.schemes = vec![Scheme::Bde];
-        spec.faults = vec![FaultSpec::perfect(), FaultSpec::uniform(1e-2)];
+        let spec = SweepSpec {
+            bytes: 16384,
+            channels: vec![2],
+            schemes: vec![Scheme::Bde],
+            faults: vec![FaultSpec::perfect(), FaultSpec::uniform(1e-2)],
+            ..SweepSpec::default()
+        };
         let trace = synthetic_trace(spec.bytes, spec.seed);
         let report = run_sweep(&spec, &trace).unwrap();
         assert_eq!(report.scenarios.len(), 2);
@@ -601,10 +651,82 @@ mod tests {
     }
 
     #[test]
+    fn address_axis_parses_and_expands_the_grid() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            name = "steered"
+            bytes = 8192
+            [grid]
+            channels = [2]
+            schemes = ["BDE"]
+            address = ["round_robin", "steer", "capacity:2/1"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.address.len(), 3);
+        let sc = spec.scenarios().unwrap();
+        assert_eq!(sc.len(), 3);
+        assert!(sc.iter().any(|s| s.label() == "BDE@2ch"));
+        assert!(sc.iter().any(|s| s.label() == "BDE@2ch+steer"));
+        assert!(sc.iter().any(|s| s.label() == "BDE@2ch+cap2/1"));
+        // Bad address strings are rejected at the TOML boundary.
+        assert!(SweepSpec::from_toml("[grid]\naddress = [\"wat\"]\n").is_err());
+        assert!(SweepSpec::from_toml("[grid]\naddress = []\n").is_err());
+    }
+
+    #[test]
+    fn steered_sweep_reports_per_policy_hit_rates() {
+        // Acceptance: LocalitySteer must raise the per-channel DataTable
+        // hit rate (and not cost termination energy) vs RoundRobin on
+        // the image-like trace, and both must land in the report fields
+        // BENCH_system.json persists.
+        let spec = SweepSpec {
+            bytes: 1 << 17,
+            channels: vec![4],
+            schemes: vec![Scheme::ZacDest],
+            limits: vec![75],
+            address: vec![AddressSpec::round_robin(), AddressSpec::steer()],
+            ..SweepSpec::default()
+        };
+        let trace = synthetic_trace(spec.bytes, 31);
+        let report = run_sweep(&spec, &trace).unwrap();
+        let rr = report
+            .scenarios
+            .iter()
+            .find(|r| r.address == "round_robin")
+            .unwrap();
+        let steer = report
+            .scenarios
+            .iter()
+            .find(|r| r.address == "steer")
+            .unwrap();
+        assert!(
+            steer.table_hit_rate > rr.table_hit_rate,
+            "steer hit rate {} must beat round-robin {}",
+            steer.table_hit_rate,
+            rr.table_hit_rate
+        );
+        assert!(
+            steer.counts.termination_ones <= rr.counts.termination_ones,
+            "steer termination {} must not exceed round-robin {}",
+            steer.counts.termination_ones,
+            rr.counts.termination_ones
+        );
+        assert!(steer.load_imbalance >= 1.0);
+        assert_eq!(
+            steer.shard_lines.iter().sum::<usize>(),
+            trace.len() / 64,
+            "steering must still cover the whole trace"
+        );
+    }
+
+    #[test]
     fn zac_beats_baseline_on_image_like_trace() {
-        let mut spec = SweepSpec::default();
-        spec.bytes = 65536;
-        spec.channels = vec![2];
+        let spec = SweepSpec {
+            bytes: 65536,
+            channels: vec![2],
+            ..SweepSpec::default()
+        };
         let trace = synthetic_trace(spec.bytes, 7);
         let report = run_sweep(&spec, &trace).unwrap();
         let zac = report

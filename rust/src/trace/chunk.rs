@@ -1,0 +1,236 @@
+//! The zero-copy chunk currency of the data plane.
+//!
+//! v1 moved line data between layers as owned `Box<[ChipWords]>` copies:
+//! the `Pipeline` built one boxed per-chip chunk per worker, the channel
+//! array copied every pending chunk into a box per shard, and every hop
+//! re-owned the bytes. A [`LineChunk`] replaces all of those with one
+//! reference-counted view: an `Arc<[ChipWords]>` backing store (usually
+//! the [`Trace`](crate::session::Trace)'s own line buffer) plus either a
+//! contiguous window or an explicit index list into it, and either a
+//! uniform or a per-line approx flag. Cloning a chunk bumps a refcount;
+//! line data is copied exactly once — when the trace was split into
+//! lines — no matter how many queues, shards or chip workers it crosses.
+
+use std::sync::Arc;
+
+use super::ChipWords;
+
+/// Which store lines a chunk covers, in transfer order.
+#[derive(Clone, Debug)]
+enum Select {
+    /// Contiguous window `[start, start + len)` of the store.
+    Window { start: usize, len: usize },
+    /// Explicit store indices (the sharded router's scatter view).
+    Indices(Arc<[u32]>),
+}
+
+/// Error-resilience flags for a chunk's lines.
+#[derive(Clone, Debug)]
+enum Flags {
+    /// One class for the whole chunk (whole-stream `TrafficClass`).
+    Uniform(bool),
+    /// One flag per chunk line, in the same order as the selection.
+    Per(Arc<[bool]>),
+}
+
+/// A reference-counted view of cache lines: the one chunk type every
+/// queue and worker of the batch, pipelined and sharded executions
+/// exchanges. Cheap to clone (two refcount bumps), never copies line
+/// data.
+#[derive(Clone, Debug)]
+pub struct LineChunk {
+    store: Arc<[ChipWords]>,
+    select: Select,
+    flags: Flags,
+}
+
+impl LineChunk {
+    /// A contiguous window of a shared store with one traffic class.
+    pub fn window(store: Arc<[ChipWords]>, start: usize, len: usize, approx: bool) -> LineChunk {
+        assert!(start + len <= store.len(), "window out of store bounds");
+        LineChunk {
+            store,
+            select: Select::Window { start, len },
+            flags: Flags::Uniform(approx),
+        }
+    }
+
+    /// Adopt owned lines (the streaming `push_line` accumulation path):
+    /// the single allocation that freezes a pending buffer into the
+    /// shared currency.
+    pub fn from_lines(lines: Vec<ChipWords>, flags: Vec<bool>) -> LineChunk {
+        assert_eq!(lines.len(), flags.len());
+        let store: Arc<[ChipWords]> = lines.into();
+        LineChunk {
+            select: Select::Window {
+                start: 0,
+                len: store.len(),
+            },
+            store,
+            flags: Flags::Per(flags.into()),
+        }
+    }
+
+    /// A scatter view: explicit store indices in transfer order (what
+    /// the address-mapped channel array ships per shard — 4 bytes per
+    /// line instead of a 64-byte copy).
+    pub fn indexed(store: Arc<[ChipWords]>, indices: Vec<u32>, approx: bool) -> LineChunk {
+        assert!(
+            indices.iter().all(|&i| (i as usize) < store.len()),
+            "chunk index out of store bounds"
+        );
+        LineChunk {
+            store,
+            select: Select::Indices(indices.into()),
+            flags: Flags::Uniform(approx),
+        }
+    }
+
+    /// Lines in this chunk.
+    pub fn len(&self) -> usize {
+        match &self.select {
+            Select::Window { len, .. } => *len,
+            Select::Indices(idx) => idx.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th line of the chunk.
+    pub fn line(&self, i: usize) -> &ChipWords {
+        match &self.select {
+            Select::Window { start, len } => {
+                assert!(i < *len);
+                &self.store[start + i]
+            }
+            Select::Indices(idx) => &self.store[idx[i] as usize],
+        }
+    }
+
+    /// The `i`-th line's approx flag.
+    pub fn approx(&self, i: usize) -> bool {
+        match &self.flags {
+            Flags::Uniform(a) => {
+                assert!(i < self.len());
+                *a
+            }
+            Flags::Per(f) => f[i],
+        }
+    }
+
+    /// Gather chip `chip`'s 64-bit lane for chunk lines
+    /// `[start, start + out.len())` — the strided gather every chip
+    /// worker runs once per batch into its reusable buffer.
+    pub fn gather_chip(&self, chip: usize, start: usize, out: &mut [u64]) {
+        match &self.select {
+            Select::Window { start: s, len } => {
+                assert!(start + out.len() <= *len);
+                let lines = &self.store[s + start..s + start + out.len()];
+                for (o, l) in out.iter_mut().zip(lines) {
+                    *o = l[chip];
+                }
+            }
+            Select::Indices(idx) => {
+                for (o, &i) in out.iter_mut().zip(&idx[start..start + out.len()]) {
+                    *o = self.store[i as usize][chip];
+                }
+            }
+        }
+    }
+
+    /// Fill the approx flags for chunk lines `[start, start + out.len())`.
+    pub fn fill_approx(&self, start: usize, out: &mut [bool]) {
+        assert!(start + out.len() <= self.len());
+        match &self.flags {
+            Flags::Uniform(a) => out.fill(*a),
+            Flags::Per(f) => out.copy_from_slice(&f[start..start + out.len()]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::CHIPS;
+
+    fn store(n: usize) -> Arc<[ChipWords]> {
+        (0..n)
+            .map(|l| std::array::from_fn(|j| (l * CHIPS + j) as u64))
+            .collect::<Vec<ChipWords>>()
+            .into()
+    }
+
+    #[test]
+    fn window_views_the_store_without_copying() {
+        let st = store(10);
+        let c = LineChunk::window(st.clone(), 3, 4, true);
+        assert_eq!(c.len(), 4);
+        assert!(!c.is_empty());
+        assert_eq!(c.line(0), &st[3]);
+        assert_eq!(c.line(3), &st[6]);
+        assert!(c.approx(2));
+        // Clones share the same backing store.
+        let d = c.clone();
+        assert!(Arc::ptr_eq(&c.store, &d.store));
+        assert_eq!(Arc::strong_count(&st), 3);
+    }
+
+    #[test]
+    fn indexed_selection_scatters_in_order() {
+        let st = store(8);
+        let c = LineChunk::indexed(st.clone(), vec![7, 0, 3], false);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.line(0), &st[7]);
+        assert_eq!(c.line(1), &st[0]);
+        assert!(!c.approx(0));
+        let mut lane = [0u64; 3];
+        c.gather_chip(2, 0, &mut lane);
+        assert_eq!(lane, [st[7][2], st[0][2], st[3][2]]);
+        let mut tail = [0u64; 2];
+        c.gather_chip(5, 1, &mut tail);
+        assert_eq!(tail, [st[0][5], st[3][5]]);
+    }
+
+    #[test]
+    fn gather_and_flags_match_per_line_accessors() {
+        let st = store(12);
+        let flags: Vec<bool> = (0..5).map(|i| i % 2 == 0).collect();
+        let lines: Vec<ChipWords> = st[4..9].to_vec();
+        let c = LineChunk::from_lines(lines, flags.clone());
+        assert_eq!(c.len(), 5);
+        for j in 0..CHIPS {
+            let mut buf = vec![0u64; 3];
+            c.gather_chip(j, 1, &mut buf);
+            let want: Vec<u64> = (1..4).map(|i| c.line(i)[j]).collect();
+            assert_eq!(buf, want, "chip {j}");
+        }
+        let mut got = vec![false; 5];
+        c.fill_approx(0, &mut got);
+        assert_eq!(got, flags);
+        let mut tail = vec![true; 2];
+        c.fill_approx(3, &mut tail);
+        assert_eq!(tail, flags[3..]);
+    }
+
+    #[test]
+    fn uniform_flags_fill() {
+        let c = LineChunk::window(store(4), 0, 4, true);
+        let mut out = vec![false; 4];
+        c.fill_approx(0, &mut out);
+        assert!(out.iter().all(|&a| a));
+    }
+
+    #[test]
+    #[should_panic(expected = "window out of store bounds")]
+    fn window_bounds_are_checked() {
+        let _ = LineChunk::window(store(4), 2, 3, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk index out of store bounds")]
+    fn index_bounds_are_checked() {
+        let _ = LineChunk::indexed(store(4), vec![4], true);
+    }
+}

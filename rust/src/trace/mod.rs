@@ -7,8 +7,11 @@
 //! burst chip *j* carries bytes `{8b + j : b ∈ 0..8}` of the line — one
 //! byte per beat, i.e. one 64-bit word per chip per line.
 
+pub mod chunk;
 pub mod float_layout;
 pub mod hex;
+
+pub use chunk::LineChunk;
 
 use crate::channel::CHIPS;
 

@@ -24,6 +24,7 @@ use crate::faults::FaultSpec;
 use crate::quality::quality_ratio;
 use crate::runtime::Runtime;
 use crate::session::{RunReport, Session, Trace, TrafficClass};
+use crate::system::AddressSpec;
 
 /// Workload identifiers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -131,6 +132,12 @@ pub struct Suite {
     pub rt: Runtime,
     pub seed: u64,
     pub budget: SuiteBudget,
+    /// Channels the reconstruction traffic shards across (run TOML
+    /// `channels`; default 1, the paper's single-channel setup).
+    pub channels: usize,
+    /// Address-mapping policy for the sharded reconstruction traffic
+    /// (run TOML `address`; default round-robin).
+    pub address: AddressSpec,
     // ImageNet zoo + ResNet.
     pub train_images: Vec<Image>,
     pub test_images: Vec<Image>,
@@ -202,6 +209,8 @@ impl Suite {
             rt,
             seed,
             budget,
+            channels: 1,
+            address: AddressSpec::round_robin(),
             train_images,
             test_images,
             zoo,
@@ -248,6 +257,8 @@ impl Suite {
         }
         let out = Session::builder()
             .codec(spec.clone())
+            .channels(self.channels)
+            .address(self.address.clone())
             .traffic(TrafficClass::Approximate)
             .faults(*faults)
             .build()?

@@ -292,9 +292,11 @@ fn channel_array_single_shard_equals_whole_trace_reference_for_every_scheme() {
 #[test]
 fn sweep_engine_grid_runs_end_to_end() {
     use zac_dest::system::{run_sweep, synthetic_trace, SweepSpec};
-    let mut spec = SweepSpec::default();
-    spec.bytes = 16384;
-    spec.channels = vec![1, 2];
+    let spec = SweepSpec {
+        bytes: 16384,
+        channels: vec![1, 2],
+        ..SweepSpec::default()
+    };
     let trace = synthetic_trace(spec.bytes, spec.seed);
     let report = run_sweep(&spec, &trace).unwrap();
     assert!(report.scenarios.len() >= 6, "{}", report.scenarios.len());
