@@ -21,13 +21,17 @@ pub const LINES_PER_CHIP: usize = 8;
 /// Beats per burst.
 pub const BEATS: usize = 8;
 
-/// One chip's share of the channel: 8 data lines + DBI + index + flag
-/// sidebands, with per-line persistent state for switching energy.
+/// One chip's share of the channel: 8 data lines + DBI + index + flag +
+/// ECC sidebands, with per-line persistent state for switching energy.
 #[derive(Clone, Debug)]
 pub struct ChipChannel {
     /// Last driven level of each data line, packed one line per byte
     /// (byte `l` ∈ {0, 1}) so all 8 lines update in one SWAR step.
     data_state: u64,
+    /// Last driven level of each ECC sideband line, same packing as
+    /// `data_state` (non-correcting schemes keep every line idle low:
+    /// zero transitions, zero termination — free by construction).
+    ecc_state: u64,
     dbi_state: bool,
     index_state: bool,
     flag_state: bool,
@@ -45,6 +49,7 @@ impl ChipChannel {
     pub fn new() -> Self {
         ChipChannel {
             data_state: 0,
+            ecc_state: 0,
             dbi_state: false,
             index_state: false,
             flag_state: false,
@@ -68,6 +73,14 @@ impl ChipChannel {
         let shifted = ((lanes << 1) & 0xFEFE_FEFE_FEFE_FEFE) | self.data_state;
         self.counts.switching_transitions += (shifted & !lanes).count_ones() as u64;
         self.data_state = (lanes >> 7) & 0x0101_0101_0101_0101;
+
+        // ECC sideband lines: same SWAR path as the data lines. Lines a
+        // scheme never drives stay all-zero through the transpose and
+        // contribute neither transitions nor state.
+        let ecc_lanes = transpose8x8(wire.ecc_line);
+        let shifted = ((ecc_lanes << 1) & 0xFEFE_FEFE_FEFE_FEFE) | self.ecc_state;
+        self.counts.switching_transitions += (shifted & !ecc_lanes).count_ones() as u64;
+        self.ecc_state = (ecc_lanes >> 7) & 0x0101_0101_0101_0101;
 
         // DBI line.
         let (falls, last) = falling_edges(wire.dbi_mask, self.dbi_state);
@@ -164,6 +177,20 @@ mod tests {
         // ...so an all-zero transfer costs 8 falls at entry.
         ch.transmit(&WireWord::raw(0));
         assert_eq!(ch.energy().switching_transitions - s0, 8);
+    }
+
+    #[test]
+    fn ecc_sideband_costs_termination_and_switching() {
+        let mut ch = ChipChannel::new();
+        let mut w = WireWord::raw(0);
+        // Sideband line 0 high on beat 7: one termination 1, and the
+        // next idle transfer pays the falling edge.
+        w.ecc_line = 0x0100_0000_0000_0000;
+        ch.transmit(&w);
+        assert_eq!(ch.energy().termination_ones, 1);
+        let s0 = ch.energy().switching_transitions;
+        ch.transmit(&WireWord::raw(0));
+        assert_eq!(ch.energy().switching_transitions - s0, 1);
     }
 
     #[test]

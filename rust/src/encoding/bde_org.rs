@@ -53,6 +53,7 @@ impl BdeOrgEncoder {
                     dbi_mask: 0,
                     index_line: hit.index as u8,
                     index_used: true,
+                    ecc_line: 0,
                     outcome: Outcome::Bde,
                 };
             }
@@ -66,6 +67,7 @@ impl BdeOrgEncoder {
             dbi_mask: 0,
             index_line: slot as u8,
             index_used: true,
+            ecc_line: 0,
             outcome: if word == 0 { Outcome::ZeroSkip } else { Outcome::Raw },
         }
     }

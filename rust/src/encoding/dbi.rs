@@ -60,6 +60,7 @@ impl ChipEncoder for DbiEncoder {
             dbi_mask: mask,
             index_line: 0,
             index_used: false,
+            ecc_line: 0,
             outcome: if word == 0 { Outcome::ZeroSkip } else { Outcome::Raw },
         }
     }

@@ -1,0 +1,819 @@
+//! Correcting codec families: schemes that spend wire bits on
+//! resilience instead of (or on top of) energy.
+//!
+//! ZAC-DEST's evaluation assumes the channel itself is reliable and
+//! only the *stored* data is approximate. Once the fault layer scales
+//! voltage or relaxes MRAM retention, the wire words themselves lie,
+//! and the interesting design space is codecs that buy back quality
+//! with redundant wire bits — charged to the same termination/switching
+//! energy model as every data bit, so the resilience-vs-energy
+//! trade-off is measurable, not assumed. Three families live here:
+//!
+//! * [`SECDED`](SecdedEncoder) — a per-beat Hamming(12,8)+parity
+//!   sideband over the 8 data lines: 5 extra sideband lines carry 4
+//!   check bits + overall parity per beat, correcting any single data
+//!   bit per beat and detecting double bits. The classic server-DRAM
+//!   answer, at the classic cost: every check 1 pays termination.
+//! * [`EDEN`](EdenEncoder) — EDEN-style (arXiv:1910.05340)
+//!   error-correcting *truncation*: approximate traffic sacrifices the
+//!   low nibble of every byte so the high nibble travels inside an
+//!   in-band Hamming(7,4)+parity codeword. No sideband lines at all —
+//!   resilience is paid for with precision, the purest
+//!   approximate-computing trade.
+//! * [`ECC+`](EccWrapEncoder) — an EnforceSNN-style (arXiv:2304.04039)
+//!   efficient-ECC wrapper composable over *any* registered scheme:
+//!   one sideband line carries a SECDED(72,64) code over the base
+//!   scheme's (possibly encoded) wire word, repairing the wire before
+//!   the base decoder runs — which also protects table-based codecs
+//!   from mirror desynchronization, their dominant fault-amplification
+//!   path.
+//!
+//! Check bits ride [`WireWord::ecc_line`] (same `8*b + l` packing as
+//! the data lines) and are charged by [`WireWord::total_ones`] and the
+//! channel's switching accounting. Fault models treat the sidebands as
+//! hardened, matching the hardened-metadata assumption of the base
+//! fault layer (see `faults::model`).
+//!
+//! Decoders report repairs through [`ChipDecoder::take_corrections`];
+//! the one shared drive loop drains them into
+//! [`FaultStats`](crate::faults::FaultStats) after every batch.
+
+use super::config::Scheme;
+use super::knobs::Knobs;
+use super::registry::{Codec, CodecRegistry, CodecSpec};
+use super::stats::Outcome;
+use super::wire::WireWord;
+use super::{ChipDecoder, ChipEncoder};
+
+/// Repairs and detections a correcting decoder accumulated since the
+/// last drain — the counts behind `corrected_bits`/`detected_bits` in
+/// [`FaultStats`](crate::faults::FaultStats).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CorrectionCounts {
+    /// Data bits repaired in place before the word left the decoder.
+    pub corrected_bits: u64,
+    /// Error bits flagged but not repairable (double-bit detections;
+    /// everything, for detection-only schemes).
+    pub detected_bits: u64,
+}
+
+impl CorrectionCounts {
+    /// Accumulate another decoder's counts (wrapper + inner).
+    pub fn merge(&mut self, o: CorrectionCounts) {
+        self.corrected_bits += o.corrected_bits;
+        self.detected_bits += o.detected_bits;
+    }
+
+    /// Drain: return the counts and reset to zero.
+    pub fn take(&mut self) -> CorrectionCounts {
+        std::mem::take(self)
+    }
+}
+
+/// Even parity of a byte (1 iff an odd number of bits are set).
+#[inline]
+fn parity8(byte: u8) -> u8 {
+    (byte.count_ones() & 1) as u8
+}
+
+// ---------------------------------------------------------------------------
+// SECDED — per-beat Hamming sideband over the 8 data lines.
+// ---------------------------------------------------------------------------
+
+/// The 4 Hamming check bits for one beat's byte. Data bit `i` carries
+/// column `i + 1`, so check `k` covers the bits whose `(i+1)` has bit
+/// `k` set; a single-bit error at `i` yields syndrome `i + 1` ∈ [1, 8].
+#[inline]
+fn secded_checks(byte: u8) -> u8 {
+    let c0 = parity8(byte & 0x55); // i ∈ {0,2,4,6}
+    let c1 = parity8(byte & 0x66); // i ∈ {1,2,5,6}
+    let c2 = parity8(byte & 0x78); // i ∈ {3,4,5,6}
+    let c3 = parity8(byte & 0x80); // i = 7
+    c0 | (c1 << 1) | (c2 << 2) | (c3 << 3)
+}
+
+/// Full-word SECDED sideband: per beat `b`, checks `c0..c3` on sideband
+/// lines 0..3 and overall byte parity on line 4 (bits `8*b + k`).
+fn secded_sideband(data: u64) -> u64 {
+    let mut ecc = 0u64;
+    for b in 0..8 {
+        let byte = ((data >> (8 * b)) & 0xFF) as u8;
+        let bits = (secded_checks(byte) | (parity8(byte) << 4)) as u64;
+        ecc |= bits << (8 * b);
+    }
+    ecc
+}
+
+/// SECDED sideband encoder: raw data on the 8 data lines plus 5 check
+/// lines per beat. Single-bit correction + double-bit detection per
+/// beat, fully lossless on a clean channel.
+#[derive(Default)]
+pub struct SecdedEncoder;
+
+impl ChipEncoder for SecdedEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        let mut w = WireWord::raw(word);
+        w.ecc_line = secded_sideband(word);
+        if word == 0 {
+            // Classified for stats only; all checks of zero are zero,
+            // so the wire really is free.
+            w.outcome = Outcome::ZeroSkip;
+        }
+        w
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::Org // closed legacy enum: nearest label for stat buckets
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// SECDED sideband decoder: per beat, recompute checks from the
+/// received byte, correct on a single-bit syndrome, count a double-bit
+/// detection otherwise.
+#[derive(Default)]
+pub struct SecdedDecoder {
+    counts: CorrectionCounts,
+}
+
+impl ChipDecoder for SecdedDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        let mut data = wire.data;
+        for b in 0..8 {
+            let byte = ((data >> (8 * b)) & 0xFF) as u8;
+            let stored = ((wire.ecc_line >> (8 * b)) & 0x1F) as u8;
+            let s = (stored & 0x0F) ^ secded_checks(byte);
+            let pm = ((stored >> 4) ^ parity8(byte)) & 1;
+            if pm == 1 {
+                if (1..=8).contains(&s) {
+                    // Odd error count, valid column: single-bit repair.
+                    data ^= 1u64 << (8 * b + (s - 1) as usize);
+                    self.counts.corrected_bits += 1;
+                } else {
+                    // Odd count, no locatable column (≥3 flips).
+                    self.counts.detected_bits += 1;
+                }
+            } else if s != 0 {
+                // Even error count with a nonzero syndrome: the classic
+                // uncorrectable double-bit case.
+                self.counts.detected_bits += 2;
+            }
+        }
+        data
+    }
+
+    fn take_corrections(&mut self) -> CorrectionCounts {
+        self.counts.take()
+    }
+
+    fn reset(&mut self) {
+        self.counts = CorrectionCounts::default();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PARITY — one sideband line, detect-only.
+// ---------------------------------------------------------------------------
+
+/// Per-beat even parity on a single sideband line (bit `8*b`, line 0).
+fn parity_sideband(data: u64) -> u64 {
+    let mut ecc = 0u64;
+    for b in 0..8 {
+        let byte = ((data >> (8 * b)) & 0xFF) as u8;
+        ecc |= (parity8(byte) as u64) << (8 * b);
+    }
+    ecc
+}
+
+/// Parity sideband encoder: the cheapest correcting-family member —
+/// one extra line, detection only. The floor of the family's
+/// energy-vs-resilience curve.
+#[derive(Default)]
+pub struct ParityEncoder;
+
+impl ChipEncoder for ParityEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        let mut w = WireWord::raw(word);
+        w.ecc_line = parity_sideband(word);
+        if word == 0 {
+            w.outcome = Outcome::ZeroSkip;
+        }
+        w
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Parity decoder: counts every beat whose parity mismatches as one
+/// detected (never corrected) bit; data passes through untouched.
+#[derive(Default)]
+pub struct ParityDecoder {
+    counts: CorrectionCounts,
+}
+
+impl ChipDecoder for ParityDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        let mismatch = parity_sideband(wire.data) ^ wire.ecc_line;
+        self.counts.detected_bits += mismatch.count_ones() as u64;
+        wire.data
+    }
+
+    fn take_corrections(&mut self) -> CorrectionCounts {
+        self.counts.take()
+    }
+
+    fn reset(&mut self) {
+        self.counts = CorrectionCounts::default();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EDEN — in-band error-correcting truncation (Hamming(7,4)+P per byte).
+// ---------------------------------------------------------------------------
+
+/// Encode a nibble into the 8-bit Hamming(7,4)+overall-parity codeword.
+/// Standard positions 1..7 in bits 0..6 (parity bits at positions
+/// 1, 2, 4; data `n0..n3` at 3, 5, 6, 7), overall parity in bit 7.
+#[inline]
+fn hamming74_encode(nibble: u8) -> u8 {
+    let n0 = nibble & 1;
+    let n1 = (nibble >> 1) & 1;
+    let n2 = (nibble >> 2) & 1;
+    let n3 = (nibble >> 3) & 1;
+    let p1 = n0 ^ n1 ^ n3;
+    let p2 = n0 ^ n2 ^ n3;
+    let p4 = n1 ^ n2 ^ n3;
+    let bits = p1 | (p2 << 1) | (n0 << 2) | (p4 << 3) | (n1 << 4) | (n2 << 5) | (n3 << 6);
+    bits | (parity8(bits) << 7)
+}
+
+/// Decode one received codeword byte back to its nibble, repairing a
+/// single flipped bit (data, check or overall parity) and counting
+/// double flips as detected.
+#[inline]
+fn hamming74_decode(byte: u8, counts: &mut CorrectionCounts) -> u8 {
+    let mut cw = byte;
+    let bit = |c: u8, i: u8| (c >> i) & 1;
+    let s1 = bit(cw, 0) ^ bit(cw, 2) ^ bit(cw, 4) ^ bit(cw, 6);
+    let s2 = bit(cw, 1) ^ bit(cw, 2) ^ bit(cw, 5) ^ bit(cw, 6);
+    let s4 = bit(cw, 3) ^ bit(cw, 4) ^ bit(cw, 5) ^ bit(cw, 6);
+    let s = s1 | (s2 << 1) | (s4 << 2);
+    let pm = parity8(cw);
+    if s != 0 && pm == 1 {
+        cw ^= 1 << (s - 1); // single error at position s
+        counts.corrected_bits += 1;
+    } else if s != 0 {
+        counts.detected_bits += 2; // double error, uncorrectable
+    } else if pm == 1 {
+        cw ^= 1 << 7; // the overall parity bit itself flipped
+        counts.corrected_bits += 1;
+    }
+    bit(cw, 2) | (bit(cw, 4) << 1) | (bit(cw, 5) << 2) | (bit(cw, 6) << 3)
+}
+
+/// Within-word mask of the bits EDEN represents at all: the high
+/// nibble of every byte. Errors below it are the scheme's *declared*
+/// precision loss, not fault damage.
+pub const EDEN_RESILIENCE_MASK: u64 = 0xF0F0_F0F0_F0F0_F0F0;
+
+/// EDEN-style error-correcting truncation encoder. Approximate bytes
+/// travel as Hamming(7,4)+P codewords of their high nibble — the low
+/// nibble is sacrificed for single-bit correction with zero sideband
+/// lines. Critical traffic passes through raw and exact.
+#[derive(Default)]
+pub struct EdenEncoder;
+
+impl ChipEncoder for EdenEncoder {
+    fn encode(&mut self, word: u64, approx: bool) -> WireWord {
+        if word == 0 {
+            let mut w = WireWord::raw(0);
+            w.outcome = Outcome::ZeroSkip;
+            return w;
+        }
+        if !approx {
+            return WireWord::raw(word);
+        }
+        let mut data = 0u64;
+        for b in 0..8 {
+            let v = ((word >> (8 * b)) & 0xFF) as u8;
+            data |= (hamming74_encode(v >> 4) as u64) << (8 * b);
+        }
+        WireWord {
+            data,
+            dbi_mask: 0,
+            index_line: 0,
+            index_used: false,
+            ecc_line: 0,
+            // Encoded mode: the flag line tells the receiver to run the
+            // Hamming path instead of passthrough.
+            outcome: Outcome::Bde,
+        }
+    }
+
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// EDEN decoder: Hamming-decode encoded transfers back to
+/// `high_nibble << 4` per byte; raw (critical) and zero transfers pass
+/// through exact.
+#[derive(Default)]
+pub struct EdenDecoder {
+    counts: CorrectionCounts,
+}
+
+impl ChipDecoder for EdenDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        match wire.outcome {
+            Outcome::Bde => {
+                let mut out = 0u64;
+                for b in 0..8 {
+                    let cw = ((wire.data >> (8 * b)) & 0xFF) as u8;
+                    let nib = hamming74_decode(cw, &mut self.counts) as u64;
+                    out |= (nib << 4) << (8 * b);
+                }
+                out
+            }
+            // Zero rides the hardened flag, not the (corruptible) data
+            // lines — same immunity the ZAC zero-skip path has.
+            Outcome::ZeroSkip => 0,
+            // Raw = critical traffic, which injection never touches.
+            _ => wire.data,
+        }
+    }
+
+    fn take_corrections(&mut self) -> CorrectionCounts {
+        self.counts.take()
+    }
+
+    fn resilience_mask(&self) -> u64 {
+        EDEN_RESILIENCE_MASK
+    }
+
+    fn reset(&mut self) {
+        self.counts = CorrectionCounts::default();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ECC+ — SECDED(72,64) wrapper over any registered base scheme.
+// ---------------------------------------------------------------------------
+
+/// Column masks of the whole-word code: data bit `i` carries column
+/// `i + 1`, so check `k` covers the bits whose `(i+1)` has bit `k` set
+/// and a single-bit error at `i` yields syndrome `i + 1` ∈ [1, 64].
+const fn col_masks() -> [u64; 7] {
+    let mut m = [0u64; 7];
+    let mut i = 0;
+    while i < 64 {
+        let col = (i + 1) as u64;
+        let mut k = 0;
+        while k < 7 {
+            if (col >> k) & 1 == 1 {
+                m[k] |= 1u64 << i;
+            }
+            k += 1;
+        }
+        i += 1;
+    }
+    m
+}
+const COL_MASKS: [u64; 7] = col_masks();
+
+/// The 7 whole-word Hamming checks over a wire word's data bits.
+#[inline]
+fn word_checks(data: u64) -> u8 {
+    let mut c = 0u8;
+    for (k, mask) in COL_MASKS.iter().enumerate() {
+        c |= (((data & mask).count_ones() & 1) as u8) << k;
+    }
+    c
+}
+
+/// Whole-word SECDED sideband on one line: check `c_k` on beat `k`
+/// (bit `8*k`, line 0) and overall data parity on beat 7 (bit 56).
+fn wrap_sideband(data: u64) -> u64 {
+    let mut ecc = 0u64;
+    for k in 0..7 {
+        ecc |= (((data & COL_MASKS[k]).count_ones() & 1) as u64) << (8 * k);
+    }
+    ecc | (((data.count_ones() & 1) as u64) << 56)
+}
+
+/// EnforceSNN-style efficient-ECC wrapper encoder: runs the base
+/// scheme untouched, then drives a SECDED(72,64) code over the
+/// resulting wire word on one extra sideband line. Composes over any
+/// scheme whose own ECC sideband is idle.
+pub struct EccWrapEncoder {
+    inner: Box<dyn ChipEncoder>,
+}
+
+impl EccWrapEncoder {
+    pub fn new(inner: Box<dyn ChipEncoder>) -> EccWrapEncoder {
+        EccWrapEncoder { inner }
+    }
+}
+
+impl ChipEncoder for EccWrapEncoder {
+    fn encode(&mut self, word: u64, approx: bool) -> WireWord {
+        let mut wire = self.inner.encode(word, approx);
+        debug_assert_eq!(wire.ecc_line, 0, "ECC+ needs a sideband-free base");
+        wire.ecc_line = wrap_sideband(wire.data);
+        wire
+    }
+
+    /// Delegate to the base scheme's batch path (keeping its
+    /// batch == scalar guarantees), then stamp the sideband per word.
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        self.inner.encode_batch(words, approx, out);
+        for w in out.iter_mut() {
+            debug_assert_eq!(w.ecc_line, 0, "ECC+ needs a sideband-free base");
+            w.ecc_line = wrap_sideband(w.data);
+        }
+    }
+
+    fn scheme(&self) -> Scheme {
+        self.inner.scheme()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+/// The wrapper decoder: repairs the wire word *before* the base
+/// decoder runs. For table-based codecs this is the load-bearing
+/// ordering — a repaired wire also repairs the dedup/update decision,
+/// keeping the mirrored tables synchronized where an unprotected run
+/// would amplify one flipped bit into a desynchronized stream.
+pub struct EccWrapDecoder {
+    inner: Box<dyn ChipDecoder>,
+    counts: CorrectionCounts,
+    scratch: Vec<WireWord>,
+}
+
+impl EccWrapDecoder {
+    pub fn new(inner: Box<dyn ChipDecoder>) -> EccWrapDecoder {
+        EccWrapDecoder {
+            inner,
+            counts: CorrectionCounts::default(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Syndrome-decode one received wire word into its repaired copy.
+    fn repair(&mut self, wire: &WireWord) -> WireWord {
+        let mut w = *wire;
+        let mut stored = 0u8;
+        for k in 0..7 {
+            stored |= (((w.ecc_line >> (8 * k)) & 1) as u8) << k;
+        }
+        let stored_p = ((w.ecc_line >> 56) & 1) as u8;
+        let s = stored ^ word_checks(w.data);
+        let pm = stored_p ^ ((w.data.count_ones() & 1) as u8);
+        if pm == 1 {
+            if (1..=64).contains(&s) {
+                w.data ^= 1u64 << (s - 1);
+                self.counts.corrected_bits += 1;
+            } else {
+                self.counts.detected_bits += 1;
+            }
+        } else if s != 0 {
+            self.counts.detected_bits += 2;
+        }
+        w
+    }
+}
+
+impl ChipDecoder for EccWrapDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        let repaired = self.repair(wire);
+        self.inner.decode(&repaired)
+    }
+
+    /// Repair the whole batch into a scratch copy, then hand it to the
+    /// base decoder's batch path in one call.
+    fn decode_batch(&mut self, wires: &[WireWord], out: &mut Vec<u64>) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.reserve(wires.len());
+        for w in wires {
+            let repaired = self.repair(w);
+            scratch.push(repaired);
+        }
+        self.inner.decode_batch(&scratch, out);
+        self.scratch = scratch;
+    }
+
+    fn take_corrections(&mut self) -> CorrectionCounts {
+        let mut c = self.counts.take();
+        c.merge(self.inner.take_corrections());
+        c
+    }
+
+    fn resilience_mask(&self) -> u64 {
+        self.inner.resilience_mask()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.counts = CorrectionCounts::default();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registration.
+// ---------------------------------------------------------------------------
+
+/// Register the `ECC+<base>` wrapper for one base scheme. The factory
+/// holds a snapshot of `reg` as of this call, so the base must already
+/// be registered; knob bags pass through to the base (with the base's
+/// defaults when the spec carries none — `CodecSpec::named("ECC+OHE")`
+/// builds ZAC at paper defaults). This is the out-of-tree composition
+/// hook: register a custom scheme, then `ecc::wrap(reg, "MYSCHEME")`.
+pub fn wrap(reg: &mut CodecRegistry, base: &str) {
+    let snapshot = reg.clone();
+    let base_name = base.to_string();
+    reg.register(&format!("ECC+{base}"), move |spec| {
+        let knobs = match spec.knobs {
+            Knobs::None => match Scheme::parse(&base_name) {
+                Some(s) => Knobs::for_scheme(s),
+                None => Knobs::None,
+            },
+            k => k,
+        };
+        let inner = snapshot.build(&CodecSpec::with_knobs(&base_name, knobs))?;
+        Ok(Codec::new(
+            Box::new(EccWrapEncoder::new(inner.encoder)),
+            Box::new(EccWrapDecoder::new(inner.decoder)),
+        ))
+    });
+}
+
+/// Self-register the correcting family: the three standalone schemes
+/// plus `ECC+<base>` wrappers over every scheme already in `reg`
+/// at this point (the five Table I builtins, when called from
+/// [`CodecRegistry::with_builtins`]).
+pub fn register(reg: &mut CodecRegistry) {
+    reg.register("SECDED", |_spec| {
+        Ok(Codec::new(
+            Box::new(SecdedEncoder),
+            Box::new(SecdedDecoder::default()),
+        ))
+    });
+    reg.register("PARITY", |_spec| {
+        Ok(Codec::new(
+            Box::new(ParityEncoder),
+            Box::new(ParityDecoder::default()),
+        ))
+    });
+    reg.register("EDEN", |_spec| {
+        Ok(Codec::new(
+            Box::new(EdenEncoder),
+            Box::new(EdenDecoder::default()),
+        ))
+    });
+    for base in ["ORG", "DBI", "BDE_ORG", "BDE", "OHE"] {
+        wrap(reg, base);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::default_registry;
+    use crate::util::rng::Rng;
+
+    fn drain(dec: &mut dyn ChipDecoder) -> CorrectionCounts {
+        dec.take_corrections()
+    }
+
+    #[test]
+    fn secded_is_lossless_on_a_clean_channel() {
+        let mut e = SecdedEncoder;
+        let mut d = SecdedDecoder::default();
+        let mut r = Rng::new(91);
+        for _ in 0..2000 {
+            let w = r.next_u64();
+            let wire = e.encode(w, true);
+            assert_eq!(d.decode(&wire), w);
+        }
+        assert_eq!(drain(&mut d), CorrectionCounts::default());
+    }
+
+    #[test]
+    fn secded_corrects_every_single_bit_flip() {
+        let mut e = SecdedEncoder;
+        let mut d = SecdedDecoder::default();
+        let word = 0xDEAD_BEEF_CAFE_F00D;
+        for bit in 0..64 {
+            let mut wire = e.encode(word, true);
+            wire.data ^= 1u64 << bit;
+            assert_eq!(d.decode(&wire), word, "bit {bit}");
+            let c = drain(&mut d);
+            assert_eq!(c.corrected_bits, 1, "bit {bit}");
+            assert_eq!(c.detected_bits, 0, "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn secded_detects_double_flips_in_one_beat() {
+        let mut e = SecdedEncoder;
+        let mut d = SecdedDecoder::default();
+        let word = 0x0123_4567_89AB_CDEF;
+        let mut wire = e.encode(word, true);
+        wire.data ^= 0b11 << 16; // two flips, same beat
+        let _ = d.decode(&wire);
+        let c = drain(&mut d);
+        assert_eq!(c.corrected_bits, 0);
+        assert_eq!(c.detected_bits, 2);
+    }
+
+    #[test]
+    fn secded_sideband_matches_hand_derivation() {
+        // 0xFF beat: c0 = c1 = c2 = 0 (even pairs), c3 = d7 = 1,
+        // parity = 0 -> only line 3 of beat 7 is driven.
+        let mut e = SecdedEncoder;
+        let wire = e.encode(0xFF00_0000_0000_0000, true);
+        assert_eq!(wire.ecc_line, 0x0800_0000_0000_0000);
+        // Check bits are charged to termination: 8 data ones + 1 check.
+        assert_eq!(wire.total_ones(), 9);
+        // Zero stays free.
+        assert_eq!(e.encode(0, true).total_ones(), 0);
+    }
+
+    #[test]
+    fn parity_detects_but_never_corrects() {
+        let mut e = ParityEncoder;
+        let mut d = ParityDecoder::default();
+        let word = 0xA5A5_0000_FFFF_0001;
+        let clean = e.encode(word, true);
+        assert_eq!(d.decode(&clean), word);
+        assert_eq!(drain(&mut d), CorrectionCounts::default());
+        let mut wire = clean;
+        wire.data ^= (1u64 << 3) | (1u64 << 40); // two beats hit
+        let got = d.decode(&wire);
+        assert_eq!(got, wire.data, "parity is detect-only");
+        let c = drain(&mut d);
+        assert_eq!(c.corrected_bits, 0);
+        assert_eq!(c.detected_bits, 2);
+        // W3 = 0xFF00000000000001: odd-parity beats 0 and 7.
+        assert_eq!(
+            e.encode(0xFF00_0000_0000_0001, true).ecc_line,
+            (1u64 << 56) | 1
+        );
+    }
+
+    #[test]
+    fn eden_codeword_construction() {
+        // Nibble 0xF: all parity and data positions set -> 0xFF.
+        assert_eq!(hamming74_encode(0xF), 0xFF);
+        assert_eq!(hamming74_encode(0x0), 0x00);
+        // Every codeword decodes back clean.
+        let mut c = CorrectionCounts::default();
+        for n in 0..16u8 {
+            assert_eq!(hamming74_decode(hamming74_encode(n), &mut c), n);
+        }
+        assert_eq!(c, CorrectionCounts::default());
+    }
+
+    #[test]
+    fn eden_truncates_to_high_nibbles_and_keeps_critical_exact() {
+        let mut e = EdenEncoder;
+        let mut d = EdenDecoder::default();
+        let word = 0x1234_5678_9ABC_DEF5;
+        let wire = e.encode(word, true);
+        assert_eq!(wire.outcome, Outcome::Bde);
+        assert_eq!(d.decode(&wire), word & EDEN_RESILIENCE_MASK);
+        // Critical traffic bypasses the truncation entirely.
+        let wire = e.encode(word, false);
+        assert_eq!(wire.outcome, Outcome::Raw);
+        assert_eq!(d.decode(&wire), word);
+        // Zero is still the free transfer.
+        let wire = e.encode(0, true);
+        assert_eq!(wire.outcome, Outcome::ZeroSkip);
+        assert_eq!(wire.total_ones(), 0);
+        assert_eq!(d.decode(&wire), 0);
+        assert_eq!(drain(&mut d), CorrectionCounts::default());
+    }
+
+    #[test]
+    fn eden_repairs_single_flips_per_codeword() {
+        let mut e = EdenEncoder;
+        let mut d = EdenDecoder::default();
+        let word = 0x70F0_A050_3090_C010;
+        let want = word & EDEN_RESILIENCE_MASK;
+        for bit in 0..64 {
+            let mut wire = e.encode(word, true);
+            wire.data ^= 1u64 << bit;
+            assert_eq!(d.decode(&wire), want, "bit {bit}");
+            assert_eq!(drain(&mut d).corrected_bits, 1, "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn wrapper_sideband_matches_hand_derivation() {
+        // W1 = 0xFF00...00: columns 57..64 xor to 0b1111000, parity of
+        // eight ones is 0 -> checks c3..c6 on beats 3..6 of line 0.
+        assert_eq!(
+            wrap_sideband(0xFF00_0000_0000_0000),
+            0x0001_0101_0100_0000
+        );
+        assert_eq!(wrap_sideband(0), 0);
+    }
+
+    #[test]
+    fn wrapper_corrects_single_flips_over_org() {
+        let mut codec = default_registry()
+            .build(&CodecSpec::named("ECC+ORG"))
+            .unwrap();
+        let word = 0x5A5A_1234_ABCD_EF01;
+        for bit in 0..64 {
+            let mut wire = codec.encoder.encode(word, true);
+            wire.data ^= 1u64 << bit;
+            assert_eq!(codec.decoder.decode(&wire), word, "bit {bit}");
+            let c = codec.decoder.take_corrections();
+            assert_eq!(c.corrected_bits, 1, "bit {bit}");
+        }
+    }
+
+    #[test]
+    fn wrapper_keeps_table_mirrors_synchronized_under_flips() {
+        // A single wire flip desynchronizes an unprotected BDE mirror
+        // (wrong dedup decision); the wrapper repairs the wire before
+        // the inner decode, so the whole downstream stream stays exact.
+        let mut codec = default_registry()
+            .build(&CodecSpec::named("ECC+BDE"))
+            .unwrap();
+        let mut r = Rng::new(92);
+        let base = r.next_u64();
+        let words: Vec<u64> = (0..500).map(|_| base ^ (1u64 << r.below(64))).collect();
+        for (i, &w) in words.iter().enumerate() {
+            let mut wire = codec.encoder.encode(w, true);
+            if i % 7 == 3 {
+                wire.data ^= 1u64 << (i % 64); // one flip on the wire
+            }
+            assert_eq!(codec.decoder.decode(&wire), w, "word {i}");
+        }
+        let c = codec.decoder.take_corrections();
+        assert!(c.corrected_bits > 0);
+        assert_eq!(c.detected_bits, 0);
+    }
+
+    #[test]
+    fn wrapper_batch_matches_scalar() {
+        let mut r = Rng::new(93);
+        let words: Vec<u64> = (0..600)
+            .map(|i| if i % 11 == 0 { 0 } else { r.next_u64() & 0xFFFF })
+            .collect();
+        let approx: Vec<bool> = (0..words.len()).map(|_| r.chance(0.6)).collect();
+        let build = || {
+            default_registry()
+                .build(&CodecSpec::named("ECC+BDE"))
+                .unwrap()
+        };
+        let mut scalar = build();
+        let scalar_wires: Vec<WireWord> = words
+            .iter()
+            .zip(&approx)
+            .map(|(&w, &a)| scalar.encoder.encode(w, a))
+            .collect();
+        let scalar_out: Vec<u64> = scalar_wires
+            .iter()
+            .map(|w| scalar.decoder.decode(w))
+            .collect();
+        let mut batch = build();
+        let mut wires = vec![WireWord::raw(0); words.len()];
+        batch.encoder.encode_batch(&words, &approx, &mut wires);
+        let mut out = Vec::new();
+        batch.decoder.decode_batch(&wires, &mut out);
+        assert_eq!(wires, scalar_wires);
+        assert_eq!(out, scalar_out);
+        assert_eq!(
+            scalar.decoder.take_corrections(),
+            batch.decoder.take_corrections()
+        );
+    }
+
+    #[test]
+    fn wrapper_charges_its_check_bits_to_the_wire() {
+        let mut plain = default_registry().build(&CodecSpec::named("ORG")).unwrap();
+        let mut wrapped = default_registry()
+            .build(&CodecSpec::named("ECC+ORG"))
+            .unwrap();
+        let w = 0x0123_4567_89AB_CDEF;
+        let p = plain.encoder.encode(w, true);
+        let q = wrapped.encoder.encode(w, true);
+        assert_eq!(q.data, p.data);
+        assert_eq!(q.total_ones(), p.total_ones() + q.ecc_line.count_ones());
+        assert!(q.ecc_line.count_ones() > 0);
+    }
+}

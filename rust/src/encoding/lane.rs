@@ -76,9 +76,21 @@ pub fn drive_batches(
         }
         let start = out.len();
         codec.decoder.decode_batch(buf, out);
+        let mask = codec.decoder.resilience_mask();
         for (&orig, &dec) in wc.iter().zip(&out[start..]) {
             fstats.observed_error_bits += (orig ^ dec).count_ones() as u64;
+            if active {
+                // Residual = end-to-end damage inside the codec's
+                // resilience mask while faults were live. On a perfect
+                // channel it stays 0 by the `active` gate, so codec
+                // approximation alone never reads as fault residue.
+                fstats.residual_error_bits +=
+                    ((orig ^ dec) & mask).count_ones() as u64;
+            }
         }
+        let corrections = codec.decoder.take_corrections();
+        fstats.corrected_bits += corrections.corrected_bits;
+        fstats.detected_bits += corrections.detected_bits;
         fstats.words += wc.len() as u64;
     }
 }

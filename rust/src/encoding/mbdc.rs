@@ -45,6 +45,7 @@ impl MbdcEncoder {
                 dbi_mask: 0,
                 index_line: 0,
                 index_used: false,
+                ecc_line: 0,
                 outcome: Outcome::ZeroSkip,
             };
         }
@@ -79,6 +80,7 @@ impl MbdcEncoder {
                         dbi_mask: 0,
                         index_line: index,
                         index_used: true,
+                        ecc_line: 0,
                         outcome: Outcome::Bde,
                     }
                 } else {

@@ -10,6 +10,11 @@
 //! | `BDE`     | [`mbdc`]     | Modified BD-Coder (zero bypass, index-aware condition, dedup table) |
 //! | `OHE`     | [`zac_dest`] | ZAC-DEST (Alg. 2: skip-transfer + one-hot index + DBI) |
 //!
+//! Plus the correcting family in [`ecc`] (`SECDED`, `PARITY`, `EDEN`
+//! and the `ECC+<base>` wrapper over every scheme above): codecs that
+//! spend wire bits on resilience under the fault layer instead of on
+//! energy alone.
+//!
 //! All encoders operate at the hardware granularity: one 64-bit word per
 //! DRAM chip per cache-line transfer (8 chips × 64 bits = one 64 B line),
 //! mirrored tables at sender (DRAM) and receiver (memory controller).
@@ -52,6 +57,7 @@ pub mod bde_org;
 pub mod config;
 pub mod data_table;
 pub mod dbi;
+pub mod ecc;
 pub mod knobs;
 pub mod lane;
 pub mod mbdc;
@@ -63,6 +69,7 @@ pub mod zac_dest;
 
 pub use config::{Scheme, ZacConfig};
 pub use data_table::DataTable;
+pub use ecc::CorrectionCounts;
 pub use knobs::{Knobs, TableKnobs, ZacKnobs};
 pub use lane::ChipLane;
 pub use registry::{default_registry, Codec, CodecRegistry, CodecSpec};
@@ -117,6 +124,22 @@ pub trait ChipDecoder: Send {
         for w in wires {
             out.push(self.decode(w));
         }
+    }
+
+    /// Drain the repairs/detections accumulated since the last drain.
+    /// Non-correcting schemes keep the default (always zero); the one
+    /// shared drive loop calls this after every decoded batch and
+    /// folds the counts into [`FaultStats`](crate::faults::FaultStats).
+    fn take_corrections(&mut self) -> ecc::CorrectionCounts {
+        ecc::CorrectionCounts::default()
+    }
+
+    /// Within-word mask of the bits this codec claims to deliver at
+    /// all: end-to-end damage *outside* it is declared precision loss
+    /// (e.g. EDEN's sacrificed low nibbles), not fault residue. The
+    /// default claims every bit.
+    fn resilience_mask(&self) -> u64 {
+        u64::MAX
     }
 
     fn reset(&mut self);

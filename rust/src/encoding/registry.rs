@@ -173,10 +173,21 @@ impl CodecSpec {
                 }
             }
             (Knobs::Table(k), "table_size") => k.table_size = num(key, value)? as usize,
-            _ => anyhow::bail!(
-                "scheme {:?} has no knob {key:?} (per-scheme knobs replaced the ZacConfig god-struct)",
-                self.scheme
-            ),
+            _ => {
+                let valid = match self.knobs {
+                    Knobs::Zac(_) => {
+                        "limit/similarity_limit, chunk_width, truncation, \
+                         tolerance, table_size, weights_mode"
+                    }
+                    Knobs::Table(_) => "table_size",
+                    Knobs::None => "(none — this scheme has no knobs)",
+                };
+                anyhow::bail!(
+                    "scheme {:?} has no knob {key:?}; valid knobs: {valid} \
+                     (per-scheme knobs replaced the ZacConfig god-struct)",
+                    self.scheme
+                )
+            }
         }
         Ok(())
     }
@@ -253,8 +264,11 @@ impl CodecRegistry {
         CodecRegistry::default()
     }
 
-    /// Registry with the five paper schemes, each registered by its own
-    /// module — no central dispatch `match` to extend.
+    /// Registry with the five paper schemes plus the correcting family
+    /// (`SECDED`, `PARITY`, `EDEN`, and `ECC+<base>` over each of the
+    /// five) — each registered by its own module, no central dispatch
+    /// `match` to extend. The correcting family registers last so its
+    /// wrappers can snapshot the base factories.
     pub fn with_builtins() -> CodecRegistry {
         let mut reg = CodecRegistry::empty();
         super::org::register(&mut reg);
@@ -262,6 +276,7 @@ impl CodecRegistry {
         super::bde_org::register(&mut reg);
         super::mbdc::register(&mut reg);
         super::zac_dest::register(&mut reg);
+        super::ecc::register(&mut reg);
         reg
     }
 
@@ -328,7 +343,34 @@ mod tests {
             let codec = reg.build(&CodecSpec::named(s.label())).unwrap();
             assert_eq!(codec.scheme(), s, "{}", s.label());
         }
-        assert_eq!(reg.schemes().len(), 5);
+        // 5 Table I schemes + SECDED/PARITY/EDEN + 5 ECC+ wrappers.
+        assert_eq!(reg.schemes().len(), 13);
+    }
+
+    #[test]
+    fn correcting_family_registers_and_builds() {
+        let reg = CodecRegistry::with_builtins();
+        for name in [
+            "SECDED", "PARITY", "EDEN", "ECC+ORG", "ECC+DBI", "ECC+BDE_ORG",
+            "ECC+BDE", "ECC+OHE",
+        ] {
+            assert!(reg.contains(name), "{name} missing");
+            let mut codec = reg.build(&CodecSpec::named(name)).unwrap();
+            // Every correcting scheme round-trips a word on a clean wire
+            // when the traffic is critical (exactness is per-scheme on
+            // approx traffic — EDEN truncates).
+            let w = 0xDEAD_BEEF_0F0F_1234;
+            let wire = codec.encoder.encode(w, false);
+            assert_eq!(codec.decoder.decode(&wire), w, "{name}");
+        }
+        // Wrapper knob pass-through: ECC+BDE accepts BDE's table_size.
+        let mut spec = CodecSpec::with_knobs(
+            "ECC+BDE",
+            Knobs::Table(TableKnobs { table_size: 16 }),
+        );
+        reg.build(&spec).unwrap();
+        spec.set_knob("table_size", "32").unwrap();
+        assert_eq!(spec.table_size(), 32);
     }
 
     #[test]
@@ -414,9 +456,16 @@ mod tests {
         reg.register("XOR_MASK", |_spec| {
             Ok(Codec::new(Box::new(XorEnc), Box::new(XorDec)))
         });
-        assert_eq!(reg.schemes().len(), 6);
+        assert_eq!(reg.schemes().len(), 14);
         let mut codec = reg.build(&CodecSpec::named("xor_mask")).unwrap();
         let wire = codec.encoder.encode(42, true);
         assert_eq!(codec.decoder.decode(&wire), 42);
+        // Out-of-tree schemes compose with the ECC wrapper too.
+        crate::encoding::ecc::wrap(&mut reg, "XOR_MASK");
+        let mut wrapped = reg.build(&CodecSpec::named("ECC+XOR_MASK")).unwrap();
+        let mut wire = wrapped.encoder.encode(42, true);
+        wire.data ^= 1 << 17;
+        assert_eq!(wrapped.decoder.decode(&wire), 42);
+        assert_eq!(wrapped.decoder.take_corrections().corrected_bits, 1);
     }
 }

@@ -11,6 +11,12 @@ use super::stats::Outcome;
 /// * 1 **index line** — `index_line`, the 6-bit binary table address
 ///   serialized over the burst (BD-Coder/MBDC; ZAC-DEST's skip path puts
 ///   the index on the *data* lines one-hot instead).
+/// * up to 8 **ECC sideband lines** — `ecc_line`, check bits driven by
+///   the correcting codec family (0 for every non-correcting scheme);
+///   bit `8*b + l` = beat *b* on sideband line *l*, the same layout as
+///   `data`. Fault models treat the sidebands as hardened (stronger
+///   cells / higher-margin routing), matching the hardened-metadata
+///   assumption of the base fault layer.
 /// * flag signalling — `outcome` stands for the mode flag the receiver
 ///   needs (data vs xor vs address); its wire cost is
 ///   [`WireWord::flag_ones`].
@@ -24,6 +30,9 @@ pub struct WireWord {
     pub index_line: u8,
     /// Whether the index line is driven this transfer.
     pub index_used: bool,
+    /// Check bits on the ECC sideband lines (bit `8*b + l` = beat `b`,
+    /// sideband line `l`; 0 for non-correcting schemes).
+    pub ecc_line: u64,
     /// Transfer mode (wire-visible via the flag line in hardware).
     pub outcome: Outcome,
 }
@@ -36,6 +45,7 @@ impl WireWord {
             dbi_mask: 0,
             index_line: 0,
             index_used: false,
+            ecc_line: 0,
             outcome: Outcome::Raw,
         }
     }
@@ -50,7 +60,9 @@ impl WireWord {
     }
 
     /// Total ones this transfer drives across data + sidebands
-    /// (the termination-energy contribution, paper §III).
+    /// (the termination-energy contribution, paper §III). ECC check
+    /// bits are real wire bits: a correcting scheme pays termination
+    /// for every sideband 1 it drives.
     pub fn total_ones(&self) -> u32 {
         self.data.count_ones()
             + self.dbi_mask.count_ones()
@@ -59,6 +71,7 @@ impl WireWord {
             } else {
                 0
             }
+            + self.ecc_line.count_ones()
             + self.flag_ones()
     }
 }
@@ -92,5 +105,15 @@ mod tests {
         assert_eq!(w.total_ones(), 0);
         w.index_used = true;
         assert_eq!(w.total_ones(), 6);
+    }
+
+    #[test]
+    fn ecc_sideband_is_charged_to_termination() {
+        let mut w = WireWord::raw(0x0F);
+        assert_eq!(w.total_ones(), 4);
+        w.ecc_line = 0b101;
+        assert_eq!(w.total_ones(), 6);
+        // raw() never carries check bits.
+        assert_eq!(WireWord::raw(0xFF).ecc_line, 0);
     }
 }

@@ -85,6 +85,7 @@ impl ZacDestEncoder {
                 dbi_mask: 0,
                 index_line: 0,
                 index_used: false,
+                ecc_line: 0,
                 outcome: Outcome::ZeroSkip,
             };
         }
@@ -110,6 +111,7 @@ impl ZacDestEncoder {
                             dbi_mask: 0,
                             index_line: 0,
                             index_used: false,
+                            ecc_line: 0,
                             outcome: Outcome::OheSkip,
                         }
                     } else {
@@ -120,6 +122,7 @@ impl ZacDestEncoder {
                             dbi_mask: 0,
                             index_line: hit.index as u8,
                             index_used: true,
+                            ecc_line: 0,
                             outcome: Outcome::OheSkip,
                         }
                     });

@@ -42,7 +42,7 @@ pub mod model;
 pub mod profile;
 
 pub use model::{FaultModel, PerLaneBer, PerfectChannel, UniformBer};
-pub use profile::FaultProfile;
+pub use profile::{FaultProfile, MramBin, MramProfile};
 
 /// Per-stream fault-injection statistics, merged across chips and
 /// shards exactly like [`EncodeStats`](crate::encoding::EncodeStats).
@@ -56,6 +56,20 @@ pub struct FaultStats {
     /// Includes codec approximation *and* fault propagation, so with a
     /// perfect channel this is the pure approximation error.
     pub observed_error_bits: u64,
+    /// Data bits a correcting codec's decoder repaired (SECDED sideband
+    /// syndrome hits, in-band Hamming repairs, ECC-wrapper repairs).
+    /// 0 for every non-correcting scheme.
+    pub corrected_bits: u64,
+    /// Error bits a correcting codec flagged but could not repair
+    /// (double-bit detections and the like). Detection-only schemes
+    /// (PARITY) count everything they see here.
+    pub detected_bits: u64,
+    /// End-to-end error bits inside the codec's resilience mask while
+    /// the fault model was active — the damage that survived
+    /// correction. Perfect-channel runs leave this 0 by construction
+    /// (codec approximation alone is not "residual" error), so
+    /// `residual == 0` under faults is the signature of full recovery.
+    pub residual_error_bits: u64,
     /// Words driven (denominator for the rates below).
     pub words: u64,
 }
@@ -66,6 +80,9 @@ impl FaultStats {
         self.injected_bits += o.injected_bits;
         self.injected_words += o.injected_words;
         self.observed_error_bits += o.observed_error_bits;
+        self.corrected_bits += o.corrected_bits;
+        self.detected_bits += o.detected_bits;
+        self.residual_error_bits += o.residual_error_bits;
         self.words += o.words;
     }
 
@@ -84,6 +101,15 @@ impl FaultStats {
             0.0
         } else {
             self.observed_error_bits as f64 / (self.words as f64 * 64.0)
+        }
+    }
+
+    /// Uncorrected fault damage per data bit (the post-ECC BER).
+    pub fn residual_error_rate(&self) -> f64 {
+        if self.words == 0 {
+            0.0
+        } else {
+            self.residual_error_bits as f64 / (self.words as f64 * 64.0)
         }
     }
 }
@@ -107,6 +133,15 @@ pub enum FaultKind {
         /// DRAM supply voltage in millivolts
         /// ([`FaultProfile::MIN_MV`]..=[`FaultProfile::NOMINAL_MV`]).
         millivolts: u32,
+    },
+    /// Approximate-MRAM reliability bin (STT-MRAM read-disturb /
+    /// retention profile, [`MramBin`]) — the second memory technology.
+    /// Opposite polarity to DRAM: errors are weighted toward 0→1 flips
+    /// (read disturb sets the free layer), with mild linear lane
+    /// variation instead of DRAM's long weak-column tail.
+    Mram {
+        /// Which reliability bin the cell array is operated in.
+        bin: MramBin,
     },
 }
 
@@ -162,6 +197,14 @@ impl FaultSpec {
         }
     }
 
+    /// Approximate-MRAM profile in reliability bin `bin`.
+    pub fn mram(bin: MramBin) -> FaultSpec {
+        FaultSpec {
+            kind: FaultKind::Mram { bin },
+            seed: Self::DEFAULT_SEED,
+        }
+    }
+
     /// Same spec with an explicit base seed.
     pub fn with_seed(mut self, seed: u64) -> FaultSpec {
         self.seed = seed;
@@ -177,6 +220,7 @@ impl FaultSpec {
             FaultKind::Voltage { millivolts } => {
                 FaultProfile::ber_at(millivolts) <= 0.0
             }
+            FaultKind::Mram { bin } => bin.base_ber() <= 0.0,
         }
     }
 
@@ -210,6 +254,8 @@ impl FaultSpec {
                 );
                 Ok(())
             }
+            // Bins are a closed enum; anything parseable is valid.
+            FaultKind::Mram { .. } => Ok(()),
         }
     }
 
@@ -232,6 +278,7 @@ impl FaultSpec {
                 l
             }
             FaultKind::Voltage { millivolts } => format!("vdd{millivolts}mV"),
+            FaultKind::Mram { bin } => format!("mram{}", bin.label_suffix()),
         };
         if self.seed != Self::DEFAULT_SEED && !self.is_perfect() {
             label.push_str(&format!("@{}", self.seed));
@@ -244,10 +291,14 @@ impl FaultSpec {
     /// * `perfect`
     /// * `uniform:<ber>` or `uniform:<ber>:<one_to_zero_fraction>`
     /// * `voltage:<millivolts>`
+    /// * `mram:<bin>` (bins: [`MramBin::NAMES`])
     ///
     /// any of which may carry an `@<seed>` suffix (`voltage:1050@7`).
     /// Unknown model names and malformed numbers are rejected — same
-    /// "no silent knob absorption" contract as `CodecSpec::set_knob`.
+    /// "no silent knob absorption" contract as `CodecSpec::set_knob` —
+    /// and every rejection names the offending token and lists what
+    /// would have been accepted, so a typo in a sweep grid or CLI flag
+    /// is a one-glance fix.
     pub fn parse(text: &str) -> anyhow::Result<FaultSpec> {
         let text = text.trim();
         let (body, seed) = match text.split_once('@') {
@@ -302,9 +353,25 @@ impl FaultSpec {
                 );
                 FaultSpec::voltage(mv as u32)
             }
+            "mram" => {
+                anyhow::ensure!(
+                    args.len() == 1,
+                    "mram needs mram:<bin>; valid bins: {}",
+                    MramBin::NAMES.join(", ")
+                );
+                let bin = MramBin::parse(args[0]).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown MRAM bin {:?}; valid bins: {}",
+                        args[0],
+                        MramBin::NAMES.join(", ")
+                    )
+                })?;
+                FaultSpec::mram(bin)
+            }
             other => anyhow::bail!(
                 "unknown fault model {other:?}; known: perfect, \
-                 uniform:<ber>[:<frac>], voltage:<mV> (each optionally @<seed>)"
+                 uniform:<ber>[:<frac>], voltage:<mV>, mram:<bin> \
+                 (each optionally @<seed>)"
             ),
         };
         let spec = spec.with_seed(seed);
@@ -337,6 +404,14 @@ impl FaultSpec {
             } => Box::new(UniformBer::new(seed, ber, one_to_zero_fraction)),
             FaultKind::Voltage { millivolts } => {
                 Box::new(FaultProfile::eden(millivolts).model(seed))
+            }
+            FaultKind::Mram { bin } => {
+                if bin.base_ber() <= 0.0 {
+                    // The reliable bin never flips: keep the fast path.
+                    Box::new(PerfectChannel)
+                } else {
+                    Box::new(MramProfile::bin(bin).model(seed))
+                }
             }
         }
     }
@@ -380,10 +455,36 @@ mod tests {
         assert_eq!(v.kind, FaultKind::Voltage { millivolts: 1050 });
         assert!(!v.is_perfect());
         assert!(FaultSpec::parse("vdd:1250@3").unwrap().is_perfect());
+        let m = FaultSpec::parse("mram:weak@5").unwrap();
+        assert_eq!(m.kind, FaultKind::Mram { bin: MramBin::Weak });
+        assert_eq!(m.seed, 5);
+        assert!(!m.is_perfect());
+        assert!(FaultSpec::parse("mram:reliable").unwrap().is_perfect());
         assert_eq!(
-            FaultSpec::parse_list("perfect,voltage:1050").unwrap().len(),
-            2
+            FaultSpec::parse_list("perfect,voltage:1050,mram:scaled")
+                .unwrap()
+                .len(),
+            3
         );
+    }
+
+    #[test]
+    fn parse_errors_name_the_token_and_list_valid_values() {
+        // Satellite contract: CLI `--faults`, run TOML and sweep grids
+        // all route through this parser, so one good message serves
+        // every boundary.
+        let e = FaultSpec::parse("mram:wobbly").unwrap_err().to_string();
+        assert!(e.contains("\"wobbly\""), "{e}");
+        for bin in MramBin::NAMES {
+            assert!(e.contains(bin), "{e} missing {bin}");
+        }
+        let e = FaultSpec::parse("sram:weak").unwrap_err().to_string();
+        assert!(e.contains("\"sram\""), "{e}");
+        for known in ["perfect", "uniform", "voltage", "mram"] {
+            assert!(e.contains(known), "{e} missing {known}");
+        }
+        let e = FaultSpec::parse("mram").unwrap_err().to_string();
+        assert!(e.contains("reliable") && e.contains("saturated"), "{e}");
     }
 
     #[test]
@@ -399,6 +500,9 @@ mod tests {
             "voltage:400", // below modelled range
             "voltage:1050@zzz",
             "perfect:1",
+            "mram",
+            "mram:wobbly",
+            "mram:weak:extra",
         ] {
             assert!(FaultSpec::parse(bad).is_err(), "{bad:?} accepted");
         }
@@ -422,9 +526,15 @@ mod tests {
         assert_ne!(c, d);
         assert_eq!(d, "ber1e-3@2");
         assert_eq!(FaultSpec::voltage(1000).with_seed(9).label(), "vdd1000mV@9");
+        assert_eq!(FaultSpec::mram(MramBin::Weak).label(), "mramWeak");
+        assert_eq!(
+            FaultSpec::mram(MramBin::Saturated).with_seed(3).label(),
+            "mramSaturated@3"
+        );
         // A non-default seed on a perfect spec changes nothing, so the
         // label stays clean.
         assert_eq!(FaultSpec::perfect().with_seed(9).label(), "perfect");
+        assert_eq!(FaultSpec::mram(MramBin::Reliable).with_seed(9).label(), "mramReliable");
     }
 
     #[test]
@@ -444,21 +554,32 @@ mod tests {
             injected_bits: 3,
             injected_words: 2,
             observed_error_bits: 5,
+            corrected_bits: 4,
+            detected_bits: 2,
+            residual_error_bits: 1,
             words: 10,
         };
         let b = FaultStats {
             injected_bits: 1,
             injected_words: 1,
             observed_error_bits: 2,
+            corrected_bits: 1,
+            detected_bits: 0,
+            residual_error_bits: 1,
             words: 6,
         };
         a.merge(&b);
         assert_eq!(a.injected_bits, 4);
         assert_eq!(a.injected_words, 3);
         assert_eq!(a.observed_error_bits, 7);
+        assert_eq!(a.corrected_bits, 5);
+        assert_eq!(a.detected_bits, 2);
+        assert_eq!(a.residual_error_bits, 2);
         assert_eq!(a.words, 16);
         assert!((a.injected_ber() - 4.0 / (16.0 * 64.0)).abs() < 1e-15);
+        assert!((a.residual_error_rate() - 2.0 / (16.0 * 64.0)).abs() < 1e-15);
         assert!(FaultStats::default().injected_ber() == 0.0);
+        assert!(FaultStats::default().residual_error_rate() == 0.0);
     }
 
     #[test]

@@ -43,6 +43,12 @@ impl FaultProfile {
         (900, 1e-2),
     ];
 
+    /// The full voltage ladder, nominal first, BER ascending — the
+    /// per-workload budget search walks this.
+    pub fn ladder() -> &'static [(u32, f64)] {
+        &Self::BINS
+    }
+
     /// Base BER for a supply voltage: the bin whose lower bound the
     /// voltage reaches. `>= 1250 mV` is error-free.
     pub fn ber_at(millivolts: u32) -> f64 {
@@ -96,6 +102,155 @@ impl FaultProfile {
     }
 }
 
+/// Approximate-MRAM reliability bins — the second memory technology.
+///
+/// STT-MRAM fails differently from voltage-scaled DRAM (approximate-
+/// MRAM characterization, arXiv:2105.14151): errors come from read
+/// disturb (a read current accidentally *sets* the free layer) and
+/// retention loss under a relaxed thermal-stability factor, so the
+/// polarity bias runs **0→1-dominant** — the mirror image of DRAM's
+/// charge-loss 1→0 bias — and cell-to-cell variation is mild and
+/// roughly linear rather than DRAM's long weak-column tail. The bins
+/// trade retention margin (and thus write energy, outside this model's
+/// scope) for BER, analogous to EDEN's voltage bins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MramBin {
+    /// Full thermal-stability margin: error-free (the MRAM analogue of
+    /// nominal voltage).
+    Reliable,
+    /// Slightly relaxed margin: BER 1e-4.
+    Weak,
+    /// Aggressively relaxed margin: BER 1e-3.
+    Scaled,
+    /// Deep approximation: BER 1e-2.
+    Aggressive,
+    /// Degenerate every-bit-flips bin (BER 1.0): not a physical
+    /// operating point but the analytical edge case — deterministic
+    /// full inversion, polarity bias moot.
+    Saturated,
+}
+
+impl MramBin {
+    /// All bins, mildest first.
+    pub const ALL: [MramBin; 5] = [
+        MramBin::Reliable,
+        MramBin::Weak,
+        MramBin::Scaled,
+        MramBin::Aggressive,
+        MramBin::Saturated,
+    ];
+
+    /// The textual bin names `mram:<bin>` accepts, in [`Self::ALL`]
+    /// order (also what parse errors list).
+    pub const NAMES: [&'static str; 5] =
+        ["reliable", "weak", "scaled", "aggressive", "saturated"];
+
+    /// Parse a bin name (case-insensitive). `None` for unknown names —
+    /// the caller owns the error message so it can name the token.
+    pub fn parse(name: &str) -> Option<MramBin> {
+        let name = name.trim().to_ascii_lowercase();
+        Self::NAMES
+            .iter()
+            .position(|&n| n == name)
+            .map(|i| Self::ALL[i])
+    }
+
+    /// Lowercase name (the parse token).
+    pub fn name(&self) -> &'static str {
+        Self::NAMES[Self::ALL.iter().position(|b| b == self).unwrap()]
+    }
+
+    /// Capitalized suffix for scenario labels (`mramWeak`).
+    pub fn label_suffix(&self) -> &'static str {
+        match self {
+            MramBin::Reliable => "Reliable",
+            MramBin::Weak => "Weak",
+            MramBin::Scaled => "Scaled",
+            MramBin::Aggressive => "Aggressive",
+            MramBin::Saturated => "Saturated",
+        }
+    }
+
+    /// Raw BER of the bin (per stored bit, before lane weighting).
+    pub fn base_ber(&self) -> f64 {
+        match self {
+            MramBin::Reliable => 0.0,
+            MramBin::Weak => 1e-4,
+            MramBin::Scaled => 1e-3,
+            MramBin::Aggressive => 1e-2,
+            MramBin::Saturated => 1.0,
+        }
+    }
+
+    /// Fraction of flips that are 1→0. Read disturb dominates, so only
+    /// a quarter of MRAM flips clear a bit (DRAM's default is 0.75 the
+    /// other way). The saturated bin flips everything; 0.5 keeps both
+    /// polarity rates at exactly 1.0 under [`polarity_rates`].
+    pub fn one_to_zero_fraction(&self) -> f64 {
+        match self {
+            MramBin::Saturated => 0.5,
+            _ => 0.25,
+        }
+    }
+}
+
+/// An MRAM reliability profile: bin BER plus the per-lane weighting
+/// that turns it into a [`PerLaneBer`] model — the [`FaultProfile`]
+/// analogue for the second technology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MramProfile {
+    pub bin: MramBin,
+    pub base_ber: f64,
+    pub one_to_zero_fraction: f64,
+}
+
+impl MramProfile {
+    /// The profile for a reliability bin.
+    pub fn bin(bin: MramBin) -> MramProfile {
+        MramProfile {
+            bin,
+            base_ber: bin.base_ber(),
+            one_to_zero_fraction: bin.one_to_zero_fraction(),
+        }
+    }
+
+    /// Deterministic per-lane weights in [0.5, 1.5): linear (uniform)
+    /// spread — MRAM's cell variation is mild, without DRAM's
+    /// squared-uniform weak-column tail. Pure function of `seed`, and
+    /// deliberately a *different* function than
+    /// [`FaultProfile::lane_weights`] so the two technologies
+    /// decorrelate even at equal seeds.
+    pub fn lane_weights(seed: u64) -> [f64; 8] {
+        let mut r = Rng::new(seed ^ 0x00AA_6E71_7E5E_ED00);
+        let mut w = [0.0; 8];
+        for slot in w.iter_mut() {
+            *slot = 0.5 + r.f64();
+        }
+        w
+    }
+
+    /// Build the per-lane model for one (already lane-decorrelated)
+    /// seed. The saturated bin skips lane weighting so every position
+    /// flips with probability exactly 1 — the deterministic BER=1.0
+    /// edge the fault-model tests pin.
+    pub fn model(&self, seed: u64) -> PerLaneBer {
+        let weights = if self.bin == MramBin::Saturated {
+            [1.0; 8]
+        } else {
+            Self::lane_weights(seed)
+        };
+        let mut p_one = [0.0; 8];
+        let mut p_zero = [0.0; 8];
+        for l in 0..8 {
+            let (p1, p0) =
+                polarity_rates(self.base_ber * weights[l], self.one_to_zero_fraction);
+            p_one[l] = p1;
+            p_zero[l] = p0;
+        }
+        PerLaneBer::new(seed, p_one, p_zero)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +286,69 @@ mod tests {
         for w in a {
             assert!((0.25..2.5).contains(&w), "{w}");
         }
+    }
+
+    #[test]
+    fn mram_bins_parse_and_order_by_severity() {
+        assert_eq!(MramBin::parse("weak"), Some(MramBin::Weak));
+        assert_eq!(MramBin::parse(" SATURATED "), Some(MramBin::Saturated));
+        assert_eq!(MramBin::parse("wobbly"), None);
+        let mut prev = -1.0;
+        for bin in MramBin::ALL {
+            assert_eq!(MramBin::parse(bin.name()), Some(bin));
+            assert!(bin.base_ber() > prev, "{bin:?} out of order");
+            prev = bin.base_ber();
+        }
+    }
+
+    #[test]
+    fn mram_reliable_bin_is_error_free() {
+        assert!(!MramProfile::bin(MramBin::Reliable).model(1).is_active());
+    }
+
+    #[test]
+    fn mram_saturated_bin_inverts_every_bit() {
+        // BER = 1.0, both polarity rates clamp to 1: deterministic full
+        // inversion regardless of seed or data.
+        let mut m = MramProfile::bin(MramBin::Saturated).model(9);
+        for word in [0u64, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            let mut w = crate::encoding::WireWord::raw(word);
+            assert_eq!(m.corrupt(&mut w), 64);
+            assert_eq!(w.data, !word);
+        }
+    }
+
+    #[test]
+    fn mram_polarity_is_zero_to_one_dominant() {
+        // The mirror image of DRAM charge loss: all-zero words gain
+        // bits ~3x as often as all-ones words lose them (f = 0.25).
+        let mut m = MramProfile::bin(MramBin::Aggressive).model(11);
+        let (mut ones_flips, mut zeros_flips) = (0u64, 0u64);
+        for _ in 0..4000 {
+            let mut w = crate::encoding::WireWord::raw(u64::MAX);
+            ones_flips += m.corrupt(&mut w) as u64;
+            let mut z = crate::encoding::WireWord::raw(0);
+            zeros_flips += m.corrupt(&mut z) as u64;
+            assert_eq!(z.data & !z.data, 0);
+        }
+        assert!(ones_flips > 0 && zeros_flips > 0);
+        let ratio = zeros_flips as f64 / ones_flips as f64;
+        assert!(
+            (2.0..4.5).contains(&ratio),
+            "0->1 / 1->0 ratio {ratio} far from 3"
+        );
+    }
+
+    #[test]
+    fn mram_lane_weights_differ_from_dram_at_equal_seed() {
+        let m = MramProfile::lane_weights(42);
+        let d = FaultProfile::lane_weights(42);
+        assert_ne!(m, d);
+        for w in m {
+            assert!((0.5..1.5).contains(&w), "{w}");
+        }
+        assert_eq!(m, MramProfile::lane_weights(42));
+        assert_ne!(m, MramProfile::lane_weights(43));
     }
 
     #[test]

@@ -67,7 +67,7 @@ fn app() -> Command {
                 .opt(
                     "faults",
                     "perfect",
-                    "fault model: perfect | uniform:<ber>[:<frac>] | voltage:<mV> (suffix @<seed>)",
+                    "fault model: perfect | uniform:<ber>[:<frac>] | voltage:<mV> | mram:<bin> (suffix @<seed>)",
                 ),
         )
         .subcommand(Command::new("schemes", "list the registered codec schemes"))
@@ -94,7 +94,12 @@ fn app() -> Command {
                 .opt(
                     "faults",
                     "",
-                    "fault axis, e.g. perfect,voltage:1050 (overrides spec)",
+                    "fault axis, e.g. perfect,voltage:1050,mram:weak (overrides spec)",
+                )
+                .opt(
+                    "schemes",
+                    "",
+                    "scheme axis, e.g. BDE,ECC+BDE,SECDED (overrides spec)",
                 )
                 .opt(
                     "address",
@@ -109,6 +114,25 @@ fn app() -> Command {
                 .env(
                     "ZAC_BENCH_BYTES",
                     "default trace size in bytes for sweep + bench smokes",
+                ),
+        )
+        .subcommand(
+            Command::new("budget", "per-workload max tolerable BER bin at a quality-loss cap")
+                .opt("scheme", "ECC+BDE", "codec to budget (any registered scheme)")
+                .opt("cap", "2e-4", "max quality loss (1 - quality ratio)")
+                .opt("seed", "42", "proxy corpus / suite seed")
+                .opt("channels", "1", "8-chip channels to shard across")
+                .opt(
+                    "workloads",
+                    "imagenet,resnet,quant,eigen,svm",
+                    "workloads to budget (comma-separated)",
+                )
+                .opt("mode", "proxy", "proxy (trace quality) | full (trained suite)")
+                .opt("budget", "quick", "suite budget when --mode full: quick | full")
+                .opt(
+                    "out",
+                    "BENCH_system.json",
+                    "merge table under key 'budget' ('-' = skip)",
                 ),
         )
         .subcommand(Command::new("circuit", "§VI circuit overhead report").opt(
@@ -228,6 +252,7 @@ fn main() -> Result<()> {
         }
         Some("run") => cmd_run(m.get("config").unwrap())?,
         Some("sweep") => cmd_sweep(&m)?,
+        Some("budget") => cmd_budget(&m)?,
         Some("circuit") => {
             let (bd, zd) = zac_dest::circuits::evaluate(m.get_usize("vectors")?, 42);
             println!(
@@ -408,6 +433,14 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if !faults_flag.is_empty() {
         spec.faults = FaultSpec::parse_list(faults_flag)?;
     }
+    let schemes_flag = m.get_or("schemes", "");
+    if !schemes_flag.is_empty() {
+        spec.schemes = schemes_flag
+            .split(',')
+            .map(zac_dest::system::resolve_scheme_name)
+            .collect::<Result<_>>()?;
+        spec.validate()?;
+    }
     let address_flag = m.get_or("address", "");
     if !address_flag.is_empty() {
         spec.address = AddressSpec::parse_list(address_flag)?;
@@ -418,7 +451,7 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
         spec.name,
         spec.channels,
         trace.len(),
-        spec.baseline.label(),
+        spec.baseline,
         spec.faults.iter().map(|f| f.label()).collect::<Vec<_>>(),
         spec.address.iter().map(|a| a.label()).collect::<Vec<_>>()
     );
@@ -427,6 +460,56 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let out = m.get_or("out", "BENCH_system.json");
     if out != "-" {
         report.write_json(out)?;
+    }
+    Ok(())
+}
+
+/// Parse the `budget --workloads` list, naming the offending token and
+/// listing the valid kinds (the `--faults` error contract).
+fn parse_workload_list(text: &str) -> Result<Vec<Kind>> {
+    let list: Vec<Kind> = text
+        .split(',')
+        .map(|p| {
+            Kind::parse(p.trim()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown workload {:?}; valid workloads: imagenet, resnet, quant, eigen, svm",
+                    p.trim()
+                )
+            })
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!list.is_empty(), "empty workload list");
+    Ok(list)
+}
+
+fn cmd_budget(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    use zac_dest::workloads::{derive_budgets, derive_budgets_full, BudgetSpec};
+    let name = zac_dest::system::resolve_scheme_name(m.get_or("scheme", "ECC+BDE"))?;
+    let cap_text = m.get_or("cap", "2e-4");
+    let cap: f64 = cap_text
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad cap {cap_text:?}: {e}"))?;
+    let mut bspec = BudgetSpec::new(CodecSpec::named(&name), cap);
+    bspec.seed = m.get_usize("seed")? as u64;
+    bspec.channels = m.get_usize("channels")?;
+    bspec.workloads = parse_workload_list(m.get_or("workloads", "imagenet,resnet,quant,eigen,svm"))?;
+    let report = match m.get_or("mode", "proxy") {
+        "proxy" => derive_budgets(&bspec)?,
+        "full" => {
+            let rt = Runtime::load(Runtime::default_dir())?;
+            let suite = Suite::build(
+                rt,
+                bspec.seed,
+                budget(m.get_or("budget", "quick")),
+            )?;
+            derive_budgets_full(&suite, &bspec)?
+        }
+        other => anyhow::bail!("unknown mode {other:?}; valid modes: proxy, full"),
+    };
+    println!("{}", report.render_table());
+    let out = m.get_or("out", "BENCH_system.json");
+    if out != "-" {
+        report.merge_into(out)?;
     }
     Ok(())
 }
@@ -498,6 +581,36 @@ mod tests {
         assert_eq!(
             AddressSpec::parse_list(m.get_or("address", "")).unwrap().len(),
             2
+        );
+    }
+
+    #[test]
+    fn budget_workload_list_names_the_token_and_lists_valid_kinds() {
+        assert_eq!(
+            parse_workload_list("imagenet, svm").unwrap(),
+            vec![Kind::ImageNet, Kind::Svm]
+        );
+        let err = parse_workload_list("imagenet,wat").unwrap_err().to_string();
+        assert!(err.contains("\"wat\""), "{err}");
+        assert!(err.contains("valid workloads"), "{err}");
+        // The sweep --schemes axis shares the same contract.
+        let err = zac_dest::system::resolve_scheme_name("NOPE")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"NOPE\"") && err.contains("registered schemes"), "{err}");
+    }
+
+    #[test]
+    fn budget_cli_flags_parse() {
+        let m = matches("budget --scheme ecc+org --cap 1e-3 --workloads quant");
+        assert_eq!(
+            zac_dest::system::resolve_scheme_name(m.get_or("scheme", "ECC+BDE")).unwrap(),
+            "ECC+ORG"
+        );
+        assert_eq!(m.get_or("cap", "2e-4"), "1e-3");
+        assert_eq!(
+            parse_workload_list(m.get_or("workloads", "svm")).unwrap(),
+            vec![Kind::Quant]
         );
     }
 

@@ -219,7 +219,7 @@ impl RunReport {
     /// The quality-delta section: what injection did to the stream.
     /// Meaningful even on a perfect channel (pure approximation error).
     pub fn quality_delta(&self) -> String {
-        format!(
+        let mut out = format!(
             "quality delta: injected {} bit flips in {} transfers (BER {:.2e}); \
              end-to-end error {} bits over {} words ({:.2e} per bit)",
             self.faults.injected_bits,
@@ -228,7 +228,18 @@ impl RunReport {
             self.faults.observed_error_bits,
             self.faults.words,
             self.faults.observed_error_rate()
-        )
+        );
+        if self.faults.corrected_bits > 0 || self.faults.detected_bits > 0 {
+            out.push_str(&format!(
+                "; codec corrected {} bits, detected {} more, residual {} \
+                 ({:.2e} per bit)",
+                self.faults.corrected_bits,
+                self.faults.detected_bits,
+                self.faults.residual_error_bits,
+                self.faults.residual_error_rate()
+            ));
+        }
+        out
     }
 
     /// Max/mean lines per shard (1.0 = perfectly balanced); the

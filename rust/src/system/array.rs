@@ -112,9 +112,21 @@ impl SystemOutput {
             format!("{:.1}%", 100.0 * self.stats.table_hit_rate()),
         ]);
         let faults = if self.faults.injected_bits > 0 {
+            let corrections = if self.faults.corrected_bits > 0
+                || self.faults.detected_bits > 0
+            {
+                format!(
+                    ", corrected {} / detected {} / residual {}",
+                    self.faults.corrected_bits,
+                    self.faults.detected_bits,
+                    self.faults.residual_error_bits
+                )
+            } else {
+                String::new()
+            };
             format!(
                 "\nfaults: {} bits flipped in {} transfers (BER {:.2e}), \
-                 end-to-end error {:.2e} bits/bit",
+                 end-to-end error {:.2e} bits/bit{corrections}",
                 self.faults.injected_bits,
                 self.faults.injected_words,
                 self.faults.injected_ber(),

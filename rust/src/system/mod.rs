@@ -48,6 +48,6 @@ pub use address::{AddressMap, AddressPolicy, AddressSpec, Inverse, PageHeat};
 pub use array::{load_imbalance, shard_of_line, ChannelArray, ShardReport, SystemOutput};
 pub use report::{ScenarioResult, SweepReport};
 pub use scenario::{
-    bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list, run_sweep,
-    synthetic_trace, Scenario, SweepSpec,
+    bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list,
+    resolve_scheme_name, run_sweep, synthetic_trace, Scenario, SweepSpec,
 };

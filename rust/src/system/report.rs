@@ -36,6 +36,15 @@ pub struct ScenarioResult {
     pub injected_words: u64,
     /// End-to-end error bits (approximation + fault propagation).
     pub observed_error_bits: u64,
+    /// Bit errors repaired by a correcting codec before they reached
+    /// the application.
+    pub corrected_bits: u64,
+    /// Bit errors detected but not repairable (flagged to the host).
+    pub detected_bits: u64,
+    /// Error bits that escaped past the codec's resilience envelope
+    /// while injection was active — the residual the ECC family exists
+    /// to shrink.
+    pub residual_error_bits: u64,
     /// Merged system-wide energy counts.
     pub counts: EnergyCounts,
     /// Savings vs the spec's baseline scheme at the same channel count.
@@ -75,6 +84,12 @@ impl ScenarioResult {
             (
                 "observed_error_bits",
                 num(self.observed_error_bits as f64),
+            ),
+            ("corrected_bits", num(self.corrected_bits as f64)),
+            ("detected_bits", num(self.detected_bits as f64)),
+            (
+                "residual_error_bits",
+                num(self.residual_error_bits as f64),
             ),
             ("termination_ones", num(self.counts.termination_ones as f64)),
             (
@@ -204,6 +219,9 @@ mod tests {
                 injected_bits: 17,
                 injected_words: 12,
                 observed_error_bits: 40,
+                corrected_bits: 9,
+                detected_bits: 2,
+                residual_error_bits: 5,
                 counts: EnergyCounts {
                     termination_ones: 100,
                     switching_transitions: 50,
@@ -243,6 +261,13 @@ mod tests {
         assert_eq!(
             sc.get("observed_error_bits").unwrap().as_usize().unwrap(),
             40
+        );
+        // Correcting-codec counters persist (the CI smoke greps them).
+        assert_eq!(sc.get("corrected_bits").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(sc.get("detected_bits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            sc.get("residual_error_bits").unwrap().as_usize().unwrap(),
+            5
         );
     }
 

@@ -27,7 +27,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::encoding::{CodecSpec, Outcome, Scheme};
+use crate::encoding::{default_registry, CodecSpec, Outcome, Scheme};
 use crate::faults::FaultSpec;
 use crate::quality::psnr_u8;
 use crate::session::{Execution, RunReport, Session, Trace, TrafficClass};
@@ -49,8 +49,10 @@ pub struct SweepSpec {
     pub approx: bool,
     /// Channel counts to shard across.
     pub channels: Vec<usize>,
-    /// Schemes to evaluate.
-    pub schemes: Vec<Scheme>,
+    /// Schemes to evaluate — registry names, so out-of-tree and
+    /// correcting schemes (`"SECDED"`, `"ECC+BDE"`, …) sweep exactly
+    /// like the Table I five.
+    pub schemes: Vec<String>,
     /// ZAC similarity limits (%).
     pub limits: Vec<u32>,
     /// ZAC truncation knob values (bits per 8-bit chunk).
@@ -65,8 +67,8 @@ pub struct SweepSpec {
     /// cell runs once per policy, so the report carries per-policy
     /// `DataTable` hit rates and termination energy side by side.
     pub address: Vec<AddressSpec>,
-    /// Savings reference scheme.
-    pub baseline: Scheme,
+    /// Savings reference scheme (registry name).
+    pub baseline: String,
 }
 
 impl Default for SweepSpec {
@@ -79,13 +81,13 @@ impl Default for SweepSpec {
             bytes: 1 << 18,
             approx: true,
             channels: vec![1, 2],
-            schemes: vec![Scheme::Bde, Scheme::ZacDest],
+            schemes: vec!["BDE".into(), "OHE".into()],
             limits: vec![90, 80, 75],
             truncations: vec![0],
             tolerances: vec![0],
             faults: vec![FaultSpec::perfect()],
             address: vec![AddressSpec::round_robin()],
-            baseline: Scheme::Bde,
+            baseline: "BDE".into(),
         }
     }
 }
@@ -141,12 +143,7 @@ impl SweepSpec {
                                 spec.schemes = gv
                                     .as_arr()?
                                     .iter()
-                                    .map(|x| {
-                                        let name = x.as_str()?;
-                                        Scheme::parse(name).ok_or_else(|| {
-                                            anyhow::anyhow!("unknown scheme {name:?}")
-                                        })
-                                    })
+                                    .map(|x| resolve_scheme_name(x.as_str()?))
                                     .collect::<anyhow::Result<_>>()?;
                             }
                             "limits" => spec.limits = parse_u32_list(gv)?,
@@ -167,9 +164,8 @@ impl SweepSpec {
                                     .collect::<anyhow::Result<_>>()?;
                             }
                             "baseline" => {
-                                let name = gv.as_str()?;
-                                spec.baseline = Scheme::parse(name)
-                                    .ok_or_else(|| anyhow::anyhow!("unknown baseline {name:?}"))?;
+                                spec.baseline = resolve_scheme_name(gv.as_str()?)
+                                    .map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
                             }
                             other => anyhow::bail!("unknown [grid] key {other:?}"),
                         }
@@ -202,6 +198,11 @@ impl SweepSpec {
             self.channels
         );
         anyhow::ensure!(!self.schemes.is_empty(), "empty schemes axis");
+        for name in &self.schemes {
+            resolve_scheme_name(name)?;
+        }
+        resolve_scheme_name(&self.baseline)
+            .map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
         anyhow::ensure!(!self.faults.is_empty(), "empty faults axis");
         for f in &self.faults {
             f.validate()?;
@@ -210,7 +211,7 @@ impl SweepSpec {
         for a in &self.address {
             a.validate()?;
         }
-        if self.schemes.contains(&Scheme::ZacDest) {
+        if self.schemes.iter().any(|s| takes_zac_grid(s)) {
             anyhow::ensure!(!self.limits.is_empty(), "ZAC in grid but no limits");
             anyhow::ensure!(!self.truncations.is_empty(), "ZAC in grid but no truncations");
             anyhow::ensure!(!self.tolerances.is_empty(), "ZAC in grid but no tolerances");
@@ -225,12 +226,16 @@ impl SweepSpec {
         for &faults in &self.faults {
             for &channels in &self.channels {
                 for address in &self.address {
-                    for &scheme in &self.schemes {
-                        if scheme == Scheme::ZacDest {
+                    for scheme in &self.schemes {
+                        if takes_zac_grid(scheme) {
+                            // ZAC — bare or ECC-wrapped — takes the full
+                            // knob grid; the wrapper shares the knob bag
+                            // of its base.
                             for &limit in &self.limits {
                                 for &trunc in &self.truncations {
                                     for &tol in &self.tolerances {
-                                        let spec = CodecSpec::zac_full(limit, trunc, tol);
+                                        let mut spec = CodecSpec::zac_full(limit, trunc, tol);
+                                        spec.scheme = scheme.clone();
                                         spec.validate()?;
                                         out.push(Scenario {
                                             channels,
@@ -244,7 +249,7 @@ impl SweepSpec {
                         } else {
                             out.push(Scenario {
                                 channels,
-                                spec: CodecSpec::named(scheme.label()),
+                                spec: CodecSpec::named(scheme),
                                 faults,
                                 address: address.clone(),
                             });
@@ -255,6 +260,27 @@ impl SweepSpec {
         }
         Ok(out)
     }
+}
+
+/// Does this registry name take the ZAC knob grid (limits ×
+/// truncations × tolerances)? True for the ZAC scheme itself and its
+/// ECC-wrapped variant, which shares the same knob bag.
+fn takes_zac_grid(name: &str) -> bool {
+    let inner = name.strip_prefix("ECC+").unwrap_or(name);
+    Scheme::parse(inner) == Some(Scheme::ZacDest)
+}
+
+/// Resolve a scheme name from CLI/TOML against the default registry,
+/// naming the offending token and listing every registered scheme on
+/// failure (the same error contract `--faults` keeps).
+pub fn resolve_scheme_name(name: &str) -> anyhow::Result<String> {
+    let canonical = name.trim().to_ascii_uppercase();
+    anyhow::ensure!(
+        default_registry().contains(&canonical),
+        "unknown scheme {name:?}; registered schemes: {}",
+        default_registry().schemes().join(", ")
+    );
+    Ok(canonical)
 }
 
 /// Seeds ride through `toml_lite` as f64, which is exact only below
@@ -376,7 +402,7 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
     // baseline shards and places the same way. The full report (+ wall
     // time) is kept so a grid scenario that IS the baseline config
     // reuses it instead of simulating twice.
-    let base_spec = CodecSpec::named(spec.baseline.label());
+    let base_spec = CodecSpec::named(&spec.baseline);
     let mut baselines: BTreeMap<(usize, String), (RunReport, f64)> = BTreeMap::new();
     for &c in &spec.channels {
         for a in &spec.address {
@@ -449,6 +475,9 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
             injected_bits: out.faults.injected_bits,
             injected_words: out.faults.injected_words,
             observed_error_bits: out.faults.observed_error_bits,
+            corrected_bits: out.faults.corrected_bits,
+            detected_bits: out.faults.detected_bits,
+            residual_error_bits: out.faults.residual_error_bits,
             counts: out.counts,
             term_savings_pct: out.counts.termination_savings_vs(base),
             switch_savings_pct: out.counts.switching_savings_vs(base),
@@ -467,7 +496,7 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
     Ok(SweepReport {
         name: spec.name.clone(),
         trace_bytes: trace.len(),
-        baseline: spec.baseline.label().to_string(),
+        baseline: spec.baseline.clone(),
         scenarios: results,
     })
 }
@@ -510,7 +539,7 @@ mod tests {
         .unwrap();
         assert_eq!(spec.name, "ci-smoke");
         assert_eq!(spec.channels, vec![1, 2, 4]);
-        assert_eq!(spec.baseline, Scheme::Org);
+        assert_eq!(spec.baseline, "ORG");
         // 3 channels × (ORG + ZAC 1×2×1) = 9 scenarios.
         assert_eq!(spec.scenarios().unwrap().len(), 9);
     }
@@ -628,7 +657,7 @@ mod tests {
         let spec = SweepSpec {
             bytes: 16384,
             channels: vec![2],
-            schemes: vec![Scheme::Bde],
+            schemes: vec!["BDE".into()],
             faults: vec![FaultSpec::perfect(), FaultSpec::uniform(1e-2)],
             ..SweepSpec::default()
         };
@@ -683,7 +712,7 @@ mod tests {
         let spec = SweepSpec {
             bytes: 1 << 17,
             channels: vec![4],
-            schemes: vec![Scheme::ZacDest],
+            schemes: vec!["OHE".into()],
             limits: vec![75],
             address: vec![AddressSpec::round_robin(), AddressSpec::steer()],
             ..SweepSpec::default()
@@ -717,6 +746,84 @@ mod tests {
             steer.shard_lines.iter().sum::<usize>(),
             trace.len() / 64,
             "steering must still cover the whole trace"
+        );
+    }
+
+    #[test]
+    fn correcting_schemes_join_the_grid_and_wrapped_zac_takes_knobs() {
+        let spec = SweepSpec::from_toml(
+            r#"
+            name = "ecc-grid"
+            bytes = 8192
+            [grid]
+            channels = [1]
+            schemes = ["secded", "ECC+OHE"]
+            limits = [80, 75]
+            "#,
+        )
+        .unwrap();
+        // Lower-case names canonicalize against the registry.
+        assert_eq!(spec.schemes, vec!["SECDED".to_string(), "ECC+OHE".into()]);
+        let sc = spec.scenarios().unwrap();
+        // SECDED is knob-free (1 cell); wrapped ZAC takes the limit grid.
+        assert_eq!(sc.len(), 3);
+        assert!(sc.iter().any(|s| s.spec.scheme == "SECDED"));
+        let wrapped: Vec<_> = sc.iter().filter(|s| s.spec.scheme == "ECC+OHE").collect();
+        assert_eq!(wrapped.len(), 2);
+        assert!(wrapped.iter().all(|s| s.spec.zac_knobs().is_some()));
+    }
+
+    #[test]
+    fn scheme_parse_errors_name_the_token_and_list_registered_schemes() {
+        // Satellite: the CLI, run TOML and sweep [grid] share this
+        // message shape with --faults.
+        let err = SweepSpec::from_toml("[grid]\nschemes = [\"NOPE\"]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"NOPE\""), "{err}");
+        assert!(err.contains("registered schemes"), "{err}");
+        assert!(err.contains("SECDED") && err.contains("ECC+BDE"), "{err}");
+        let err = SweepSpec::from_toml("[grid]\nbaseline = \"WAT\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("baseline") && err.contains("\"WAT\""), "{err}");
+    }
+
+    #[test]
+    fn ecc_wrapper_shrinks_residual_errors_at_a_fixed_eden_bin() {
+        // Acceptance: at the same EDEN voltage bin, the corrected
+        // variant ends with strictly fewer residual error bits than its
+        // uncorrected base, and both pay identical injection pressure.
+        let spec = SweepSpec {
+            bytes: 1 << 16,
+            channels: vec![1],
+            schemes: vec!["BDE".into(), "ECC+BDE".into()],
+            faults: vec![FaultSpec::parse("voltage:1050").unwrap()],
+            ..SweepSpec::default()
+        };
+        let trace = synthetic_trace(spec.bytes, spec.seed);
+        let report = run_sweep(&spec, &trace).unwrap();
+        let bde = report.scenarios.iter().find(|r| r.scheme == "BDE").unwrap();
+        let ecc = report
+            .scenarios
+            .iter()
+            .find(|r| r.scheme == "ECC+BDE")
+            .unwrap();
+        assert!(bde.injected_bits > 0, "no flips injected at vdd1050mV");
+        assert!(ecc.injected_bits > 0, "no flips injected into ECC+BDE");
+        assert!(ecc.corrected_bits > 0, "wrapper never corrected a flip");
+        assert!(
+            ecc.residual_error_bits < bde.residual_error_bits,
+            "ECC+BDE residual {} must beat uncorrected BDE {}",
+            ecc.residual_error_bits,
+            bde.residual_error_bits
+        );
+        // The uncorrected base reports no correction activity.
+        assert_eq!(bde.corrected_bits, 0);
+        // Check bits cost energy: the wrapper terminates more ones.
+        assert!(
+            ecc.counts.termination_ones > bde.counts.termination_ones,
+            "sideband check bits must show up in termination energy"
         );
     }
 

@@ -38,9 +38,26 @@
 //! The full run is exercised against all five built-ins plus the ROT1
 //! fixture (and a deliberately broken codec) in
 //! `rust/tests/conformance.rs`.
+//!
+//! **Correcting codecs** (`SECDED`, `PARITY`, `EDEN`, `ECC+<base>`)
+//! additionally go through [`check_correcting_codec`], which layers
+//! three more laws on top of the five above:
+//!
+//! 6. **In-budget errors are corrected exactly.** Flipping `t` wire
+//!    bits per word, in `t` distinct beats, decodes to the same words
+//!    a clean channel produces, and `take_corrections()` reports
+//!    exactly the flips (then drains to zero).
+//! 7. **Check bits are paid for.** `total_ones()` charges every
+//!    sideband check bit to termination energy — resilience is never
+//!    free on the wire — and a scheme drives its declared band
+//!    (sideband vs in-band) and no other.
+//! 8. **Clean channel ≡ base.** A wrapper or sideband scheme with a
+//!    declared base decodes a fault-free stream bit-identically to
+//!    that base.
 
 use crate::encoding::{
-    default_registry, Codec, CodecRegistry, CodecSpec, WireWord, ENCODE_BATCH,
+    default_registry, Codec, CodecRegistry, CodecSpec, CorrectionCounts,
+    Outcome, WireWord, ENCODE_BATCH,
 };
 use crate::util::rng::seeded_rng;
 
@@ -85,6 +102,57 @@ pub fn check_codec_conforms(
     zero_words_ride_free(registry, spec)?;
     construction_and_reset_are_deterministic(registry, spec)?;
     unknown_knobs_are_rejected(spec)?;
+    Ok(())
+}
+
+/// Assert the correcting-codec laws against the default registry.
+/// `base` is the scheme the correcting variant must match on a clean
+/// channel (None for lossy in-band schemes like EDEN); `t` is the
+/// per-word error budget (0 for detect-only schemes); `sideband` says
+/// whether the scheme spends dedicated check lines (`ecc_line`) or
+/// embeds its redundancy in the data beats.
+pub fn assert_correcting_codec(
+    spec: &CodecSpec,
+    base: Option<&CodecSpec>,
+    t: u32,
+    sideband: bool,
+) {
+    assert_correcting_codec_in(default_registry(), spec, base, t, sideband);
+}
+
+/// [`assert_correcting_codec`] against an explicit registry.
+pub fn assert_correcting_codec_in(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+    base: Option<&CodecSpec>,
+    t: u32,
+    sideband: bool,
+) {
+    if let Err(msg) = check_correcting_codec(registry, spec, base, t, sideband) {
+        panic!(
+            "correcting codec {:?} ({}) failed conformance: {msg}",
+            spec.scheme,
+            spec.label()
+        );
+    }
+}
+
+/// Non-panicking correcting-codec harness: the five base laws plus
+/// laws 6–8 (exact correction inside the `t`-error budget, check-bit
+/// energy accounting, clean-channel equivalence with `base`).
+pub fn check_correcting_codec(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+    base: Option<&CodecSpec>,
+    t: u32,
+    sideband: bool,
+) -> Result<(), String> {
+    check_codec_conforms(registry, spec)?;
+    correction_is_exact(registry, spec, t)?;
+    check_bits_are_paid_for(registry, spec, sideband)?;
+    if let Some(base) = base {
+        clean_channel_matches_base(registry, spec, base)?;
+    }
     Ok(())
 }
 
@@ -271,6 +339,141 @@ fn unknown_knobs_are_rejected(spec: &CodecSpec) -> Result<(), String> {
     Ok(())
 }
 
+/// Law 6: flip `t` data bits per word — one per beat, so every flip is
+/// inside a SECDED/Hamming codeword's single-error budget — on an
+/// all-approximate stream and require the decoder to undo every one,
+/// with `take_corrections()` reporting exactly the flips applied.
+/// Zero-skip wires are left untouched: their payload rides the
+/// hardened outcome flag, not the data lines.
+fn correction_is_exact(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+    t: u32,
+) -> Result<(), String> {
+    if t == 0 {
+        return Ok(()); // detect-only scheme: nothing to correct
+    }
+    let words = stream(23);
+    let mut faulty = build(registry, spec)?;
+    let mut clean = build(registry, spec)?;
+    let mut expected_flips = 0u64;
+    for (i, &w) in words.iter().enumerate() {
+        let wire = clean.encoder.encode(w, true);
+        let mut dirty = faulty.encoder.encode(w, true);
+        if dirty.outcome != Outcome::ZeroSkip {
+            for j in 0..t {
+                let beat = (i as u32 + j) % 8;
+                let line = (i as u32 / 7 + 3 * j) % 8;
+                dirty.data ^= 1u64 << (8 * beat + line);
+                expected_flips += 1;
+            }
+        }
+        let want = clean.decoder.decode(&wire);
+        let got = faulty.decoder.decode(&dirty);
+        if got != want {
+            return Err(format!(
+                "word {i} ({w:#018x}): {t} in-budget flips were not \
+                 corrected (got {got:#018x}, clean channel {want:#018x})"
+            ));
+        }
+    }
+    let counts = faulty.decoder.take_corrections();
+    if counts.corrected_bits != expected_flips {
+        return Err(format!(
+            "corrected_bits miscounted: {} reported for {expected_flips} \
+             injected flips",
+            counts.corrected_bits
+        ));
+    }
+    if faulty.decoder.take_corrections() != CorrectionCounts::default() {
+        return Err(
+            "take_corrections() did not drain: a second call returned \
+             nonzero counts"
+                .into(),
+        );
+    }
+    if clean.decoder.take_corrections() != CorrectionCounts::default() {
+        return Err(
+            "clean channel reported corrections with no injected errors"
+                .into(),
+        );
+    }
+    Ok(())
+}
+
+/// Law 7: every check bit the scheme drives shows up in
+/// `total_ones()` — resilience costs termination energy — and the
+/// scheme uses exactly its declared band: sideband schemes must drive
+/// `ecc_line`, in-band schemes must leave it untouched.
+fn check_bits_are_paid_for(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+    sideband: bool,
+) -> Result<(), String> {
+    let words = stream(29);
+    let approx = flags(29);
+    let mut codec = build(registry, spec)?;
+    let mut sideband_ones = 0u64;
+    for (i, (&w, &a)) in words.iter().zip(&approx).enumerate() {
+        let wire = codec.encoder.encode(w, a);
+        let mut bare = wire;
+        bare.ecc_line = 0;
+        let check_ones = wire.ecc_line.count_ones();
+        if wire.total_ones() != bare.total_ones() + check_ones {
+            return Err(format!(
+                "word {i}: {check_ones} check bits not charged to \
+                 termination ({} total vs {} bare)",
+                wire.total_ones(),
+                bare.total_ones()
+            ));
+        }
+        sideband_ones += u64::from(check_ones);
+        codec.decoder.decode(&wire);
+    }
+    if sideband && sideband_ones == 0 {
+        return Err(
+            "scheme declared a check sideband but never drove a check bit \
+             across the whole stream"
+                .into(),
+        );
+    }
+    if !sideband && sideband_ones != 0 {
+        return Err(format!(
+            "scheme declared in-band redundancy but drove {sideband_ones} \
+             sideband check bits"
+        ));
+    }
+    Ok(())
+}
+
+/// Law 8: on a fault-free channel the correcting variant is
+/// transparent — it decodes the mixed-criticality stream to exactly
+/// the words its declared base scheme produces.
+fn clean_channel_matches_base(
+    registry: &CodecRegistry,
+    spec: &CodecSpec,
+    base: &CodecSpec,
+) -> Result<(), String> {
+    let words = stream(31);
+    let approx = flags(31);
+    let mut wrapped = build(registry, spec)?;
+    let mut plain = build(registry, base)?;
+    for (i, (&w, &a)) in words.iter().zip(&approx).enumerate() {
+        let wire = wrapped.encoder.encode(w, a);
+        let got = wrapped.decoder.decode(&wire);
+        let wire = plain.encoder.encode(w, a);
+        let want = plain.decoder.decode(&wire);
+        if got != want {
+            return Err(format!(
+                "word {i} ({w:#018x}, approx={a}): clean-channel decode \
+                 {got:#018x} != base {} decode {want:#018x}",
+                base.label()
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +496,61 @@ mod tests {
         ] {
             assert_codec_conforms(&spec);
         }
+    }
+
+    #[test]
+    fn secded_sideband_corrects_two_flips_in_distinct_beats() {
+        assert_correcting_codec(
+            &CodecSpec::named("SECDED"),
+            Some(&CodecSpec::named("ORG")),
+            2,
+            true,
+        );
+    }
+
+    #[test]
+    fn parity_sideband_is_detect_only_but_transparent() {
+        assert_correcting_codec(
+            &CodecSpec::named("PARITY"),
+            Some(&CodecSpec::named("ORG")),
+            0,
+            true,
+        );
+    }
+
+    #[test]
+    fn eden_truncation_corrects_in_band() {
+        // Lossy by design (low nibbles sacrificed), so no base to match;
+        // the Hamming(7,4)+P codewords ride the data beats, not a
+        // sideband.
+        assert_correcting_codec(&CodecSpec::named("EDEN"), None, 2, false);
+    }
+
+    #[test]
+    fn ecc_wrappers_correct_one_flip_and_match_their_base() {
+        for base in ["ORG", "DBI", "BDE_ORG", "BDE", "OHE"] {
+            assert_correcting_codec(
+                &CodecSpec::named(&format!("ECC+{base}")),
+                Some(&CodecSpec::named(base)),
+                1,
+                true,
+            );
+        }
+    }
+
+    #[test]
+    fn correction_law_catches_a_codec_that_ignores_errors() {
+        // ORG never corrects anything: a single flip must surface as a
+        // law-6 violation, proving the harness has teeth.
+        let err = check_correcting_codec(
+            default_registry(),
+            &CodecSpec::named("ORG"),
+            None,
+            1,
+            false,
+        )
+        .unwrap_err();
+        assert!(err.contains("not"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! Per-workload BER budget derivation: for each workload, walk a
+//! memory technology's reliability ladder (EDEN's DRAM voltage bins,
+//! the approximate-MRAM retention bins) from the error-free rung
+//! toward the aggressive ones and report the **max tolerable bin** —
+//! the deepest rung whose end-to-end quality loss stays inside a fixed
+//! cap under the chosen codec. Correcting codecs (SECDED, `ECC+<base>`)
+//! push the tolerable bin deeper than their uncorrected bases; the
+//! table this emits (merged into `BENCH_system.json` under `"budget"`)
+//! is the artifact that shows by how much.
+//!
+//! Two fidelities:
+//!
+//! * **proxy** ([`derive_budgets`]) — quality is the trace-level
+//!   `1 - MAE/255` of each workload's own input corpus reconstructed
+//!   through a [`Session`]; no model training, runs in milliseconds.
+//! * **full** ([`derive_budgets_full`]) — quality is the paper's
+//!   quality ratio from [`Suite::eval_under`] (trained models, PJRT
+//!   runtime required).
+
+use anyhow::Result;
+
+use crate::datasets;
+use crate::encoding::CodecSpec;
+use crate::faults::{FaultProfile, FaultSpec, MramBin};
+use crate::session::{Session, Trace, TrafficClass};
+use crate::util::json_lite::{num, obj, s, Json};
+use crate::util::table::{f, TextTable};
+
+use super::{Kind, Suite};
+
+/// One rung of a technology's reliability ladder.
+#[derive(Clone, Debug)]
+pub struct Rung {
+    /// Fault label, e.g. `vdd1050mV` / `mramWeak`.
+    pub label: String,
+    /// Raw per-bit BER of the rung (before lane weighting).
+    pub ber: f64,
+    pub spec: FaultSpec,
+}
+
+/// The EDEN DRAM voltage ladder, nominal (error-free) first, BER
+/// ascending.
+pub fn dram_ladder() -> Vec<Rung> {
+    FaultProfile::ladder()
+        .iter()
+        .map(|&(mv, ber)| {
+            let spec = FaultSpec::voltage(mv);
+            Rung {
+                label: spec.label(),
+                ber,
+                spec,
+            }
+        })
+        .collect()
+}
+
+/// The approximate-MRAM retention ladder, reliable first, BER
+/// ascending.
+pub fn mram_ladder() -> Vec<Rung> {
+    MramBin::ALL
+        .iter()
+        .map(|&bin| {
+            let spec = FaultSpec::mram(bin);
+            Rung {
+                label: spec.label(),
+                ber: bin.base_ber(),
+                spec,
+            }
+        })
+        .collect()
+}
+
+/// What to derive budgets for.
+#[derive(Clone, Debug)]
+pub struct BudgetSpec {
+    pub codec: CodecSpec,
+    /// Max tolerable quality loss (`1 - quality`), e.g. `1e-4`.
+    pub cap: f64,
+    pub seed: u64,
+    pub channels: usize,
+    pub workloads: Vec<Kind>,
+}
+
+impl BudgetSpec {
+    pub fn new(codec: CodecSpec, cap: f64) -> BudgetSpec {
+        BudgetSpec {
+            codec,
+            cap,
+            seed: 42,
+            channels: 1,
+            workloads: Kind::all().to_vec(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.codec.validate()?;
+        anyhow::ensure!(
+            self.cap.is_finite() && (0.0..=1.0).contains(&self.cap),
+            "quality-loss cap must be in [0, 1], got {}",
+            self.cap
+        );
+        anyhow::ensure!(!self.workloads.is_empty(), "empty workload list");
+        Ok(())
+    }
+}
+
+/// One (workload × technology) row of the budget table.
+#[derive(Clone, Debug)]
+pub struct BudgetRow {
+    pub workload: String,
+    /// `"dram"` or `"mram"`.
+    pub technology: &'static str,
+    /// Deepest rung inside the cap; `None` when even the error-free
+    /// rung misses it (the codec's own approximation overruns the cap).
+    pub max_bin: Option<String>,
+    /// BER of that rung (0.0 when `max_bin` is `None`).
+    pub max_tolerable_ber: f64,
+    /// Quality at that rung (or at the error-free rung when `None`).
+    pub quality_at_max: f64,
+}
+
+/// The full budget table for one codec.
+#[derive(Clone, Debug)]
+pub struct BudgetReport {
+    pub codec: String,
+    pub cap: f64,
+    /// `"proxy"` or `"full"`.
+    pub mode: &'static str,
+    pub rows: Vec<BudgetRow>,
+}
+
+impl BudgetReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("codec", s(&self.codec)),
+            ("quality_loss_cap", num(self.cap)),
+            ("mode", s(self.mode)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("workload", s(&r.workload)),
+                                ("technology", s(r.technology)),
+                                (
+                                    "max_bin",
+                                    r.max_bin.as_deref().map_or(Json::Null, s),
+                                ),
+                                ("max_tolerable_ber", num(r.max_tolerable_ber)),
+                                ("quality_at_max", num(r.quality_at_max)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable table, one row per (workload × technology).
+    pub fn render_table(&self) -> String {
+        let mut t = TextTable::new(&["workload", "tech", "max bin", "max BER", "quality"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.workload.clone(),
+                r.technology.into(),
+                r.max_bin.clone().unwrap_or_else(|| "(none)".into()),
+                format!("{:.0e}", r.max_tolerable_ber),
+                f(r.quality_at_max, 4),
+            ]);
+        }
+        format!(
+            "BER budgets for {} at quality-loss cap {:.1e} ({} mode)\n{}",
+            self.codec,
+            self.cap,
+            self.mode,
+            t.render()
+        )
+    }
+
+    /// Read-modify-write a `BENCH_system.json`-shaped file: set the
+    /// `"budget"` key, preserving any sweep scenarios already there.
+    /// Creates the file as `{"budget": ...}` when absent.
+    pub fn merge_into(&self, path: &str) -> Result<()> {
+        let mut root = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing existing {path}: {e}"))?,
+            Err(_) => Json::Obj(Default::default()),
+        };
+        match &mut root {
+            Json::Obj(m) => {
+                m.insert("budget".into(), self.to_json());
+            }
+            other => anyhow::bail!("{path} is not a JSON object, got {other:?}"),
+        }
+        std::fs::write(path, root.to_pretty() + "\n")?;
+        eprintln!("budget table -> {path} (key \"budget\")");
+        Ok(())
+    }
+}
+
+/// Stable per-kind seed offset so proxy corpora don't depend on the
+/// order workloads are listed in.
+fn kind_index(kind: Kind) -> u64 {
+    Kind::all().iter().position(|&k| k == kind).unwrap() as u64
+}
+
+/// A model-free stand-in corpus for each workload: the same dataset
+/// family its full evaluation reconstructs, sized for millisecond
+/// sweeps.
+fn proxy_trace(kind: Kind, seed: u64) -> Vec<u8> {
+    let seed = seed ^ (0xB0D6 + kind_index(kind));
+    let images = match kind {
+        Kind::ImageNet | Kind::ResNet => datasets::synth_images(12, seed),
+        Kind::Quant => datasets::kodak_like(2, 64, 64, seed),
+        Kind::Eigen => datasets::faces_split(8, 4, 4, seed).1,
+        Kind::Svm => datasets::fmnist_like(48, seed),
+    };
+    images.into_iter().flat_map(|i| i.data).collect()
+}
+
+/// Trace-level quality proxy (`1 - MAE/255`) of `trace` reconstructed
+/// through the codec under one fault model.
+fn trace_quality(
+    codec: &CodecSpec,
+    faults: &FaultSpec,
+    trace: &[u8],
+    channels: usize,
+) -> Result<f64> {
+    let out = Session::builder()
+        .codec(codec.clone())
+        .channels(channels)
+        .traffic(TrafficClass::Approximate)
+        .faults(*faults)
+        .build()?
+        .run(&Trace::from_bytes(trace.to_vec()))?;
+    let mae = trace
+        .iter()
+        .zip(&out.bytes)
+        .map(|(&a, &b)| (a as f64 - b as f64).abs())
+        .sum::<f64>()
+        / trace.len().max(1) as f64;
+    Ok(1.0 - mae / 255.0)
+}
+
+/// Walk one ladder (BER ascending), returning the deepest rung whose
+/// quality loss stays inside the cap. The walk stops at the first
+/// failing rung: tolerating a deeper bin but not a shallower one is
+/// not a budget a DRAM/MRAM controller can act on.
+fn walk_ladder(
+    ladder: &[Rung],
+    cap: f64,
+    mut quality_of: impl FnMut(&FaultSpec) -> Result<f64>,
+) -> Result<(Option<String>, f64, f64)> {
+    let mut best: Option<(String, f64, f64)> = None;
+    let mut first_quality = 1.0;
+    for (i, rung) in ladder.iter().enumerate() {
+        let q = quality_of(&rung.spec)?;
+        if i == 0 {
+            first_quality = q;
+        }
+        if 1.0 - q <= cap {
+            best = Some((rung.label.clone(), rung.ber, q));
+        } else {
+            break;
+        }
+    }
+    Ok(match best {
+        Some((label, ber, q)) => (Some(label), ber, q),
+        None => (None, 0.0, first_quality),
+    })
+}
+
+fn derive_with(
+    spec: &BudgetSpec,
+    mode: &'static str,
+    mut quality_of: impl FnMut(Kind, &FaultSpec) -> Result<f64>,
+) -> Result<BudgetReport> {
+    spec.validate()?;
+    let mut rows = Vec::new();
+    for &kind in &spec.workloads {
+        for (technology, ladder) in [("dram", dram_ladder()), ("mram", mram_ladder())] {
+            let (max_bin, max_tolerable_ber, quality_at_max) =
+                walk_ladder(&ladder, spec.cap, |f| quality_of(kind, f))?;
+            rows.push(BudgetRow {
+                workload: kind.label().to_string(),
+                technology,
+                max_bin,
+                max_tolerable_ber,
+                quality_at_max,
+            });
+        }
+    }
+    Ok(BudgetReport {
+        codec: spec.codec.label(),
+        cap: spec.cap,
+        mode,
+        rows,
+    })
+}
+
+/// Derive the budget table in proxy mode: quality is the trace-level
+/// reconstruction quality of each workload's stand-in corpus. No
+/// runtime or training required.
+pub fn derive_budgets(spec: &BudgetSpec) -> Result<BudgetReport> {
+    spec.validate()?;
+    // One corpus per workload, reused across every rung of both
+    // ladders so rungs differ only in the fault model.
+    let traces: Vec<(Kind, Vec<u8>)> = spec
+        .workloads
+        .iter()
+        .map(|&k| (k, proxy_trace(k, spec.seed)))
+        .collect();
+    derive_with(spec, "proxy", |kind, faults| {
+        let trace = &traces.iter().find(|(k, _)| *k == kind).unwrap().1;
+        trace_quality(&spec.codec, faults, trace, spec.channels)
+    })
+}
+
+/// Derive the budget table in full mode: quality is the paper's
+/// quality ratio from the trained workload [`Suite`].
+pub fn derive_budgets_full(suite: &Suite, spec: &BudgetSpec) -> Result<BudgetReport> {
+    derive_with(spec, "full", |kind, faults| {
+        Ok(suite.eval_under(&spec.codec, faults, kind)?.quality)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladders_start_error_free_and_ascend() {
+        for ladder in [dram_ladder(), mram_ladder()] {
+            assert_eq!(ladder[0].ber, 0.0, "{}", ladder[0].label);
+            assert!(ladder[0].spec.is_perfect() || ladder[0].spec.validate().is_ok());
+            for w in ladder.windows(2) {
+                assert!(
+                    w[1].ber > w[0].ber,
+                    "{} ({}) !> {} ({})",
+                    w[1].label,
+                    w[1].ber,
+                    w[0].label,
+                    w[0].ber
+                );
+            }
+        }
+        assert_eq!(dram_ladder()[0].label, "vdd1250mV");
+        assert_eq!(mram_ladder()[4].label, "mramSaturated");
+    }
+
+    #[test]
+    fn lossless_codec_with_loose_cap_tolerates_the_deepest_bins() {
+        let mut spec = BudgetSpec::new(CodecSpec::named("ORG"), 0.4);
+        spec.workloads = vec![Kind::Svm];
+        let report = derive_budgets(&spec).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        let dram = &report.rows[0];
+        assert_eq!(dram.technology, "dram");
+        assert_eq!(dram.max_bin.as_deref(), Some("vdd900mV"));
+        assert!((dram.max_tolerable_ber - 1e-2).abs() < 1e-12);
+        // MRAM saturated inverts every bit of the mostly-dark FMNIST
+        // corpus — far past the cap, so the budget stops at the
+        // aggressive (1e-2) bin, not saturation.
+        let mram = &report.rows[1];
+        assert_eq!(mram.max_bin.as_deref(), Some("mramAggressive"));
+    }
+
+    #[test]
+    fn correction_buys_a_deeper_dram_bin_than_the_uncorrected_base() {
+        // Acceptance: at a tight quality-loss cap the ECC-wrapped codec
+        // tolerates a strictly higher BER bin than its base on at least
+        // the DRAM ladder.
+        let cap = 2e-4;
+        let mut base = BudgetSpec::new(CodecSpec::named("ORG"), cap);
+        base.workloads = vec![Kind::ImageNet];
+        let mut ecc = BudgetSpec::new(CodecSpec::named("ECC+ORG"), cap);
+        ecc.workloads = vec![Kind::ImageNet];
+        let b = derive_budgets(&base).unwrap();
+        let e = derive_budgets(&ecc).unwrap();
+        let b_dram = b.rows.iter().find(|r| r.technology == "dram").unwrap();
+        let e_dram = e.rows.iter().find(|r| r.technology == "dram").unwrap();
+        assert!(
+            e_dram.max_tolerable_ber > b_dram.max_tolerable_ber,
+            "ECC+ORG budget {} must beat ORG {}",
+            e_dram.max_tolerable_ber,
+            b_dram.max_tolerable_ber
+        );
+    }
+
+    #[test]
+    fn report_merges_into_bench_json_preserving_existing_keys() {
+        let mut spec = BudgetSpec::new(CodecSpec::named("ORG"), 0.5);
+        spec.workloads = vec![Kind::Quant];
+        let report = derive_budgets(&spec).unwrap();
+        let path = std::env::temp_dir().join("zac_budget_merge_test.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, "{\"name\": \"sweep\", \"scenarios\": []}\n").unwrap();
+        report.merge_into(path).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        // The sweep keys survive; the budget table landed beside them.
+        assert_eq!(root.get("name").unwrap().as_str().unwrap(), "sweep");
+        let budget = root.get("budget").unwrap();
+        assert_eq!(budget.get("mode").unwrap().as_str().unwrap(), "proxy");
+        let rows = budget.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("workload").unwrap().as_str().unwrap(),
+            "Quant"
+        );
+        assert!(rows[0].get("max_tolerable_ber").unwrap().as_f64().is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn budget_spec_validates_cap_and_workloads() {
+        let spec = BudgetSpec::new(CodecSpec::named("ORG"), 1.5);
+        assert!(spec.validate().is_err());
+        let mut spec = BudgetSpec::new(CodecSpec::named("ORG"), 0.1);
+        spec.workloads.clear();
+        assert!(spec.validate().is_err());
+        assert!(BudgetSpec::new(CodecSpec::named("ORG"), 0.0)
+            .validate()
+            .is_ok());
+    }
+}

@@ -11,10 +11,13 @@
 //! | Eigen (PCA)      | [`Kind::Eigen`]    | identification-accuracy ratio |
 //! | SVM (FMNIST)     | [`Kind::Svm`]      | accuracy ratio |
 
+pub mod budget;
 pub mod cnn;
 pub mod eigen;
 pub mod quant;
 pub mod svm;
+
+pub use budget::{derive_budgets, derive_budgets_full, BudgetReport, BudgetSpec};
 
 use anyhow::Result;
 

@@ -10,7 +10,8 @@ use zac_dest::encoding::{
     WireWord,
 };
 use zac_dest::testkit::{
-    assert_codec_conforms, assert_codec_conforms_in, check_codec_conforms,
+    assert_codec_conforms, assert_codec_conforms_in, assert_correcting_codec,
+    check_codec_conforms, check_correcting_codec,
 };
 
 // --- The out-of-tree fixture from the v2 acceptance, now held to the
@@ -53,6 +54,54 @@ fn all_five_builtin_schemes_conform() {
 #[test]
 fn rot1_fixture_conforms_through_its_registry() {
     assert_codec_conforms_in(&registry_with_rot1(), &CodecSpec::named("ROT1"));
+}
+
+/// Every correcting scheme through the base invariants *and* the
+/// correction laws: exact repair within the budget, check bits charged
+/// (or provably absent), clean channel identical to the base scheme.
+#[test]
+fn all_correcting_schemes_conform() {
+    // Per-beat Hamming: one flip per beat is within budget on any beat.
+    assert_correcting_codec(
+        &CodecSpec::named("SECDED"),
+        Some(&CodecSpec::named("ORG")),
+        2,
+        true,
+    );
+    // Detect-only: a zero correction budget, but still transparent.
+    assert_correcting_codec(
+        &CodecSpec::named("PARITY"),
+        Some(&CodecSpec::named("ORG")),
+        0,
+        true,
+    );
+    // In-band truncation: no base scheme (it is lossy by design) and no
+    // sideband lines to pay for.
+    assert_correcting_codec(&CodecSpec::named("EDEN"), None, 2, false);
+    // The wrapper over every wrappable base: one whole-word flip.
+    for base in ["ORG", "DBI", "BDE_ORG", "BDE", "OHE"] {
+        assert_correcting_codec(
+            &CodecSpec::named(&format!("ECC+{base}")),
+            Some(&CodecSpec::named(base)),
+            1,
+            true,
+        );
+    }
+}
+
+/// A codec that *claims* a sideband but never drives the ECC line must
+/// fail law 7 — check bits have to be paid for in both directions.
+#[test]
+fn undriven_sideband_fails_the_paid_for_law() {
+    let err = check_correcting_codec(
+        default_registry(),
+        &CodecSpec::named("ORG"),
+        None,
+        0,
+        true, // ORG drives no ECC line, so declaring one must fail
+    )
+    .unwrap_err();
+    assert!(err.contains("sideband"), "{err}");
 }
 
 #[test]

@@ -5,7 +5,7 @@
 
 use zac_dest::coordinator::simulate_lines;
 use zac_dest::encoding::CodecSpec;
-use zac_dest::faults::FaultSpec;
+use zac_dest::faults::{FaultSpec, MramBin};
 use zac_dest::session::{Execution, Session, Trace, TrafficClass};
 use zac_dest::system::{synthetic_trace as image_like, ChannelArray};
 use zac_dest::trace::bytes_to_chip_words;
@@ -244,6 +244,134 @@ fn critical_traffic_is_untouched_at_any_channel_count() {
         assert_eq!(report.faults.injected_bits, 0, "x{channels}");
         assert_eq!(report.faults.observed_error_bits, 0, "x{channels}");
     }
+}
+
+#[test]
+fn mram_ber_extremes_are_exact() {
+    // The two degenerate bins are analytically pinned: reliable is
+    // bit-identical to the perfect channel, and saturated (BER 1.0,
+    // polarity 0.5) is a deterministic full inversion — every data bit
+    // of every resilient transfer flips, so an 0xA5 stream comes back
+    // 0x5A with exactly 64 injected bits per word.
+    let n = 100 * 64;
+    let bytes = vec![0xA5u8; n];
+    let trace = Trace::from_bytes(bytes.clone());
+    let spec = CodecSpec::named("ORG");
+
+    let clean = run(&spec, FaultSpec::mram(MramBin::Reliable), Execution::Batch, 1, &trace);
+    assert_eq!(clean.bytes, bytes, "reliable bin corrupted the stream");
+    assert_eq!(clean.faults.injected_bits, 0);
+
+    let sat = run(&spec, FaultSpec::mram(MramBin::Saturated), Execution::Batch, 1, &trace);
+    assert_eq!(sat.faults.injected_bits, (n as u64 / 8) * 64);
+    assert!(sat.bytes.iter().all(|&b| b == 0x5A), "saturated bin is not a full inversion");
+    // Deterministic, so a second run is byte-identical.
+    let again = run(&spec, FaultSpec::mram(MramBin::Saturated), Execution::Batch, 1, &trace);
+    assert_eq!(sat.bytes, again.bytes);
+}
+
+#[test]
+fn mram_polarity_is_the_mirror_of_dram_charge_loss() {
+    // Read disturb dominates MRAM retention loss: only a quarter of
+    // flips are 1->0, so an all-ones stream must see roughly 3x *fewer*
+    // flips than an all-zero stream — the inverse of the DRAM ratio
+    // pinned above.
+    let n = 64 * 1024;
+    let faults = FaultSpec::mram(MramBin::Aggressive).with_seed(19);
+    let ones = run(
+        &CodecSpec::named("ORG"),
+        faults,
+        Execution::Batch,
+        1,
+        &Trace::from_bytes(vec![0xFF; n]),
+    );
+    let zeros = run(
+        &CodecSpec::named("ORG"),
+        faults,
+        Execution::Batch,
+        1,
+        &Trace::from_bytes(vec![0x01; n]), // sparse, never zero-skipped
+    );
+    assert!(ones.faults.injected_bits > 0);
+    assert!(zeros.faults.injected_bits > 0);
+    let ratio = ones.faults.injected_bits as f64 / zeros.faults.injected_bits as f64;
+    // All-ones has 8x the exposed 1-bits of the 0x01 stream, so the
+    // expected ratio is 8 * (p_one / (7 p_zero + p_one)) with
+    // p_one/p_zero = 1/3: about 8 * (1/22) * ... keep it simple and
+    // compare per-polarity rates directly: flips-per-exposed-bit.
+    let ones_rate = ones.faults.injected_bits as f64 / (n as f64 * 8.0);
+    let zeros_rate = zeros.faults.injected_bits as f64 / (n as f64 * 7.0); // 0-bits per 0x01 byte
+    let polarity = ones_rate / zeros_rate;
+    assert!(
+        (0.2..0.5).contains(&polarity),
+        "1->0 / 0->1 per-bit ratio {polarity} far from the 1/3 read-disturb bias (raw ratio {ratio})"
+    );
+}
+
+#[test]
+fn all_critical_traffic_sees_no_mram_injection() {
+    // The hardened-traffic contract holds for the second technology
+    // too, including at the absurd-BER bin.
+    let bytes = image_like(80 * 64, 63);
+    let trace = Trace::from_bytes(bytes.clone());
+    for bin in [MramBin::Weak, MramBin::Saturated] {
+        let report = Session::builder()
+            .codec(CodecSpec::zac(80))
+            .traffic(TrafficClass::Critical)
+            .faults(FaultSpec::mram(bin))
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(report.bytes, bytes, "{bin:?}");
+        assert_eq!(report.faults.injected_bits, 0, "{bin:?}");
+    }
+}
+
+#[test]
+fn mram_injection_is_reproducible_and_shard_decorrelated() {
+    // Same acceptance as the DRAM path: fixed-seed runs are
+    // byte-identical at every channel count, and resharding the array
+    // re-derives per-(shard, chip) seeds, so the corruption pattern
+    // legitimately differs across channel counts while each stays
+    // internally deterministic.
+    let bytes = image_like(200 * 64, 65);
+    let trace = Trace::from_bytes(bytes.clone());
+    let faults = FaultSpec::mram(MramBin::Scaled).with_seed(23);
+    let mut streams = Vec::new();
+    for channels in [1usize, 2, 4] {
+        let a = run(&CodecSpec::named("BDE"), faults, Execution::Sharded, channels, &trace);
+        let b = run(&CodecSpec::named("BDE"), faults, Execution::Sharded, channels, &trace);
+        assert_eq!(a.bytes, b.bytes, "x{channels}: not reproducible");
+        assert_eq!(a.faults, b.faults, "x{channels}");
+        assert!(a.faults.injected_bits > 0, "x{channels}");
+        streams.push(a.bytes);
+    }
+    assert_ne!(streams[0], streams[1], "x1 and x2 shards share a fault stream");
+    assert_ne!(streams[1], streams[2], "x2 and x4 shards share a fault stream");
+}
+
+#[test]
+fn secded_repairs_weak_mram_where_the_bare_scheme_cannot() {
+    // End-to-end correction accounting: under the weak bin's 1e-4 BER
+    // nearly every corrupted beat holds a single flip, so SECDED must
+    // repair almost everything while bare ORG keeps every error — the
+    // session-level view of the sweep acceptance criterion.
+    let bytes = image_like(400 * 64, 67);
+    let trace = Trace::from_bytes(bytes);
+    let faults = FaultSpec::mram(MramBin::Weak).with_seed(29);
+    let bare = run(&CodecSpec::named("ORG"), faults, Execution::Batch, 1, &trace);
+    let ecc = run(&CodecSpec::named("SECDED"), faults, Execution::Batch, 1, &trace);
+    assert!(bare.faults.injected_bits > 0);
+    assert_eq!(bare.faults.corrected_bits, 0);
+    assert_eq!(bare.faults.residual_error_bits, bare.faults.observed_error_bits);
+    assert!(ecc.faults.corrected_bits > 0, "SECDED never repaired a bit");
+    assert!(
+        ecc.faults.residual_error_bits < bare.faults.residual_error_bits,
+        "correction did not shrink the residual: {} vs {}",
+        ecc.faults.residual_error_bits,
+        bare.faults.residual_error_bits
+    );
 }
 
 #[test]

@@ -41,8 +41,19 @@ fn wire(w: &GoldenWire) -> WireWord {
         dbi_mask: w.1,
         index_line: w.2,
         index_used: w.3,
+        ecc_line: 0,
         outcome: w.4,
     }
+}
+
+/// One expected transfer for a correcting scheme: the base fields plus
+/// the hand-derived sideband word on the ECC line.
+type GoldenEccWire = (GoldenWire, u64);
+
+fn ecc_wire(w: &GoldenEccWire) -> WireWord {
+    let mut out = wire(&w.0);
+    out.ecc_line = w.1;
+    out
 }
 
 /// Run the scalar encode/decode path and diff against the fixture with
@@ -68,6 +79,37 @@ fn check(spec: &CodecSpec, golden: &[GoldenWire; 8], decoded: &[u64; 8]) {
             want.dbi_mask,
             want.index_line,
             want.index_used,
+            want.outcome,
+        );
+        let out = codec.decoder.decode(&got);
+        assert_eq!(
+            out, decoded[i],
+            "{} word {i}: decoded {out:#018x}, fixture says {:#018x}",
+            spec.label(),
+            decoded[i]
+        );
+    }
+}
+
+/// The correcting-scheme variant of [`check`]: same diff style, with
+/// the sideband word in the message so a check-bit regression reads as
+/// an ECC-line mismatch rather than an opaque struct diff.
+fn check_ecc(spec: &CodecSpec, golden: &[GoldenEccWire; 8], decoded: &[u64; 8]) {
+    let mut codec = default_registry().build(spec).unwrap();
+    for (i, (&word, want)) in INPUT.iter().zip(golden).enumerate() {
+        let got = codec.encoder.encode(word, true);
+        let want = ecc_wire(want);
+        assert_eq!(
+            got,
+            want,
+            "\n{} word {i} (input {word:#018x}):\n  got  data={:#018x} ecc={:#018x} \
+             outcome={:?}\n  want data={:#018x} ecc={:#018x} outcome={:?}\n",
+            spec.label(),
+            got.data,
+            got.ecc_line,
+            got.outcome,
+            want.data,
+            want.ecc_line,
             want.outcome,
         );
         let out = codec.decoder.decode(&got);
@@ -191,8 +233,95 @@ fn golden_zac_dest_l80() {
     check(&CodecSpec::zac(80), &golden, &decoded);
 }
 
+#[test]
+fn golden_secded() {
+    // Per beat: Hamming checks c0..c3 on sideband bits 8b+0..3 and the
+    // byte's overall parity on 8b+4. Hand values: 0x00 -> 0x00,
+    // 0xFF -> 0x08 (only c3 covers bit 7), 0x01 -> 0x11 (c0 + parity),
+    // 0xF0 -> 0x0C (c2, c3; four ones so parity stays even).
+    let golden: [GoldenEccWire; 8] = [
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W1, 0, 0, false, Outcome::Raw), 0x0800_0000_0000_0000),
+        ((W1, 0, 0, false, Outcome::Raw), 0x0800_0000_0000_0000),
+        ((W3, 0, 0, false, Outcome::Raw), 0x0800_0000_0000_0011),
+        ((W4, 0, 0, false, Outcome::Raw), 0x0000_0000_0000_000C),
+        ((W5, 0, 0, false, Outcome::Raw), 0x0808_0808_0808_0808),
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W7, 0, 0, false, Outcome::Raw), 0x0800_0000_0000_0008),
+    ];
+    check_ecc(&CodecSpec::named("SECDED"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_parity() {
+    // One sideband line: even parity of each byte at bit 8b. Every
+    // stream byte except W3's 0x01 has an even population, so only
+    // word 3 drives the line at all.
+    let golden: [GoldenEccWire; 8] = [
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W1, 0, 0, false, Outcome::Raw), 0),
+        ((W1, 0, 0, false, Outcome::Raw), 0),
+        ((W3, 0, 0, false, Outcome::Raw), 0x0000_0000_0000_0001),
+        ((W4, 0, 0, false, Outcome::Raw), 0),
+        ((W5, 0, 0, false, Outcome::Raw), 0),
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W7, 0, 0, false, Outcome::Raw), 0),
+    ];
+    check_ecc(&CodecSpec::named("PARITY"), &golden, &INPUT);
+}
+
+#[test]
+fn golden_eden() {
+    // In-band truncation: every approximate byte travels as the
+    // Hamming(7,4)+P codeword of its high nibble. encode(0xF) = 0xFF
+    // and encode(0x0) = 0x00, so the dense stream maps onto itself with
+    // low nibbles erased; decode returns `nibble << 4` per byte.
+    let golden: [GoldenEccWire; 8] = [
+        ((0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((0xFF00_0000_0000_0000, 0, 0, false, Outcome::Bde), 0),
+        ((0xFF00_0000_0000_0000, 0, 0, false, Outcome::Bde), 0),
+        // W3's 0x01 low bit is below the truncation floor: gone.
+        ((0xFF00_0000_0000_0000, 0, 0, false, Outcome::Bde), 0),
+        ((0x0000_0000_0000_00FF, 0, 0, false, Outcome::Bde), 0),
+        ((0xFFFF_FFFF_FFFF_FFFF, 0, 0, false, Outcome::Bde), 0),
+        ((0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((0xFF00_0000_0000_00FF, 0, 0, false, Outcome::Bde), 0),
+    ];
+    let decoded: [u64; 8] = [
+        0,
+        0xF000_0000_0000_0000,
+        0xF000_0000_0000_0000,
+        0xF000_0000_0000_0000,
+        W4, // 0xF0's low nibble is already zero: exact
+        0xF0F0_F0F0_F0F0_F0F0,
+        0,
+        0xF000_0000_0000_00F0,
+    ];
+    check_ecc(&CodecSpec::named("EDEN"), &golden, &decoded);
+}
+
+#[test]
+fn golden_ecc_org() {
+    // SECDED(72,64) over the (raw) ORG wire: whole-word checks c0..c6
+    // at bits 8k, overall parity at bit 56. Hand-derived from the
+    // column code (data bit i carries column i+1): the top byte's
+    // columns 57..64 light c3..c6, bit 0 adds c0 and flips the overall
+    // parity, and all-ones cancels every check except c6 (column 64).
+    let golden: [GoldenEccWire; 8] = [
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W1, 0, 0, false, Outcome::Raw), 0x0001_0101_0100_0000),
+        ((W1, 0, 0, false, Outcome::Raw), 0x0001_0101_0100_0000),
+        ((W3, 0, 0, false, Outcome::Raw), 0x0101_0101_0100_0001),
+        ((W4, 0, 0, false, Outcome::Raw), 0x0000_0000_0101_0000),
+        ((W5, 0, 0, false, Outcome::Raw), 0x0001_0000_0000_0000),
+        ((W0, 0, 0, false, Outcome::ZeroSkip), 0),
+        ((W7, 0, 0, false, Outcome::Raw), 0x0001_0101_0000_0000),
+    ];
+    check_ecc(&CodecSpec::named("ECC+ORG"), &golden, &INPUT);
+}
+
 /// The fixtures themselves round-trip: every exact scheme's decoded
-/// fixture is the input, and the wire helper preserves the fields.
+/// fixture is the input, and the wire helpers preserve the fields.
 #[test]
 fn golden_fixture_sanity() {
     let g: GoldenWire = (0xAB, 0x01, 2, true, Outcome::Bde);
@@ -201,5 +330,9 @@ fn golden_fixture_sanity() {
     assert_eq!(w.dbi_mask, 0x01);
     assert_eq!(w.index_line, 2);
     assert!(w.index_used);
+    assert_eq!(w.ecc_line, 0);
     assert_eq!(w.outcome, Outcome::Bde);
+    let e = ecc_wire(&(g, 0x55));
+    assert_eq!(e.ecc_line, 0x55);
+    assert_eq!(e.data, 0xAB);
 }
