@@ -158,5 +158,20 @@ fn main() -> anyhow::Result<()> {
     );
     // (The hit-rate advantage is pinned by rust/tests/address.rs on the
     // canonical synthetic trace; this demo just shows the comparison.)
+
+    // Telemetry: the same run with the metrics registry on — per-stage
+    // drive-loop timings, mailbox backpressure and per-chunk service
+    // latency, at zero cost when off (no clock reads on the hot path).
+    // CLI: `zac-dest encode --channels 2 --metrics-out metrics.json`,
+    // or `ZAC_METRICS=1` on any run.
+    let timed = Session::builder()
+        .codec(spec.clone())
+        .channels(2)
+        .traffic(TrafficClass::Approximate)
+        .telemetry(true)
+        .build()?
+        .run(&trace)?;
+    let snap = timed.telemetry.expect("telemetry was requested");
+    println!("\n{}", snap.render_table());
     Ok(())
 }

@@ -33,11 +33,13 @@ pub mod config;
 pub use config::RunConfig;
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::faults::{FaultSpec, FaultStats};
+use crate::obs::StageSet;
 use crate::trace::{
     bytes_to_chip_words, chip_words_to_bytes, gather_chip_lane, ChipWords, LineChunk,
 };
@@ -97,6 +99,7 @@ pub fn simulate_lines_per_chip(
         approx,
         byte_len,
         &FaultSpec::perfect(),
+        None,
     )
 }
 
@@ -112,6 +115,7 @@ pub(crate) fn drive_lines(
     approx: bool,
     byte_len: usize,
     fault_spec: &FaultSpec,
+    stages: Option<Arc<StageSet>>,
 ) -> RunOutput {
     assert_eq!(codecs.len(), CHIPS);
     let chips: Vec<(usize, Codec, Box<dyn crate::faults::FaultModel>)> = codecs
@@ -119,8 +123,11 @@ pub(crate) fn drive_lines(
         .enumerate()
         .map(|(j, codec)| (j, codec, fault_spec.build(0, j)))
         .collect();
-    let results = crate::util::par::par_map(chips, CHIPS, |(j, codec, faults)| {
+    let results = crate::util::par::par_map(chips, CHIPS, move |(j, codec, faults)| {
         let mut lane = ChipLane::with_faults(codec, lines.len(), faults);
+        if let Some(set) = &stages {
+            lane.instrument(set.clone());
+        }
         let mut words = [0u64; ENCODE_BATCH];
         let flags = [approx; ENCODE_BATCH];
         for chunk in lines.chunks(ENCODE_BATCH) {
@@ -257,16 +264,32 @@ impl Pipeline {
         capacity: usize,
         fault_spec: &FaultSpec,
     ) -> Pipeline {
+        Self::with_codecs_faults_and_stages(codecs, capacity, fault_spec, None)
+    }
+
+    /// Fully-general constructor: like
+    /// [`with_codecs_and_faults`](Self::with_codecs_and_faults), with
+    /// an optional telemetry stage set shared by the chip workers.
+    pub fn with_codecs_faults_and_stages(
+        codecs: Vec<Codec>,
+        capacity: usize,
+        fault_spec: &FaultSpec,
+        stages: Option<Arc<StageSet>>,
+    ) -> Pipeline {
         assert_eq!(codecs.len(), CHIPS, "pipeline needs one codec per chip");
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
         let mut senders = Vec::with_capacity(CHIPS);
         let mut workers = Vec::with_capacity(CHIPS);
         for (j, codec) in codecs.into_iter().enumerate() {
             let faults = fault_spec.build(0, j);
+            let stages = stages.clone();
             let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
                 sync_channel(chunk_capacity);
             workers.push(std::thread::spawn(move || {
                 let mut lane = ChipLane::with_faults(codec, 0, faults);
+                if let Some(set) = stages {
+                    lane.instrument(set);
+                }
                 while let Ok(chunk) = rx.recv() {
                     lane.drive_chunk(j, &chunk);
                 }

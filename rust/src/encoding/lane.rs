@@ -25,8 +25,11 @@
 //! criticality-partitioned tables (a future fault-aware codec family;
 //! see ROADMAP).
 
+use std::sync::Arc;
+
 use crate::channel::{ChipChannel, EnergyCounts};
 use crate::faults::{FaultModel, FaultStats, PerfectChannel};
+use crate::obs::{Stage, StageClock, StageSet};
 use crate::trace::LineChunk;
 
 use super::registry::Codec;
@@ -39,7 +42,8 @@ use super::ENCODE_BATCH;
 /// `faults` to the wire for approximate words. `wires` must hold at
 /// least `min(words.len(), ENCODE_BATCH)` slots; decoded words append
 /// to `out`; injection and end-to-end error counts accumulate into
-/// `fstats`.
+/// `fstats`. When `stages` is `Some`, per-stage wall time accumulates
+/// into it (one clock read per stage boundary); `None` costs nothing.
 #[allow(clippy::too_many_arguments)]
 pub fn drive_batches(
     codec: &mut Codec,
@@ -51,15 +55,19 @@ pub fn drive_batches(
     approx: &[bool],
     wires: &mut [WireWord],
     out: &mut Vec<u64>,
+    stages: Option<&StageSet>,
 ) {
     assert_eq!(words.len(), approx.len());
     assert!(wires.len() >= words.len().min(ENCODE_BATCH));
     let active = faults.is_active();
     for (wc, ac) in words.chunks(ENCODE_BATCH).zip(approx.chunks(ENCODE_BATCH)) {
+        let mut clock = StageClock::start(stages);
         let buf = &mut wires[..wc.len()];
         codec.encoder.encode_batch(wc, ac, buf);
+        clock.lap(Stage::Encode);
         chan.transmit_batch(buf);
         stats.record_batch(buf, wc);
+        clock.lap(Stage::Transmit);
         if active {
             // Wire-level injection: the energy above reflects the true
             // bits; only what the receiver senses is corrupted, and
@@ -74,6 +82,7 @@ pub fn drive_batches(
                 }
             }
         }
+        clock.lap(Stage::Inject);
         let start = out.len();
         codec.decoder.decode_batch(buf, out);
         let mask = codec.decoder.resilience_mask();
@@ -92,6 +101,10 @@ pub fn drive_batches(
         fstats.corrected_bits += corrections.corrected_bits;
         fstats.detected_bits += corrections.detected_bits;
         fstats.words += wc.len() as u64;
+        clock.lap(Stage::Decode);
+        if let Some(set) = stages {
+            set.add_batch();
+        }
     }
 }
 
@@ -106,6 +119,9 @@ pub struct ChipLane {
     fstats: FaultStats,
     decoded: Vec<u64>,
     wires: [WireWord; ENCODE_BATCH],
+    /// Telemetry sink; `None` (the default) keeps the drive loop free
+    /// of clock reads.
+    stages: Option<Arc<StageSet>>,
 }
 
 impl ChipLane {
@@ -131,7 +147,15 @@ impl ChipLane {
             fstats: FaultStats::default(),
             decoded: Vec::with_capacity(nwords),
             wires: [WireWord::raw(0); ENCODE_BATCH],
+            stages: None,
         }
+    }
+
+    /// Attach a telemetry stage set: subsequent drives charge
+    /// per-stage wall time to it. Several lanes (the 8 chips of one
+    /// shard) may share one set.
+    pub fn instrument(&mut self, stages: Arc<StageSet>) {
+        self.stages = Some(stages);
     }
 
     /// Encode → transmit → record → inject → decode a run of words
@@ -147,6 +171,7 @@ impl ChipLane {
             approx,
             &mut self.wires,
             &mut self.decoded,
+            self.stages.as_deref(),
         );
     }
 
@@ -160,8 +185,10 @@ impl ChipLane {
         let mut pos = 0;
         while pos < chunk.len() {
             let n = (chunk.len() - pos).min(ENCODE_BATCH);
+            let mut clock = StageClock::start(self.stages.as_deref());
             chunk.gather_chip(chip, pos, &mut words[..n]);
             chunk.fill_approx(pos, &mut flags[..n]);
+            clock.lap(Stage::Gather);
             self.drive(&words[..n], &flags[..n]);
             pos += n;
         }
@@ -281,6 +308,33 @@ mod tests {
             assert_eq!(wc, ic);
             assert_eq!(ws, is_);
         }
+    }
+
+    #[test]
+    fn instrumented_lane_is_bit_identical_and_records_stages() {
+        use crate::obs::StageSet;
+        let mut r = seeded_rng(81);
+        let words: Vec<u64> = (0..3 * ENCODE_BATCH + 11).map(|_| r.next_u64()).collect();
+        let approx = vec![true; words.len()];
+        let spec = CodecSpec::from_config(&ZacConfig::zac_full(80, 1, 1));
+        let build = || default_registry().build(&spec).unwrap();
+
+        let mut plain = ChipLane::with_capacity(build(), words.len());
+        plain.drive(&words, &approx);
+        let (want_dec, want_counts, want_stats, want_f) = plain.finish();
+
+        let set = Arc::new(StageSet::default());
+        let mut timed = ChipLane::with_capacity(build(), words.len());
+        timed.instrument(set.clone());
+        timed.drive(&words, &approx);
+        let (dec, counts, stats, fstats) = timed.finish();
+        assert_eq!(dec, want_dec);
+        assert_eq!(counts, want_counts);
+        assert_eq!(stats, want_stats);
+        assert_eq!(fstats, want_f);
+        // 4 batches (3 full + the 11-word tail), each timed.
+        assert_eq!(set.batches(), 4);
+        assert!(set.ns(Stage::Encode) > 0 || set.ns(Stage::Transmit) > 0);
     }
 
     #[test]

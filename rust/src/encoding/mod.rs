@@ -181,6 +181,7 @@ pub fn run_chip_stream(
         approx,
         &mut wires,
         &mut out,
+        None,
     );
     out
 }

@@ -12,7 +12,7 @@
 //!   overhead model ([`circuits`]), the [`coordinator`] and multi-channel
 //!   [`system`] execution engines, and the unified [`session`] API
 //!   (`Session::builder()` over every simulate path — see
-//!   `ARCHITECTURE.md`).
+//!   `ARCHITECTURE.md`), plus the runtime telemetry layer ([`obs`]).
 //! * **Layer 2** — JAX compute graphs for the five evaluation workloads,
 //!   AOT-lowered to HLO text in `artifacts/` and executed through
 //!   [`runtime`] (PJRT CPU client; python never runs on the request path).
@@ -29,6 +29,7 @@ pub mod datasets;
 pub mod encoding;
 pub mod faults;
 pub mod figures;
+pub mod obs;
 pub mod quality;
 pub mod runtime;
 pub mod session;

@@ -68,7 +68,13 @@ fn app() -> Command {
                     "faults",
                     "perfect",
                     "fault model: perfect | uniform:<ber>[:<frac>] | voltage:<mV> | mram:<bin> (suffix @<seed>)",
-                ),
+                )
+                .opt(
+                    "metrics-out",
+                    "-",
+                    "telemetry JSON path ('-' = skip; implies telemetry)",
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
         )
         .subcommand(Command::new("schemes", "list the registered codec schemes"))
         .subcommand(
@@ -107,6 +113,11 @@ fn app() -> Command {
                     "address axis, e.g. round_robin,steer (overrides spec)",
                 )
                 .opt("out", "BENCH_system.json", "JSON report path ('-' = skip)")
+                .opt(
+                    "metrics-out",
+                    "-",
+                    "telemetry JSON path ('-' = skip; implies telemetry)",
+                )
                 .env(
                     "ZAC_CHANNELS",
                     "default channel counts for sweep + e2e example (comma-separated)",
@@ -114,7 +125,8 @@ fn app() -> Command {
                 .env(
                     "ZAC_BENCH_BYTES",
                     "default trace size in bytes for sweep + bench smokes",
-                ),
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
         )
         .subcommand(
             Command::new("budget", "per-workload max tolerable BER bin at a quality-loss cap")
@@ -133,7 +145,13 @@ fn app() -> Command {
                     "out",
                     "BENCH_system.json",
                     "merge table under key 'budget' ('-' = skip)",
-                ),
+                )
+                .opt(
+                    "metrics-out",
+                    "-",
+                    "telemetry JSON path ('-' = skip; implies telemetry)",
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
         )
         .subcommand(Command::new("circuit", "§VI circuit overhead report").opt(
             "vectors",
@@ -348,12 +366,15 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64)
     };
     let trace = Trace::from_bytes(bytes);
+    let metrics_out = m.get_or("metrics-out", "-");
+    let telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
     let session = Session::builder()
         .codec(spec.clone())
         .channels(channels)
         .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .faults(faults)
+        .telemetry(telemetry)
         .build()?;
     let t0 = std::time::Instant::now();
     let out = session.run(&trace)?;
@@ -394,7 +415,16 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
         println!("{}", out.quality_delta());
     }
     if channels > 1 {
+        // The sharded render already carries the telemetry section.
         println!("\n{}", out.render());
+    } else if let Some(t) = &out.telemetry {
+        println!("\n{}", t.render_table());
+    }
+    if let Some(t) = &out.telemetry {
+        if metrics_out != "-" {
+            zac_dest::util::json_lite::write_file(metrics_out, &t.to_json())?;
+            eprintln!("metrics -> {metrics_out}");
+        }
     }
     Ok(())
 }
@@ -445,6 +475,12 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if !address_flag.is_empty() {
         spec.address = AddressSpec::parse_list(address_flag)?;
     }
+    // `--metrics-out` or `ZAC_METRICS=1` turn telemetry on; a spec with
+    // `telemetry = true` keeps it on even without either.
+    let metrics_out = m.get_or("metrics-out", "-");
+    if metrics_out != "-" || zac_dest::obs::metrics_from_env()? {
+        spec.telemetry = true;
+    }
     let trace = synthetic_trace(spec.bytes, spec.seed);
     eprintln!(
         "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}, address {:?}",
@@ -460,6 +496,9 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let out = m.get_or("out", "BENCH_system.json");
     if out != "-" {
         report.write_json(out)?;
+    }
+    if metrics_out != "-" {
+        report.write_metrics(metrics_out)?;
     }
     Ok(())
 }
@@ -493,6 +532,8 @@ fn cmd_budget(m: &zac_dest::util::cli::Matches) -> Result<()> {
     bspec.seed = m.get_usize("seed")? as u64;
     bspec.channels = m.get_usize("channels")?;
     bspec.workloads = parse_workload_list(m.get_or("workloads", "imagenet,resnet,quant,eigen,svm"))?;
+    let metrics_out = m.get_or("metrics-out", "-");
+    bspec.telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
     let report = match m.get_or("mode", "proxy") {
         "proxy" => derive_budgets(&bspec)?,
         "full" => {
@@ -510,6 +551,9 @@ fn cmd_budget(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let out = m.get_or("out", "BENCH_system.json");
     if out != "-" {
         report.merge_into(out)?;
+    }
+    if metrics_out != "-" {
+        report.write_metrics(metrics_out)?;
     }
     Ok(())
 }
@@ -582,6 +626,16 @@ mod tests {
             AddressSpec::parse_list(m.get_or("address", "")).unwrap().len(),
             2
         );
+    }
+
+    #[test]
+    fn metrics_out_flag_parses_on_each_subcommand() {
+        for cmd in ["encode", "sweep", "budget"] {
+            let m = matches(&format!("{cmd} --metrics-out M.json"));
+            assert_eq!(m.get_or("metrics-out", "-"), "M.json", "{cmd}");
+            let m = matches(cmd);
+            assert_eq!(m.get_or("metrics-out", "-"), "-", "{cmd}");
+        }
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Core metric primitives: relaxed-atomic counters and gauges, the
+//! pipeline stage taxonomy, and the two timing helpers — a scoped
+//! [`StageTimer`] guard and the lap-style [`StageClock`] used by the
+//! shared drive loop (one `Instant::now` per stage *boundary*, and
+//! none at all when telemetry is off).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+/// Monotone counter (relaxed atomic `u64`).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-value gauge that also tracks its high-water mark.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Relaxed)
+    }
+}
+
+/// The five stages of the shared drive loop in `encoding/lane.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// De-interleave one chip's words out of the line chunk.
+    Gather,
+    /// `encode_batch` through the codec.
+    Encode,
+    /// Channel transfer + energy/outcome accounting.
+    Transmit,
+    /// Fault injection (~0 when no fault model is active).
+    Inject,
+    /// `decode_batch` + error/correction accounting.
+    Decode,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [
+        Stage::Gather,
+        Stage::Encode,
+        Stage::Transmit,
+        Stage::Inject,
+        Stage::Decode,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Gather => "gather",
+            Stage::Encode => "encode",
+            Stage::Transmit => "transmit",
+            Stage::Inject => "inject",
+            Stage::Decode => "decode",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Cumulative nanoseconds per stage plus a batch counter; one per
+/// shard, shared across that shard's eight chip lanes.
+#[derive(Debug, Default)]
+pub struct StageSet {
+    ns: [Counter; 5],
+    batches: Counter,
+}
+
+impl StageSet {
+    pub fn add(&self, stage: Stage, ns: u64) {
+        self.ns[stage.index()].add(ns);
+    }
+
+    pub fn ns(&self, stage: Stage) -> u64 {
+        self.ns[stage.index()].get()
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        Stage::ALL.iter().map(|&s| self.ns(s)).sum()
+    }
+
+    pub fn add_batch(&self) {
+        self.batches.add(1);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.get()
+    }
+
+    /// Scoped timer: charges the elapsed time to `stage` on drop.
+    pub fn timer(&self, stage: Stage) -> StageTimer<'_> {
+        StageTimer {
+            set: self,
+            stage,
+            start: Instant::now(),
+        }
+    }
+}
+
+/// RAII guard from [`StageSet::timer`]; adds the elapsed nanoseconds
+/// to its stage when dropped.
+#[derive(Debug)]
+pub struct StageTimer<'a> {
+    set: &'a StageSet,
+    stage: Stage,
+    start: Instant,
+}
+
+impl Drop for StageTimer<'_> {
+    fn drop(&mut self) {
+        self.set.add(self.stage, self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Lap clock for straight-line stage sequences: `lap(stage)` charges
+/// the time since the previous lap (or `start`) to `stage` with a
+/// single `Instant::now` per boundary. Constructed from an
+/// `Option<&StageSet>` — when `None`, every call is a no-op and no
+/// clock is ever read, which is the telemetry-off overhead contract.
+#[derive(Debug)]
+pub struct StageClock<'a> {
+    at: Option<(Instant, &'a StageSet)>,
+}
+
+impl<'a> StageClock<'a> {
+    pub fn start(set: Option<&'a StageSet>) -> StageClock<'a> {
+        StageClock {
+            at: set.map(|s| (Instant::now(), s)),
+        }
+    }
+
+    pub fn lap(&mut self, stage: Stage) {
+        if let Some((at, set)) = &mut self.at {
+            let now = Instant::now();
+            set.add(stage, now.duration_since(*at).as_nanos() as u64);
+            *at = now;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+
+        let g = Gauge::default();
+        g.set(5);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.max(), 5);
+    }
+
+    /// Busy-wait until the monotonic clock has visibly advanced, so
+    /// timing assertions hold even under coarse clock resolution.
+    fn tick() {
+        let mark = Instant::now();
+        while mark.elapsed().as_nanos() == 0 {
+            std::hint::black_box(0u64);
+        }
+    }
+
+    #[test]
+    fn stage_timer_charges_its_stage() {
+        let set = StageSet::default();
+        {
+            let _t = set.timer(Stage::Encode);
+            tick();
+        }
+        assert!(set.ns(Stage::Encode) > 0);
+        assert_eq!(set.ns(Stage::Decode), 0);
+        assert_eq!(set.total_ns(), set.ns(Stage::Encode));
+    }
+
+    #[test]
+    fn stage_clock_laps_accumulate_and_none_is_inert() {
+        let set = StageSet::default();
+        let mut clock = StageClock::start(Some(&set));
+        tick();
+        clock.lap(Stage::Gather);
+        tick();
+        clock.lap(Stage::Decode);
+        assert!(set.ns(Stage::Gather) > 0);
+        assert!(set.ns(Stage::Decode) > 0);
+
+        let mut off = StageClock::start(None);
+        off.lap(Stage::Encode); // must not panic, must not record
+        assert_eq!(set.ns(Stage::Encode), 0);
+    }
+
+    #[test]
+    fn stage_labels_are_stable_json_keys() {
+        let labels: Vec<&str> = Stage::ALL.iter().map(|s| s.label()).collect();
+        let want = ["gather", "encode", "transmit", "inject", "decode"];
+        assert_eq!(labels, want);
+    }
+}

@@ -1,0 +1,61 @@
+//! Observability: zero-dependency runtime telemetry for the data
+//! plane.
+//!
+//! Three pieces:
+//!
+//! * [`metrics`] — relaxed-atomic [`Counter`]/[`Gauge`] primitives,
+//!   the drive-loop [`Stage`] taxonomy, and the [`StageTimer`] /
+//!   [`StageClock`] timing helpers.
+//! * [`hist`] — the log-bucketed [`Histogram`] behind the service
+//!   latency p50/p95/p99 (≤ 3.125% overshoot, never under-reports).
+//! * [`registry`] — [`MetricsRegistry`] owning per-shard
+//!   [`ShardMetrics`], frozen into a [`TelemetrySnapshot`] that
+//!   renders and serializes as the `"telemetry"` report section.
+//!
+//! Overhead contract: instrumentation is compiled in but every clock
+//! read is gated on an enable flag carried by the registry (or the
+//! `Option`-ness of a `StageSet` reference), so a telemetry-off run
+//! does no `Instant::now` calls in the hot loop and the energy /
+//! bit-identity accounting is untouched either way.
+
+pub mod hist;
+pub mod metrics;
+pub mod registry;
+
+pub use hist::Histogram;
+pub use metrics::{Counter, Gauge, Stage, StageClock, StageSet, StageTimer};
+pub use registry::{MetricsRegistry, ShardMetrics, ShardSnapshot, TelemetrySnapshot};
+
+/// Read the `ZAC_METRICS` toggle: `"1"` enables telemetry, unset or
+/// `"0"` disables it; anything else is an error (fail loud, like the
+/// other `ZAC_*` overrides).
+pub fn metrics_from_env() -> anyhow::Result<bool> {
+    match std::env::var("ZAC_METRICS") {
+        Err(_) => Ok(false),
+        Ok(v) if v == "1" => Ok(true),
+        Ok(v) if v == "0" => Ok(false),
+        Ok(v) => anyhow::bail!("ZAC_METRICS: expected \"0\" or \"1\", got {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn metrics_env_parses_strictly() {
+        // Can't mutate the real env safely under the parallel test
+        // runner; pin the parse rules through a local copy of the
+        // match arms instead.
+        let parse = |v: Option<&str>| -> anyhow::Result<bool> {
+            match v {
+                None => Ok(false),
+                Some("1") => Ok(true),
+                Some("0") => Ok(false),
+                Some(v) => anyhow::bail!("ZAC_METRICS: expected \"0\" or \"1\", got {v:?}"),
+            }
+        };
+        assert!(!parse(None).unwrap());
+        assert!(parse(Some("1")).unwrap());
+        assert!(!parse(Some("0")).unwrap());
+        assert!(parse(Some("yes")).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! The metrics registry: per-shard live metric sets shared with the
+//! data-plane workers, and the immutable [`TelemetrySnapshot`] taken
+//! after a run — which is what serializes into the `"telemetry"`
+//! section of reports and `BENCH_*.json` artifacts.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json_lite::{num, obj, s, Json};
+use crate::util::table::TextTable;
+
+use super::hist::Histogram;
+use super::metrics::{Counter, Gauge, Stage, StageSet};
+
+/// Live metrics for one shard (or the single lane set of a
+/// batch/pipelined run). Shared via `Arc` between the producer
+/// (mailbox sender) and the shard worker.
+#[derive(Debug)]
+pub struct ShardMetrics {
+    enabled: bool,
+    /// Per-stage drive-loop nanoseconds, shared by the shard's lanes.
+    pub stages: Arc<StageSet>,
+    /// Mailbox depth sampled at each send (value + high-water mark).
+    pub depth: Gauge,
+    sent: AtomicU64,
+    received: AtomicU64,
+    /// Cumulative time the producer spent blocked on a full mailbox —
+    /// the backpressure signal.
+    pub send_block_ns: Counter,
+    /// Number of sends that found the mailbox at capacity.
+    pub blocked_sends: Counter,
+    /// Per-chunk service latency in the worker loop.
+    pub service: Histogram,
+}
+
+impl ShardMetrics {
+    fn new(enabled: bool) -> ShardMetrics {
+        ShardMetrics {
+            enabled,
+            stages: Arc::new(StageSet::default()),
+            depth: Gauge::default(),
+            sent: AtomicU64::new(0),
+            received: AtomicU64::new(0),
+            send_block_ns: Counter::default(),
+            blocked_sends: Counter::default(),
+            service: Histogram::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Producer side: a chunk was handed to the mailbox.
+    pub fn chunk_sent(&self) {
+        self.sent.fetch_add(1, Relaxed);
+    }
+
+    /// Worker side: a chunk was pulled out of the mailbox.
+    pub fn chunk_received(&self) {
+        self.received.fetch_add(1, Relaxed);
+    }
+
+    /// Chunks currently in the mailbox (sent but not yet received).
+    pub fn in_flight(&self) -> u64 {
+        self.sent
+            .load(Relaxed)
+            .saturating_sub(self.received.load(Relaxed))
+    }
+}
+
+/// Owns the per-shard metric sets for one run and stamps the wall
+/// clock. Cheap to construct disabled — every consumer checks
+/// [`MetricsRegistry::enabled`] (or the per-shard copy) before
+/// touching a clock.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    start: Instant,
+    shards: Vec<Arc<ShardMetrics>>,
+}
+
+impl MetricsRegistry {
+    pub fn new(enabled: bool, nshards: usize) -> MetricsRegistry {
+        MetricsRegistry {
+            enabled,
+            start: Instant::now(),
+            shards: (0..nshards)
+                .map(|_| Arc::new(ShardMetrics::new(enabled)))
+                .collect(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn shard(&self, s: usize) -> &Arc<ShardMetrics> {
+        &self.shards[s]
+    }
+
+    pub fn shards(&self) -> &[Arc<ShardMetrics>] {
+        &self.shards
+    }
+
+    /// Freeze the registry into an immutable snapshot. Take it after
+    /// the workers have joined so histograms and stage sets are
+    /// complete.
+    pub fn snapshot(&self, lines: u64) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            wall_ns: self.start.elapsed().as_nanos() as u64,
+            lines,
+            shards: self
+                .shards
+                .iter()
+                .map(|m| ShardSnapshot {
+                    stage_ns: Stage::ALL.map(|st| m.stages.ns(st)),
+                    batches: m.stages.batches(),
+                    mailbox_depth: m.depth.get(),
+                    mailbox_max_depth: m.depth.max(),
+                    send_block_ns: m.send_block_ns.get(),
+                    blocked_sends: m.blocked_sends.get(),
+                    service_count: m.service.count(),
+                    service_p50_ns: m.service.percentile(50.0),
+                    service_p95_ns: m.service.percentile(95.0),
+                    service_p99_ns: m.service.percentile(99.0),
+                    service_max_ns: m.service.max(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One shard's frozen metrics; `stage_ns` follows [`Stage::ALL`]
+/// order.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub stage_ns: [u64; 5],
+    pub batches: u64,
+    pub mailbox_depth: u64,
+    pub mailbox_max_depth: u64,
+    pub send_block_ns: u64,
+    pub blocked_sends: u64,
+    pub service_count: u64,
+    pub service_p50_ns: u64,
+    pub service_p95_ns: u64,
+    pub service_p99_ns: u64,
+    pub service_max_ns: u64,
+}
+
+/// Frozen telemetry for one run: wall clock, line throughput, and the
+/// per-shard stage/backpressure/latency metrics.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub wall_ns: u64,
+    pub lines: u64,
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    pub fn lines_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.lines as f64 / (self.wall_ns as f64 * 1e-9)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let stages = Stage::ALL
+                    .iter()
+                    .map(|&st| (st.label(), num(sh.stage_ns[st as usize] as f64)))
+                    .collect();
+                let stage_ns = obj(stages);
+                obj(vec![
+                    ("shard", num(i as f64)),
+                    ("stage_ns", stage_ns),
+                    ("batches", num(sh.batches as f64)),
+                    ("mailbox_depth", num(sh.mailbox_depth as f64)),
+                    ("mailbox_max_depth", num(sh.mailbox_max_depth as f64)),
+                    ("send_block_ns", num(sh.send_block_ns as f64)),
+                    ("blocked_sends", num(sh.blocked_sends as f64)),
+                    ("service_count", num(sh.service_count as f64)),
+                    ("service_p50_ns", num(sh.service_p50_ns as f64)),
+                    ("service_p95_ns", num(sh.service_p95_ns as f64)),
+                    ("service_p99_ns", num(sh.service_p99_ns as f64)),
+                    ("service_max_ns", num(sh.service_max_ns as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("wall_ns", num(self.wall_ns as f64)),
+            ("lines", num(self.lines as f64)),
+            ("lines_per_sec", num(self.lines_per_sec())),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    /// Human-readable telemetry section for the rendered reports.
+    pub fn render_table(&self) -> String {
+        let mut t = TextTable::new(&[
+            "shard", "gather", "encode", "transmit", "inject", "decode", "batches", "mbox max",
+            "blocked", "svc p50", "svc p95", "svc p99",
+        ]);
+        for (i, sh) in self.shards.iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                fmt_ns(sh.stage_ns[Stage::Gather as usize]),
+                fmt_ns(sh.stage_ns[Stage::Encode as usize]),
+                fmt_ns(sh.stage_ns[Stage::Transmit as usize]),
+                fmt_ns(sh.stage_ns[Stage::Inject as usize]),
+                fmt_ns(sh.stage_ns[Stage::Decode as usize]),
+                sh.batches.to_string(),
+                sh.mailbox_max_depth.to_string(),
+                format!("{} ({})", fmt_ns(sh.send_block_ns), sh.blocked_sends),
+                fmt_ns(sh.service_p50_ns),
+                fmt_ns(sh.service_p95_ns),
+                fmt_ns(sh.service_p99_ns),
+            ]);
+        }
+        format!(
+            "telemetry: wall {}  lines {}  ({:.0} lines/s)\n{}",
+            fmt_ns(self.wall_ns),
+            self.lines,
+            self.lines_per_sec(),
+            t.render()
+        )
+    }
+}
+
+/// Humanize a nanosecond quantity for tables (JSON keeps raw ns).
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_recorded_metrics() {
+        let reg = MetricsRegistry::new(true, 2);
+        assert!(reg.enabled());
+        let m0 = reg.shard(0);
+        m0.stages.add(Stage::Encode, 1_000);
+        m0.stages.add_batch();
+        m0.chunk_sent();
+        m0.depth.set(3);
+        m0.depth.set(1);
+        m0.send_block_ns.add(42);
+        m0.blocked_sends.add(1);
+        m0.service.record(500);
+        m0.service.record(1_500);
+        m0.chunk_received();
+
+        let snap = reg.snapshot(512);
+        assert_eq!(snap.lines, 512);
+        assert_eq!(snap.shards.len(), 2);
+        let sh = &snap.shards[0];
+        assert_eq!(sh.stage_ns[Stage::Encode as usize], 1_000);
+        assert_eq!(sh.batches, 1);
+        assert_eq!(sh.mailbox_depth, 1);
+        assert_eq!(sh.mailbox_max_depth, 3);
+        assert_eq!(sh.send_block_ns, 42);
+        assert_eq!(sh.blocked_sends, 1);
+        assert_eq!(sh.service_count, 2);
+        assert!(sh.service_p50_ns >= 500);
+        assert!(sh.service_p99_ns >= 1_500);
+        // Idle shard stays all-zero.
+        let idle = &snap.shards[1];
+        assert_eq!(idle.send_block_ns, 0);
+        assert_eq!(idle.mailbox_max_depth, 0);
+        assert_eq!(idle.service_count, 0);
+    }
+
+    #[test]
+    fn in_flight_tracks_sent_minus_received() {
+        let m = ShardMetrics::new(true);
+        assert_eq!(m.in_flight(), 0);
+        m.chunk_sent();
+        m.chunk_sent();
+        assert_eq!(m.in_flight(), 2);
+        m.chunk_received();
+        assert_eq!(m.in_flight(), 1);
+    }
+
+    #[test]
+    fn json_carries_the_grep_keys() {
+        let reg = MetricsRegistry::new(true, 1);
+        reg.shard(0).service.record(10);
+        let json = reg.snapshot(1).to_json().to_pretty();
+        for key in [
+            "\"stage_ns\"",
+            "\"mailbox_max_depth\"",
+            "\"service_p99_ns\"",
+            "\"send_block_ns\"",
+            "\"lines_per_sec\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    #[test]
+    fn render_table_lists_every_shard() {
+        let reg = MetricsRegistry::new(true, 3);
+        let table = reg.snapshot(0).render_table();
+        assert!(table.contains("telemetry:"));
+        assert!(table.contains("svc p99"));
+        assert!(table.lines().count() >= 5, "{table}");
+    }
+
+    #[test]
+    fn fmt_ns_humanizes_each_decade() {
+        assert_eq!(fmt_ns(17), "17ns");
+        assert_eq!(fmt_ns(1_700), "1.7us");
+        assert_eq!(fmt_ns(1_700_000), "1.70ms");
+        assert_eq!(fmt_ns(1_700_000_000), "1.70s");
+    }
+}

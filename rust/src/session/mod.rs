@@ -41,6 +41,7 @@ use crate::encoding::{
     default_registry, Codec, CodecRegistry, CodecSpec, EncodeStats, ENCODE_BATCH,
 };
 use crate::faults::{FaultSpec, FaultStats};
+use crate::obs::{MetricsRegistry, TelemetrySnapshot};
 use crate::system::address::AddressSpec;
 use crate::system::array::{load_imbalance, ChannelArray, ShardReport, SystemOutput};
 use crate::trace::{bytes_to_chip_words, bytes_to_f32s, f32s_to_bytes, ChipWords, LineChunk};
@@ -163,6 +164,9 @@ pub struct RunReport {
     pub faults: FaultStats,
     /// Per-shard breakdown, indexed by shard id.
     pub shards: Vec<ShardReport>,
+    /// Telemetry snapshot (stage timings, backpressure, latency
+    /// percentiles); `None` when telemetry was off for the run.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl RunReport {
@@ -181,6 +185,7 @@ impl RunReport {
             stats: out.stats,
             faults: out.faults,
             shards: vec![shard],
+            telemetry: None,
         }
     }
 
@@ -192,6 +197,7 @@ impl RunReport {
             stats: sys.stats,
             faults: sys.faults,
             shards: sys.shards,
+            telemetry: sys.telemetry,
         }
     }
 
@@ -283,13 +289,18 @@ impl RunReport {
         } else {
             String::new()
         };
+        let telemetry = match &self.telemetry {
+            Some(t) => format!("\n{}", t.render_table()),
+            None => String::new(),
+        };
         format!(
-            "run report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}",
+            "run report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
             self.load_imbalance(),
             t.render(),
-            faults
+            faults,
+            telemetry
         )
     }
 }
@@ -318,6 +329,7 @@ pub struct Session {
     capacity: usize,
     faults: FaultSpec,
     address: AddressSpec,
+    telemetry: bool,
 }
 
 impl Session {
@@ -349,6 +361,12 @@ impl Session {
         &self.address
     }
 
+    /// Whether runs record telemetry (stage timings, backpressure,
+    /// latency percentiles) into the report's `telemetry` section.
+    pub fn telemetry(&self) -> bool {
+        self.telemetry
+    }
+
     fn build_codecs(&self) -> anyhow::Result<Vec<Codec>> {
         self.specs.iter().map(|s| self.registry.build(s)).collect()
     }
@@ -370,6 +388,11 @@ impl Session {
             }
             m => m,
         };
+        // Batch/pipelined runs have no mailbox registry of their own:
+        // a 1-shard registry collects their drive-loop stage timings
+        // and the run wall clock.
+        let reg = self.telemetry.then(|| MetricsRegistry::new(true, 1));
+        let stages = reg.as_ref().map(|r| r.shard(0).stages.clone());
         match mode {
             Execution::Batch => {
                 let codecs = self.build_codecs()?;
@@ -379,14 +402,18 @@ impl Session {
                     approx,
                     trace.byte_len(),
                     &self.faults,
+                    stages,
                 );
-                Ok(RunReport::from_output(out, trace.line_count()))
+                let mut report = RunReport::from_output(out, trace.line_count());
+                report.telemetry = reg.map(|r| r.snapshot(trace.line_count() as u64));
+                Ok(report)
             }
             Execution::Pipelined => {
-                let mut p = Pipeline::with_codecs_and_faults(
+                let mut p = Pipeline::with_codecs_faults_and_stages(
                     self.build_codecs()?,
                     self.capacity,
                     &self.faults,
+                    stages,
                 );
                 let store = trace.line_store();
                 let mut pos = 0;
@@ -395,20 +422,21 @@ impl Session {
                     p.push_chunk(LineChunk::window(store.clone(), pos, len, approx));
                     pos += len;
                 }
-                Ok(RunReport::from_output(
-                    p.finish(trace.byte_len()),
-                    trace.line_count(),
-                ))
+                let mut report =
+                    RunReport::from_output(p.finish(trace.byte_len()), trace.line_count());
+                report.telemetry = reg.map(|r| r.snapshot(trace.line_count() as u64));
+                Ok(report)
             }
             Execution::Sharded => {
                 let sets = (0..self.channels)
                     .map(|_| self.build_codecs())
                     .collect::<anyhow::Result<Vec<_>>>()?;
-                let mut a = ChannelArray::with_codec_sets_faults_and_address(
+                let mut a = ChannelArray::with_codec_sets_faults_address_and_telemetry(
                     sets,
                     self.capacity,
                     &self.faults,
                     &self.address,
+                    self.telemetry,
                 );
                 a.push_store(&trace.line_store(), approx);
                 Ok(RunReport::from_system(a.finish(trace.byte_len())))
@@ -435,6 +463,7 @@ pub struct SessionBuilder {
     capacity: Option<usize>,
     faults: FaultSpec,
     address: AddressSpec,
+    telemetry: Option<bool>,
 }
 
 impl SessionBuilder {
@@ -511,6 +540,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Record telemetry (drive-loop stage timings, mailbox
+    /// backpressure, service-latency percentiles) into every run's
+    /// `telemetry` section. Default: the `ZAC_METRICS` environment
+    /// toggle (off when unset). Telemetry never changes results — only
+    /// the report gains a section.
+    pub fn telemetry(mut self, on: bool) -> SessionBuilder {
+        self.telemetry = Some(on);
+        self
+    }
+
     /// Validate everything and produce the session. Errors — not
     /// panics — surface invalid knobs, unknown schemes, bad channel
     /// counts and conflicting codec sources.
@@ -579,6 +618,10 @@ impl SessionBuilder {
         self.address
             .validate()
             .map_err(|e| anyhow::anyhow!("address spec: {e}"))?;
+        let telemetry = match self.telemetry {
+            Some(on) => on,
+            None => crate::obs::metrics_from_env()?,
+        };
         Ok(Session {
             specs,
             registry,
@@ -588,6 +631,7 @@ impl SessionBuilder {
             capacity: self.capacity.unwrap_or(4 * ENCODE_BATCH).max(1),
             faults: self.faults,
             address: self.address,
+            telemetry,
         })
     }
 }

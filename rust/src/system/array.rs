@@ -16,10 +16,12 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::channel::{EnergyCounts, CHIPS};
 use crate::encoding::{ChipLane, Codec, EncodeStats, ZacConfig, ENCODE_BATCH};
 use crate::faults::{FaultModel, FaultSpec, FaultStats};
+use crate::obs::{MetricsRegistry, ShardMetrics, TelemetrySnapshot};
 use crate::system::address::{AddressMap, AddressSpec, Inverse, PageHeat};
 use crate::trace::{chip_words_to_bytes, ChipWords, LineChunk};
 use crate::util::table::TextTable;
@@ -72,6 +74,9 @@ pub struct SystemOutput {
     pub faults: FaultStats,
     /// Per-shard breakdown, indexed by shard id.
     pub shards: Vec<ShardReport>,
+    /// Telemetry snapshot (stage timings, mailbox backpressure,
+    /// service latency); `None` when telemetry was off for the run.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl SystemOutput {
@@ -135,13 +140,18 @@ impl SystemOutput {
         } else {
             String::new()
         };
+        let telemetry = match &self.telemetry {
+            Some(t) => format!("\n{}", t.render_table()),
+            None => String::new(),
+        };
         format!(
-            "system report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}",
+            "system report: {} channel(s), unencoded {:.1}%, load imbalance {:.2}x\n{}{}{}",
             self.shards.len(),
             100.0 * self.stats.unencoded_fraction(),
             self.load_imbalance(),
             t.render(),
-            faults
+            faults,
+            telemetry
         )
     }
 }
@@ -192,6 +202,10 @@ pub struct ChannelArray {
     /// round-robin inverse).
     routes: Option<Vec<u32>>,
     lines_pushed: usize,
+    /// Per-shard telemetry (disabled registries record nothing).
+    metrics: MetricsRegistry,
+    /// Mailbox depth in chunks — the depth gauge saturates here.
+    chunk_capacity: usize,
 }
 
 impl ChannelArray {
@@ -250,21 +264,46 @@ impl ChannelArray {
         fault_spec: &FaultSpec,
         address: &AddressSpec,
     ) -> ChannelArray {
+        Self::with_codec_sets_faults_address_and_telemetry(
+            codec_sets,
+            capacity,
+            fault_spec,
+            address,
+            false,
+        )
+    }
+
+    /// [`with_codec_sets_faults_and_address`](Self::with_codec_sets_faults_and_address)
+    /// plus the telemetry switch: when `telemetry` is on, each shard
+    /// records drive-loop stage timings, mailbox depth/send-block
+    /// backpressure and per-chunk service latency into a
+    /// [`MetricsRegistry`], snapshotted on the [`SystemOutput`] at
+    /// `finish`. Off (the default) costs nothing — no clock reads
+    /// anywhere on the hot path.
+    pub fn with_codec_sets_faults_address_and_telemetry(
+        codec_sets: Vec<Vec<Codec>>,
+        capacity: usize,
+        fault_spec: &FaultSpec,
+        address: &AddressSpec,
+        telemetry: bool,
+    ) -> ChannelArray {
         let shards = codec_sets.len();
         assert!(shards >= 1, "channel array needs at least one shard");
         let map = address.build(shards);
         debug_assert_eq!(map.shards(), shards);
         let chunk_capacity = capacity.div_ceil(ENCODE_BATCH).max(1);
+        let metrics = MetricsRegistry::new(telemetry, shards);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for (s, codecs) in codec_sets.into_iter().enumerate() {
             assert_eq!(codecs.len(), CHIPS, "each shard needs one codec per chip");
             let models: Vec<Box<dyn FaultModel>> =
                 (0..CHIPS).map(|j| fault_spec.build(s, j)).collect();
+            let sm = metrics.shard(s).clone();
             let (tx, rx): (SyncSender<LineChunk>, Receiver<LineChunk>) =
                 sync_channel(chunk_capacity);
             workers.push(std::thread::spawn(move || {
-                shard_service_loop(codecs, models, rx)
+                shard_service_loop(codecs, models, rx, sm)
             }));
             senders.push(tx);
         }
@@ -280,6 +319,8 @@ impl ChannelArray {
             pending: (0..shards).map(|_| None).collect(),
             routes,
             lines_pushed: 0,
+            metrics,
+            chunk_capacity,
         }
     }
 
@@ -379,12 +420,28 @@ impl ChannelArray {
                 approx,
             } => LineChunk::indexed(store, indices, approx),
         };
+        // Backpressure accounting (deterministic: `in_flight` only
+        // decreases when the worker has actually pulled a chunk, so a
+        // pre-send sample equal to the mailbox capacity means this send
+        // *will* block until the worker drains one).
+        let sm = self.metrics.shard(s).clone();
+        let blocking = sm.enabled() && {
+            let depth = sm.in_flight().min(self.chunk_capacity as u64);
+            sm.depth.set(depth);
+            depth == self.chunk_capacity as u64
+        };
+        let t0 = blocking.then(Instant::now);
         if self.senders[s].send(chunk).is_err() {
             self.senders.clear();
             let workers = std::mem::take(&mut self.workers);
             crate::util::par::join_all_reraise(workers);
             panic!("shard {s} worker exited without panicking (mailbox closed)");
         }
+        if let Some(t0) = t0 {
+            sm.send_block_ns.add(t0.elapsed().as_nanos() as u64);
+            sm.blocked_sends.add(1);
+        }
+        sm.chunk_sent();
     }
 
     /// Close the mailboxes, join every worker, merge the shard results
@@ -405,11 +462,15 @@ impl ChannelArray {
             workers,
             routes,
             lines_pushed,
+            metrics,
             ..
         } = self;
         drop(senders);
         let shards = workers.len();
         let results = crate::util::par::join_all_reraise(workers);
+        // Snapshot after the workers joined: stage sets and service
+        // histograms are complete and consistent.
+        let telemetry = metrics.enabled().then(|| metrics.snapshot(lines_pushed as u64));
 
         let mut out_lines = vec![[0u64; CHIPS]; lines_pushed];
         match &routes {
@@ -457,6 +518,7 @@ impl ChannelArray {
             stats,
             faults,
             shards: reports,
+            telemetry,
         }
     }
 
@@ -487,15 +549,29 @@ fn shard_service_loop(
     codecs: Vec<Codec>,
     models: Vec<Box<dyn FaultModel>>,
     rx: Receiver<LineChunk>,
+    sm: Arc<ShardMetrics>,
 ) -> ShardResult {
     let mut lanes: Vec<ChipLane> = codecs
         .into_iter()
         .zip(models)
-        .map(|(codec, m)| ChipLane::with_faults(codec, 0, m))
+        .map(|(codec, m)| {
+            let mut lane = ChipLane::with_faults(codec, 0, m);
+            if sm.enabled() {
+                lane.instrument(sm.stages.clone());
+            }
+            lane
+        })
         .collect();
     while let Ok(chunk) = rx.recv() {
+        // Acknowledge receipt first so the producer's in-flight count
+        // (the depth gauge) drops as soon as the mailbox slot frees.
+        sm.chunk_received();
+        let t0 = sm.enabled().then(Instant::now);
         for (j, lane) in lanes.iter_mut().enumerate() {
             lane.drive_chunk(j, &chunk);
+        }
+        if let Some(t0) = t0 {
+            sm.service.record(t0.elapsed().as_nanos() as u64);
         }
     }
     let nlines = lanes[0].decoded_len();

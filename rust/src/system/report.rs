@@ -4,7 +4,8 @@
 
 use crate::channel::EnergyCounts;
 use crate::encoding::Outcome;
-use crate::util::json_lite::{num, obj, s, Json};
+use crate::obs::TelemetrySnapshot;
+use crate::util::json_lite::{self, num, obj, s, Json};
 use crate::util::table::{f, pct, TextTable};
 
 /// One scenario's measured outcome.
@@ -64,6 +65,9 @@ pub struct ScenarioResult {
     pub bytes_per_sec: f64,
     /// Lines served per shard (round-robin shares).
     pub shard_lines: Vec<usize>,
+    /// Runtime telemetry (per-stage timings, mailbox pressure, service
+    /// latency); `None` unless the sweep ran with telemetry enabled.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl ScenarioResult {
@@ -111,6 +115,10 @@ impl ScenarioResult {
                 "shard_lines",
                 Json::Arr(self.shard_lines.iter().map(|&l| num(l as f64)).collect()),
             ),
+            (
+                "telemetry",
+                self.telemetry.as_ref().map_or(Json::Null, |t| t.to_json()),
+            ),
         ])
     }
 
@@ -148,8 +156,31 @@ impl SweepReport {
     /// Persist as pretty JSON (the `BENCH_system.json` artifact). The
     /// status line goes to stderr so piped stdout stays clean CSV/table.
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, self.to_json().to_pretty() + "\n")?;
+        json_lite::write_file(path, &self.to_json())?;
         eprintln!("sweep report -> {path}");
+        Ok(())
+    }
+
+    /// Persist the telemetry-only view (the `--metrics-out` artifact):
+    /// one entry per scenario that carried a snapshot, so CI can grep
+    /// `stage_ns` / `mailbox_max_depth` / `service_p99_ns` without
+    /// wading through the full energy report.
+    pub fn write_metrics(&self, path: &str) -> std::io::Result<()> {
+        let rows = self
+            .scenarios
+            .iter()
+            .filter_map(|r| {
+                r.telemetry.as_ref().map(|t| {
+                    obj(vec![("label", s(&r.label)), ("telemetry", t.to_json())])
+                })
+            })
+            .collect();
+        let root = obj(vec![
+            ("name", s(&self.name)),
+            ("scenarios", Json::Arr(rows)),
+        ]);
+        json_lite::write_file(path, &root)?;
+        eprintln!("metrics -> {path}");
         Ok(())
     }
 
@@ -185,14 +216,20 @@ impl SweepReport {
                 f(r.bytes_per_sec / 1e6, 1),
             ]);
         }
-        format!(
+        let mut out = format!(
             "sweep {:?}: {} scenarios over {} B (savings vs {} at equal channel count)\n{}",
             self.name,
             self.scenarios.len(),
             self.trace_bytes,
             self.baseline,
             t.render()
-        )
+        );
+        for r in &self.scenarios {
+            if let Some(t) = &r.telemetry {
+                out.push_str(&format!("\n{}\n{}", r.label, t.render_table()));
+            }
+        }
+        out
     }
 }
 
@@ -235,6 +272,28 @@ mod tests {
                 wall_ms: 1.25,
                 bytes_per_sec: 3.2e6,
                 shard_lines: vec![32, 32],
+                telemetry: None,
+            }],
+        }
+    }
+
+    fn snapshot() -> TelemetrySnapshot {
+        use crate::obs::ShardSnapshot;
+        TelemetrySnapshot {
+            wall_ns: 2_000_000,
+            lines: 64,
+            shards: vec![ShardSnapshot {
+                stage_ns: [10, 20, 30, 0, 40],
+                batches: 1,
+                mailbox_depth: 0,
+                mailbox_max_depth: 2,
+                send_block_ns: 7,
+                blocked_sends: 1,
+                service_count: 1,
+                service_p50_ns: 100,
+                service_p95_ns: 100,
+                service_p99_ns: 100,
+                service_max_ns: 100,
             }],
         }
     }
@@ -287,6 +346,47 @@ mod tests {
         assert!(out.contains("term save"), "{out}");
         assert!(out.contains("tbl hit"), "{out}");
         assert!(out.contains("steer"), "{out}");
+    }
+
+    #[test]
+    fn telemetry_serializes_into_scenario_json_and_table() {
+        // Without telemetry the key is null and no section renders.
+        let rpt = sample();
+        let j = Json::parse(&rpt.to_json().to_string()).unwrap();
+        let sc = &j.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert_eq!(sc.get("telemetry").unwrap(), &Json::Null);
+        assert!(!rpt.render_table().contains("telemetry:"));
+
+        // With a snapshot the grep keys land in BENCH_system.json and
+        // the rendered report grows a per-scenario telemetry section.
+        let mut rpt = sample();
+        rpt.scenarios[0].telemetry = Some(snapshot());
+        let text = rpt.to_json().to_pretty();
+        for key in ["\"stage_ns\"", "\"mailbox_max_depth\"", "\"service_p99_ns\""] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        let table = rpt.render_table();
+        assert!(table.contains("telemetry:"), "{table}");
+        assert!(table.contains("svc p99"), "{table}");
+    }
+
+    #[test]
+    fn write_metrics_emits_only_instrumented_scenarios() {
+        let mut rpt = sample();
+        rpt.scenarios.push(rpt.scenarios[0].clone());
+        rpt.scenarios[1].label = "probe@1ch".into();
+        rpt.scenarios[1].telemetry = Some(snapshot());
+        let path = std::env::temp_dir().join("zac_metrics_report_test.json");
+        let path = path.to_str().unwrap();
+        rpt.write_metrics(path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let rows = parsed.get("scenarios").unwrap().as_arr().unwrap();
+        // The telemetry-free scenario is skipped, not emitted as null.
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("label").unwrap().as_str().unwrap(), "probe@1ch");
+        let snap = rows[0].get("telemetry").unwrap();
+        assert!(snap.get("shards").is_ok());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -69,6 +69,9 @@ pub struct SweepSpec {
     pub address: Vec<AddressSpec>,
     /// Savings reference scheme (registry name).
     pub baseline: String,
+    /// Collect runtime telemetry (per-stage timings, mailbox pressure,
+    /// service latency) for every cell and carry it into the report.
+    pub telemetry: bool,
 }
 
 impl Default for SweepSpec {
@@ -88,6 +91,7 @@ impl Default for SweepSpec {
             faults: vec![FaultSpec::perfect()],
             address: vec![AddressSpec::round_robin()],
             baseline: "BDE".into(),
+            telemetry: false,
         }
     }
 }
@@ -128,6 +132,10 @@ impl SweepSpec {
                 "approx" => match v {
                     crate::util::json_lite::Json::Bool(b) => spec.approx = *b,
                     other => anyhow::bail!("approx must be true/false, got {other:?}"),
+                },
+                "telemetry" => match v {
+                    crate::util::json_lite::Json::Bool(b) => spec.telemetry = *b,
+                    other => anyhow::bail!("telemetry must be true/false, got {other:?}"),
                 },
                 "grid" => {
                     for (gk, gv) in v.as_obj()? {
@@ -375,6 +383,7 @@ fn run_cell(
     approx: bool,
     faults: &FaultSpec,
     address: &AddressSpec,
+    telemetry: bool,
     trace: &Trace,
 ) -> anyhow::Result<RunReport> {
     Session::builder()
@@ -384,6 +393,7 @@ fn run_cell(
         .execution(Execution::Sharded)
         .faults(*faults)
         .address(address.clone())
+        .telemetry(telemetry)
         .build()?
         .run(trace)
 }
@@ -417,6 +427,7 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
                 spec.approx,
                 &FaultSpec::perfect(),
                 a,
+                spec.telemetry,
                 &trace_obj,
             )?;
             baselines.insert(key, (out, t0.elapsed().as_secs_f64()));
@@ -440,6 +451,7 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
                 spec.approx,
                 &sc.faults,
                 &sc.address,
+                spec.telemetry,
                 &trace_obj,
             )?;
             (o, t0.elapsed().as_secs_f64())
@@ -491,6 +503,7 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
                 0.0
             },
             shard_lines: out.shards.iter().map(|s| s.lines).collect(),
+            telemetry: out.telemetry.clone(),
         });
     }
     Ok(SweepReport {
@@ -542,6 +555,14 @@ mod tests {
         assert_eq!(spec.baseline, "ORG");
         // 3 channels × (ORG + ZAC 1×2×1) = 9 scenarios.
         assert_eq!(spec.scenarios().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn telemetry_key_parses_from_toml() {
+        assert!(!SweepSpec::default().telemetry, "telemetry must be opt-in");
+        let spec = SweepSpec::from_toml("telemetry = true\n").unwrap();
+        assert!(spec.telemetry);
+        assert!(SweepSpec::from_toml("telemetry = 1\n").is_err());
     }
 
     #[test]

@@ -150,10 +150,12 @@ impl Bencher {
             p99_ns: samples.get(n * 99 / 100).copied().unwrap_or(mean),
             units,
         };
+        // Unitless benches render "-" in the throughput column rather
+        // than silently dropping it: a missing annotation should be
+        // visible in the output, not an invisible formatting change.
         let tp = stats
             .throughput()
-            .map(|t| format!("  ({t})"))
-            .unwrap_or_default();
+            .map_or("  (-)".to_string(), |t| format!("  ({t})"));
         println!(
             "bench {:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  iters {:>8}{}",
             stats.name,
@@ -199,7 +201,7 @@ impl Bencher {
             })
             .collect();
         let report = Json::Arr(entries);
-        std::fs::write(path, report.to_pretty() + "\n")?;
+        crate::util::json_lite::write_file(path, &report)?;
         println!("bench report -> {path}");
         Ok(())
     }

@@ -193,6 +193,13 @@ pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// The one way report artifacts reach disk: pretty-printed with a
+/// trailing newline, so `BENCH_*.json` files diff cleanly across PRs
+/// regardless of which subsystem wrote them.
+pub fn write_file(path: &str, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_pretty() + "\n")
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -418,6 +425,19 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ≈ wörld\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo ≈ wörld");
+    }
+
+    #[test]
+    fn write_file_emits_pretty_json_with_trailing_newline() {
+        let v = obj(vec![("k", num(1.0))]);
+        let path = std::env::temp_dir().join("zac_json_write_file_test.json");
+        let path = path.to_str().unwrap();
+        write_file(path, &v).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(text.trim_end(), v.to_pretty());
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

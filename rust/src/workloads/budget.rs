@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::datasets;
 use crate::encoding::CodecSpec;
 use crate::faults::{FaultProfile, FaultSpec, MramBin};
+use crate::obs::TelemetrySnapshot;
 use crate::session::{Session, Trace, TrafficClass};
 use crate::util::json_lite::{num, obj, s, Json};
 use crate::util::table::{f, TextTable};
@@ -79,6 +80,9 @@ pub struct BudgetSpec {
     pub seed: u64,
     pub channels: usize,
     pub workloads: Vec<Kind>,
+    /// Collect runtime telemetry from the probe sessions (proxy mode;
+    /// full-mode suites honor `ZAC_METRICS` instead).
+    pub telemetry: bool,
 }
 
 impl BudgetSpec {
@@ -89,6 +93,7 @@ impl BudgetSpec {
             seed: 42,
             channels: 1,
             workloads: Kind::all().to_vec(),
+            telemetry: false,
         }
     }
 
@@ -117,6 +122,9 @@ pub struct BudgetRow {
     pub max_tolerable_ber: f64,
     /// Quality at that rung (or at the error-free rung when `None`).
     pub quality_at_max: f64,
+    /// Telemetry of the probe run at the budgeted rung, when the spec
+    /// asked for it.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 /// The full budget table for one codec.
@@ -150,6 +158,10 @@ impl BudgetReport {
                                 ),
                                 ("max_tolerable_ber", num(r.max_tolerable_ber)),
                                 ("quality_at_max", num(r.quality_at_max)),
+                                (
+                                    "telemetry",
+                                    r.telemetry.as_ref().map_or(Json::Null, |t| t.to_json()),
+                                ),
                             ])
                         })
                         .collect(),
@@ -194,8 +206,34 @@ impl BudgetReport {
             }
             other => anyhow::bail!("{path} is not a JSON object, got {other:?}"),
         }
-        std::fs::write(path, root.to_pretty() + "\n")?;
+        crate::util::json_lite::write_file(path, &root)?;
         eprintln!("budget table -> {path} (key \"budget\")");
+        Ok(())
+    }
+
+    /// Persist the telemetry-only view (the `--metrics-out` artifact):
+    /// one entry per row whose probe session carried a snapshot.
+    pub fn write_metrics(&self, path: &str) -> Result<()> {
+        let rows = self
+            .rows
+            .iter()
+            .filter_map(|r| {
+                r.telemetry.as_ref().map(|t| {
+                    obj(vec![
+                        ("workload", s(&r.workload)),
+                        ("technology", s(r.technology)),
+                        ("telemetry", t.to_json()),
+                    ])
+                })
+            })
+            .collect();
+        let root = obj(vec![
+            ("codec", s(&self.codec)),
+            ("mode", s(self.mode)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        crate::util::json_lite::write_file(path, &root)?;
+        eprintln!("metrics -> {path}");
         Ok(())
     }
 }
@@ -220,6 +258,10 @@ fn proxy_trace(kind: Kind, seed: u64) -> Vec<u8> {
     images.into_iter().flat_map(|i| i.data).collect()
 }
 
+/// A ladder-rung quality measurement plus the probe run's telemetry
+/// (when enabled).
+type Probe = (f64, Option<TelemetrySnapshot>);
+
 /// Trace-level quality proxy (`1 - MAE/255`) of `trace` reconstructed
 /// through the codec under one fault model.
 fn trace_quality(
@@ -227,12 +269,14 @@ fn trace_quality(
     faults: &FaultSpec,
     trace: &[u8],
     channels: usize,
-) -> Result<f64> {
+    telemetry: bool,
+) -> Result<Probe> {
     let out = Session::builder()
         .codec(codec.clone())
         .channels(channels)
         .traffic(TrafficClass::Approximate)
         .faults(*faults)
+        .telemetry(telemetry)
         .build()?
         .run(&Trace::from_bytes(trace.to_vec()))?;
     let mae = trace
@@ -241,7 +285,16 @@ fn trace_quality(
         .map(|(&a, &b)| (a as f64 - b as f64).abs())
         .sum::<f64>()
         / trace.len().max(1) as f64;
-    Ok(1.0 - mae / 255.0)
+    Ok((1.0 - mae / 255.0, out.telemetry))
+}
+
+/// The deepest ladder rung inside the cap, plus the probe telemetry at
+/// that rung (or at the error-free rung when nothing fits).
+struct LadderPick {
+    max_bin: Option<String>,
+    max_tolerable_ber: f64,
+    quality_at_max: f64,
+    telemetry: Option<TelemetrySnapshot>,
 }
 
 /// Walk one ladder (BER ascending), returning the deepest rung whose
@@ -251,44 +304,54 @@ fn trace_quality(
 fn walk_ladder(
     ladder: &[Rung],
     cap: f64,
-    mut quality_of: impl FnMut(&FaultSpec) -> Result<f64>,
-) -> Result<(Option<String>, f64, f64)> {
-    let mut best: Option<(String, f64, f64)> = None;
-    let mut first_quality = 1.0;
+    mut quality_of: impl FnMut(&FaultSpec) -> Result<Probe>,
+) -> Result<LadderPick> {
+    let mut best: Option<(String, f64, f64, Option<TelemetrySnapshot>)> = None;
+    let mut first: Probe = (1.0, None);
     for (i, rung) in ladder.iter().enumerate() {
-        let q = quality_of(&rung.spec)?;
+        let (q, telemetry) = quality_of(&rung.spec)?;
         if i == 0 {
-            first_quality = q;
+            first = (q, telemetry.clone());
         }
         if 1.0 - q <= cap {
-            best = Some((rung.label.clone(), rung.ber, q));
+            best = Some((rung.label.clone(), rung.ber, q, telemetry));
         } else {
             break;
         }
     }
     Ok(match best {
-        Some((label, ber, q)) => (Some(label), ber, q),
-        None => (None, 0.0, first_quality),
+        Some((label, ber, q, telemetry)) => LadderPick {
+            max_bin: Some(label),
+            max_tolerable_ber: ber,
+            quality_at_max: q,
+            telemetry,
+        },
+        None => LadderPick {
+            max_bin: None,
+            max_tolerable_ber: 0.0,
+            quality_at_max: first.0,
+            telemetry: first.1,
+        },
     })
 }
 
 fn derive_with(
     spec: &BudgetSpec,
     mode: &'static str,
-    mut quality_of: impl FnMut(Kind, &FaultSpec) -> Result<f64>,
+    mut quality_of: impl FnMut(Kind, &FaultSpec) -> Result<Probe>,
 ) -> Result<BudgetReport> {
     spec.validate()?;
     let mut rows = Vec::new();
     for &kind in &spec.workloads {
         for (technology, ladder) in [("dram", dram_ladder()), ("mram", mram_ladder())] {
-            let (max_bin, max_tolerable_ber, quality_at_max) =
-                walk_ladder(&ladder, spec.cap, |f| quality_of(kind, f))?;
+            let pick = walk_ladder(&ladder, spec.cap, |f| quality_of(kind, f))?;
             rows.push(BudgetRow {
                 workload: kind.label().to_string(),
                 technology,
-                max_bin,
-                max_tolerable_ber,
-                quality_at_max,
+                max_bin: pick.max_bin,
+                max_tolerable_ber: pick.max_tolerable_ber,
+                quality_at_max: pick.quality_at_max,
+                telemetry: pick.telemetry,
             });
         }
     }
@@ -314,7 +377,7 @@ pub fn derive_budgets(spec: &BudgetSpec) -> Result<BudgetReport> {
         .collect();
     derive_with(spec, "proxy", |kind, faults| {
         let trace = &traces.iter().find(|(k, _)| *k == kind).unwrap().1;
-        trace_quality(&spec.codec, faults, trace, spec.channels)
+        trace_quality(&spec.codec, faults, trace, spec.channels, spec.telemetry)
     })
 }
 
@@ -322,7 +385,8 @@ pub fn derive_budgets(spec: &BudgetSpec) -> Result<BudgetReport> {
 /// quality ratio from the trained workload [`Suite`].
 pub fn derive_budgets_full(suite: &Suite, spec: &BudgetSpec) -> Result<BudgetReport> {
     derive_with(spec, "full", |kind, faults| {
-        Ok(suite.eval_under(&spec.codec, faults, kind)?.quality)
+        let r = suite.eval_under(&spec.codec, faults, kind)?;
+        Ok((r.quality, r.run.telemetry))
     })
 }
 
@@ -410,6 +474,32 @@ mod tests {
             "Quant"
         );
         assert!(rows[0].get("max_tolerable_ber").unwrap().as_f64().is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn telemetry_flag_populates_rows_and_write_metrics() {
+        let mut spec = BudgetSpec::new(CodecSpec::named("ORG"), 0.5);
+        spec.workloads = vec![Kind::Quant];
+        assert!(
+            derive_budgets(&spec)
+                .unwrap()
+                .rows
+                .iter()
+                .all(|r| r.telemetry.is_none()),
+            "telemetry must stay off by default"
+        );
+        spec.telemetry = true;
+        let report = derive_budgets(&spec).unwrap();
+        assert!(report.rows.iter().all(|r| r.telemetry.is_some()));
+        let snap = report.rows[0].telemetry.as_ref().unwrap();
+        assert!(snap.shards[0].stage_ns.iter().sum::<u64>() > 0);
+        let path = std::env::temp_dir().join("zac_budget_metrics_test.json");
+        let path = path.to_str().unwrap();
+        report.write_metrics(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"stage_ns\""), "{text}");
+        assert!(text.contains("\"service_p99_ns\""), "{text}");
         let _ = std::fs::remove_file(path);
     }
 

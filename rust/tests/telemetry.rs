@@ -1,0 +1,217 @@
+//! Telemetry acceptance: the metrics subsystem observes without
+//! perturbing. Instrumented runs stay bit-identical to plain runs on
+//! every execution engine, backpressure registers deterministically on
+//! a starved mailbox (and stays zero on an idle one), and sweep
+//! snapshots carry the stage/mailbox/latency keys CI greps out of the
+//! `--metrics-out` artifact.
+
+use std::time::Duration;
+
+use zac_dest::channel::CHIPS;
+use zac_dest::encoding::{
+    ChipDecoder, ChipEncoder, Codec, CodecSpec, Scheme, WireWord, ENCODE_BATCH,
+};
+use zac_dest::faults::FaultSpec;
+use zac_dest::session::{Execution, Session, Trace, TrafficClass};
+use zac_dest::system::{run_sweep, synthetic_trace, AddressSpec, ChannelArray, SweepSpec};
+
+fn session(spec: &CodecSpec, exec: Execution, channels: usize, telemetry: bool) -> Session {
+    Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .execution(exec)
+        .traffic(TrafficClass::Approximate)
+        .faults(FaultSpec::uniform(1e-3))
+        .telemetry(telemetry)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn instrumented_runs_are_bit_identical_on_every_engine() {
+    let trace = Trace::from_bytes(synthetic_trace(40 * 64, 91));
+    let spec = CodecSpec::zac_full(80, 1, 1);
+    for (exec, channels) in [
+        (Execution::Batch, 1),
+        (Execution::Pipelined, 1),
+        (Execution::Sharded, 2),
+    ] {
+        let plain = session(&spec, exec, channels, false).run(&trace).unwrap();
+        let timed = session(&spec, exec, channels, true).run(&trace).unwrap();
+        assert_eq!(plain.bytes, timed.bytes, "{exec:?}");
+        assert_eq!(plain.counts, timed.counts, "{exec:?}");
+        assert_eq!(plain.stats, timed.stats, "{exec:?}");
+        assert_eq!(plain.faults, timed.faults, "{exec:?}");
+        assert!(plain.telemetry.is_none(), "{exec:?}");
+        let snap = timed.telemetry.expect("telemetry requested");
+        assert!(snap.wall_ns > 0, "{exec:?}");
+        assert_eq!(snap.lines, 40);
+        let stage_total: u64 = snap.shards.iter().flat_map(|s| s.stage_ns).sum();
+        assert!(stage_total > 0, "{exec:?}: no stage time recorded");
+    }
+}
+
+#[test]
+fn batch_run_snapshot_has_stage_time_but_no_mailbox_traffic() {
+    let trace = Trace::from_bytes(synthetic_trace(64 * 64, 17));
+    let spec = CodecSpec::named("BDE");
+    let report = session(&spec, Execution::Batch, 1, true).run(&trace).unwrap();
+    let snap = report.telemetry.unwrap();
+    assert_eq!(snap.shards.len(), 1);
+    let sh = &snap.shards[0];
+    assert!(sh.stage_ns.iter().sum::<u64>() > 0);
+    assert!(sh.batches > 0);
+    // Batch execution has no mailbox: the backpressure and service
+    // gauges stay at their idle zeros.
+    assert_eq!(sh.mailbox_max_depth, 0);
+    assert_eq!(sh.send_block_ns, 0);
+    assert_eq!(sh.blocked_sends, 0);
+    assert_eq!(sh.service_count, 0);
+}
+
+/// A deliberately slow shard worker: one sleep per encoded batch (not
+/// per word) so the mailbox starves while the test stays fast.
+struct SlowEncoder;
+
+impl ChipEncoder for SlowEncoder {
+    fn encode(&mut self, word: u64, _approx: bool) -> WireWord {
+        WireWord::raw(word)
+    }
+    fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(words.len(), approx.len());
+        assert_eq!(words.len(), out.len());
+        for (&w, slot) in words.iter().zip(out.iter_mut()) {
+            *slot = WireWord::raw(w);
+        }
+    }
+    fn scheme(&self) -> Scheme {
+        Scheme::Org
+    }
+    fn reset(&mut self) {}
+}
+
+struct NopDecoder;
+
+impl ChipDecoder for NopDecoder {
+    fn decode(&mut self, wire: &WireWord) -> u64 {
+        wire.data
+    }
+    fn reset(&mut self) {}
+}
+
+fn slow_array(telemetry: bool) -> ChannelArray {
+    let codecs: Vec<_> = (0..CHIPS)
+        .map(|_| Codec::new(Box::new(SlowEncoder), Box::new(NopDecoder)))
+        .collect();
+    // `ENCODE_BATCH` lines of mailbox = exactly one chunk deep.
+    ChannelArray::with_codec_sets_faults_address_and_telemetry(
+        vec![codecs],
+        ENCODE_BATCH,
+        &FaultSpec::perfect(),
+        &AddressSpec::round_robin(),
+        telemetry,
+    )
+}
+
+#[test]
+fn backpressure_registers_on_a_starved_one_chunk_mailbox() {
+    // Regression for the backpressure accounting: a slow worker behind a
+    // 1-chunk mailbox must drive the depth gauge to capacity and charge
+    // nonzero send-block time; the producer outruns the worker by
+    // construction (µs to build a chunk vs ≥16ms to serve one).
+    let mut array = slow_array(true);
+    let chunks = 6;
+    for i in 0..chunks * ENCODE_BATCH {
+        array.push_line([i as u64; CHIPS], true);
+    }
+    let out = array.finish(chunks * ENCODE_BATCH * 64);
+    let snap = out.telemetry.expect("telemetry was on");
+    let sh = &snap.shards[0];
+    assert_eq!(sh.mailbox_max_depth, 1, "gauge must reach the 1-chunk cap");
+    assert!(sh.blocked_sends > 0, "no send found the mailbox full");
+    assert!(sh.send_block_ns > 0, "blocked sends must charge wall time");
+    assert_eq!(sh.service_count, chunks as u64);
+    assert!(sh.service_p50_ns >= 2_000_000, "p50 below one batch sleep");
+    assert!(sh.service_p99_ns >= sh.service_p50_ns);
+    // The passthrough codec still decodes bit-exactly under pressure.
+    assert_eq!(out.bytes.len(), chunks * ENCODE_BATCH * 64);
+}
+
+#[test]
+fn idle_array_reports_zero_backpressure() {
+    // A roomy mailbox under a light load must not register pressure:
+    // depth is sampled before each send, and nothing was in flight.
+    let cfg = zac_dest::encoding::ZacConfig::zac(80);
+    let sets = vec![(0..CHIPS).map(|_| Codec::from_config(&cfg)).collect()];
+    let mut array = ChannelArray::with_codec_sets_faults_address_and_telemetry(
+        sets,
+        4 * ENCODE_BATCH,
+        &FaultSpec::perfect(),
+        &AddressSpec::round_robin(),
+        true,
+    );
+    for i in 0..ENCODE_BATCH {
+        array.push_line([i as u64 * 3; CHIPS], true);
+    }
+    let out = array.finish(ENCODE_BATCH * 64);
+    let sh = &out.telemetry.unwrap().shards[0];
+    assert_eq!(sh.mailbox_max_depth, 0);
+    assert_eq!(sh.send_block_ns, 0);
+    assert_eq!(sh.blocked_sends, 0);
+    assert_eq!(sh.service_count, 1);
+}
+
+#[test]
+fn sweep_telemetry_lands_in_report_json_and_metrics_artifact() {
+    let spec = SweepSpec {
+        bytes: 8192,
+        channels: vec![2],
+        schemes: vec!["BDE".into()],
+        telemetry: true,
+        ..SweepSpec::default()
+    };
+    let trace = synthetic_trace(spec.bytes, spec.seed);
+    let report = run_sweep(&spec, &trace).unwrap();
+    for sc in &report.scenarios {
+        let snap = sc.telemetry.as_ref().expect("every cell instrumented");
+        assert_eq!(snap.shards.len(), 2, "{}", sc.label);
+        let stage_total: u64 = snap.shards.iter().flat_map(|s| s.stage_ns).sum();
+        assert!(stage_total > 0, "{}", sc.label);
+        assert!(snap.shards.iter().all(|s| s.service_count > 0));
+    }
+    // The grep keys land in BENCH_system.json and in the rendered table.
+    let json = report.to_json().to_pretty();
+    for key in ["\"stage_ns\"", "\"mailbox_max_depth\"", "\"service_p99_ns\""] {
+        assert!(json.contains(key), "missing {key}");
+    }
+    assert!(report.render_table().contains("telemetry:"));
+    // ... and in the --metrics-out artifact.
+    let path = std::env::temp_dir().join("zac_telemetry_sweep_test.json");
+    let path = path.to_str().unwrap();
+    report.write_metrics(path).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    for key in ["\"stage_ns\"", "\"mailbox_max_depth\"", "\"service_p99_ns\""] {
+        assert!(text.contains(key), "missing {key} in metrics artifact");
+    }
+    let parsed = zac_dest::util::json_lite::Json::parse(&text).unwrap();
+    assert_eq!(
+        parsed.get("scenarios").unwrap().as_arr().unwrap().len(),
+        report.scenarios.len()
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn untelemetered_sweep_keeps_the_report_clean() {
+    let spec = SweepSpec {
+        bytes: 8192,
+        channels: vec![1],
+        schemes: vec!["BDE".into()],
+        ..SweepSpec::default()
+    };
+    let trace = synthetic_trace(spec.bytes, spec.seed);
+    let report = run_sweep(&spec, &trace).unwrap();
+    assert!(report.scenarios.iter().all(|s| s.telemetry.is_none()));
+    assert!(!report.render_table().contains("telemetry:"));
+}
