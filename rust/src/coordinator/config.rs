@@ -25,6 +25,10 @@ pub struct RunConfig {
     /// Address-mapping policy for sharded traffic (`address = "steer"`;
     /// default: round-robin).
     pub address: AddressSpec,
+    /// Recorded `.zactrace` to replay instead of the workloads
+    /// (`trace = "run.zactrace"`): the file streams zero-copy through
+    /// the configured encoder/faults/channels/address topology.
+    pub trace: Option<String>,
     /// Workloads to run (imagenet / resnet / quant / eigen / svm).
     pub workloads: Vec<String>,
     /// Images per workload evaluation.
@@ -44,6 +48,7 @@ impl Default for RunConfig {
             faults: FaultSpec::perfect(),
             channels: 1,
             address: AddressSpec::round_robin(),
+            trace: None,
             workloads: vec![
                 "imagenet".into(),
                 "resnet".into(),
@@ -79,6 +84,7 @@ impl RunConfig {
                     cfg.channels = n;
                 }
                 "address" => cfg.address = AddressSpec::parse(v.as_str()?)?,
+                "trace" => cfg.trace = Some(v.as_str()?.to_string()),
                 "workload" => parse_workload(v, &mut cfg)?,
                 other => anyhow::bail!("unknown top-level key {other:?}"),
             }
@@ -220,6 +226,14 @@ mod tests {
         assert!(RunConfig::from_toml("channels = 99\n").is_err());
         assert!(RunConfig::from_toml("address = \"wat\"\n").is_err());
         assert!(RunConfig::from_toml("address = \"capacity:0\"\n").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses_and_rejects_non_strings() {
+        assert_eq!(RunConfig::default().trace, None);
+        let cfg = RunConfig::from_toml("trace = \"run.zactrace\"\n").unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some("run.zactrace"));
+        assert!(RunConfig::from_toml("trace = 3\n").is_err());
     }
 
     #[test]

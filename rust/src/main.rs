@@ -6,6 +6,12 @@
 //! * `encode`        — encode a hex trace (or a synthetic stream) and
 //!                     report energy + outcome statistics, optionally
 //!                     sharded across channels
+//! * `record`        — record a trace (hex or synthetic) to a framed
+//!                     `.zactrace` file
+//! * `replay`        — stream a recorded `.zactrace` through the
+//!                     engines via mmap-backed zero-copy chunks
+//! * `trace-info`    — inspect a `.zactrace` (header, per-frame CRC
+//!                     status, zero-line census) without decoding
 //! * `schemes`       — list the registered codec schemes
 //! * `workload <k>`  — evaluate one workload under a config
 //! * `run --config`  — full run from a TOML config file
@@ -76,6 +82,45 @@ fn app() -> Command {
                 )
                 .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
         )
+        .subcommand(
+            Command::new("record", "record a trace to a framed .zactrace file")
+                .positional("out", "output .zactrace path")
+                .opt("input", "-", "hex trace file ('-' = synthetic stream)")
+                .opt("bytes", "1048576", "synthetic stream size")
+                .opt("seed", "42", "synthetic stream seed")
+                .opt("chunk-lines", "256", "lines per frame")
+                .opt("traffic", "approximate", "recorded class: approximate | critical"),
+        )
+        .subcommand(
+            Command::new("replay", "replay a recorded .zactrace through the engines")
+                .positional("input", "recorded .zactrace path")
+                .opt("scheme", "OHE", "any registered scheme (see `schemes`)")
+                .opt("limit", "80", "similarity limit %")
+                .opt("truncation", "0", "truncation bits per 8-bit chunk")
+                .opt("tolerance", "0", "tolerance bits per 8-bit chunk")
+                .opt("table-size", "64", "data-table entries per chip")
+                .opt("channels", "1", "8-chip channels to shard across")
+                .opt(
+                    "address",
+                    "round_robin",
+                    "address map: round_robin | capacity:<w0>/<w1>/... | steer[:<pages>]",
+                )
+                .opt(
+                    "faults",
+                    "perfect",
+                    "fault model: perfect | uniform:<ber>[:<frac>] | voltage:<mV> | mram:<bin> (suffix @<seed>)",
+                )
+                .opt(
+                    "metrics-out",
+                    "-",
+                    "telemetry JSON path ('-' = skip; implies telemetry)",
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
+        )
+        .subcommand(
+            Command::new("trace-info", "inspect a .zactrace without decoding payloads")
+                .positional("file", "recorded .zactrace path"),
+        )
         .subcommand(Command::new("schemes", "list the registered codec schemes"))
         .subcommand(
             Command::new("workload", "evaluate one workload under a config")
@@ -97,6 +142,7 @@ fn app() -> Command {
                 .opt("channels", "", "channel counts, e.g. 1,2,4 (overrides spec)")
                 .opt("bytes", "0", "synthetic trace bytes (0 = spec/env value)")
                 .opt("seed", "0", "synthetic trace seed (0 = spec value)")
+                .opt("trace", "-", "recorded .zactrace source ('-' = synthetic, overrides spec)")
                 .opt(
                     "faults",
                     "",
@@ -216,6 +262,9 @@ fn main() -> Result<()> {
             }
         }
         Some("encode") => cmd_encode(&m)?,
+        Some("record") => cmd_record(&m)?,
+        Some("replay") => cmd_replay(&m)?,
+        Some("trace-info") => cmd_trace_info(&m)?,
         Some("schemes") => {
             let reg = default_registry();
             let mut t = TextTable::new(&["scheme", "knobs", "description"]);
@@ -343,29 +392,27 @@ fn encode_spec(m: &zac_dest::util::cli::Matches) -> Result<CodecSpec> {
     Ok(spec)
 }
 
+/// Resolve the `--input` traffic source `encode` and `record` share:
+/// the standard synthetic image-like stream ('-', sized by
+/// `--bytes`/`--seed`) or a hex trace file.
+fn trace_source(m: &zac_dest::util::cli::Matches) -> Result<Vec<u8>> {
+    let input = m.get_or("input", "-");
+    if input == "-" {
+        let n = m.get_usize("bytes")?;
+        let seed = m.get_usize("seed")? as u64;
+        return Ok(zac_dest::system::synthetic_trace(n, seed));
+    }
+    let text = std::fs::read_to_string(input)?;
+    let lines = zac_dest::trace::hex::parse(&text)?;
+    Ok(zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64))
+}
+
 fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let spec = encode_spec(m)?;
     let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
     let address = AddressSpec::parse(m.get_or("address", "round_robin"))?;
     let channels = m.get_usize("channels")?;
-    let input = m.get_or("input", "-");
-    let bytes = if input == "-" {
-        // Synthetic image-like stream.
-        let n = m.get_usize("bytes")?;
-        let mut r = zac_dest::util::rng::Rng::new(m.get_usize("seed")? as u64);
-        let mut v = 128i32;
-        (0..n)
-            .map(|_| {
-                v = (v + (r.below(9) as i32 - 4)).clamp(0, 255);
-                v as u8
-            })
-            .collect()
-    } else {
-        let text = std::fs::read_to_string(input)?;
-        let lines = zac_dest::trace::hex::parse(&text)?;
-        zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64)
-    };
-    let trace = Trace::from_bytes(bytes);
+    let trace = Trace::from_bytes(trace_source(m)?);
     let metrics_out = m.get_or("metrics-out", "-");
     let telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
     let session = Session::builder()
@@ -429,9 +476,126 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     Ok(())
 }
 
+fn cmd_record(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    use zac_dest::trace::wire::{Layout, TraceWriter};
+    let out = m
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("output .zactrace path required"))?;
+    let approx = match m.get_or("traffic", "approximate") {
+        "approximate" => true,
+        "critical" => false,
+        other => anyhow::bail!("unknown traffic class {other:?}; valid: approximate, critical"),
+    };
+    let chunk_lines = m.get_usize("chunk-lines")? as u32;
+    let trace = Trace::from_bytes(trace_source(m)?);
+    let mut w = TraceWriter::create_with_chunk(out, Layout::Raw, approx, chunk_lines)?;
+    w.write_lines(trace.lines(), approx)?;
+    let header = w.finish(trace.byte_len())?;
+    println!(
+        "recorded {out}: {} bytes, {} lines in {} frames, {} class",
+        header.byte_len,
+        trace.line_count(),
+        header.frame_count,
+        if approx { "approximate" } else { "critical" }
+    );
+    Ok(())
+}
+
+fn cmd_replay(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    use zac_dest::trace::wire::TraceFile;
+    let input = m
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("input .zactrace path required"))?;
+    let spec = encode_spec(m)?;
+    let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
+    let address = AddressSpec::parse(m.get_or("address", "round_robin"))?;
+    let channels = m.get_usize("channels")?;
+    let metrics_out = m.get_or("metrics-out", "-");
+    let telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
+    let file = TraceFile::open(input).map_err(|e| anyhow::anyhow!("{input}: {e}"))?;
+    let session = Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .address(address.clone())
+        .traffic(TrafficClass::Approximate)
+        .faults(faults)
+        .telemetry(telemetry)
+        .build()?;
+    let t0 = std::time::Instant::now();
+    let out = session.replay(&file)?;
+    let dt = t0.elapsed();
+    // The savings baseline replays the same recorded frames, so the
+    // comparison is trace-for-trace fair.
+    let base = Session::builder()
+        .codec(CodecSpec::named("ORG"))
+        .channels(channels)
+        .address(address.clone())
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .replay(&file)?;
+    println!("scheme        : {}", spec.label());
+    println!("channels      : {channels}");
+    println!("address       : {}", address.label());
+    println!("faults        : {}", faults.label());
+    println!(
+        "trace         : {input} ({} bytes, {} lines, {} frames)",
+        file.byte_len(),
+        file.total_lines(),
+        file.frame_count()
+    );
+    println!(
+        "termination 1s: {} ({} vs ORG)",
+        out.counts.termination_ones,
+        pct(out.counts.termination_savings_vs(&base.counts))
+    );
+    println!(
+        "switching     : {} ({} vs ORG)",
+        out.counts.switching_transitions,
+        pct(out.counts.switching_savings_vs(&base.counts))
+    );
+    for o in Outcome::all() {
+        println!("  {:<10}: {:.1}%", o.label(), 100.0 * out.stats.fraction(o));
+    }
+    println!(
+        "throughput    : {:.1} MB/s ({} lines in {:.1} ms)",
+        file.byte_len() as f64 / dt.as_secs_f64() / 1e6,
+        file.total_lines(),
+        dt.as_secs_f64() * 1e3
+    );
+    if out.faults.injected_bits > 0 {
+        println!("{}", out.quality_delta());
+    }
+    if channels > 1 {
+        // The sharded render already carries the telemetry section.
+        println!("\n{}", out.render());
+    } else if let Some(t) = &out.telemetry {
+        println!("\n{}", t.render_table());
+    }
+    if let Some(t) = &out.telemetry {
+        if metrics_out != "-" {
+            zac_dest::util::json_lite::write_file(metrics_out, &t.to_json())?;
+            eprintln!("metrics -> {metrics_out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace_info(m: &zac_dest::util::cli::Matches) -> Result<()> {
+    use zac_dest::trace::wire::TraceFile;
+    let path = m
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("trace file path required"))?;
+    let file = TraceFile::open(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{}", file.inspect().render());
+    Ok(())
+}
+
 fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     use zac_dest::system::{
-        bench_bytes_from_env, channels_from_env, parse_channel_list, run_sweep, synthetic_trace,
+        bench_bytes_from_env, channels_from_env, parse_channel_list, run_sweep, sweep_trace_bytes,
         SweepSpec,
     };
     let mut spec = match m.get_or("spec", "-") {
@@ -475,13 +639,17 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if !address_flag.is_empty() {
         spec.address = AddressSpec::parse_list(address_flag)?;
     }
+    match m.get_or("trace", "-") {
+        "-" => {}
+        path => spec.trace = Some(path.to_string()),
+    }
     // `--metrics-out` or `ZAC_METRICS=1` turn telemetry on; a spec with
     // `telemetry = true` keeps it on even without either.
     let metrics_out = m.get_or("metrics-out", "-");
     if metrics_out != "-" || zac_dest::obs::metrics_from_env()? {
         spec.telemetry = true;
     }
-    let trace = synthetic_trace(spec.bytes, spec.seed);
+    let trace = sweep_trace_bytes(&spec)?;
     eprintln!(
         "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}, address {:?}",
         spec.name,
@@ -629,6 +797,26 @@ mod tests {
     }
 
     #[test]
+    fn record_replay_and_trace_info_cli_flags_parse() {
+        let m = matches("record out.zactrace --bytes 4096 --seed 7 --chunk-lines 64");
+        assert_eq!(m.positionals.first().map(|s| s.as_str()), Some("out.zactrace"));
+        assert_eq!(m.get_usize("bytes").unwrap(), 4096);
+        assert_eq!(m.get_usize("chunk-lines").unwrap(), 64);
+        assert_eq!(m.get_or("traffic", "approximate"), "approximate");
+        let m = matches("replay in.zactrace --scheme BDE --channels 2 --faults voltage:1050");
+        assert_eq!(m.positionals.first().map(|s| s.as_str()), Some("in.zactrace"));
+        assert_eq!(encode_spec(&m).unwrap().scheme, "BDE");
+        assert_eq!(m.get_usize("channels").unwrap(), 2);
+        let m = matches("trace-info t.zactrace");
+        assert_eq!(m.positionals.first().map(|s| s.as_str()), Some("t.zactrace"));
+        // The sweep source override rides the same flag surface.
+        let m = matches("sweep --trace ci.zactrace");
+        assert_eq!(m.get_or("trace", "-"), "ci.zactrace");
+        let m = matches("sweep");
+        assert_eq!(m.get_or("trace", "-"), "-");
+    }
+
+    #[test]
     fn metrics_out_flag_parses_on_each_subcommand() {
         for cmd in ["encode", "sweep", "budget"] {
             let m = matches(&format!("{cmd} --metrics-out M.json"));
@@ -685,6 +873,9 @@ mod tests {
 
 fn cmd_run(path: &str) -> Result<()> {
     let rc = RunConfig::from_file(path)?;
+    if let Some(trace) = &rc.trace {
+        return run_recorded_config(&rc, trace);
+    }
     println!(
         "run {:?}: {} over {:?} ({} channel, {} shard(s), address {})",
         rc.name,
@@ -723,5 +914,31 @@ fn cmd_run(path: &str) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// `run` with a `trace = "..."` key: replay the recorded file under
+/// the config's encoder/faults/channels/address topology instead of
+/// the workload suite.
+fn run_recorded_config(rc: &RunConfig, path: &str) -> Result<()> {
+    use zac_dest::trace::wire::TraceFile;
+    println!(
+        "run {:?}: {} over recorded trace {path:?} ({}, {} shard(s), address {})",
+        rc.name,
+        rc.encoder.label(),
+        rc.faults.label(),
+        rc.channels,
+        rc.address.label()
+    );
+    let file = TraceFile::open(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let report = Session::builder()
+        .codec(rc.encoder.clone())
+        .channels(rc.channels)
+        .address(rc.address.clone())
+        .faults(rc.faults)
+        .traffic(TrafficClass::Approximate)
+        .build()?
+        .replay(&file)?;
+    println!("{}", report.render());
     Ok(())
 }

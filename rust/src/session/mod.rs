@@ -33,6 +33,7 @@
 //! five), so an out-of-tree scheme registered at runtime runs through a
 //! `Session` end-to-end without touching `encoding/` dispatch.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::channel::CHIPS;
@@ -44,6 +45,7 @@ use crate::faults::{FaultSpec, FaultStats};
 use crate::obs::{MetricsRegistry, TelemetrySnapshot};
 use crate::system::address::AddressSpec;
 use crate::system::array::{load_imbalance, ChannelArray, ShardReport, SystemOutput};
+use crate::trace::wire::{self, TraceFile, WireError};
 use crate::trace::{bytes_to_chip_words, bytes_to_f32s, f32s_to_bytes, ChipWords, LineChunk};
 use crate::util::table::TextTable;
 
@@ -123,6 +125,25 @@ impl Trace {
             bytes,
             lines: lines.into(),
         }
+    }
+
+    /// Materialize a recorded `.zactrace` into an in-memory trace
+    /// (structure and every frame CRC checked). For streaming replay
+    /// that never holds the whole file in RAM, see
+    /// [`Session::replay`].
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Trace, WireError> {
+        let file = TraceFile::open(path)?;
+        Ok(Trace::from_lines(
+            file.read_lines()?,
+            file.byte_len() as usize,
+        ))
+    }
+
+    /// Record this trace to a `.zactrace` file, framed at the engines'
+    /// batch size; `approx` is the recorded traffic class.
+    pub fn record(&self, path: impl AsRef<Path>, approx: bool) -> Result<(), WireError> {
+        wire::write_trace(path, self.lines(), self.byte_len(), wire::Layout::Raw, approx)?;
+        Ok(())
     }
 
     pub fn bytes(&self) -> &[u8] {
@@ -210,6 +231,14 @@ impl RunReport {
     /// [`Trace::from_f32s`] run carried.
     pub fn to_f32s(&self) -> Vec<f32> {
         bytes_to_f32s(&self.bytes)
+    }
+
+    /// [`to_f32s`](Self::to_f32s) with the misaligned-length panic
+    /// surfaced as a typed error — for replayed streams of recorded
+    /// (possibly foreign) provenance, where a short byte count must
+    /// not abort the process.
+    pub fn try_to_f32s(&self) -> Result<Vec<f32>, WireError> {
+        crate::trace::try_bytes_to_f32s(&self.bytes)
     }
 
     /// Back-convert into the legacy single-channel result type.
@@ -330,6 +359,8 @@ pub struct Session {
     faults: FaultSpec,
     address: AddressSpec,
     telemetry: bool,
+    trace_file: Option<PathBuf>,
+    record_to: Option<PathBuf>,
 }
 
 impl Session {
@@ -376,6 +407,11 @@ impl Session {
     /// trace's shared line store — no per-hop cloning of line data.
     pub fn run(&self, trace: &Trace) -> anyhow::Result<RunReport> {
         let approx = self.traffic.is_approximate();
+        if let Some(path) = &self.record_to {
+            trace
+                .record(path, approx)
+                .map_err(|e| anyhow::anyhow!("recording trace to {}: {e}", path.display()))?;
+        }
         let mode = match self.execution {
             Execution::Auto => {
                 // A non-default address policy needs the sharded engine
@@ -444,6 +480,81 @@ impl Session {
             Execution::Auto => unreachable!("Auto resolved above"),
         }
     }
+
+    /// Replay the recorded trace the builder's
+    /// [`trace_file`](SessionBuilder::trace_file) named — open, map
+    /// and stream it through [`replay`](Self::replay).
+    pub fn run_recorded(&self) -> anyhow::Result<RunReport> {
+        let path = match &self.trace_file {
+            Some(p) => p,
+            None => anyhow::bail!("no trace file configured; use SessionBuilder::trace_file"),
+        };
+        let file = TraceFile::open(path)
+            .map_err(|e| anyhow::anyhow!("trace file {}: {e}", path.display()))?;
+        self.replay(&file)
+    }
+
+    /// Stream a recorded `.zactrace` through the configured
+    /// codec/channel topology. Frames enter the engines as zero-copy
+    /// [`LineChunk`] views of the mapped pages — the whole trace is
+    /// never materialized in RAM, so multi-GiB recordings replay in
+    /// bounded memory. Pinned bit-identical to running the same trace
+    /// in-memory (`rust/tests/tracefile.rs`).
+    ///
+    /// A frame's effective class is the session's [`TrafficClass`] AND
+    /// the frame's recorded flag: a frame recorded critical stays
+    /// critical even under an approximate session. A corrupt or
+    /// truncated frame aborts the replay with its frame-indexed
+    /// [`WireError`] — never a panic.
+    ///
+    /// The batch engine needs the whole trace resident, so `Batch`
+    /// (and `Auto` at one round-robin channel) replays through the
+    /// chunk-streaming pipelined drive, which the batch≡pipelined
+    /// property pins bit-identical.
+    pub fn replay(&self, file: &TraceFile) -> anyhow::Result<RunReport> {
+        file.verify()
+            .map_err(|e| anyhow::anyhow!("invalid trace file: {e}"))?;
+        let stream_approx = self.traffic.is_approximate();
+        let byte_len = file.byte_len() as usize;
+        let nlines = file.total_lines() as usize;
+        let sharded = match self.execution {
+            Execution::Auto => self.channels > 1 || !self.address.is_round_robin(),
+            Execution::Sharded => true,
+            Execution::Batch | Execution::Pipelined => false,
+        };
+        if sharded {
+            let sets = (0..self.channels)
+                .map(|_| self.build_codecs())
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut a = ChannelArray::with_codec_sets_faults_address_and_telemetry(
+                sets,
+                self.capacity,
+                &self.faults,
+                &self.address,
+                self.telemetry,
+            );
+            for i in 0..file.frame_count() {
+                let approx = stream_approx && file.frame_approx(i);
+                a.push_chunk(&file.chunk_as(i, approx)?);
+            }
+            return Ok(RunReport::from_system(a.finish(byte_len)));
+        }
+        let reg = self.telemetry.then(|| MetricsRegistry::new(true, 1));
+        let stages = reg.as_ref().map(|r| r.shard(0).stages.clone());
+        let mut p = Pipeline::with_codecs_faults_and_stages(
+            self.build_codecs()?,
+            self.capacity,
+            &self.faults,
+            stages,
+        );
+        for i in 0..file.frame_count() {
+            let approx = stream_approx && file.frame_approx(i);
+            p.push_chunk(file.chunk_as(i, approx)?);
+        }
+        let mut report = RunReport::from_output(p.finish(byte_len), nlines);
+        report.telemetry = reg.map(|r| r.snapshot(nlines as u64));
+        Ok(report)
+    }
 }
 
 /// Builder for [`Session`]. Exactly one codec source is required:
@@ -464,6 +575,8 @@ pub struct SessionBuilder {
     faults: FaultSpec,
     address: AddressSpec,
     telemetry: Option<bool>,
+    trace_file: Option<PathBuf>,
+    record_to: Option<PathBuf>,
 }
 
 impl SessionBuilder {
@@ -537,6 +650,22 @@ impl SessionBuilder {
     /// execution pick the sharded engine even at one channel.
     pub fn address(mut self, spec: AddressSpec) -> SessionBuilder {
         self.address = spec;
+        self
+    }
+
+    /// A recorded `.zactrace` to use as the session's traffic source:
+    /// [`Session::run_recorded`] maps it and streams its frames
+    /// zero-copy through the configured topology.
+    pub fn trace_file(mut self, path: impl AsRef<Path>) -> SessionBuilder {
+        self.trace_file = Some(path.as_ref().to_path_buf());
+        self
+    }
+
+    /// Record every [`Session::run`]'s input trace to this `.zactrace`
+    /// path before simulating (capture mode; the file is overwritten
+    /// per run). Recording never changes results.
+    pub fn record_to(mut self, path: impl AsRef<Path>) -> SessionBuilder {
+        self.record_to = Some(path.as_ref().to_path_buf());
         self
     }
 
@@ -632,6 +761,8 @@ impl SessionBuilder {
             faults: self.faults,
             address: self.address,
             telemetry,
+            trace_file: self.trace_file,
+            record_to: self.record_to,
         })
     }
 }

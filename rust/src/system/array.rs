@@ -400,11 +400,30 @@ impl ChannelArray {
         }
     }
 
-    /// Ship shard `s`'s pending lines as one chunk. A failed send means
-    /// the shard worker died (receiver dropped mid-panic): the array
-    /// stops accepting lines, joins every worker and re-raises the
-    /// original shard panic right here at the call site — a dead worker
-    /// can no longer silently swallow a whole chunk until `finish`.
+    /// Route a whole replayed chunk: every line goes through the
+    /// address map, then each shard receives one scatter view
+    /// ([`LineChunk::subset`]) of the chunk's own backing store — the
+    /// mmap replay path, where lines stay in the mapped file pages all
+    /// the way to the shard workers. Interleaves correctly with
+    /// `push_line`/`push_store`: a shard's pending buffer is flushed
+    /// before its view ships, so per-shard arrival order always matches
+    /// global push order.
+    pub fn push_chunk(&mut self, chunk: &LineChunk) {
+        let mut per: Vec<Vec<u32>> = vec![Vec::new(); self.shards()];
+        for i in 0..chunk.len() {
+            let s = self.route(chunk.line(i));
+            per[s].push(i as u32);
+        }
+        for (s, local) in per.into_iter().enumerate() {
+            if local.is_empty() {
+                continue;
+            }
+            self.flush_shard(s);
+            self.send_chunk(s, chunk.subset(&local));
+        }
+    }
+
+    /// Ship shard `s`'s pending lines as one chunk.
     fn flush_shard(&mut self, s: usize) {
         let Some(pending) = self.pending[s].take() else {
             return;
@@ -420,6 +439,15 @@ impl ChannelArray {
                 approx,
             } => LineChunk::indexed(store, indices, approx),
         };
+        self.send_chunk(s, chunk);
+    }
+
+    /// Send one chunk to shard `s`'s mailbox. A failed send means the
+    /// shard worker died (receiver dropped mid-panic): the array stops
+    /// accepting lines, joins every worker and re-raises the original
+    /// shard panic right here at the call site — a dead worker can no
+    /// longer silently swallow a whole chunk until `finish`.
+    fn send_chunk(&mut self, s: usize, chunk: LineChunk) {
         // Backpressure accounting (deterministic: `in_flight` only
         // decreases when the worker has actually pulled a chunk, so a
         // pre-send sample equal to the mailbox capacity means this send
@@ -686,6 +714,52 @@ mod tests {
                 let mut bulk = build(&address);
                 bulk.push_store(&store, true);
                 let b = bulk.finish(bytes.len());
+                let label = format!("{} x{shards}", address.label());
+                assert_eq!(a.bytes, b.bytes, "{label}");
+                assert_eq!(a.counts, b.counts, "{label}");
+                assert_eq!(a.stats, b.stats, "{label}");
+                for (x, y) in a.shards.iter().zip(&b.shards) {
+                    assert_eq!(x.lines, y.lines, "{label}");
+                    assert_eq!(x.stats, y.stats, "{label}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn push_chunk_is_bit_identical_to_push_line() {
+        // The replay ingestion path: whole chunks of irregular sizes
+        // (what a recorded trace's frames look like) routed per chunk
+        // must equal the streaming per-line path for every address
+        // policy — per-shard subset views must preserve arrival order.
+        let bytes = image_like(410 * 64 + 24, 51);
+        let store: Arc<[ChipWords]> = bytes_to_chip_words(&bytes).into();
+        let cfg = ZacConfig::zac(80);
+        let spans = [0usize, 300, 301, 341, store.len()];
+        for address in [AddressSpec::round_robin(), AddressSpec::steer()] {
+            for shards in [1usize, 3] {
+                let build = |addr: &AddressSpec| {
+                    let sets = (0..shards)
+                        .map(|_| (0..CHIPS).map(|_| Codec::from_config(&cfg)).collect())
+                        .collect();
+                    ChannelArray::with_codec_sets_faults_and_address(
+                        sets,
+                        ENCODE_BATCH,
+                        &FaultSpec::perfect(),
+                        addr,
+                    )
+                };
+                let mut streamed = build(&address);
+                for l in store.iter() {
+                    streamed.push_line(*l, true);
+                }
+                let a = streamed.finish(bytes.len());
+                let mut chunked = build(&address);
+                for w in spans.windows(2) {
+                    let chunk = LineChunk::window(store.clone(), w[0], w[1] - w[0], true);
+                    chunked.push_chunk(&chunk);
+                }
+                let b = chunked.finish(bytes.len());
                 let label = format!("{} x{shards}", address.label());
                 assert_eq!(a.bytes, b.bytes, "{label}");
                 assert_eq!(a.counts, b.counts, "{label}");

@@ -49,5 +49,5 @@ pub use array::{load_imbalance, shard_of_line, ChannelArray, ShardReport, System
 pub use report::{ScenarioResult, SweepReport};
 pub use scenario::{
     bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list,
-    resolve_scheme_name, run_sweep, synthetic_trace, Scenario, SweepSpec,
+    resolve_scheme_name, run_sweep, sweep_trace_bytes, synthetic_trace, Scenario, SweepSpec,
 };

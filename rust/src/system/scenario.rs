@@ -45,6 +45,10 @@ pub struct SweepSpec {
     /// Synthetic-trace size in bytes (callers may substitute their own
     /// trace in [`run_sweep`]; this sizes the default one).
     pub bytes: usize,
+    /// Recorded `.zactrace` to sweep instead of the synthetic trace
+    /// (`bytes`/`seed` are ignored when set) — see
+    /// [`sweep_trace_bytes`].
+    pub trace: Option<String>,
     /// Mark the stream error-resilient.
     pub approx: bool,
     /// Channel counts to shard across.
@@ -82,6 +86,7 @@ impl Default for SweepSpec {
             name: "default-grid".into(),
             seed: 42,
             bytes: 1 << 18,
+            trace: None,
             approx: true,
             channels: vec![1, 2],
             schemes: vec!["BDE".into(), "OHE".into()],
@@ -129,6 +134,7 @@ impl SweepSpec {
                 "name" => spec.name = v.as_str()?.to_string(),
                 "seed" => spec.seed = parse_seed(v)?,
                 "bytes" => spec.bytes = v.as_usize()?,
+                "trace" => spec.trace = Some(v.as_str()?.to_string()),
                 "approx" => match v {
                     crate::util::json_lite::Json::Bool(b) => spec.approx = *b,
                     other => anyhow::bail!("approx must be true/false, got {other:?}"),
@@ -363,6 +369,20 @@ pub fn bench_bytes_from_env() -> anyhow::Result<Option<usize>> {
     }
 }
 
+/// Resolve a sweep's traffic source: the recorded `.zactrace` its
+/// `trace` key names (structure and every frame CRC checked at the
+/// ingestion boundary), or the standard synthetic trace sized by
+/// `bytes`/`seed`. Shared by `zac-dest sweep --trace` and the TOML key.
+pub fn sweep_trace_bytes(spec: &SweepSpec) -> anyhow::Result<Vec<u8>> {
+    match &spec.trace {
+        Some(path) => {
+            let t = Trace::from_file(path).map_err(|e| anyhow::anyhow!("trace file {path}: {e}"))?;
+            Ok(t.bytes().to_vec())
+        }
+        None => Ok(synthetic_trace(spec.bytes, spec.seed)),
+    }
+}
+
 /// The standard image-like synthetic trace (slowly varying byte walk)
 /// used by the CLI, benches and CI smokes.
 pub fn synthetic_trace(n: usize, seed: u64) -> Vec<u8> {
@@ -563,6 +583,44 @@ mod tests {
         let spec = SweepSpec::from_toml("telemetry = true\n").unwrap();
         assert!(spec.telemetry);
         assert!(SweepSpec::from_toml("telemetry = 1\n").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses_and_selects_the_traffic_source() {
+        assert_eq!(SweepSpec::default().trace, None);
+        let spec = SweepSpec::from_toml("trace = \"/tmp/x.zactrace\"\n").unwrap();
+        assert_eq!(spec.trace.as_deref(), Some("/tmp/x.zactrace"));
+        assert!(SweepSpec::from_toml("trace = 1\n").is_err());
+        // No trace key: the synthetic source, sized by bytes/seed.
+        let spec = SweepSpec {
+            bytes: 4096,
+            ..SweepSpec::default()
+        };
+        assert_eq!(
+            sweep_trace_bytes(&spec).unwrap(),
+            synthetic_trace(4096, spec.seed)
+        );
+        // A missing file is a named error, never a panic.
+        let missing = SweepSpec {
+            trace: Some("/nonexistent/zac.zactrace".into()),
+            ..SweepSpec::default()
+        };
+        let err = sweep_trace_bytes(&missing).unwrap_err().to_string();
+        assert!(err.contains("/nonexistent/zac.zactrace"), "{err}");
+    }
+
+    #[test]
+    fn sweep_trace_source_round_trips_through_a_recorded_file() {
+        let bytes = synthetic_trace(6000, 9);
+        let name = format!("zac_sweep_src_{}.zactrace", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        Trace::from_bytes(bytes.clone()).record(&path, true).unwrap();
+        let spec = SweepSpec {
+            trace: Some(path.to_str().unwrap().to_string()),
+            ..SweepSpec::default()
+        };
+        assert_eq!(sweep_trace_bytes(&spec).unwrap(), bytes);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -15,6 +15,36 @@ use std::sync::Arc;
 
 use super::ChipWords;
 
+/// A foreign backing store a chunk can borrow lines from without the
+/// lines living in an `Arc<[ChipWords]>` — the seam the mmap-backed
+/// `.zactrace` reader plugs into: its frame views implement this over
+/// the mapped pages, so a replayed chunk borrows file-backed memory
+/// with the exact same currency the in-memory paths use. Implementors
+/// guarantee the slice is stable and immutable for the handle's
+/// lifetime.
+pub trait LineBacking: std::fmt::Debug + Send + Sync {
+    /// The lines this backing exposes, in store order.
+    fn lines(&self) -> &[ChipWords];
+}
+
+/// Where a chunk's lines live: the usual owned shared store, or a
+/// foreign [`LineBacking`] (mapped file pages).
+#[derive(Clone, Debug)]
+enum Store {
+    Owned(Arc<[ChipWords]>),
+    Foreign(Arc<dyn LineBacking>),
+}
+
+impl Store {
+    #[inline]
+    fn slice(&self) -> &[ChipWords] {
+        match self {
+            Store::Owned(s) => s,
+            Store::Foreign(b) => b.lines(),
+        }
+    }
+}
+
 /// Which store lines a chunk covers, in transfer order.
 #[derive(Clone, Debug)]
 enum Select {
@@ -39,7 +69,7 @@ enum Flags {
 /// data.
 #[derive(Clone, Debug)]
 pub struct LineChunk {
-    store: Arc<[ChipWords]>,
+    store: Store,
     select: Select,
     flags: Flags,
 }
@@ -49,8 +79,20 @@ impl LineChunk {
     pub fn window(store: Arc<[ChipWords]>, start: usize, len: usize, approx: bool) -> LineChunk {
         assert!(start + len <= store.len(), "window out of store bounds");
         LineChunk {
-            store,
+            store: Store::Owned(store),
             select: Select::Window { start, len },
+            flags: Flags::Uniform(approx),
+        }
+    }
+
+    /// A whole foreign backing store as one uniform-class chunk — the
+    /// mmap replay path: the chunk borrows the mapped pages directly,
+    /// no line is copied out of the file.
+    pub fn from_backing(backing: Arc<dyn LineBacking>, approx: bool) -> LineChunk {
+        let len = backing.lines().len();
+        LineChunk {
+            store: Store::Foreign(backing),
+            select: Select::Window { start: 0, len },
             flags: Flags::Uniform(approx),
         }
     }
@@ -66,7 +108,7 @@ impl LineChunk {
                 start: 0,
                 len: store.len(),
             },
-            store,
+            store: Store::Owned(store),
             flags: Flags::Per(flags.into()),
         }
     }
@@ -80,9 +122,42 @@ impl LineChunk {
             "chunk index out of store bounds"
         );
         LineChunk {
-            store,
+            store: Store::Owned(store),
             select: Select::Indices(indices.into()),
             flags: Flags::Uniform(approx),
+        }
+    }
+
+    /// A scatter view of this chunk: chunk-local indices (in transfer
+    /// order) remapped onto the same backing store — what the channel
+    /// array ships per shard when a replayed chunk's lines route to
+    /// different channels. No line data is copied, whichever store
+    /// (owned or mapped) backs the parent.
+    pub fn subset(&self, local: &[u32]) -> LineChunk {
+        let mapped: Vec<u32> = local
+            .iter()
+            .map(|&l| {
+                assert!((l as usize) < self.len(), "subset index out of chunk bounds");
+                match &self.select {
+                    Select::Window { start, .. } => (start + l as usize) as u32,
+                    Select::Indices(idx) => idx[l as usize],
+                }
+            })
+            .collect();
+        let flags = match &self.flags {
+            Flags::Uniform(a) => Flags::Uniform(*a),
+            Flags::Per(f) => Flags::Per(
+                local
+                    .iter()
+                    .map(|&l| f[l as usize])
+                    .collect::<Vec<bool>>()
+                    .into(),
+            ),
+        };
+        LineChunk {
+            store: self.store.clone(),
+            select: Select::Indices(mapped.into()),
+            flags,
         }
     }
 
@@ -103,9 +178,9 @@ impl LineChunk {
         match &self.select {
             Select::Window { start, len } => {
                 assert!(i < *len);
-                &self.store[start + i]
+                &self.store.slice()[start + i]
             }
-            Select::Indices(idx) => &self.store[idx[i] as usize],
+            Select::Indices(idx) => &self.store.slice()[idx[i] as usize],
         }
     }
 
@@ -124,17 +199,18 @@ impl LineChunk {
     /// `[start, start + out.len())` — the strided gather every chip
     /// worker runs once per batch into its reusable buffer.
     pub fn gather_chip(&self, chip: usize, start: usize, out: &mut [u64]) {
+        let store = self.store.slice();
         match &self.select {
             Select::Window { start: s, len } => {
                 assert!(start + out.len() <= *len);
-                let lines = &self.store[s + start..s + start + out.len()];
+                let lines = &store[s + start..s + start + out.len()];
                 for (o, l) in out.iter_mut().zip(lines) {
                     *o = l[chip];
                 }
             }
             Select::Indices(idx) => {
                 for (o, &i) in out.iter_mut().zip(&idx[start..start + out.len()]) {
-                    *o = self.store[i as usize][chip];
+                    *o = store[i as usize][chip];
                 }
             }
         }
@@ -171,10 +247,67 @@ mod tests {
         assert_eq!(c.line(0), &st[3]);
         assert_eq!(c.line(3), &st[6]);
         assert!(c.approx(2));
-        // Clones share the same backing store.
+        // Clones share the same backing store: the clone's lines live
+        // at the same addresses, and only refcounts moved.
         let d = c.clone();
-        assert!(Arc::ptr_eq(&c.store, &d.store));
+        assert!(std::ptr::eq(c.line(0), d.line(0)));
         assert_eq!(Arc::strong_count(&st), 3);
+    }
+
+    #[test]
+    fn foreign_backing_serves_lines_without_copying() {
+        #[derive(Debug)]
+        struct Fixed(Vec<ChipWords>);
+        impl LineBacking for Fixed {
+            fn lines(&self) -> &[ChipWords] {
+                &self.0
+            }
+        }
+        let lines: Vec<ChipWords> = (0..6)
+            .map(|l| std::array::from_fn(|j| (l * CHIPS + j) as u64))
+            .collect();
+        let backing: Arc<dyn LineBacking> = Arc::new(Fixed(lines.clone()));
+        let c = LineChunk::from_backing(backing.clone(), true);
+        assert_eq!(c.len(), 6);
+        assert!(c.approx(0));
+        for i in 0..6 {
+            assert_eq!(c.line(i), &lines[i]);
+            // The chunk's lines are the backing's own memory.
+            assert!(std::ptr::eq(c.line(i), &backing.lines()[i]));
+        }
+        let mut lane = [0u64; 4];
+        c.gather_chip(3, 1, &mut lane);
+        assert_eq!(lane, [lines[1][3], lines[2][3], lines[3][3], lines[4][3]]);
+    }
+
+    #[test]
+    fn subset_remaps_through_windows_and_index_lists() {
+        let st = store(10);
+        // Window parent: local l maps to start + l.
+        let w = LineChunk::window(st.clone(), 2, 6, true);
+        let sub = w.subset(&[5, 0, 3]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.line(0), &st[7]);
+        assert_eq!(sub.line(1), &st[2]);
+        assert_eq!(sub.line(2), &st[5]);
+        assert!(sub.approx(1));
+        // Indexed parent: local l maps through the parent's index list,
+        // and per-line flags follow the selection.
+        let flags: Vec<bool> = vec![true, false, true, false];
+        let p = LineChunk::from_lines(st[..4].to_vec(), flags);
+        let sub = p.subset(&[3, 1]);
+        assert_eq!(sub.line(0), &st[3]);
+        assert_eq!(sub.line(1), &st[1]);
+        assert!(!sub.approx(0));
+        assert!(!sub.approx(1));
+        let deeper = sub.subset(&[1]);
+        assert_eq!(deeper.line(0), &st[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "subset index out of chunk bounds")]
+    fn subset_bounds_are_checked() {
+        let _ = LineChunk::window(store(4), 0, 2, true).subset(&[2]);
     }
 
     #[test]

@@ -10,8 +10,9 @@
 pub mod chunk;
 pub mod float_layout;
 pub mod hex;
+pub mod wire;
 
-pub use chunk::LineChunk;
+pub use chunk::{LineBacking, LineChunk};
 
 use crate::channel::CHIPS;
 
@@ -86,6 +87,21 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect()
+}
+
+/// [`bytes_to_f32s`] with the misaligned-length panic surfaced as a
+/// typed error — the file-ingestion form: a corrupt or truncated
+/// recorded trace must never abort a replay process.
+pub fn try_bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>, wire::WireError> {
+    if bytes.len() % 4 != 0 {
+        return Err(wire::WireError::MisalignedF32 {
+            byte_len: bytes.len() as u64,
+        });
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 /// Fig. 1's approximation: flip a fraction of the 1s in the low `nbits`

@@ -1,0 +1,188 @@
+//! Read-only whole-file mapping without a `libc`/`memmap2` dependency
+//! (the offline build substrate vendors no crates): `mmap(2)` via a
+//! direct `extern "C"` declaration on unix, and an 8-byte-aligned heap
+//! read everywhere else — also the fallback for empty files, which
+//! `mmap` rejects, and for any mapping failure.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// An active `mmap(2)` region, unmapped on drop.
+#[cfg(unix)]
+#[derive(Debug)]
+pub struct MmapRegion {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the region is read-only (PROT_READ, MAP_PRIVATE) and never
+// aliased mutably; sharing the raw pointer across threads is sound.
+#[cfg(unix)]
+unsafe impl Send for MmapRegion {}
+#[cfg(unix)]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(unix)]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` came from a successful mmap and are
+        // unmapped exactly once.
+        unsafe { sys::munmap(self.ptr as *mut _, self.len) };
+    }
+}
+
+/// A read-only view of a whole file. Page-cache backed where `mmap` is
+/// available — multi-GiB traces stream without residing in RAM — and
+/// always 8-byte aligned at the base, so `.zactrace` frame payloads
+/// (whose offsets are ≡ 0 mod 16) can be reinterpreted as `[u64; 8]`
+/// cache lines in place.
+#[derive(Debug)]
+pub enum MapBuf {
+    /// `mmap`-backed pages (unix, non-empty files).
+    #[cfg(unix)]
+    Mapped(MmapRegion),
+    /// Owned heap buffer, allocated as `u64`s so the base pointer is
+    /// 8-byte aligned (non-unix hosts, empty files, or mmap failure).
+    Heap { words: Vec<u64>, len: usize },
+}
+
+impl MapBuf {
+    /// Map (or read) `len` bytes of an open file.
+    pub fn open(file: &File, len: usize) -> std::io::Result<MapBuf> {
+        #[cfg(unix)]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            // SAFETY: a fresh private read-only mapping of a file we
+            // hold open; failure is checked below.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1; fall back to the heap read on
+            // any failure rather than surfacing platform errno quirks.
+            if ptr as usize != usize::MAX && !ptr.is_null() {
+                return Ok(MapBuf::Mapped(MmapRegion {
+                    ptr: ptr as *const u8,
+                    len,
+                }));
+            }
+        }
+        Self::read_heap(file, len)
+    }
+
+    fn read_heap(mut file: &File, len: usize) -> std::io::Result<MapBuf> {
+        file.seek(SeekFrom::Start(0))?;
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // SAFETY: viewing the u64 buffer as bytes — same allocation,
+        // `len <= words.len() * 8`; the tail of the last word stays 0.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len) };
+        file.read_exact(bytes)?;
+        Ok(MapBuf::Heap { words, len })
+    }
+
+    /// The mapped bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: the region stays mapped for `self`'s lifetime.
+            MapBuf::Mapped(m) => unsafe { std::slice::from_raw_parts(m.ptr, m.len) },
+            MapBuf::Heap { words, len } => {
+                // SAFETY: same allocation viewed as bytes; `len` never
+                // exceeds the u64 buffer's byte size.
+                unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        match self {
+            #[cfg(unix)]
+            MapBuf::Mapped(m) => m.len,
+            MapBuf::Heap { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view is page-cache backed (`mmap`) rather than an
+    /// owned heap copy.
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(unix)]
+            MapBuf::Mapped(_) => true,
+            MapBuf::Heap { .. } => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("zac_mapbuf_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn mapped_and_heap_views_agree_with_the_file() {
+        let path = tmp("agree");
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 7) as u8).collect();
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&data)
+            .unwrap();
+        let file = File::open(&path).unwrap();
+        let map = MapBuf::open(&file, data.len()).unwrap();
+        assert_eq!(map.as_bytes(), &data[..]);
+        assert_eq!(map.len(), data.len());
+        assert!(!map.is_empty());
+        // The base pointer is 8-byte aligned on both paths.
+        assert_eq!(map.as_bytes().as_ptr().align_offset(8), 0);
+        let heap = MapBuf::read_heap(&file, data.len()).unwrap();
+        assert_eq!(heap.as_bytes(), &data[..]);
+        assert!(!heap.is_mapped());
+        assert_eq!(heap.as_bytes().as_ptr().align_offset(8), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_an_empty_view() {
+        let path = tmp("empty");
+        std::fs::File::create(&path).unwrap();
+        let file = File::open(&path).unwrap();
+        let map = MapBuf::open(&file, 0).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.as_bytes(), &[] as &[u8]);
+        std::fs::remove_file(&path).ok();
+    }
+}

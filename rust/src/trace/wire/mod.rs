@@ -1,0 +1,489 @@
+//! The `.zactrace` on-disk trace format: framed, self-describing,
+//! CRC-checked persistence for the traffic a [`Session`] consumes —
+//! the workload set stops being "what we can synthesize" and becomes
+//! "anything anyone can record".
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     8  magic "ZACTRACE"
+//!      8     4  version (this writer: 1)
+//!     12     4  line width in bytes (this crate models 64 B lines)
+//!     16     4  nominal chunk size in lines (the writer's frame size)
+//!     20     4  payload layout: 0 = raw bytes, 1 = f32 little-endian
+//!     24     4  stream flags: bit 0 = recorded as approximate traffic
+//!     28     4  reserved (zero)
+//!     32     8  total stream length in bytes (patched on finish)
+//!     40     8  frame count (patched on finish)
+//!     48     8  reserved (zero)
+//!     56     4  CRC32 of header bytes [0, 56)
+//!     60     4  reserved (zero)
+//! ```
+//!
+//! Frames follow back to back from offset 64. Each frame is a 16-byte
+//! header plus a length-prefixed payload:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     4  lines in this frame (n > 0)
+//!      4     4  frame flags: bit 0 = approximate traffic
+//!      8     4  CRC32 of the payload
+//!     12     4  reserved (zero)
+//!     16  64·n  payload: n cache lines, each 8 chip words as u64 LE
+//! ```
+//!
+//! Every frame offset is ≡ 0 (mod 16), so payloads are 8-byte aligned
+//! and a little-endian host can reinterpret a mapped payload as
+//! `&[ChipWords]` in place — the zero-copy replay path
+//! ([`TraceFile::chunk_as`] → [`LineChunk`](crate::trace::LineChunk)).
+//!
+//! The framing follows the defmt/rzCOBS discipline (SNIPPETS.md §1):
+//! encoder ([`TraceWriter`]) and decoder ([`TraceFile`]) are separate,
+//! and the decoder is *total* over truncated or corrupt input — every
+//! failure mode maps to a named [`WireError`] carrying the offending
+//! frame index (`frame 17: crc mismatch`), never a panic.
+//!
+//! [`Session`]: crate::session::Session
+
+mod mmap;
+mod reader;
+mod writer;
+
+use std::fmt;
+
+use crate::encoding::ENCODE_BATCH;
+use crate::trace::LINE_BYTES;
+
+pub use mmap::MapBuf;
+pub use reader::{FrameStatus, TraceFile, TraceInfo};
+pub use writer::{write_trace, TraceWriter};
+
+/// File magic: the first 8 bytes of every `.zactrace`.
+pub const MAGIC: [u8; 8] = *b"ZACTRACE";
+
+/// Format version this crate reads and writes.
+pub const VERSION: u32 = 1;
+
+/// Fixed file-header size in bytes.
+pub const HEADER_BYTES: usize = 64;
+
+/// Fixed per-frame header size in bytes.
+pub const FRAME_HEADER_BYTES: usize = 16;
+
+/// Default lines per frame: the data plane's encode batch, so replayed
+/// frames feed the engines at their native chunk granularity.
+pub const DEFAULT_CHUNK_LINES: u32 = ENCODE_BATCH as u32;
+
+/// How a recorded payload's bytes are to be interpreted after
+/// reconstruction (the line encoding on disk is the same either way).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Layout {
+    /// An opaque byte stream.
+    #[default]
+    Raw,
+    /// Little-endian packed f32s (weights traffic): the stream length
+    /// must be 4-byte aligned, checked at open.
+    F32Le,
+}
+
+impl Layout {
+    fn tag(self) -> u32 {
+        match self {
+            Layout::Raw => 0,
+            Layout::F32Le => 1,
+        }
+    }
+
+    fn from_tag(tag: u32) -> Result<Layout, WireError> {
+        match tag {
+            0 => Ok(Layout::Raw),
+            1 => Ok(Layout::F32Le),
+            found => Err(WireError::BadLayout { found }),
+        }
+    }
+
+    /// Human label for the inspector.
+    pub fn label(self) -> &'static str {
+        match self {
+            Layout::Raw => "raw",
+            Layout::F32Le => "f32-le",
+        }
+    }
+}
+
+/// Parsed `.zactrace` file header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    /// Format version the file was written with.
+    pub version: u32,
+    /// Line width in bytes (always [`LINE_BYTES`] for readable files).
+    pub line_bytes: u32,
+    /// The writer's nominal frame size in lines.
+    pub chunk_lines: u32,
+    /// Payload interpretation.
+    pub layout: Layout,
+    /// Whether the stream was recorded as approximate traffic.
+    pub traffic_approx: bool,
+    /// Total stream length in bytes (the padded tail of the last line
+    /// is not part of the stream).
+    pub byte_len: u64,
+    /// Number of frames in the file.
+    pub frame_count: u64,
+}
+
+impl Header {
+    /// Serialize to the fixed 64-byte on-disk header (CRC included).
+    pub fn to_bytes(&self) -> [u8; HEADER_BYTES] {
+        let mut b = [0u8; HEADER_BYTES];
+        b[0..8].copy_from_slice(&MAGIC);
+        b[8..12].copy_from_slice(&self.version.to_le_bytes());
+        b[12..16].copy_from_slice(&self.line_bytes.to_le_bytes());
+        b[16..20].copy_from_slice(&self.chunk_lines.to_le_bytes());
+        b[20..24].copy_from_slice(&self.layout.tag().to_le_bytes());
+        b[24..28].copy_from_slice(&(self.traffic_approx as u32).to_le_bytes());
+        b[32..40].copy_from_slice(&self.byte_len.to_le_bytes());
+        b[40..48].copy_from_slice(&self.frame_count.to_le_bytes());
+        let crc = crc32(&b[0..56]);
+        b[56..60].copy_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    /// Parse and validate a file header. Strict: bad magic, unsupported
+    /// version, checksum mismatch, foreign line width, unknown layout
+    /// and a misaligned f32 stream are each a distinct [`WireError`].
+    pub fn parse(bytes: &[u8]) -> Result<Header, WireError> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(WireError::TruncatedHeader {
+                available: bytes.len(),
+            });
+        }
+        if bytes[0..8] != MAGIC {
+            let mut found = [0u8; 8];
+            found.copy_from_slice(&bytes[0..8]);
+            return Err(WireError::BadMagic { found });
+        }
+        let version = u32_le(bytes, 8);
+        if version == 0 || version > VERSION {
+            return Err(WireError::UnsupportedVersion {
+                found: version,
+                supported: VERSION,
+            });
+        }
+        let stored = u32_le(bytes, 56);
+        let computed = crc32(&bytes[0..56]);
+        if stored != computed {
+            return Err(WireError::HeaderCorrupt { stored, computed });
+        }
+        let line_bytes = u32_le(bytes, 12);
+        if line_bytes as usize != LINE_BYTES {
+            return Err(WireError::BadLineBytes { found: line_bytes });
+        }
+        let chunk_lines = u32_le(bytes, 16);
+        if chunk_lines == 0 {
+            return Err(WireError::BadChunkLines);
+        }
+        let layout = Layout::from_tag(u32_le(bytes, 20))?;
+        let byte_len = u64_le(bytes, 32);
+        if layout == Layout::F32Le && byte_len % 4 != 0 {
+            return Err(WireError::MisalignedF32 { byte_len });
+        }
+        Ok(Header {
+            version,
+            line_bytes,
+            chunk_lines,
+            layout,
+            traffic_approx: u32_le(bytes, 24) & 1 != 0,
+            byte_len,
+            frame_count: u64_le(bytes, 40),
+        })
+    }
+}
+
+/// Typed `.zactrace` decode/encode errors. Frame-level failures carry
+/// the zero-based frame index — `frame 17: crc mismatch` — matching the
+/// name-the-offending-token contract of `resolve_scheme_name` and
+/// `FaultSpec` parsing. The decoder is total: every corruption mode
+/// lands here, never in a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// File shorter than the fixed 64-byte header.
+    TruncatedHeader { available: usize },
+    /// The first 8 bytes are not `ZACTRACE`.
+    BadMagic { found: [u8; 8] },
+    /// Written by a newer writer than this reader understands.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// Header checksum mismatch: the header fields are corrupt.
+    HeaderCorrupt { stored: u32, computed: u32 },
+    /// Line width other than the 64 B cache line this crate models.
+    BadLineBytes { found: u32 },
+    /// Unknown payload layout tag.
+    BadLayout { found: u32 },
+    /// Zero nominal chunk size.
+    BadChunkLines,
+    /// An f32-layout stream whose byte length is not 4-byte aligned —
+    /// the typed form of the `bytes_to_f32s` alignment panic, caught at
+    /// the file-ingestion boundary.
+    MisalignedF32 { byte_len: u64 },
+    /// A frame header or payload runs past the end of the file.
+    TruncatedFrame {
+        frame: usize,
+        offset: usize,
+        needed: usize,
+        available: usize,
+    },
+    /// A frame declaring zero lines.
+    EmptyFrame { frame: usize },
+    /// A frame payload's CRC32 does not match its header.
+    CrcMismatch {
+        frame: usize,
+        stored: u32,
+        computed: u32,
+    },
+    /// The header's frame count disagrees with the frames present
+    /// (an unfinished writer, or a tail cut exactly on a frame edge).
+    FrameCountMismatch { header: u64, found: u64 },
+    /// The frames' line total cannot carry the header's byte length.
+    LengthMismatch { lines: u64, byte_len: u64 },
+    /// Underlying I/O failure.
+    Io { op: &'static str, message: String },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::TruncatedHeader { available } => write!(
+                f,
+                "trace header truncated: {available} bytes, need {HEADER_BYTES}"
+            ),
+            WireError::BadMagic { found } => write!(
+                f,
+                "bad magic {found:?}; not a .zactrace file (expected {MAGIC:?})"
+            ),
+            WireError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "unsupported trace version {found} (this reader supports 1..={supported})"
+            ),
+            WireError::HeaderCorrupt { stored, computed } => write!(
+                f,
+                "header crc mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            WireError::BadLineBytes { found } => write!(
+                f,
+                "unsupported line width {found} B (this crate models {LINE_BYTES} B cache lines)"
+            ),
+            WireError::BadLayout { found } => {
+                write!(f, "unknown payload layout tag {found} (known: 0=raw, 1=f32-le)")
+            }
+            WireError::BadChunkLines => write!(f, "nominal chunk size must be at least one line"),
+            WireError::MisalignedF32 { byte_len } => write!(
+                f,
+                "f32-layout stream length {byte_len} is not 4-byte aligned"
+            ),
+            WireError::TruncatedFrame {
+                frame,
+                offset,
+                needed,
+                available,
+            } => write!(
+                f,
+                "frame {frame}: truncated frame ({needed} bytes needed at offset {offset}, \
+                 {available} left in file)"
+            ),
+            WireError::EmptyFrame { frame } => {
+                write!(f, "frame {frame}: empty frame (zero lines)")
+            }
+            WireError::CrcMismatch {
+                frame,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "frame {frame}: crc mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            WireError::FrameCountMismatch { header, found } => write!(
+                f,
+                "frame count mismatch: header says {header}, file has {found}"
+            ),
+            WireError::LengthMismatch { lines, byte_len } => write!(
+                f,
+                "length mismatch: {lines} recorded lines cannot carry a {byte_len}-byte stream"
+            ),
+            WireError::Io { op, message } => write!(f, "{op}: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the header
+/// and frame checksum. Table-driven; the table is built at compile time.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+fn u32_le(bytes: &[u8], offset: usize) -> u32 {
+    u32::from_le_bytes([
+        bytes[offset],
+        bytes[offset + 1],
+        bytes[offset + 2],
+        bytes[offset + 3],
+    ])
+}
+
+fn u64_le(bytes: &[u8], offset: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[offset..offset + 8]);
+    u64::from_le_bytes(b)
+}
+
+fn io(op: &'static str) -> impl FnOnce(std::io::Error) -> WireError {
+    move |e| WireError::Io {
+        op,
+        message: e.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard CRC-32 check vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn header_round_trips_through_bytes() {
+        let h = Header {
+            version: VERSION,
+            line_bytes: LINE_BYTES as u32,
+            chunk_lines: DEFAULT_CHUNK_LINES,
+            layout: Layout::F32Le,
+            traffic_approx: true,
+            byte_len: 123_456,
+            frame_count: 77,
+        };
+        assert_eq!(Header::parse(&h.to_bytes()).unwrap(), h);
+    }
+
+    #[test]
+    fn header_rejects_every_corruption_mode_with_a_named_error() {
+        let good = Header {
+            version: VERSION,
+            line_bytes: LINE_BYTES as u32,
+            chunk_lines: 256,
+            layout: Layout::Raw,
+            traffic_approx: false,
+            byte_len: 640,
+            frame_count: 1,
+        }
+        .to_bytes();
+
+        assert!(matches!(
+            Header::parse(&good[..HEADER_BYTES - 1]),
+            Err(WireError::TruncatedHeader { available }) if available == HEADER_BYTES - 1
+        ));
+
+        let mut bad = good;
+        bad[0] = b'X';
+        assert!(matches!(
+            Header::parse(&bad),
+            Err(WireError::BadMagic { .. })
+        ));
+
+        // A future version is rejected before the CRC is even consulted
+        // (a v2 header may checksum differently).
+        let mut bad = good;
+        bad[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            Header::parse(&bad),
+            Err(WireError::UnsupportedVersion { found, supported })
+                if found == VERSION + 1 && supported == VERSION
+        ));
+
+        // Any field flip breaks the header CRC.
+        let mut bad = good;
+        bad[16] ^= 0x01;
+        assert!(matches!(
+            Header::parse(&bad),
+            Err(WireError::HeaderCorrupt { .. })
+        ));
+
+        // Consistent (re-checksummed) but unsupported field values.
+        let reseal = |mutate: &dyn Fn(&mut [u8; HEADER_BYTES])| {
+            let mut b = good;
+            mutate(&mut b);
+            let crc = crc32(&b[0..56]);
+            b[56..60].copy_from_slice(&crc.to_le_bytes());
+            b
+        };
+        assert!(matches!(
+            Header::parse(&reseal(&|b| b[12..16].copy_from_slice(&128u32.to_le_bytes()))),
+            Err(WireError::BadLineBytes { found: 128 })
+        ));
+        assert!(matches!(
+            Header::parse(&reseal(&|b| b[20..24].copy_from_slice(&9u32.to_le_bytes()))),
+            Err(WireError::BadLayout { found: 9 })
+        ));
+        assert!(matches!(
+            Header::parse(&reseal(&|b| b[16..20].copy_from_slice(&0u32.to_le_bytes()))),
+            Err(WireError::BadChunkLines)
+        ));
+        assert!(matches!(
+            Header::parse(&reseal(&|b| {
+                b[20..24].copy_from_slice(&1u32.to_le_bytes());
+                b[32..40].copy_from_slice(&641u64.to_le_bytes());
+            })),
+            Err(WireError::MisalignedF32 { byte_len: 641 })
+        ));
+    }
+
+    #[test]
+    fn frame_errors_name_the_frame() {
+        let e = WireError::CrcMismatch {
+            frame: 17,
+            stored: 1,
+            computed: 2,
+        };
+        assert!(e.to_string().starts_with("frame 17: crc mismatch"));
+        let e = WireError::TruncatedFrame {
+            frame: 3,
+            offset: 640,
+            needed: 80,
+            available: 12,
+        };
+        assert!(e.to_string().starts_with("frame 3: truncated frame"));
+    }
+}

@@ -1,0 +1,406 @@
+//! The `.zactrace` decoder: an mmap-backed reader whose frames
+//! materialize as zero-copy [`LineChunk`] views borrowing the mapped
+//! pages. Total over truncated or corrupt input — `open` validates the
+//! header strictly, scans the frame directory structurally, and every
+//! payload access re-checks that frame's CRC, so a multi-GiB trace
+//! streams straight into the engines without the whole file (or any
+//! decoded copy of it) resident in RAM, and a corrupt frame surfaces
+//! as its own frame-indexed [`WireError`] instead of a panic.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::trace::{ChipWords, LineBacking, LineChunk, LINE_BYTES};
+use crate::util::table::TextTable;
+
+use super::writer::le_bytes_to_lines;
+use super::{crc32, io, u32_le, Header, MapBuf, WireError, FRAME_HEADER_BYTES, HEADER_BYTES};
+
+/// Directory entry for one frame: where its payload lives and what its
+/// header declared. Built once at open from frame headers alone.
+#[derive(Clone, Copy, Debug)]
+struct FrameEntry {
+    /// Payload offset in the file.
+    payload: usize,
+    /// Lines in the frame.
+    lines: u32,
+    /// Frame flags (bit 0 = approximate).
+    flags: u32,
+    /// Declared payload CRC32.
+    stored_crc: u32,
+}
+
+/// An open, memory-mapped `.zactrace`.
+///
+/// Opening validates the header and walks the frame chain (offsets and
+/// lengths only — no payload reads). A structurally broken tail does
+/// not fail `open` — the inspector still needs the readable prefix —
+/// but [`verify`](Self::verify) reports it, and [`chunk`](Self::chunk)
+/// on the broken frame returns the same error. Replay paths call
+/// `verify` first, so a truncated recording never silently replays
+/// short.
+pub struct TraceFile {
+    map: Arc<MapBuf>,
+    header: Header,
+    frames: Vec<FrameEntry>,
+    /// The structural error the directory scan stopped at, if any.
+    scan_error: Option<WireError>,
+    total_lines: u64,
+}
+
+impl TraceFile {
+    /// Open and map a recorded trace.
+    pub fn open(path: impl AsRef<Path>) -> Result<TraceFile, WireError> {
+        let file = File::open(path).map_err(io("opening trace file"))?;
+        let len = file.metadata().map_err(io("reading trace file length"))?.len() as usize;
+        let map = MapBuf::open(&file, len).map_err(io("mapping trace file"))?;
+        Self::from_map(Arc::new(map))
+    }
+
+    fn from_map(map: Arc<MapBuf>) -> Result<TraceFile, WireError> {
+        let bytes = map.as_bytes();
+        let header = Header::parse(bytes)?;
+        let mut frames = Vec::new();
+        let mut scan_error = None;
+        let mut total_lines = 0u64;
+        let mut off = HEADER_BYTES;
+        while off < bytes.len() {
+            let frame = frames.len();
+            if off + FRAME_HEADER_BYTES > bytes.len() {
+                scan_error = Some(WireError::TruncatedFrame {
+                    frame,
+                    offset: off,
+                    needed: FRAME_HEADER_BYTES,
+                    available: bytes.len() - off,
+                });
+                break;
+            }
+            let lines = u32_le(bytes, off);
+            if lines == 0 {
+                scan_error = Some(WireError::EmptyFrame { frame });
+                break;
+            }
+            let payload = off + FRAME_HEADER_BYTES;
+            let payload_len = lines as usize * LINE_BYTES;
+            if payload + payload_len > bytes.len() {
+                scan_error = Some(WireError::TruncatedFrame {
+                    frame,
+                    offset: off,
+                    needed: FRAME_HEADER_BYTES + payload_len,
+                    available: bytes.len() - off,
+                });
+                break;
+            }
+            frames.push(FrameEntry {
+                payload,
+                lines,
+                flags: u32_le(bytes, off + 4),
+                stored_crc: u32_le(bytes, off + 8),
+            });
+            total_lines += lines as u64;
+            off = payload + payload_len;
+        }
+        Ok(TraceFile {
+            map,
+            header,
+            frames,
+            scan_error,
+            total_lines,
+        })
+    }
+
+    /// The parsed file header.
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    /// Frames actually present in the file (readable prefix).
+    pub fn frame_count(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Lines over all present frames.
+    pub fn total_lines(&self) -> u64 {
+        self.total_lines
+    }
+
+    /// Recorded stream length in bytes.
+    pub fn byte_len(&self) -> u64 {
+        self.header.byte_len
+    }
+
+    /// Lines in frame `i` (panics if out of range — iterate with
+    /// [`frame_count`](Self::frame_count)).
+    pub fn frame_lines(&self, i: usize) -> usize {
+        self.frames[i].lines as usize
+    }
+
+    /// Whether frame `i` was recorded as approximate traffic.
+    pub fn frame_approx(&self, i: usize) -> bool {
+        self.frames[i].flags & 1 != 0
+    }
+
+    /// Structural validation: the frame chain parsed to the end of the
+    /// file, the header's frame count matches, and the line total can
+    /// carry the declared byte length. Cheap — no payload reads;
+    /// [`verify_payloads`](Self::verify_payloads) adds the CRC pass.
+    pub fn verify(&self) -> Result<(), WireError> {
+        if let Some(e) = &self.scan_error {
+            return Err(e.clone());
+        }
+        if self.header.frame_count != self.frames.len() as u64 {
+            return Err(WireError::FrameCountMismatch {
+                header: self.header.frame_count,
+                found: self.frames.len() as u64,
+            });
+        }
+        let need = self.header.byte_len.div_ceil(LINE_BYTES as u64);
+        if need != self.total_lines {
+            return Err(WireError::LengthMismatch {
+                lines: self.total_lines,
+                byte_len: self.header.byte_len,
+            });
+        }
+        Ok(())
+    }
+
+    /// [`verify`](Self::verify) plus a CRC32 check of every payload.
+    pub fn verify_payloads(&self) -> Result<(), WireError> {
+        self.verify()?;
+        for i in 0..self.frames.len() {
+            self.check_crc(i)?;
+        }
+        Ok(())
+    }
+
+    fn entry(&self, i: usize) -> Result<&FrameEntry, WireError> {
+        match self.frames.get(i) {
+            Some(f) => Ok(f),
+            // Past the readable prefix: surface why the scan stopped.
+            None => match self.scan_error.clone() {
+                Some(e) => Err(e),
+                None => Err(WireError::FrameCountMismatch {
+                    header: self.header.frame_count,
+                    found: self.frames.len() as u64,
+                }),
+            },
+        }
+    }
+
+    fn payload(&self, f: &FrameEntry) -> &[u8] {
+        &self.map.as_bytes()[f.payload..f.payload + f.lines as usize * LINE_BYTES]
+    }
+
+    fn check_crc(&self, i: usize) -> Result<(), WireError> {
+        let f = &self.frames[i];
+        let computed = crc32(self.payload(f));
+        if computed != f.stored_crc {
+            return Err(WireError::CrcMismatch {
+                frame: i,
+                stored: f.stored_crc,
+                computed,
+            });
+        }
+        Ok(())
+    }
+
+    /// Frame `i` as a [`LineChunk`] under its recorded traffic class.
+    pub fn chunk(&self, i: usize) -> Result<LineChunk, WireError> {
+        self.entry(i)?;
+        self.chunk_as(i, self.frame_approx(i))
+    }
+
+    /// Frame `i` as a [`LineChunk`] with an explicit traffic class. The
+    /// payload CRC is checked first — a corrupt frame is a
+    /// frame-indexed error, never a panic. On little-endian hosts the
+    /// chunk borrows the mapped pages directly (zero-copy); big-endian
+    /// hosts (or a misaligned payload, which the format precludes)
+    /// decode a per-frame copy.
+    pub fn chunk_as(&self, i: usize, approx: bool) -> Result<LineChunk, WireError> {
+        let f = *self.entry(i)?;
+        self.check_crc(i)?;
+        #[cfg(target_endian = "little")]
+        {
+            let align = std::mem::align_of::<ChipWords>();
+            if self.payload(&f).as_ptr().align_offset(align) == 0 {
+                let backing: Arc<dyn LineBacking> = Arc::new(MappedFrame {
+                    map: self.map.clone(),
+                    payload: f.payload,
+                    lines: f.lines as usize,
+                });
+                return Ok(LineChunk::from_backing(backing, approx));
+            }
+        }
+        let lines = le_bytes_to_lines(self.payload(&f));
+        let flags = vec![approx; f.lines as usize];
+        Ok(LineChunk::from_lines(lines, flags))
+    }
+
+    /// Decode every frame into owned cache lines (CRC-checked) — the
+    /// whole-file materializer `Trace::from_file` and the sweep's
+    /// baseline comparison use. Verifies structure first.
+    pub fn read_lines(&self) -> Result<Vec<ChipWords>, WireError> {
+        self.verify()?;
+        let mut out = Vec::with_capacity(self.total_lines as usize);
+        for i in 0..self.frames.len() {
+            self.check_crc(i)?;
+            out.extend(le_bytes_to_lines(self.payload(&self.frames[i])));
+        }
+        Ok(out)
+    }
+
+    /// Per-frame health and a zero-line census without decoding any
+    /// payload into cache lines — the `trace-info` inspector. Never
+    /// fails: corruption shows up as per-frame status and the recorded
+    /// structural error.
+    pub fn inspect(&self) -> TraceInfo {
+        let mut frames = Vec::with_capacity(self.frames.len());
+        let mut zero_lines = 0u64;
+        let mut corrupt_frames = 0usize;
+        for f in &self.frames {
+            let payload = self.payload(f);
+            let crc_ok = crc32(payload) == f.stored_crc;
+            if !crc_ok {
+                corrupt_frames += 1;
+            }
+            let zeros = payload
+                .chunks_exact(LINE_BYTES)
+                .filter(|line| line.iter().all(|&b| b == 0))
+                .count() as u64;
+            zero_lines += zeros;
+            frames.push(FrameStatus {
+                lines: f.lines,
+                approx: f.flags & 1 != 0,
+                crc_ok,
+                zero_lines: zeros,
+            });
+        }
+        TraceInfo {
+            header: self.header,
+            frames,
+            total_lines: self.total_lines,
+            zero_lines,
+            corrupt_frames,
+            scan_error: self.scan_error.clone(),
+            structure: self.verify().err(),
+        }
+    }
+}
+
+/// One frame's payload as a [`LineBacking`]: keeps the whole mapping
+/// alive and reinterprets the payload bytes as cache lines in place.
+#[cfg(target_endian = "little")]
+#[derive(Debug)]
+struct MappedFrame {
+    map: Arc<MapBuf>,
+    payload: usize,
+    lines: usize,
+}
+
+#[cfg(target_endian = "little")]
+impl LineBacking for MappedFrame {
+    fn lines(&self) -> &[ChipWords] {
+        let bytes = &self.map.as_bytes()[self.payload..self.payload + self.lines * LINE_BYTES];
+        debug_assert_eq!(bytes.as_ptr().align_offset(std::mem::align_of::<ChipWords>()), 0);
+        // SAFETY: the payload is 8-byte aligned (checked before this
+        // backing was constructed), spans exactly `lines * 64` bytes of
+        // live mapping, and on little-endian hosts `[u64; 8]` has
+        // exactly the on-disk byte layout.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const ChipWords, self.lines) }
+    }
+}
+
+/// Health of one frame, as the inspector reports it.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameStatus {
+    /// Lines in the frame.
+    pub lines: u32,
+    /// Recorded traffic class.
+    pub approx: bool,
+    /// Whether the payload matches its declared CRC32.
+    pub crc_ok: bool,
+    /// All-zero lines in the frame (the zero-skip opportunity).
+    pub zero_lines: u64,
+}
+
+/// Everything `zac-dest trace-info` prints: header, per-frame CRC
+/// status, zero-line census and any structural error.
+#[derive(Clone, Debug)]
+pub struct TraceInfo {
+    /// The parsed file header.
+    pub header: Header,
+    /// Per-frame status, in file order (readable prefix only).
+    pub frames: Vec<FrameStatus>,
+    /// Lines over all present frames.
+    pub total_lines: u64,
+    /// All-zero lines over all present frames.
+    pub zero_lines: u64,
+    /// Frames whose payload fails its CRC.
+    pub corrupt_frames: usize,
+    /// The structural error the directory scan stopped at, if any.
+    pub scan_error: Option<WireError>,
+    /// The error [`TraceFile::verify`] reports, if any (scan error,
+    /// frame-count or length mismatch).
+    pub structure: Option<WireError>,
+}
+
+impl TraceInfo {
+    /// Whether the file is structurally sound and every CRC matches.
+    pub fn is_healthy(&self) -> bool {
+        self.structure.is_none() && self.corrupt_frames == 0
+    }
+
+    /// Zero lines as a fraction of all present lines.
+    pub fn zero_fraction(&self) -> f64 {
+        if self.total_lines == 0 {
+            0.0
+        } else {
+            self.zero_lines as f64 / self.total_lines as f64
+        }
+    }
+
+    /// Render the inspector report (frame rows capped at 16).
+    pub fn render(&self) -> String {
+        let h = &self.header;
+        let mut out = format!(
+            ".zactrace v{}: {} layout, {} B lines, nominal {} lines/frame\n\
+             stream: {} bytes in {} frames ({} lines), recorded {}\n\
+             zero lines: {} ({:.1}%)\n",
+            h.version,
+            h.layout.label(),
+            h.line_bytes,
+            h.chunk_lines,
+            h.byte_len,
+            self.frames.len(),
+            self.total_lines,
+            if h.traffic_approx { "approximate" } else { "critical" },
+            self.zero_lines,
+            100.0 * self.zero_fraction(),
+        );
+        let mut t = TextTable::new(&["frame", "lines", "class", "zero", "crc"]);
+        const MAX_ROWS: usize = 16;
+        for (i, f) in self.frames.iter().take(MAX_ROWS).enumerate() {
+            t.row(vec![
+                format!("{i}"),
+                format!("{}", f.lines),
+                if f.approx { "approx" } else { "critical" }.into(),
+                format!("{}", f.zero_lines),
+                if f.crc_ok { "ok" } else { "MISMATCH" }.into(),
+            ]);
+        }
+        out.push_str(&t.render());
+        if self.frames.len() > MAX_ROWS {
+            out.push_str(&format!(
+                "... ({} more frames not shown)\n",
+                self.frames.len() - MAX_ROWS
+            ));
+        }
+        match (&self.structure, self.corrupt_frames) {
+            (Some(e), _) => out.push_str(&format!("status: BROKEN ({e})\n")),
+            (None, 0) => out.push_str("status: ok\n"),
+            (None, n) => out.push_str(&format!("status: {n} corrupt frame(s)\n")),
+        }
+        out
+    }
+}

@@ -1,0 +1,220 @@
+//! The `.zactrace` encoder: a streaming frame writer, separate from the
+//! decoder per the rzCOBS discipline. Frames append as the traffic
+//! arrives; the header's totals (byte length, frame count) are patched
+//! in place on [`TraceWriter::finish`], so an interrupted recording is
+//! detectable (its header still says zero frames → the reader reports
+//! a frame-count mismatch rather than trusting a half-written file).
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::trace::{ChipWords, LINE_BYTES};
+
+use super::{
+    crc32, io, Header, Layout, WireError, DEFAULT_CHUNK_LINES, FRAME_HEADER_BYTES, VERSION,
+};
+
+/// Streaming `.zactrace` writer: create, append chunks, finish.
+///
+/// ```no_run
+/// # use zac_dest::trace::wire::{Layout, TraceWriter};
+/// # fn demo(lines: &[[u64; 8]], byte_len: usize) -> Result<(), zac_dest::trace::wire::WireError> {
+/// let mut w = TraceWriter::create("run.zactrace", Layout::Raw, true)?;
+/// w.write_lines(lines, true)?;
+/// w.finish(byte_len)?;
+/// # Ok(())
+/// # }
+/// ```
+pub struct TraceWriter {
+    file: BufWriter<File>,
+    layout: Layout,
+    stream_approx: bool,
+    chunk_lines: u32,
+    frames: u64,
+    lines: u64,
+}
+
+impl TraceWriter {
+    /// Create `path` (truncating any existing file) and write the
+    /// provisional header. Frames default to [`DEFAULT_CHUNK_LINES`]
+    /// lines — the engines' native batch size.
+    pub fn create(
+        path: impl AsRef<Path>,
+        layout: Layout,
+        approx: bool,
+    ) -> Result<TraceWriter, WireError> {
+        Self::create_with_chunk(path, layout, approx, DEFAULT_CHUNK_LINES)
+    }
+
+    /// [`create`](Self::create) with an explicit nominal frame size in
+    /// lines (recorded in the header; [`write_lines`](Self::write_lines)
+    /// splits at this size).
+    pub fn create_with_chunk(
+        path: impl AsRef<Path>,
+        layout: Layout,
+        approx: bool,
+        chunk_lines: u32,
+    ) -> Result<TraceWriter, WireError> {
+        if chunk_lines == 0 {
+            return Err(WireError::BadChunkLines);
+        }
+        let file = File::create(path).map_err(io("creating trace file"))?;
+        let mut w = TraceWriter {
+            file: BufWriter::new(file),
+            layout,
+            stream_approx: approx,
+            chunk_lines,
+            frames: 0,
+            lines: 0,
+        };
+        let header = w.header(0);
+        w.file
+            .write_all(&header.to_bytes())
+            .map_err(io("writing trace header"))?;
+        Ok(w)
+    }
+
+    fn header(&self, byte_len: u64) -> Header {
+        Header {
+            version: VERSION,
+            line_bytes: LINE_BYTES as u32,
+            chunk_lines: self.chunk_lines,
+            layout: self.layout,
+            traffic_approx: self.stream_approx,
+            byte_len,
+            frame_count: self.frames,
+        }
+    }
+
+    /// Lines written so far.
+    pub fn lines_written(&self) -> u64 {
+        self.lines
+    }
+
+    /// Frames written so far.
+    pub fn frames_written(&self) -> u64 {
+        self.frames
+    }
+
+    /// Append one frame. `approx` is the frame's traffic class,
+    /// recorded per frame so mixed-criticality streams replay
+    /// faithfully. An empty slice writes nothing (the format forbids
+    /// zero-line frames).
+    pub fn write_chunk(&mut self, lines: &[ChipWords], approx: bool) -> Result<(), WireError> {
+        if lines.is_empty() {
+            return Ok(());
+        }
+        let payload = lines_to_le_bytes(lines);
+        let mut head = [0u8; FRAME_HEADER_BYTES];
+        head[0..4].copy_from_slice(&(lines.len() as u32).to_le_bytes());
+        head[4..8].copy_from_slice(&(approx as u32).to_le_bytes());
+        head[8..12].copy_from_slice(&crc32(&payload).to_le_bytes());
+        self.file
+            .write_all(&head)
+            .map_err(io("writing frame header"))?;
+        self.file
+            .write_all(&payload)
+            .map_err(io("writing frame payload"))?;
+        self.frames += 1;
+        self.lines += lines.len() as u64;
+        Ok(())
+    }
+
+    /// Append a whole line slice, split into nominal-size frames.
+    pub fn write_lines(&mut self, lines: &[ChipWords], approx: bool) -> Result<(), WireError> {
+        for chunk in lines.chunks(self.chunk_lines as usize) {
+            self.write_chunk(chunk, approx)?;
+        }
+        Ok(())
+    }
+
+    /// Validate `byte_len` against the lines written, patch the header
+    /// totals in place and flush. Returns the final header.
+    pub fn finish(mut self, byte_len: usize) -> Result<Header, WireError> {
+        let need = (byte_len as u64).div_ceil(LINE_BYTES as u64);
+        if need != self.lines {
+            return Err(WireError::LengthMismatch {
+                lines: self.lines,
+                byte_len: byte_len as u64,
+            });
+        }
+        let header = self.header(byte_len as u64);
+        self.file
+            .seek(SeekFrom::Start(0))
+            .map_err(io("patching trace header"))?;
+        self.file
+            .write_all(&header.to_bytes())
+            .map_err(io("patching trace header"))?;
+        self.file.flush().map_err(io("flushing trace file"))?;
+        Ok(header)
+    }
+}
+
+/// Record pre-split cache lines to `path` in one call — the convenience
+/// wrapper `Trace::record` and the CLI `record` command use.
+pub fn write_trace(
+    path: impl AsRef<Path>,
+    lines: &[ChipWords],
+    byte_len: usize,
+    layout: Layout,
+    approx: bool,
+) -> Result<Header, WireError> {
+    let mut w = TraceWriter::create(path, layout, approx)?;
+    w.write_lines(lines, approx)?;
+    w.finish(byte_len)
+}
+
+/// One cache line's on-disk payload encoding: 8 chip words, each u64
+/// little-endian, in chip order. On little-endian hosts this equals the
+/// in-memory `[u64; 8]` representation — what makes the reader's
+/// zero-copy reinterpretation possible. (Deliberately *not*
+/// `chip_words_to_bytes`, which de-interleaves back to stream order.)
+pub(super) fn lines_to_le_bytes(lines: &[ChipWords]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(lines.len() * LINE_BYTES);
+    for line in lines {
+        for w in line {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Inverse of [`lines_to_le_bytes`]: decode a frame payload into owned
+/// lines (the big-endian / misaligned fallback and the materializer).
+pub(super) fn le_bytes_to_lines(payload: &[u8]) -> Vec<ChipWords> {
+    debug_assert_eq!(payload.len() % LINE_BYTES, 0);
+    payload
+        .chunks_exact(LINE_BYTES)
+        .map(|line| {
+            std::array::from_fn(|j| {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&line[j * 8..j * 8 + 8]);
+                u64::from_le_bytes(b)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_encoding_round_trips_and_matches_memory_layout() {
+        let lines: Vec<ChipWords> = (0..5)
+            .map(|l| std::array::from_fn(|j| (l * 8 + j) as u64 * 0x0101_0101))
+            .collect();
+        let bytes = lines_to_le_bytes(&lines);
+        assert_eq!(bytes.len(), 5 * LINE_BYTES);
+        assert_eq!(le_bytes_to_lines(&bytes), lines);
+        #[cfg(target_endian = "little")]
+        {
+            // The on-disk encoding is the in-memory representation.
+            let raw = unsafe {
+                std::slice::from_raw_parts(lines.as_ptr() as *const u8, 5 * LINE_BYTES)
+            };
+            assert_eq!(bytes, raw);
+        }
+    }
+}

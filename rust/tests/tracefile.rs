@@ -1,0 +1,448 @@
+//! `.zactrace` end-to-end properties: a recorded trace replayed through
+//! the mmap-backed reader is bit-identical to the live run across every
+//! execution mode and shard count, every corruption mode surfaces as a
+//! frame-indexed `WireError` (the decoder never panics), and the
+//! builder/inspector surfaces (`trace_file`, `record_to`, `inspect`)
+//! wire through the session layer.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use zac_dest::encoding::CodecSpec;
+use zac_dest::faults::FaultSpec;
+use zac_dest::session::{Execution, RunReport, Session, Trace, TrafficClass};
+use zac_dest::system::synthetic_trace;
+use zac_dest::trace::wire::{Layout, TraceFile, TraceWriter, WireError};
+use zac_dest::trace::{bytes_to_chip_words, try_bytes_to_f32s};
+use zac_dest::util::prop;
+
+/// A unique scratch path per call, so parallel tests never collide.
+fn temp_path(tag: &str) -> PathBuf {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    std::env::temp_dir().join(format!("zac_tracefile_{pid}_{tag}_{n}.zactrace"))
+}
+
+fn session(spec: &CodecSpec, exec: Execution, channels: usize, faults: FaultSpec) -> Session {
+    Session::builder()
+        .codec(spec.clone())
+        .channels(channels)
+        .execution(exec)
+        .faults(faults)
+        .traffic(TrafficClass::Approximate)
+        .build()
+        .unwrap()
+}
+
+fn assert_reports_match(live: &RunReport, replayed: &RunReport, label: &str) {
+    assert_eq!(live.bytes, replayed.bytes, "{label}: bytes diverge");
+    assert_eq!(live.counts, replayed.counts, "{label}: counts diverge");
+    assert_eq!(live.stats, replayed.stats, "{label}: stats diverge");
+    assert_eq!(live.faults, replayed.faults, "{label}: faults diverge");
+}
+
+#[test]
+fn recorded_replay_is_bit_identical_to_the_live_run_everywhere() {
+    // The acceptance property: record → mmap replay produces the same
+    // bytes / EncodeStats / EnergyCounts as the live in-memory run, for
+    // every execution mode and 1/2/4 channels.
+    let bytes = synthetic_trace(97 * 64 - 20, 61);
+    let trace = Trace::from_bytes(bytes.clone());
+    let path = temp_path("identity");
+    trace.record(&path, true).unwrap();
+    let file = TraceFile::open(&path).unwrap();
+    file.verify_payloads().unwrap();
+    assert_eq!(file.byte_len() as usize, bytes.len());
+    assert_eq!(file.total_lines() as usize, trace.line_count());
+
+    let cells = [
+        (Execution::Batch, 1usize),
+        (Execution::Pipelined, 1),
+        (Execution::Auto, 1),
+        (Execution::Sharded, 1),
+        (Execution::Sharded, 2),
+        (Execution::Auto, 2),
+        (Execution::Sharded, 4),
+        (Execution::Auto, 4),
+    ];
+    for spec in [CodecSpec::named("BDE"), CodecSpec::zac(80)] {
+        for (exec, channels) in cells {
+            let s = session(&spec, exec, channels, FaultSpec::perfect());
+            let live = s.run(&trace).unwrap();
+            let replayed = s.replay(&file).unwrap();
+            let label = format!("{} {exec:?} x{channels}", spec.label());
+            assert_reports_match(&live, &replayed, &label);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn replay_preserves_fault_injection_bit_for_bit() {
+    // Fault injection is seeded per shard stream, so the replayed
+    // topology must reproduce the live injection exactly — including
+    // the merged FaultStats.
+    let bytes = synthetic_trace(64 * 64, 67);
+    let trace = Trace::from_bytes(bytes);
+    let path = temp_path("faults");
+    trace.record(&path, true).unwrap();
+    let file = TraceFile::open(&path).unwrap();
+    for channels in [1usize, 2] {
+        let s = session(
+            &CodecSpec::named("BDE"),
+            Execution::Auto,
+            channels,
+            FaultSpec::voltage(1050),
+        );
+        let live = s.run(&trace).unwrap();
+        let replayed = s.replay(&file).unwrap();
+        assert!(
+            replayed.faults.injected_bits > 0,
+            "x{channels}: the voltage model injected nothing"
+        );
+        assert_reports_match(&live, &replayed, &format!("vdd1050 x{channels}"));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn prop_random_traces_replay_bit_identically() {
+    prop::check(
+        "random traces round-trip through the wire format",
+        113,
+        |r| {
+            let nlines = r.range(1, 40);
+            let shards = [1u64, 2, 4][r.range(0, 3)];
+            let tail = r.range(0, 64);
+            vec![nlines as u64, shards, tail as u64, r.next_u64()]
+        },
+        |v| {
+            let nlines = (v[0] as usize).clamp(1, 64);
+            let shards = (v[1] as usize).clamp(1, 4);
+            let tail = (v[2] as usize).min(63);
+            let nbytes = (nlines * 64).saturating_sub(tail).max(1);
+            let trace = Trace::from_bytes(synthetic_trace(nbytes, v[3]));
+            let path = temp_path("prop");
+            if let Err(e) = trace.record(&path, true) {
+                return Err(format!("record: {e}"));
+            }
+            let file = match TraceFile::open(&path) {
+                Ok(f) => f,
+                Err(e) => return Err(format!("open: {e}")),
+            };
+            let s = session(
+                &CodecSpec::zac(80),
+                Execution::Auto,
+                shards,
+                FaultSpec::perfect(),
+            );
+            let live = s.run(&trace).map_err(|e| format!("live: {e}"))?;
+            let replayed = s.replay(&file).map_err(|e| format!("replay: {e}"))?;
+            let _ = std::fs::remove_file(&path);
+            if live.bytes != replayed.bytes {
+                return Err(format!("x{shards}: replayed bytes diverge"));
+            }
+            if live.counts != replayed.counts || live.stats != replayed.stats {
+                return Err(format!("x{shards}: replayed counters diverge"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn irregular_frame_sizes_replay_identically() {
+    // Frame boundaries are a recording artifact: the same stream cut
+    // into 1/7/7/7/1-line frames must replay exactly like the live run,
+    // single-channel and sharded.
+    let bytes = synthetic_trace(23 * 64 - 8, 73);
+    let trace = Trace::from_bytes(bytes.clone());
+    let path = temp_path("irregular");
+    let mut w = TraceWriter::create_with_chunk(&path, Layout::Raw, true, 7).unwrap();
+    let lines = trace.lines();
+    w.write_chunk(&lines[0..1], true).unwrap();
+    w.write_chunk(&lines[1..8], true).unwrap();
+    w.write_lines(&lines[8..], true).unwrap();
+    w.write_chunk(&[], true).unwrap(); // empty append is a no-op
+    let header = w.finish(bytes.len()).unwrap();
+    assert_eq!(header.frame_count, 5);
+    let file = TraceFile::open(&path).unwrap();
+    assert_eq!(file.frame_lines(0), 1);
+    assert_eq!(file.frame_lines(1), 7);
+    for channels in [1usize, 2] {
+        let s = session(
+            &CodecSpec::named("BDE"),
+            Execution::Auto,
+            channels,
+            FaultSpec::perfect(),
+        );
+        let live = s.run(&trace).unwrap();
+        let replayed = s.replay(&file).unwrap();
+        assert_reports_match(&live, &replayed, &format!("irregular x{channels}"));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Record a 10-line trace framed 4 lines per chunk — frames of 4, 4 and
+/// 2 lines at fixed offsets (header 64 B, frame headers 16 B, lines
+/// 64 B) — and return the path plus the raw file image for corruption
+/// surgery.
+fn small_recording(tag: &str) -> (PathBuf, Vec<u8>) {
+    let bytes = synthetic_trace(10 * 64, 79);
+    let lines = bytes_to_chip_words(&bytes);
+    let path = temp_path(tag);
+    let mut w = TraceWriter::create_with_chunk(&path, Layout::Raw, true, 4).unwrap();
+    w.write_lines(&lines, true).unwrap();
+    w.finish(bytes.len()).unwrap();
+    let image = std::fs::read(&path).unwrap();
+    assert_eq!(image.len(), 64 + 3 * 16 + 10 * 64);
+    (path, image)
+}
+
+fn reopen(path: &Path, image: &[u8]) -> Result<TraceFile, WireError> {
+    std::fs::write(path, image).unwrap();
+    TraceFile::open(path)
+}
+
+#[test]
+fn corruption_modes_are_named_errors_never_panics() {
+    let (path, good) = small_recording("corrupt");
+    let replay_session = session(
+        &CodecSpec::named("BDE"),
+        Execution::Auto,
+        1,
+        FaultSpec::perfect(),
+    );
+
+    // Bad magic: not a .zactrace at all.
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert!(matches!(reopen(&path, &bad), Err(WireError::BadMagic { .. })));
+
+    // A future format version is refused up front.
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+    assert!(matches!(
+        reopen(&path, &bad),
+        Err(WireError::UnsupportedVersion { found: 9, .. })
+    ));
+
+    // Any unsealed header field flip fails the header CRC.
+    let mut bad = good.clone();
+    bad[16] ^= 0x01;
+    assert!(matches!(reopen(&path, &bad), Err(WireError::HeaderCorrupt { .. })));
+
+    // A tail cut mid-frame: open succeeds (the prefix is readable), but
+    // verify and replay name frame 2, and earlier frames still decode.
+    let file = reopen(&path, &good[..good.len() - 12]).unwrap();
+    assert_eq!(file.frame_count(), 2);
+    let err = file.verify().unwrap_err();
+    assert!(matches!(err, WireError::TruncatedFrame { frame: 2, .. }));
+    let msg = err.to_string();
+    assert!(msg.starts_with("frame 2: truncated frame"), "{msg}");
+    assert!(file.chunk(0).is_ok());
+    assert!(matches!(
+        file.chunk(2),
+        Err(WireError::TruncatedFrame { frame: 2, .. })
+    ));
+    let msg = replay_session.replay(&file).unwrap_err().to_string();
+    assert!(msg.contains("frame 2"), "{msg}");
+
+    // A tail cut exactly on a frame boundary: structurally clean, but
+    // the header's frame count exposes the missing frame.
+    let file = reopen(&path, &good[..good.len() - (16 + 2 * 64)]).unwrap();
+    assert!(matches!(
+        file.verify(),
+        Err(WireError::FrameCountMismatch { header: 3, found: 2 })
+    ));
+    assert!(replay_session.replay(&file).is_err());
+
+    // One flipped payload byte in frame 1: structure verifies, but the
+    // frame's CRC names it, its chunk refuses to decode, and replay
+    // fails — while frame 0 still reads.
+    let mut bad = good.clone();
+    bad[64 + (16 + 4 * 64) + 16 + 3] ^= 0x40;
+    let file = reopen(&path, &bad).unwrap();
+    file.verify().unwrap();
+    let err = file.verify_payloads().unwrap_err();
+    assert!(matches!(err, WireError::CrcMismatch { frame: 1, .. }));
+    let msg = err.to_string();
+    assert!(msg.starts_with("frame 1: crc mismatch"), "{msg}");
+    assert!(file.chunk(0).is_ok());
+    assert!(matches!(
+        file.chunk(1),
+        Err(WireError::CrcMismatch { frame: 1, .. })
+    ));
+    let msg = replay_session.replay(&file).unwrap_err().to_string();
+    assert!(msg.contains("frame 1"), "{msg}");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn misaligned_f32_streams_are_typed_errors_not_panics() {
+    // The old `bytes_to_f32s` alignment panic, caught as data at every
+    // file-ingestion boundary.
+    let bytes = synthetic_trace(66, 83);
+    let lines = bytes_to_chip_words(&bytes);
+    let path = temp_path("f32");
+    let mut w = TraceWriter::create(&path, Layout::F32Le, true).unwrap();
+    w.write_lines(&lines, true).unwrap();
+    w.finish(bytes.len()).unwrap();
+    assert!(matches!(
+        TraceFile::open(&path),
+        Err(WireError::MisalignedF32 { byte_len: 66 })
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(try_bytes_to_f32s(&[0u8; 8]).unwrap().len(), 2);
+    assert!(matches!(
+        try_bytes_to_f32s(&[0u8; 3]),
+        Err(WireError::MisalignedF32 { byte_len: 3 })
+    ));
+
+    // A report over a non-f32-shaped stream reports, rather than
+    // aborts, when asked for weights.
+    let s = session(
+        &CodecSpec::named("ORG"),
+        Execution::Batch,
+        1,
+        FaultSpec::perfect(),
+    );
+    let report = s.run(&Trace::from_bytes(vec![1, 2, 3])).unwrap();
+    assert_eq!(report.bytes.len(), 3);
+    assert!(matches!(
+        report.try_to_f32s(),
+        Err(WireError::MisalignedF32 { byte_len: 3 })
+    ));
+}
+
+#[test]
+fn inspector_census_counts_zero_lines_and_corrupt_frames() {
+    // 8 nonzero lines, 3 of them zeroed, framed in fours.
+    let mut bytes = vec![0xA5u8; 8 * 64];
+    for line in [1usize, 4, 6] {
+        bytes[line * 64..(line + 1) * 64].fill(0);
+    }
+    let lines = bytes_to_chip_words(&bytes);
+    let path = temp_path("census");
+    let mut w = TraceWriter::create_with_chunk(&path, Layout::Raw, false, 4).unwrap();
+    w.write_lines(&lines, false).unwrap();
+    w.finish(bytes.len()).unwrap();
+
+    let info = TraceFile::open(&path).unwrap().inspect();
+    assert!(info.is_healthy());
+    assert_eq!(info.total_lines, 8);
+    assert_eq!(info.zero_lines, 3);
+    assert!((info.zero_fraction() - 0.375).abs() < 1e-12);
+    assert_eq!(info.frames.len(), 2);
+    assert_eq!(info.frames[0].zero_lines, 1);
+    assert_eq!(info.frames[1].zero_lines, 2);
+    assert!(!info.frames[0].approx);
+    let rendered = info.render();
+    assert!(rendered.contains("status: ok"), "{rendered}");
+    assert!(rendered.contains("critical"), "{rendered}");
+
+    // Flip one byte in frame 1's payload: the census flags exactly that
+    // frame without decoding anything.
+    let mut image = std::fs::read(&path).unwrap();
+    image[64 + (16 + 4 * 64) + 16 + 5] ^= 0x80;
+    std::fs::write(&path, &image).unwrap();
+    let info = TraceFile::open(&path).unwrap().inspect();
+    assert!(!info.is_healthy());
+    assert_eq!(info.corrupt_frames, 1);
+    assert!(info.frames[0].crc_ok);
+    assert!(!info.frames[1].crc_ok);
+    let rendered = info.render();
+    assert!(rendered.contains("MISMATCH"), "{rendered}");
+    assert!(rendered.contains("1 corrupt frame(s)"), "{rendered}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn session_trace_file_and_record_to_builders_wire_through() {
+    let bytes = synthetic_trace(41 * 64 - 4, 97);
+    let trace = Trace::from_bytes(bytes.clone());
+
+    // record_to: a live run leaves a verifiable recording behind.
+    let recorded = temp_path("record_to");
+    let live = Session::builder()
+        .codec(CodecSpec::named("BDE"))
+        .traffic(TrafficClass::Approximate)
+        .record_to(&recorded)
+        .build()
+        .unwrap()
+        .run(&trace)
+        .unwrap();
+    let file = TraceFile::open(&recorded).unwrap();
+    file.verify_payloads().unwrap();
+    assert!(file.header().traffic_approx);
+    assert_eq!(Trace::from_file(&recorded).unwrap().bytes(), &bytes[..]);
+
+    // trace_file + run_recorded: the one-call replay surface.
+    let replayed = Session::builder()
+        .codec(CodecSpec::named("BDE"))
+        .traffic(TrafficClass::Approximate)
+        .trace_file(&recorded)
+        .build()
+        .unwrap()
+        .run_recorded()
+        .unwrap();
+    assert_reports_match(&live, &replayed, "run_recorded");
+
+    // run_recorded without a configured file is a named error.
+    let err = Session::builder()
+        .codec(CodecSpec::named("BDE"))
+        .build()
+        .unwrap()
+        .run_recorded()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no trace file"), "{err}");
+    let _ = std::fs::remove_file(&recorded);
+}
+
+#[test]
+fn critical_recordings_stay_exact_under_an_approximate_session() {
+    // Per-frame criticality survives the wire: a stream recorded as
+    // critical must replay exactly even through a lossy session, because
+    // the effective class is (session approx AND frame approx).
+    let bytes = synthetic_trace(33 * 64, 71);
+    let path = temp_path("critical");
+    Trace::from_bytes(bytes.clone()).record(&path, false).unwrap();
+    let file = TraceFile::open(&path).unwrap();
+    assert!(!file.header().traffic_approx);
+    assert!(!file.frame_approx(0));
+    for channels in [1usize, 2] {
+        let s = session(
+            &CodecSpec::zac(80),
+            Execution::Auto,
+            channels,
+            FaultSpec::perfect(),
+        );
+        let replayed = s.replay(&file).unwrap();
+        assert_eq!(replayed.bytes, bytes, "x{channels}: went lossy");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn empty_traces_round_trip() {
+    let path = temp_path("empty");
+    Trace::from_bytes(Vec::new()).record(&path, true).unwrap();
+    let file = TraceFile::open(&path).unwrap();
+    file.verify_payloads().unwrap();
+    assert_eq!(file.frame_count(), 0);
+    assert_eq!(file.byte_len(), 0);
+    assert!(Trace::from_file(&path).unwrap().bytes().is_empty());
+    let s = session(
+        &CodecSpec::named("BDE"),
+        Execution::Auto,
+        1,
+        FaultSpec::perfect(),
+    );
+    let replayed = s.replay(&file).unwrap();
+    assert!(replayed.bytes.is_empty());
+    let _ = std::fs::remove_file(&path);
+}
