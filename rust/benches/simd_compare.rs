@@ -1,0 +1,65 @@
+//! Scalar-vs-SIMD CAM kernel comparison: the same 64-entry search hot
+//! path as `table_search`, but pinned per backend so the dispatched
+//! kernel's speedup over the portable scalar reference is a committed
+//! artifact. Results merge into `BENCH_encoder.json` (alongside the
+//! encoder-throughput rows) rather than a separate report, so one file
+//! carries the whole encoder perf trajectory across PRs.
+
+use zac_dest::encoding::{simd, DataTable};
+use zac_dest::util::bench::Bencher;
+use zac_dest::util::rng::seeded_rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut r = seeded_rng(7);
+    let queries: Vec<u64> = (0..4096).map(|_| r.next_u64()).collect();
+    let dispatched = simd::default_backend().expect("resolve default SIMD backend");
+    println!(
+        "dispatched backend: {} (available: {})",
+        dispatched.label(),
+        simd::available_backends()
+            .iter()
+            .map(|k| k.label())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    for backend in simd::available_backends() {
+        let label = backend.label();
+        let mut table = DataTable::with_backend(64, backend);
+        for q in queries.iter().take(64) {
+            table.push(q ^ 0x5A5A_5A5A_5A5A_5A5A);
+        }
+        let mut i = 0;
+        b.bench_with_units(
+            &format!("simd_compare/most_similar/{label}/table64"),
+            1,
+            "search",
+            || {
+                i = (i + 1) & 4095;
+                table.most_similar_sliced(queries[i])
+            },
+        );
+        let mut hits = Vec::with_capacity(queries.len());
+        b.bench_with_units(
+            &format!("simd_compare/most_similar_batch/{label}/table64_x4096"),
+            queries.len() as u64,
+            "search",
+            || {
+                table.most_similar_batch(&queries, &mut hits);
+                hits.len()
+            },
+        );
+        // Worst-case membership probe: misses scan the full table.
+        let mut i = 0;
+        b.bench_with_units(
+            &format!("simd_compare/contains_miss/{label}/table64"),
+            1,
+            "probe",
+            || {
+                i = (i + 1) & 4095;
+                table.contains(queries[i])
+            },
+        );
+    }
+    b.merge_json("BENCH_encoder.json").expect("merge into BENCH_encoder.json");
+}

@@ -35,8 +35,10 @@ impl BdeOrgEncoder {
         self.table.next_slot()
     }
 
-    /// Per-word encode core; `sliced` picks the CAM search layout (the
-    /// batch path runs against the bit-plane mirror, same results).
+    /// Per-word encode core; `sliced` picks the CAM search path (the
+    /// batch path runs the table's dispatched backend — bit-plane
+    /// mirror on scalar, AVX2/NEON row-major kernels otherwise — with
+    /// results pinned identical either way).
     #[inline]
     fn encode_one(&mut self, word: u64, sliced: bool) -> WireWord {
         let hit = if sliced {

@@ -6,32 +6,40 @@
 //! * `most_similar` = the CAM search phase (SL/SL' compare + replica-row
 //!   hamming count); ties resolve to the lowest slot index, as a
 //!   priority encoder would.
-//! * `most_similar_sliced` / `most_similar_batch` = the same search over
-//!   a column-major (bit-plane) mirror of the array: one XOR compares
-//!   the query bit against *all* rows at once, exactly like the CAM's
-//!   search lines driving every row in parallel.
+//! * `most_similar_sliced` / `most_similar_batch` = the same search
+//!   dispatched to the backend captured at construction (see
+//!   [`simd`]): the portable path runs over a column-major (bit-plane)
+//!   mirror of the array — one XOR compares the query bit against a
+//!   whole 64-slot lane group at once, exactly like the CAM's search
+//!   lines driving every row in parallel — while the AVX2/NEON kernels
+//!   run vectorized XOR+popcount over the row-major entries. All
+//!   backends are pinned bit-identical to [`DataTable::most_similar`].
 //! * `contains` = the exact-match CAM lookup MBDC uses to keep entries
-//!   unique.
+//!   unique (dispatched the same way).
 //! * `push` = FIFO write via BL/BL' (round-robin replacement, matching
 //!   BD-Coder's update behaviour).
+
+use crate::encoding::simd::{self, Backend};
 
 /// Fixed-capacity FIFO CAM model, kept in two mirrored layouts:
 ///
 /// * row-major `entries` (slot -> word), the reference layout;
-/// * column-major `planes` (bit -> one u64 whose bit *s* is bit *b* of
-///   slot *s*), maintained incrementally and only when the capacity fits
-///   the 64 lanes of a word (`capacity <= 64`, always true for paper
-///   configs — `ZacConfig::validate` caps `table_size` at 64).
+/// * column-major `planes` (one 64-plane group per 64 slots, so any
+///   capacity is covered — paper configs stay at one group,
+///   `table_size <= 64`), maintained incrementally on every push.
 #[derive(Clone, Debug)]
 pub struct DataTable {
     entries: Vec<u64>,
-    /// Bit-plane mirror: `planes[b]` bit `s` == bit `b` of `entries[s]`.
-    /// Stale above `len` (masked out by every sliced search).
-    planes: [u64; 64],
+    /// Bit-plane mirror, lane-group major: `planes[(s / 64) * 64 + b]`
+    /// bit `s % 64` == bit `b` of `entries[s]`. Stale above `len`
+    /// (masked out by every sliced search).
+    planes: Vec<u64>,
     /// Next slot to overwrite (round-robin FIFO).
     head: usize,
     /// Number of valid entries (≤ capacity).
     len: usize,
+    /// Search backend captured at construction ([`simd::current`]).
+    backend: Backend,
 }
 
 /// Result of a most-similar-entry search.
@@ -46,14 +54,31 @@ pub struct SearchHit {
 }
 
 impl DataTable {
-    /// An empty table with `capacity` slots (paper: 64).
+    /// An empty table with `capacity` slots (paper: 64), searching with
+    /// the thread's current dispatched backend.
     pub fn new(capacity: usize) -> Self {
+        Self::with_backend(capacity, simd::current())
+    }
+
+    /// As [`Self::new`] with an explicit search backend — the
+    /// bit-identity property tests and the `simd_compare` bench pin
+    /// backends side by side regardless of the process default.
+    pub fn with_backend(capacity: usize, backend: Backend) -> Self {
         assert!(capacity > 0);
+        // The packed search key carries the slot index in its low 32
+        // bits (`simd::most_similar_scalar`), so the index must fit — a
+        // hard error here, not a debug_assert a release build skips.
+        assert!(
+            capacity <= u32::MAX as usize,
+            "DataTable capacity {capacity} exceeds the packed-key limit of 2^32 - 1"
+        );
+        let groups = capacity.div_ceil(64);
         DataTable {
             entries: vec![0; capacity],
-            planes: [0; 64],
+            planes: vec![0; groups * 64],
             head: 0,
             len: 0,
+            backend,
         }
     }
 
@@ -69,20 +94,19 @@ impl DataTable {
         self.len == 0
     }
 
-    /// Whether the bit-plane mirror covers this table (it needs one lane
-    /// per slot in a `u64`).
-    #[inline]
-    fn bit_sliced(&self) -> bool {
-        self.entries.len() <= 64
+    /// The search backend this table dispatches to.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
-    /// Lane mask of the valid slots (callable only when `bit_sliced`).
+    /// Lane mask of the valid slots within one 64-slot plane group.
     #[inline]
-    fn valid_mask(&self) -> u64 {
-        if self.len >= 64 {
+    fn group_valid_mask(&self, group: usize) -> u64 {
+        let filled = self.len.saturating_sub(group * 64);
+        if filled >= 64 {
             u64::MAX
         } else {
-            (1u64 << self.len) - 1
+            (1u64 << filled) - 1
         }
     }
 
@@ -116,86 +140,20 @@ impl DataTable {
     /// CAM search: the valid entry with minimum hamming distance to
     /// `word`; ties resolve to the lowest index. `None` when empty.
     ///
-    /// Reference (row-major) implementation: the (distance, index) pair
-    /// is packed as `distance * 256 + index`, so a single branchless
-    /// `min` (cmov) yields both the minimum distance *and* the
-    /// lowest-index tie-break; the XOR+POPCNT per entry pipelines with
-    /// no data-dependent branches in the loop. The bit-sliced variants
-    /// below must stay bit-identical to this oracle
-    /// (`search_matches_naive_reference`).
+    /// Reference (row-major) implementation: delegates to the portable
+    /// scalar kernel, which packs the (distance, index) pair as
+    /// `(distance << 32) | index` so a single branchless `min` (cmov)
+    /// yields both the minimum distance *and* the lowest-index
+    /// tie-break; the XOR+POPCNT per entry pipelines with no
+    /// data-dependent branches in the loop. Every dispatched backend
+    /// must stay bit-identical to this oracle
+    /// (`search_matches_naive_reference`, `rust/tests/simd_backends.rs`).
     #[inline]
     pub fn most_similar(&self, word: u64) -> Option<SearchHit> {
         if self.len == 0 {
             return None;
         }
-        debug_assert!(self.entries.len() <= 256, "packed key assumes index < 256");
-        let mut best_key = u32::MAX;
-        for (i, &e) in self.entries[..self.len].iter().enumerate() {
-            let key = ((e ^ word).count_ones() << 8) | i as u32;
-            best_key = best_key.min(key);
-        }
-        let index = (best_key & 0xFF) as usize;
-        Some(SearchHit {
-            index,
-            entry: self.entries[index],
-            distance: best_key >> 8,
-        })
-    }
-
-    /// Bit-sliced CAM search: compare `word` against **all** entries at
-    /// once, one bit plane per step — the software analogue of the
-    /// NOR-CAM match phase where the search lines drive every row
-    /// simultaneously.
-    ///
-    /// Per plane, one XOR against the broadcast query bit yields the
-    /// per-entry mismatch lane vector, which is accumulated into seven
-    /// vertical (bit-serial SWAR) counters: bit *s* of `counts[k]` is
-    /// bit *k* of entry *s*'s running hamming distance (≤ 64, so 7
-    /// planes suffice). The argmin then narrows a candidate lane mask
-    /// from the counter MSB down, and `trailing_zeros` plays the
-    /// priority encoder for the lowest-index tie-break.
-    ///
-    /// Falls back to the row-major scan for capacities above 64 (no
-    /// plane mirror). Bit-identical to [`Self::most_similar`].
-    pub fn most_similar_sliced(&self, word: u64) -> Option<SearchHit> {
-        if self.len == 0 {
-            return None;
-        }
-        if !self.bit_sliced() {
-            return self.most_similar(word);
-        }
-        let mut counts = [0u64; 7];
-        for (b, &plane) in self.planes.iter().enumerate() {
-            // Broadcast query bit b across all 64 lanes (all-ones when set).
-            let query = ((word >> b) & 1).wrapping_neg();
-            // Ripple the per-entry mismatch bit into the vertical counters;
-            // the carry thins out geometrically, so this loop runs ~2
-            // levels on average.
-            let mut carry = plane ^ query;
-            for c in counts.iter_mut() {
-                let t = *c & carry;
-                *c ^= carry;
-                carry = t;
-                if carry == 0 {
-                    break;
-                }
-            }
-        }
-        // Minimum distance over valid lanes: from the counter MSB down,
-        // any candidate with a 0 at this magnitude beats every candidate
-        // with a 1.
-        let mut cand = self.valid_mask();
-        for c in counts.iter().rev() {
-            let zeros = cand & !c;
-            if zeros != 0 {
-                cand = zeros;
-            }
-        }
-        let index = cand.trailing_zeros() as usize;
-        let mut distance = 0u32;
-        for (k, c) in counts.iter().enumerate() {
-            distance |= (((c >> index) & 1) as u32) << k;
-        }
+        let (index, distance) = simd::most_similar_scalar(&self.entries[..self.len], word);
         Some(SearchHit {
             index,
             entry: self.entries[index],
@@ -203,11 +161,90 @@ impl DataTable {
         })
     }
 
+    /// Backend-dispatched CAM search: compare `word` against **all**
+    /// entries at once — the software analogue of the NOR-CAM match
+    /// phase where the search lines drive every row simultaneously.
+    ///
+    /// The portable scalar backend runs [`Self::plane_argmin`] over the
+    /// bit-plane mirror; AVX2/NEON run vectorized row-major kernels
+    /// (`simd::most_similar`). Bit-identical to [`Self::most_similar`]
+    /// on every backend.
+    pub fn most_similar_sliced(&self, word: u64) -> Option<SearchHit> {
+        if self.len == 0 {
+            return None;
+        }
+        let (index, distance) = match self.backend {
+            Backend::Scalar => self.plane_argmin(word),
+            b => simd::most_similar(b, &self.entries[..self.len], word),
+        };
+        Some(SearchHit {
+            index,
+            entry: self.entries[index],
+            distance,
+        })
+    }
+
+    /// Bit-sliced argmin over the plane mirror (the scalar backend's
+    /// search path), one 64-slot lane group at a time.
+    ///
+    /// Per plane, one XOR against the broadcast query bit yields the
+    /// per-entry mismatch lane vector, which is accumulated into seven
+    /// vertical (bit-serial SWAR) counters: bit *s* of `counts[k]` is
+    /// bit *k* of entry *s*'s running hamming distance (≤ 64, so 7
+    /// planes suffice). The argmin then narrows a candidate lane mask
+    /// from the counter MSB down, and `trailing_zeros` plays the
+    /// priority encoder for the lowest-index tie-break; groups fold
+    /// together through the same packed `(distance << 32) | index` key
+    /// as the row-major oracle, so earlier groups win ties.
+    fn plane_argmin(&self, word: u64) -> (usize, u32) {
+        let mut best_key = u64::MAX;
+        for group in 0..self.planes.len() / 64 {
+            let base = group * 64;
+            if base >= self.len {
+                break;
+            }
+            let mut counts = [0u64; 7];
+            for (b, &plane) in self.planes[base..base + 64].iter().enumerate() {
+                // Broadcast query bit b across all 64 lanes (all-ones when set).
+                let query = ((word >> b) & 1).wrapping_neg();
+                // Ripple the per-entry mismatch bit into the vertical
+                // counters; the carry thins out geometrically, so this
+                // loop runs ~2 levels on average.
+                let mut carry = plane ^ query;
+                for c in counts.iter_mut() {
+                    let t = *c & carry;
+                    *c ^= carry;
+                    carry = t;
+                    if carry == 0 {
+                        break;
+                    }
+                }
+            }
+            // Minimum distance over valid lanes: from the counter MSB
+            // down, any candidate with a 0 at this magnitude beats every
+            // candidate with a 1.
+            let mut cand = self.group_valid_mask(group);
+            for c in counts.iter().rev() {
+                let zeros = cand & !c;
+                if zeros != 0 {
+                    cand = zeros;
+                }
+            }
+            let slot = cand.trailing_zeros() as usize;
+            let mut distance = 0u32;
+            for (k, c) in counts.iter().enumerate() {
+                distance |= (((c >> slot) & 1) as u32) << k;
+            }
+            best_key = best_key.min((u64::from(distance) << 32) | (base + slot) as u64);
+        }
+        ((best_key & 0xFFFF_FFFF) as usize, (best_key >> 32) as u32)
+    }
+
     /// Batched fixed-table search: resolves each query exactly as
     /// [`Self::most_similar`] would against the *current* table state
-    /// (callers interleaving `push` must re-issue). Results are appended
-    /// to `out` after clearing it, so a preallocated buffer is reused
-    /// across batches.
+    /// (callers interleaving `push` must re-issue), routed through the
+    /// table's dispatched backend. Results are appended to `out` after
+    /// clearing it, so a preallocated buffer is reused across batches.
     pub fn most_similar_batch(&self, queries: &[u64], out: &mut Vec<Option<SearchHit>>) {
         out.clear();
         out.reserve(queries.len());
@@ -216,25 +253,40 @@ impl DataTable {
         }
     }
 
-    /// Exact-match CAM lookup. With the plane mirror this is an
-    /// AND-reduction over bit planes with early exit (a random mismatch
-    /// kills every lane within a few planes).
+    /// Exact-match CAM lookup, dispatched like the search: the scalar
+    /// backend AND-reduces bit planes with early exit (a random
+    /// mismatch kills every lane within a few planes); AVX2/NEON
+    /// compare vectors of row-major slots.
     pub fn contains(&self, word: u64) -> bool {
         if self.len == 0 {
             return false;
         }
-        if !self.bit_sliced() {
-            return self.entries[..self.len].contains(&word);
+        match self.backend {
+            Backend::Scalar => self.plane_contains(word),
+            b => simd::contains(b, &self.entries[..self.len], word),
         }
-        let mut lanes = self.valid_mask();
-        for (b, &plane) in self.planes.iter().enumerate() {
-            let query = ((word >> b) & 1).wrapping_neg();
-            lanes &= !(plane ^ query);
-            if lanes == 0 {
-                return false;
+    }
+
+    /// Plane-mirror exact-match (the scalar backend's `contains` path).
+    fn plane_contains(&self, word: u64) -> bool {
+        for group in 0..self.planes.len() / 64 {
+            let base = group * 64;
+            if base >= self.len {
+                break;
+            }
+            let mut lanes = self.group_valid_mask(group);
+            for (b, &plane) in self.planes[base..base + 64].iter().enumerate() {
+                let query = ((word >> b) & 1).wrapping_neg();
+                lanes &= !(plane ^ query);
+                if lanes == 0 {
+                    break;
+                }
+            }
+            if lanes != 0 {
+                return true;
             }
         }
-        true
+        false
     }
 
     /// FIFO insert (BD-Coder update policy: overwrite the oldest slot).
@@ -251,13 +303,12 @@ impl DataTable {
         // Incremental plane maintenance: only the planes where the new
         // word differs from the overwritten one change — cheap exactly
         // when the stream is similar, which is when pushes also matter.
-        if self.bit_sliced() {
-            let slot_bit = 1u64 << slot;
-            let mut diff = self.entries[slot] ^ word;
-            while diff != 0 {
-                self.planes[diff.trailing_zeros() as usize] ^= slot_bit;
-                diff &= diff - 1;
-            }
+        let base = (slot / 64) * 64;
+        let slot_bit = 1u64 << (slot % 64);
+        let mut diff = self.entries[slot] ^ word;
+        while diff != 0 {
+            self.planes[base + diff.trailing_zeros() as usize] ^= slot_bit;
+            diff &= diff - 1;
         }
         self.entries[slot] = word;
     }
@@ -374,11 +425,12 @@ mod tests {
     #[test]
     fn sliced_matches_oracle_across_fill_levels_and_sizes() {
         // Partially-filled and odd-sized tables, near-duplicate queries
-        // (tie-heavy), and words at the extremes.
+        // (tie-heavy), and words at the extremes. Capacities span one
+        // plane-lane group (≤ 64) and several (65..257).
         let mut r = Rng::new(10);
-        for cap in [1usize, 2, 7, 16, 63, 64] {
+        for cap in [1usize, 2, 7, 16, 63, 64, 65, 100, 257] {
             let mut t = DataTable::new(cap);
-            for round in 0..(cap * 3) {
+            for round in 0..(cap.min(64) * 3) {
                 t.push(if round % 3 == 0 { 0 } else { r.next_u64() });
                 for _ in 0..20 {
                     let q = match r.below(4) {
@@ -397,6 +449,41 @@ mod tests {
                     );
                     assert_eq!(hit.entry, t.get(bi));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_beyond_256_returns_exact_index() {
+        // Regression for the release-mode packed-key truncation: the
+        // old `(distance << 8) | index` u32 key silently wrapped
+        // indices ≥ 256 (debug_assert-only guard), returning slot 0
+        // here. The widened u64 key must report slot 256 exactly.
+        let mut t = DataTable::new(257);
+        for _ in 0..256 {
+            t.push(u64::MAX);
+        }
+        t.push(0);
+        let h = t.most_similar(0).unwrap();
+        assert_eq!((h.index, h.entry, h.distance), (256, 0, 0));
+        let h = t.most_similar_sliced(0).unwrap();
+        assert_eq!((h.index, h.entry, h.distance), (256, 0, 0));
+        assert!(t.contains(0));
+    }
+
+    #[test]
+    fn multi_group_mirror_survives_wraparound() {
+        // Capacities past one 64-slot lane group, driven through >2×
+        // capacity so the FIFO wraps across group boundaries.
+        let mut r = Rng::new(21);
+        for cap in [65usize, 128, 130] {
+            let mut t = DataTable::with_backend(cap, Backend::Scalar);
+            for _ in 0..cap * 2 + 7 {
+                t.push(r.next_u64() & 0xFFFF); // small domain => ties
+                let q = r.next_u64() & 0xFFFF;
+                let hit = t.most_similar_sliced(q).unwrap();
+                assert_eq!((hit.index, hit.distance), naive_argmin(&t, q), "cap {cap}");
+                assert_eq!(t.contains(q), t.snapshot().contains(&q), "cap {cap}");
             }
         }
     }
@@ -463,5 +550,13 @@ mod tests {
         for i in 0..10usize {
             assert_eq!(t.get(i), i as u64 * 1000);
         }
+    }
+
+    #[test]
+    fn with_backend_pins_the_backend() {
+        let t = DataTable::with_backend(8, Backend::Scalar);
+        assert_eq!(t.backend(), Backend::Scalar);
+        let default = DataTable::new(8);
+        assert!(simd::available_backends().contains(&default.backend()));
     }
 }

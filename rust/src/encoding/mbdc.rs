@@ -35,8 +35,10 @@ impl MbdcEncoder {
         Self::encode_one(table, word, false)
     }
 
-    /// Shared per-word core; `sliced` picks the CAM search layout (the
-    /// batch path runs against the bit-plane mirror, same results).
+    /// Shared per-word core; `sliced` picks the CAM search path (the
+    /// batch path runs the table's dispatched backend — bit-plane
+    /// mirror on scalar, AVX2/NEON row-major kernels otherwise — with
+    /// results pinned identical either way).
     #[inline]
     fn encode_one(table: &mut DataTable, word: u64, sliced: bool) -> WireWord {
         if word == 0 {

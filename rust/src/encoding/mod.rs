@@ -63,6 +63,7 @@ pub mod lane;
 pub mod mbdc;
 pub mod org;
 pub mod registry;
+pub mod simd;
 pub mod stats;
 pub mod wire;
 pub mod zac_dest;
@@ -73,6 +74,7 @@ pub use ecc::CorrectionCounts;
 pub use knobs::{Knobs, TableKnobs, ZacKnobs};
 pub use lane::ChipLane;
 pub use registry::{default_registry, Codec, CodecRegistry, CodecSpec};
+pub use simd::{Backend, SimdPref};
 pub use stats::{EncodeStats, Outcome};
 pub use wire::WireWord;
 

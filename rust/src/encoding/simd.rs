@@ -1,0 +1,494 @@
+//! Runtime-dispatched SIMD backends for the CAM search primitives.
+//!
+//! `DataTable::most_similar_sliced` / `most_similar_batch` / `contains`
+//! sit under every codec, the batch engine, `Pipeline` and
+//! `ChannelArray`, so this module gives the search a backend seam:
+//!
+//! * **scalar** — the portable path, always available: the row-major
+//!   XOR+POPCNT reference kernel here plus the bit-plane vertical
+//!   counters in `data_table.rs`.
+//! * **avx2** (`x86_64`) — 256-bit lanes: four table slots per XOR, a
+//!   `vpshufb` nibble-LUT popcount (the shuffle-table method), and a
+//!   packed `(distance << 32) | index` key min so the lowest-index
+//!   tie-break falls out of a branchless vector min.
+//! * **neon** (`aarch64`) — 128-bit lanes with `vcnt`+pairwise-add
+//!   popcounts, same packed-key argmin.
+//!
+//! # Selection order
+//!
+//! The process-wide default is resolved **once** and cached: an explicit
+//! `ZAC_SIMD=auto|scalar|avx2|neon` override first, then runtime feature
+//! detection (`is_x86_feature_detected!` and its aarch64 twin), then the
+//! scalar fallback. `Session::builder().simd(..)` and the CLI `--simd`
+//! flag override it per session via a thread-scoped
+//! [`with_backend`] around codec construction, so concurrent sessions
+//! and tests never fight over a global. Requesting a backend the host
+//! cannot run (`ZAC_SIMD=avx2` on a non-AVX2 machine) is an error at
+//! the ingestion boundary, never a silent fallback.
+//!
+//! # Safety contract
+//!
+//! All `unsafe` lives inside this module. The public kernels re-probe
+//! the (cached) CPU feature before entering a `#[target_feature]`
+//! function and fall back to the scalar kernel otherwise, so they are
+//! sound for any [`Backend`] value a caller can construct — call sites
+//! stay unsafe-free. Every backend must be **bit-identical** to
+//! [`most_similar_scalar`] (hit index, entry, distance, tie-breaks);
+//! `rust/tests/simd_backends.rs` pins this property on every backend
+//! the host can run.
+
+use anyhow::Result;
+
+/// A concrete, host-runnable search backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar path (bit-plane mirror / row-major reference).
+    Scalar,
+    /// 256-bit AVX2 kernels (x86-64 only, runtime detected).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64 only, runtime detected).
+    Neon,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// A backend *preference*, as ingested from `ZAC_SIMD`, `--simd` or
+/// [`Session::builder().simd(..)`](crate::session::SessionBuilder::simd)
+/// — resolved against the host's feature set by [`SimdPref::resolve`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdPref {
+    /// Best available: avx2, else neon, else scalar.
+    #[default]
+    Auto,
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl SimdPref {
+    /// Parse a preference token (case-insensitive; empty means `auto`).
+    pub fn parse(s: &str) -> Result<SimdPref> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(SimdPref::Auto),
+            "scalar" => Ok(SimdPref::Scalar),
+            "avx2" => Ok(SimdPref::Avx2),
+            "neon" => Ok(SimdPref::Neon),
+            other => anyhow::bail!("unknown SIMD backend {other:?} (want auto|scalar|avx2|neon)"),
+        }
+    }
+
+    /// The `ZAC_SIMD` environment preference (`Auto` when unset).
+    pub fn from_env() -> Result<SimdPref> {
+        match std::env::var("ZAC_SIMD") {
+            Ok(v) => SimdPref::parse(&v).map_err(|e| anyhow::anyhow!("ZAC_SIMD: {e}")),
+            Err(_) => Ok(SimdPref::Auto),
+        }
+    }
+
+    /// Resolve against this host: `Auto` picks the best detected
+    /// backend; an explicit `avx2`/`neon` request the host cannot run
+    /// is an error, never a silent fallback.
+    pub fn resolve(self) -> Result<Backend> {
+        match self {
+            SimdPref::Auto => Ok(if avx2_available() {
+                Backend::Avx2
+            } else if neon_available() {
+                Backend::Neon
+            } else {
+                Backend::Scalar
+            }),
+            SimdPref::Scalar => Ok(Backend::Scalar),
+            SimdPref::Avx2 => {
+                anyhow::ensure!(
+                    avx2_available(),
+                    "SIMD backend avx2 requested but this host has no AVX2"
+                );
+                Ok(Backend::Avx2)
+            }
+            SimdPref::Neon => {
+                anyhow::ensure!(
+                    neon_available(),
+                    "SIMD backend neon requested but this host has no NEON"
+                );
+                Ok(Backend::Neon)
+            }
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdPref::Auto => "auto",
+            SimdPref::Scalar => "scalar",
+            SimdPref::Avx2 => "avx2",
+            SimdPref::Neon => "neon",
+        }
+    }
+}
+
+/// Whether the AVX2 kernels can run here (cached CPUID probe).
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Whether the NEON kernels can run here.
+#[cfg(target_arch = "aarch64")]
+pub fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+pub fn neon_available() -> bool {
+    false
+}
+
+/// Every backend this host can run, scalar first (property tests and
+/// the `simd_compare` bench iterate this).
+pub fn available_backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    if avx2_available() {
+        v.push(Backend::Avx2);
+    }
+    if neon_available() {
+        v.push(Backend::Neon);
+    }
+    v
+}
+
+static DEFAULT: std::sync::OnceLock<Backend> = std::sync::OnceLock::new();
+
+thread_local! {
+    static OVERRIDE: std::cell::Cell<Option<Backend>> = const { std::cell::Cell::new(None) };
+}
+
+/// The process-wide default backend, resolved once from `ZAC_SIMD` +
+/// feature detection and cached. Errors (malformed `ZAC_SIMD`, or an
+/// explicit backend the host lacks) surface here — `Session::build()`
+/// and the CLI call this before any table exists.
+pub fn default_backend() -> Result<Backend> {
+    if let Some(b) = DEFAULT.get() {
+        return Ok(*b);
+    }
+    let resolved = SimdPref::from_env()?.resolve()?;
+    Ok(*DEFAULT.get_or_init(|| resolved))
+}
+
+/// The backend a `DataTable` constructed *now* on this thread captures:
+/// the innermost [`with_backend`] scope if one is active, else the
+/// process default. Panics on a malformed `ZAC_SIMD` only when no
+/// ingestion boundary validated it first (the session builder and the
+/// CLI both do).
+pub fn current() -> Backend {
+    if let Some(b) = OVERRIDE.with(|c| c.get()) {
+        return b;
+    }
+    default_backend().unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Run `f` with `backend` as the table-construction backend on this
+/// thread. Session builds wrap codec construction in this, so a
+/// per-session `--simd`/builder override never leaks into other
+/// sessions, threads or tests. Restores the previous scope even if `f`
+/// unwinds.
+pub fn with_backend<R>(backend: Backend, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Backend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|c| c.replace(Some(backend))));
+    f()
+}
+
+/// Portable scalar reference kernel: one XOR + POPCNT per entry, the
+/// (distance, index) pair packed as `(distance << 32) | index` so a
+/// single branchless `min` yields both the minimum distance *and* the
+/// lowest-index tie-break. The widened u64 key carries any index a
+/// `DataTable` can hold (capacity is capped at `u32::MAX` by its
+/// constructor) — the old `(distance << 8) | index` u32 packing
+/// silently truncated indices ≥ 256 in release builds.
+///
+/// Every other backend must stay bit-identical to this. `entries` must
+/// be non-empty.
+pub fn most_similar_scalar(entries: &[u64], word: u64) -> (usize, u32) {
+    debug_assert!(!entries.is_empty());
+    let mut best_key = u64::MAX;
+    for (i, &e) in entries.iter().enumerate() {
+        let key = (u64::from((e ^ word).count_ones()) << 32) | i as u64;
+        best_key = best_key.min(key);
+    }
+    ((best_key & 0xFFFF_FFFF) as usize, (best_key >> 32) as u32)
+}
+
+/// Scalar exact-match kernel (the row-major reference for `contains`).
+pub fn contains_scalar(entries: &[u64], word: u64) -> bool {
+    entries.contains(&word)
+}
+
+/// Dispatched most-similar search over the valid row-major entries.
+/// Returns `(index, distance)` of the best hit, bit-identical to
+/// [`most_similar_scalar`]. Falls back to the scalar kernel when
+/// `backend`'s CPU feature is absent — unreachable for backends from
+/// [`SimdPref::resolve`], which probes first, but it keeps this
+/// function sound (and unsafe-free to call) for any hand-constructed
+/// [`Backend`].
+pub fn most_similar(backend: Backend, entries: &[u64], word: u64) -> (usize, u32) {
+    match backend {
+        Backend::Scalar => most_similar_scalar(entries, word),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if avx2_available() => unsafe { avx2::most_similar(entries, word) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon if neon_available() => unsafe { neon::most_similar(entries, word) },
+        _ => most_similar_scalar(entries, word),
+    }
+}
+
+/// Dispatched exact-match lookup over the valid row-major entries.
+/// Same soundness/fallback contract as [`most_similar`].
+pub fn contains(backend: Backend, entries: &[u64], word: u64) -> bool {
+    match backend {
+        Backend::Scalar => contains_scalar(entries, word),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if avx2_available() => unsafe { avx2::contains(entries, word) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon if neon_available() => unsafe { neon::contains(entries, word) },
+        _ => contains_scalar(entries, word),
+    }
+}
+
+/// AVX2 kernels: four 64-bit table slots per 256-bit vector.
+///
+/// # Safety
+/// Every function here is `#[target_feature(enable = "avx2")]` and must
+/// only be entered after `avx2_available()` returned true — the safe
+/// wrappers above enforce that.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount via the `vpshufb` nibble LUT +
+    /// `vpsadbw` horizontal byte sum (the classic shuffle-table
+    /// popcount — no AVX-512 `vpopcntq` needed).
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let nibbles = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(nibbles, _mm256_setzero_si256())
+    }
+
+    /// `(index, distance)` of the entry nearest `word`. Packs
+    /// `(distance << 32) | index` into each lane and vector-mins; keys
+    /// are < 2^39, so signed 64-bit compares are exact. The tail (< 4
+    /// slots) folds in scalar, at higher indices than every vector
+    /// lane, so the lowest-index tie-break is preserved.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn most_similar(entries: &[u64], word: u64) -> (usize, u32) {
+        let q = _mm256_set1_epi64x(word as i64);
+        let mut best = _mm256_set1_epi64x(i64::MAX);
+        let mut idx = _mm256_setr_epi64x(0, 1, 2, 3);
+        let step = _mm256_set1_epi64x(4);
+        let chunks = entries.chunks_exact(4);
+        let tail = chunks.remainder();
+        for chunk in chunks {
+            let e = _mm256_loadu_si256(chunk.as_ptr() as *const __m256i);
+            let d = popcnt_epi64(_mm256_xor_si256(e, q));
+            let key = _mm256_or_si256(_mm256_slli_epi64::<32>(d), idx);
+            let worse = _mm256_cmpgt_epi64(best, key);
+            best = _mm256_blendv_epi8(best, key, worse);
+            idx = _mm256_add_epi64(idx, step);
+        }
+        let mut lanes = [u64::MAX; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, best);
+        // Untouched lanes hold i64::MAX (> any real key < 2^39).
+        let mut best_key = lanes.iter().copied().min().unwrap_or(u64::MAX);
+        let base = entries.len() - tail.len();
+        for (j, &e) in tail.iter().enumerate() {
+            let key = (u64::from((e ^ word).count_ones()) << 32) | (base + j) as u64;
+            best_key = best_key.min(key);
+        }
+        ((best_key & 0xFFFF_FFFF) as usize, (best_key >> 32) as u32)
+    }
+
+    /// Exact-match lookup: four slots per compare, movemask early exit.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn contains(entries: &[u64], word: u64) -> bool {
+        let q = _mm256_set1_epi64x(word as i64);
+        let chunks = entries.chunks_exact(4);
+        let tail = chunks.remainder();
+        for chunk in chunks {
+            let e = _mm256_loadu_si256(chunk.as_ptr() as *const __m256i);
+            if _mm256_movemask_epi8(_mm256_cmpeq_epi64(e, q)) != 0 {
+                return true;
+            }
+        }
+        tail.contains(&word)
+    }
+}
+
+/// NEON kernels: two 64-bit table slots per 128-bit vector, `vcnt`
+/// per-byte popcount folded by pairwise widening adds.
+///
+/// # Safety
+/// `#[target_feature(enable = "neon")]`; entered only after
+/// `neon_available()` returned true (NEON is baseline on aarch64, but
+/// the probe keeps the contract uniform).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    #[allow(clippy::wildcard_imports)]
+    use std::arch::aarch64::*;
+
+    /// Same packed-key argmin as the AVX2 kernel; the 2-lane min folds
+    /// scalar (lane 0 first, preserving the lowest-index tie-break).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn most_similar(entries: &[u64], word: u64) -> (usize, u32) {
+        let q = vdupq_n_u64(word);
+        let mut best_key = u64::MAX;
+        let chunks = entries.chunks_exact(2);
+        let tail = chunks.remainder();
+        let mut base = 0u64;
+        for chunk in chunks {
+            let e = vld1q_u64(chunk.as_ptr());
+            let x = veorq_u64(e, q);
+            let d = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(x)))));
+            let k0 = (vgetq_lane_u64::<0>(d) << 32) | base;
+            let k1 = (vgetq_lane_u64::<1>(d) << 32) | (base + 1);
+            best_key = best_key.min(k0).min(k1);
+            base += 2;
+        }
+        for (j, &e) in tail.iter().enumerate() {
+            let key = (u64::from((e ^ word).count_ones()) << 32) | (base + j as u64);
+            best_key = best_key.min(key);
+        }
+        ((best_key & 0xFFFF_FFFF) as usize, (best_key >> 32) as u32)
+    }
+
+    /// Exact-match lookup, two slots per compare.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn contains(entries: &[u64], word: u64) -> bool {
+        let q = vdupq_n_u64(word);
+        let chunks = entries.chunks_exact(2);
+        let tail = chunks.remainder();
+        for chunk in chunks {
+            let e = vld1q_u64(chunk.as_ptr());
+            let eq = vceqq_u64(e, q);
+            if vmaxvq_u32(vreinterpretq_u32_u64(eq)) != 0 {
+                return true;
+            }
+        }
+        tail.contains(&word)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::seeded_rng;
+
+    #[test]
+    fn pref_parses_all_tokens_and_rejects_garbage() {
+        assert_eq!(SimdPref::parse("auto").unwrap(), SimdPref::Auto);
+        assert_eq!(SimdPref::parse("").unwrap(), SimdPref::Auto);
+        assert_eq!(SimdPref::parse("SCALAR").unwrap(), SimdPref::Scalar);
+        assert_eq!(SimdPref::parse("avx2").unwrap(), SimdPref::Avx2);
+        assert_eq!(SimdPref::parse(" neon ").unwrap(), SimdPref::Neon);
+        let err = SimdPref::parse("avx512").unwrap_err().to_string();
+        assert!(err.contains("avx512"), "{err}");
+        assert!(err.contains("auto|scalar|avx2|neon"), "{err}");
+    }
+
+    #[test]
+    fn auto_resolves_and_scalar_is_always_available() {
+        let auto = SimdPref::Auto.resolve().unwrap();
+        assert!(available_backends().contains(&auto));
+        assert_eq!(SimdPref::Scalar.resolve().unwrap(), Backend::Scalar);
+        assert_eq!(available_backends()[0], Backend::Scalar);
+    }
+
+    #[test]
+    fn unavailable_explicit_backend_is_an_error_not_a_fallback() {
+        if !avx2_available() {
+            let e = SimdPref::Avx2.resolve().unwrap_err().to_string();
+            assert!(e.contains("avx2"), "{e}");
+        }
+        if !neon_available() {
+            let e = SimdPref::Neon.resolve().unwrap_err().to_string();
+            assert!(e.contains("neon"), "{e}");
+        }
+    }
+
+    #[test]
+    fn with_backend_scopes_nest_and_restore() {
+        let outer = current();
+        with_backend(Backend::Scalar, || {
+            assert_eq!(current(), Backend::Scalar);
+            if let Some(&simd) = available_backends().last() {
+                with_backend(simd, || assert_eq!(current(), simd));
+            }
+            assert_eq!(current(), Backend::Scalar);
+        });
+        assert_eq!(current(), outer);
+    }
+
+    #[test]
+    fn with_backend_restores_on_unwind() {
+        let outer = current();
+        let _ = std::panic::catch_unwind(|| {
+            with_backend(Backend::Scalar, || panic!("boom"));
+        });
+        assert_eq!(current(), outer);
+    }
+
+    #[test]
+    fn every_available_kernel_matches_the_scalar_reference() {
+        let mut r = seeded_rng(0x51D);
+        // Lengths around the 4-lane (AVX2) and 2-lane (NEON) chunk
+        // boundaries, plus multi-hundred tables past the old 256 cap.
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 63, 64, 65, 255, 256, 257, 300] {
+            let entries: Vec<u64> = (0..n)
+                .map(|i| if i % 5 == 0 { 0 } else { r.next_u64() })
+                .collect();
+            for _ in 0..40 {
+                let q = match r.below(4) {
+                    0 => 0,
+                    1 => u64::MAX,
+                    2 => entries[r.below(n as u64) as usize] ^ (1u64 << r.below(64)),
+                    _ => r.next_u64(),
+                };
+                let want = most_similar_scalar(&entries, q);
+                let want_in = contains_scalar(&entries, q);
+                for &b in &available_backends() {
+                    assert_eq!(most_similar(b, &entries, q), want, "{} n={n} q={q:#x}", b.label());
+                    assert_eq!(contains(b, &entries, q), want_in, "{} n={n} q={q:#x}", b.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tie_break_is_lowest_index() {
+        // Duplicate entries: index 1 and 5 tie at distance 0.
+        let entries = [7u64, 3, 9, 11, 13, 3, 3];
+        for &b in &available_backends() {
+            assert_eq!(most_similar(b, &entries, 3), (1, 0), "{}", b.label());
+        }
+    }
+}

@@ -60,8 +60,9 @@ impl ZacDestEncoder {
 
     /// Per-word encode core, shared by the scalar and batch paths. The
     /// knobs arrive as arguments so the batch loop hoists them once;
-    /// `sliced` selects the bit-sliced CAM search (batch hot path) vs
-    /// the row-major reference scan — both return identical hits.
+    /// `sliced` selects the backend-dispatched CAM search (batch hot
+    /// path: bit-plane mirror on scalar, AVX2/NEON kernels otherwise)
+    /// vs the row-major reference scan — all pinned to identical hits.
     #[inline]
     fn encode_one(
         table: &mut DataTable,
@@ -156,7 +157,7 @@ impl ChipEncoder for ZacDestEncoder {
 
     /// Batch hot path: config knobs hoisted out of the loop, each
     /// (post-truncation) all-zero word short-circuiting ahead of its CAM
-    /// access, and the search running against the bit-plane mirror.
+    /// access, and the search dispatched to the table's backend.
     fn encode_batch(&mut self, words: &[u64], approx: &[bool], out: &mut [WireWord]) {
         assert_eq!(words.len(), approx.len());
         assert_eq!(words.len(), out.len());

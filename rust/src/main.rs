@@ -80,7 +80,13 @@ fn app() -> Command {
                     "-",
                     "telemetry JSON path ('-' = skip; implies telemetry)",
                 )
-                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
+                .opt(
+                    "simd",
+                    "",
+                    "CAM search backend: auto | scalar | avx2 | neon ('' = ZAC_SIMD/auto)",
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)")
+                .env("ZAC_SIMD", "default CAM search backend: auto|scalar|avx2|neon"),
         )
         .subcommand(
             Command::new("record", "record a trace to a framed .zactrace file")
@@ -115,7 +121,13 @@ fn app() -> Command {
                     "-",
                     "telemetry JSON path ('-' = skip; implies telemetry)",
                 )
-                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
+                .opt(
+                    "simd",
+                    "",
+                    "CAM search backend: auto | scalar | avx2 | neon ('' = ZAC_SIMD/auto)",
+                )
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)")
+                .env("ZAC_SIMD", "default CAM search backend: auto|scalar|avx2|neon"),
         )
         .subcommand(
             Command::new("trace-info", "inspect a .zactrace without decoding payloads")
@@ -172,7 +184,8 @@ fn app() -> Command {
                     "ZAC_BENCH_BYTES",
                     "default trace size in bytes for sweep + bench smokes",
                 )
-                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)")
+                .env("ZAC_SIMD", "default CAM search backend: auto|scalar|avx2|neon"),
         )
         .subcommand(
             Command::new("budget", "per-workload max tolerable BER bin at a quality-loss cap")
@@ -197,7 +210,8 @@ fn app() -> Command {
                     "-",
                     "telemetry JSON path ('-' = skip; implies telemetry)",
                 )
-                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)"),
+                .env("ZAC_METRICS", "1 = collect runtime telemetry (0 = off)")
+                .env("ZAC_SIMD", "default CAM search backend: auto|scalar|avx2|neon"),
         )
         .subcommand(Command::new("circuit", "§VI circuit overhead report").opt(
             "vectors",
@@ -407,6 +421,15 @@ fn trace_source(m: &zac_dest::util::cli::Matches) -> Result<Vec<u8>> {
     Ok(zac_dest::trace::chip_words_to_bytes(&lines, lines.len() * 64))
 }
 
+/// Parse the optional `--simd` override: empty string defers to the
+/// `ZAC_SIMD` env / auto-detection default inside the session builder.
+fn simd_pref(m: &zac_dest::util::cli::Matches) -> Result<Option<zac_dest::encoding::SimdPref>> {
+    match m.get_or("simd", "") {
+        "" => Ok(None),
+        s => Ok(Some(zac_dest::encoding::SimdPref::parse(s)?)),
+    }
+}
+
 fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let spec = encode_spec(m)?;
     let faults = FaultSpec::parse(m.get_or("faults", "perfect"))?;
@@ -415,24 +438,30 @@ fn cmd_encode(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let trace = Trace::from_bytes(trace_source(m)?);
     let metrics_out = m.get_or("metrics-out", "-");
     let telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
-    let session = Session::builder()
+    let simd = simd_pref(m)?;
+    let mut builder = Session::builder()
         .codec(spec.clone())
         .channels(channels)
         .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .faults(faults)
-        .telemetry(telemetry)
-        .build()?;
+        .telemetry(telemetry);
+    if let Some(pref) = simd {
+        builder = builder.simd(pref);
+    }
+    let session = builder.build()?;
     let t0 = std::time::Instant::now();
     let out = session.run(&trace)?;
     let dt = t0.elapsed();
-    let base = Session::builder()
+    let mut base_builder = Session::builder()
         .codec(CodecSpec::named("ORG"))
         .channels(channels)
         .address(address.clone())
-        .traffic(TrafficClass::Approximate)
-        .build()?
-        .run(&trace)?;
+        .traffic(TrafficClass::Approximate);
+    if let Some(pref) = simd {
+        base_builder = base_builder.simd(pref);
+    }
+    let base = base_builder.build()?.run(&trace)?;
     let bytes = trace.bytes();
     println!("scheme        : {}", spec.label());
     println!("channels      : {channels}");
@@ -515,26 +544,32 @@ fn cmd_replay(m: &zac_dest::util::cli::Matches) -> Result<()> {
     let metrics_out = m.get_or("metrics-out", "-");
     let telemetry = metrics_out != "-" || zac_dest::obs::metrics_from_env()?;
     let file = TraceFile::open(input).map_err(|e| anyhow::anyhow!("{input}: {e}"))?;
-    let session = Session::builder()
+    let simd = simd_pref(m)?;
+    let mut builder = Session::builder()
         .codec(spec.clone())
         .channels(channels)
         .address(address.clone())
         .traffic(TrafficClass::Approximate)
         .faults(faults)
-        .telemetry(telemetry)
-        .build()?;
+        .telemetry(telemetry);
+    if let Some(pref) = simd {
+        builder = builder.simd(pref);
+    }
+    let session = builder.build()?;
     let t0 = std::time::Instant::now();
     let out = session.replay(&file)?;
     let dt = t0.elapsed();
     // The savings baseline replays the same recorded frames, so the
     // comparison is trace-for-trace fair.
-    let base = Session::builder()
+    let mut base_builder = Session::builder()
         .codec(CodecSpec::named("ORG"))
         .channels(channels)
         .address(address.clone())
-        .traffic(TrafficClass::Approximate)
-        .build()?
-        .replay(&file)?;
+        .traffic(TrafficClass::Approximate);
+    if let Some(pref) = simd {
+        base_builder = base_builder.simd(pref);
+    }
+    let base = base_builder.build()?.replay(&file)?;
     println!("scheme        : {}", spec.label());
     println!("channels      : {channels}");
     println!("address       : {}", address.label());
@@ -854,6 +889,26 @@ mod tests {
             parse_workload_list(m.get_or("workloads", "svm")).unwrap(),
             vec![Kind::Quant]
         );
+    }
+
+    #[test]
+    fn simd_flag_parses_and_rejects_garbage() {
+        // Absent flag defers to ZAC_SIMD / auto-detection (None).
+        let m = matches("encode");
+        assert_eq!(simd_pref(&m).unwrap(), None);
+        let m = matches("encode --simd scalar");
+        assert_eq!(
+            simd_pref(&m).unwrap(),
+            Some(zac_dest::encoding::SimdPref::Scalar)
+        );
+        let m = matches("replay in.zactrace --simd AVX2");
+        assert_eq!(
+            simd_pref(&m).unwrap(),
+            Some(zac_dest::encoding::SimdPref::Avx2)
+        );
+        let m = matches("encode --simd banana");
+        let err = simd_pref(&m).unwrap_err().to_string();
+        assert!(err.contains("banana"), "{err}");
     }
 
     #[test]

@@ -177,6 +177,15 @@ pub fn pack_words_i32(words: &[u64]) -> Vec<i32> {
         .collect()
 }
 
+/// Poison-tolerant lock, used for the executable cache: a panicked
+/// compile on one thread must surface its own root cause *there*, not
+/// turn every later `exec`/`precompile` into a poisoned-lock panic.
+/// Recovery is sound here because the cache is insert-only `Arc`s — a
+/// panic mid-update can at worst lose one insert, never tear an entry.
+fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// The PJRT runtime: one compiled executable per artifact, compiled
 /// lazily and cached.
 pub struct Runtime {
@@ -223,7 +232,7 @@ impl Runtime {
     }
 
     fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(name) {
+        if let Some(e) = lock_unpoisoned(&self.executables).get(name) {
             return Ok(e.clone());
         }
         let spec = self
@@ -242,10 +251,7 @@ impl Runtime {
                 .compile(&comp)
                 .with_context(|| format!("compiling {name}"))?,
         );
-        self.executables
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
+        lock_unpoisoned(&self.executables).insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -327,6 +333,27 @@ mod tests {
                 None
             }
         }
+    }
+
+    #[test]
+    fn poisoned_executable_cache_lock_recovers() {
+        // Regression: the cache used `lock().unwrap()`, so one panicked
+        // compile poisoned the mutex and every later lookup died on the
+        // poison instead of the root cause. `lock_unpoisoned` must hand
+        // back a usable guard over intact contents.
+        let cache: std::sync::Mutex<HashMap<String, i32>> = std::sync::Mutex::new(HashMap::new());
+        lock_unpoisoned(&cache).insert("before".into(), 1);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = cache.lock().unwrap();
+            panic!("compile blew up while holding the cache lock");
+        }));
+        assert!(poison.is_err());
+        assert!(cache.is_poisoned(), "setup must actually poison the lock");
+        // Both code paths of `Runtime::executable`: read-through hit...
+        assert_eq!(lock_unpoisoned(&cache).get("before"), Some(&1));
+        // ...and insert after a miss.
+        lock_unpoisoned(&cache).insert("after".into(), 2);
+        assert_eq!(lock_unpoisoned(&cache).len(), 2);
     }
 
     #[test]

@@ -39,7 +39,7 @@ use std::sync::Arc;
 use crate::channel::CHIPS;
 use crate::coordinator::{drive_lines, weight_chip_configs, Pipeline, RunOutput};
 use crate::encoding::{
-    default_registry, Codec, CodecRegistry, CodecSpec, EncodeStats, ENCODE_BATCH,
+    default_registry, simd, Codec, CodecRegistry, CodecSpec, EncodeStats, ENCODE_BATCH,
 };
 use crate::faults::{FaultSpec, FaultStats};
 use crate::obs::{MetricsRegistry, TelemetrySnapshot};
@@ -359,6 +359,7 @@ pub struct Session {
     faults: FaultSpec,
     address: AddressSpec,
     telemetry: bool,
+    simd: simd::Backend,
     trace_file: Option<PathBuf>,
     record_to: Option<PathBuf>,
 }
@@ -398,8 +399,20 @@ impl Session {
         self.telemetry
     }
 
+    /// The CAM search backend this session's codecs dispatch to
+    /// (resolved once at `build()` from the builder override, else
+    /// `ZAC_SIMD`, else feature detection).
+    pub fn simd_backend(&self) -> simd::Backend {
+        self.simd
+    }
+
     fn build_codecs(&self) -> anyhow::Result<Vec<Codec>> {
-        self.specs.iter().map(|s| self.registry.build(s)).collect()
+        // Scoped, not global: every `DataTable` constructed by the
+        // factories captures this session's backend without leaking it
+        // into concurrently-built sessions or tests.
+        simd::with_backend(self.simd, || {
+            self.specs.iter().map(|s| self.registry.build(s)).collect()
+        })
     }
 
     /// Drive `trace` through the configured codec/channel topology.
@@ -575,6 +588,7 @@ pub struct SessionBuilder {
     faults: FaultSpec,
     address: AddressSpec,
     telemetry: Option<bool>,
+    simd: Option<simd::SimdPref>,
     trace_file: Option<PathBuf>,
     record_to: Option<PathBuf>,
 }
@@ -679,6 +693,18 @@ impl SessionBuilder {
         self
     }
 
+    /// CAM search backend preference for this session's codecs
+    /// (default: the `ZAC_SIMD` environment override, else runtime
+    /// feature detection). An explicit `Avx2`/`Neon` request on a host
+    /// without that feature is a `build()` error, never a silent
+    /// fallback. Backends never change results — every one is pinned
+    /// bit-identical to the scalar oracle
+    /// (`rust/tests/simd_backends.rs`).
+    pub fn simd(mut self, pref: simd::SimdPref) -> SessionBuilder {
+        self.simd = Some(pref);
+        self
+    }
+
     /// Validate everything and produce the session. Errors — not
     /// panics — surface invalid knobs, unknown schemes, bad channel
     /// counts and conflicting codec sources.
@@ -751,6 +777,10 @@ impl SessionBuilder {
             Some(on) => on,
             None => crate::obs::metrics_from_env()?,
         };
+        let simd = match self.simd {
+            Some(pref) => pref.resolve()?,
+            None => simd::default_backend()?,
+        };
         Ok(Session {
             specs,
             registry,
@@ -761,6 +791,7 @@ impl SessionBuilder {
             faults: self.faults,
             address: self.address,
             telemetry,
+            simd,
             trace_file: self.trace_file,
             record_to: self.record_to,
         })

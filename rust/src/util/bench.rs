@@ -180,9 +180,53 @@ impl Bencher {
     /// benches). The perf trajectory across PRs diffs these files
     /// (`BENCH_encoder.json` et al.) instead of scraping stdout.
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
-        use crate::util::json_lite::{num, obj, s, Json};
-        let entries = self
-            .results
+        use crate::util::json_lite::Json;
+        let report = Json::Arr(self.json_entries());
+        crate::util::json_lite::write_file(path, &report)?;
+        println!("bench report -> {path}");
+        Ok(())
+    }
+
+    /// Like [`write_json`](Self::write_json), but preserves entries an
+    /// existing report already holds for benchmarks *not* re-measured
+    /// this run (matched by `name`; re-measured names are replaced).
+    /// Lets several bench binaries share one artifact — e.g.
+    /// `simd_compare` folding into `BENCH_encoder.json` next to the
+    /// encoder-throughput rows. A missing file starts fresh; an
+    /// unparseable one is an error (fail loud, never clobber a report
+    /// we could not read).
+    pub fn merge_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json_lite::Json;
+        let corrupt = |e: String| std::io::Error::new(std::io::ErrorKind::InvalidData, e);
+        let mut entries = match std::fs::read_to_string(path) {
+            Ok(text) => {
+                let prior = Json::parse(&text).map_err(|e| corrupt(format!("{path}: {e}")))?;
+                let arr = prior.as_arr().map_err(|e| corrupt(format!("{path}: {e}")))?;
+                let fresh: std::collections::HashSet<&str> =
+                    self.results.iter().map(|st| st.name.as_str()).collect();
+                arr.iter()
+                    .filter(|entry| {
+                        entry
+                            .get("name")
+                            .ok()
+                            .and_then(|n| n.as_str().ok())
+                            .map_or(true, |name| !fresh.contains(name))
+                    })
+                    .cloned()
+                    .collect::<Vec<Json>>()
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        entries.extend(self.json_entries());
+        crate::util::json_lite::write_file(path, &Json::Arr(entries))?;
+        println!("bench report -> {path} (merged)");
+        Ok(())
+    }
+
+    fn json_entries(&self) -> Vec<crate::util::json_lite::Json> {
+        use crate::util::json_lite::{num, obj, s};
+        self.results
             .iter()
             .map(|st| {
                 let mut pairs = vec![
@@ -199,11 +243,7 @@ impl Bencher {
                 }
                 obj(pairs)
             })
-            .collect();
-        let report = Json::Arr(entries);
-        crate::util::json_lite::write_file(path, &report)?;
-        println!("bench report -> {path}");
-        Ok(())
+            .collect()
     }
 }
 
@@ -235,6 +275,38 @@ mod tests {
         assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "jsn");
         assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(arr[0].get("units_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn merge_json_keeps_other_entries_and_replaces_remeasured_ones() {
+        use crate::util::json_lite::Json;
+        let path = std::env::temp_dir().join("zac_bench_merge_test.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        // First writer: two entries, no existing file (NotFound = fresh).
+        let mut a = Bencher::fast();
+        a.bench("keep/me", || std::hint::black_box(1 + 1));
+        a.bench("replace/me", || std::hint::black_box(2 + 2));
+        a.merge_json(path).unwrap();
+        // Second writer re-measures one name and adds a new one.
+        let mut b = Bencher::fast();
+        b.bench("replace/me", || std::hint::black_box(3 + 3));
+        b.bench("brand/new", || std::hint::black_box(4 + 4));
+        b.merge_json(path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let names: Vec<&str> = parsed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["keep/me", "replace/me", "brand/new"]);
+        // A corrupt existing report is an error, never clobbered.
+        std::fs::write(path, "not json").unwrap();
+        let err = b.merge_json(path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "not json");
         let _ = std::fs::remove_file(path);
     }
 

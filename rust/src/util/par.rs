@@ -30,6 +30,12 @@ pub fn join_all_reraise<T>(workers: Vec<JoinHandle<T>>) -> Vec<T> {
 /// chunk, not per item) and fills the matching output chunk in place.
 /// Chunks are ~4 per thread, coarse enough that the queue lock stays
 /// cold yet fine enough to balance uneven per-item cost.
+///
+/// If `f` panics on any item, the siblings drain the remaining work,
+/// and the *original* panic payload is re-raised at the call site —
+/// the same contract as [`join_all_reraise`] — never a generic
+/// "scoped thread panicked" or an `unwrap` on the missing output slot
+/// that would mask the root cause.
 pub fn par_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
 where
     T: Send,
@@ -50,18 +56,35 @@ where
             .zip(outputs.chunks_mut(chunk))
             .collect(),
     );
+    // First worker panic payload, captured (not propagated through the
+    // scope, which would replace it with a generic message).
+    let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let unit = work.lock().unwrap().pop();
                 let Some((ins, outs)) = unit else { break };
                 for (i, o) in ins.iter_mut().zip(outs.iter_mut()) {
-                    *o = Some(f(i.take().unwrap()));
+                    let item = i.take().unwrap();
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item))) {
+                        Ok(v) => *o = Some(v),
+                        Err(p) => {
+                            let mut first = panicked.lock().unwrap();
+                            if first.is_none() {
+                                *first = Some(p);
+                            }
+                            // This worker stops; siblings drain the rest.
+                            return;
+                        }
+                    }
                 }
             });
         }
     });
     drop(work);
+    if let Some(p) = panicked.into_inner().unwrap() {
+        std::panic::resume_unwind(p);
+    }
     outputs.into_iter().map(|o| o.unwrap()).collect()
 }
 
@@ -124,6 +147,23 @@ mod tests {
         let payload = caught.unwrap_err();
         assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
         assert!(sibling_ran.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn par_map_reraises_original_worker_panic_payload() {
+        // Regression: a worker panic used to surface as a generic
+        // scope/unwrap panic, discarding the payload. The original
+        // message must survive to the call site.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_map((0..64).collect::<Vec<_>>(), 4, |x| {
+                if x == 33 {
+                    panic!("item 33 exploded");
+                }
+                x * 2
+            })
+        }));
+        let payload = caught.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"item 33 exploded"));
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Backend bit-identity pins: every SIMD backend this host can run
+//! must return exactly what the scalar reference returns — hit index,
+//! stored entry, distance, and lowest-index tie-breaks — across table
+//! capacities, fill levels, resets and FIFO wraparound, for the single,
+//! batch and exact-match (`contains`) searches. A session built with an
+//! explicit backend must produce figures identical to the scalar one.
+//!
+//! CI runs the whole suite twice (`ZAC_SIMD=scalar` and `ZAC_SIMD=auto`)
+//! so the dispatched default is exercised end-to-end on both paths.
+
+use zac_dest::encoding::{simd, Backend, CodecSpec, SimdPref};
+use zac_dest::session::{Execution, Session, Trace, TrafficClass};
+use zac_dest::util::rng::seeded_rng;
+
+/// Naive linear-scan argmin with lowest-index ties — the oracle.
+fn naive_argmin(entries: &[u64], q: u64) -> (usize, u32) {
+    let (mut bi, mut bd) = (0usize, u32::MAX);
+    for (i, &e) in entries.iter().enumerate() {
+        let d = (e ^ q).count_ones();
+        if d < bd {
+            bd = d;
+            bi = i;
+        }
+    }
+    (bi, bd)
+}
+
+/// Tie-heavy query mix: zeros, all-ones, one-bit perturbations of live
+/// entries, and uniform noise.
+fn query(r: &mut zac_dest::util::rng::Rng, live: &[u64]) -> u64 {
+    match r.below(4) {
+        0 => 0,
+        1 => u64::MAX,
+        2 => live[r.below(live.len() as u64) as usize] ^ (1u64 << r.below(64)),
+        _ => r.next_u64(),
+    }
+}
+
+#[test]
+fn every_backend_matches_scalar_across_fills_resets_and_wraparound() {
+    let backends = simd::available_backends();
+    assert_eq!(backends[0], Backend::Scalar);
+    for &backend in &backends {
+        let mut r = seeded_rng(0xCA3);
+        // Capacities span one 64-slot plane group, several groups, and
+        // the old broken ≥ 256 index range.
+        for cap in [1usize, 3, 8, 63, 64, 65, 127, 257] {
+            let mut t = zac_dest::encoding::DataTable::with_backend(cap, backend);
+            assert_eq!(t.backend(), backend);
+            assert!(t.most_similar_sliced(7).is_none());
+            // Two full FIFO laps plus a partial third (wraparound), with
+            // a mid-life reset + refill.
+            for phase in 0..2 {
+                if phase == 1 {
+                    t.reset();
+                    assert!(t.most_similar_sliced(7).is_none());
+                }
+                for _ in 0..cap.min(96) * 2 + 5 {
+                    t.push(r.next_u64() & 0x3FFF); // small domain => ties
+                    for _ in 0..6 {
+                        let q = query(&mut r, t.snapshot());
+                        let want = naive_argmin(t.snapshot(), q);
+                        let hit = t.most_similar_sliced(q).unwrap();
+                        assert_eq!(
+                            (hit.index, hit.distance),
+                            want,
+                            "{} cap {cap} q {q:#x}",
+                            backend.label()
+                        );
+                        assert_eq!(hit.entry, t.snapshot()[want.0], "{}", backend.label());
+                        assert_eq!(
+                            t.contains(q),
+                            t.snapshot().contains(&q),
+                            "{} cap {cap} q {q:#x}",
+                            backend.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_search_is_bit_identical_on_every_backend() {
+    let mut r = seeded_rng(0xBA7C);
+    let queries: Vec<u64> = (0..512).map(|_| r.next_u64() & 0xFFF).collect();
+    for cap in [5usize, 64, 257] {
+        let mut tables: Vec<_> = simd::available_backends()
+            .into_iter()
+            .map(|b| zac_dest::encoding::DataTable::with_backend(cap, b))
+            .collect();
+        for _ in 0..cap + cap / 2 {
+            let w = r.next_u64() & 0xFFF;
+            for t in tables.iter_mut() {
+                t.push(w);
+            }
+        }
+        let mut want = Vec::new();
+        tables[0].most_similar_batch(&queries, &mut want);
+        let mut hits = Vec::new();
+        for t in &tables[1..] {
+            t.most_similar_batch(&queries, &mut hits);
+            assert_eq!(hits, want, "{} cap {cap}", t.backend().label());
+        }
+    }
+}
+
+#[test]
+fn sessions_report_identical_figures_on_every_backend() {
+    // End-to-end pin: an explicit-backend session must reproduce the
+    // scalar session's RunReport exactly — reconstruction bytes, energy
+    // counts and outcome statistics — on batch and sharded executions.
+    let trace = Trace::from_bytes(zac_dest::system::synthetic_trace(4096, 9));
+    let run = |pref: SimdPref, exec: Execution, channels: usize| {
+        Session::builder()
+            .codec(CodecSpec::zac(80))
+            .channels(channels)
+            .execution(exec)
+            .traffic(TrafficClass::Approximate)
+            .simd(pref)
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap()
+    };
+    for (exec, channels) in [(Execution::Batch, 1), (Execution::Sharded, 2)] {
+        let scalar = run(SimdPref::Scalar, exec, channels);
+        for backend in simd::available_backends() {
+            let pref = SimdPref::parse(backend.label()).unwrap();
+            let report = run(pref, exec, channels);
+            let tag = format!("{} {exec:?}", backend.label());
+            assert_eq!(report.bytes, scalar.bytes, "{tag}");
+            assert_eq!(report.counts, scalar.counts, "{tag}");
+            assert_eq!(report.stats, scalar.stats, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn builder_override_beats_env_and_unavailable_backend_fails_build() {
+    let session = Session::builder()
+        .codec(CodecSpec::named("BDE"))
+        .simd(SimdPref::Scalar)
+        .build()
+        .unwrap();
+    assert_eq!(session.simd_backend(), Backend::Scalar);
+    // An explicit backend the host lacks is a build()-time error, not a
+    // silent fallback.
+    for (avail, pref) in [
+        (simd::avx2_available(), SimdPref::Avx2),
+        (simd::neon_available(), SimdPref::Neon),
+    ] {
+        if !avail {
+            let err = Session::builder()
+                .codec(CodecSpec::named("BDE"))
+                .simd(pref)
+                .build()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(pref.label()), "{err}");
+        }
+    }
+}
