@@ -5,13 +5,16 @@
 //! hand-rolled config loops.
 //!
 //! `ZAC_CHANNELS` shards each run across that many 8-chip channels
-//! (default 1, the paper's single-channel setup).
+//! (default 1, the paper's single-channel setup); `ZAC_SWEEP_WORKERS`
+//! fans the grid cells across a work-stealing pool (default 1 —
+//! sequential, bit-identical figures either way).
 //!
 //! Run: `cargo run --release --example energy_sweep > sweep.csv`
 
-use zac_dest::encoding::{Outcome, Scheme};
+use zac_dest::encoding::Outcome;
 use zac_dest::figures::FigureCtx;
-use zac_dest::system::{channels_from_env, run_sweep, SweepSpec};
+use zac_dest::session::Trace;
+use zac_dest::system::{channels_from_env, run_sweep, sweep_workers_from_env, SweepSpec};
 use zac_dest::workloads::{Kind, SuiteBudget};
 
 fn main() -> anyhow::Result<()> {
@@ -20,19 +23,21 @@ fn main() -> anyhow::Result<()> {
     println!(
         "workload,channels,address,limit,trunc_bits,tol_bits,term_savings_vs_bde,switch_savings_vs_bde,ohe_frac,unencoded_frac"
     );
+    let workers = sweep_workers_from_env()?.unwrap_or(1);
     for kind in Kind::all() {
-        let bytes = ctx.workload_trace(kind);
+        let trace = Trace::from_bytes(ctx.workload_trace(kind));
         let spec = SweepSpec {
             name: format!("energy_sweep_{}", kind.label()),
             channels: channels.clone(),
-            schemes: vec![Scheme::ZacDest],
+            schemes: vec!["OHE".into()],
             limits: vec![90, 80, 75, 70],
             truncations: vec![0, 1, 2],
             tolerances: vec![0, 1, 2],
-            baseline: Scheme::Bde,
+            baseline: "BDE".into(),
+            workers,
             ..SweepSpec::default()
         };
-        let report = run_sweep(&spec, &bytes)?;
+        let report = run_sweep(&spec, &trace)?;
         for r in &report.scenarios {
             println!(
                 "{},{},{},{},{},{},{:.2},{:.2},{:.4},{:.4}",

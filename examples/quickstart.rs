@@ -198,5 +198,40 @@ fn main() -> anyhow::Result<()> {
         100.0 * info.zero_fraction()
     );
     std::fs::remove_file(&path)?;
+
+    // Parallel + resumable sweeps: the scenario grid fans across a
+    // work-stealing pool (workers=1 is pinned bit-identical, so
+    // parallelism is a pure wall-clock knob), and every result row
+    // carries a content fingerprint so an interrupted sweep resumes
+    // without re-running finished cells. CLI:
+    // `zac-dest sweep --workers 4` then `zac-dest sweep --resume`.
+    use zac_dest::system::{run_sweep, run_sweep_resume, SweepSpec};
+    let sweep_spec = SweepSpec {
+        name: "quickstart".into(),
+        bytes: 64 * 1024,
+        workers: 2,
+        ..SweepSpec::default()
+    };
+    let sweep_trace = Trace::from_bytes(trace.bytes()[..64 * 1024].to_vec());
+    let first = run_sweep(&sweep_spec, &sweep_trace)?;
+    println!(
+        "\nsweep: {} cells on {} workers in {:.2}s",
+        first.cells_run, first.workers, first.wall_s
+    );
+    let resumed = run_sweep_resume(&sweep_spec, &sweep_trace, Some(&first))?;
+    assert_eq!(resumed.cells_run, 0, "a completed sweep resumes for free");
+    println!(
+        "resume: {} cells re-run, {} carried over",
+        resumed.cells_run, resumed.cells_skipped
+    );
+
+    // Open-loop load generation: replay the trace into the sharded
+    // array at fixed offered rates (the closed-loop sweep can never see
+    // queueing — it pushes only as fast as the shards drain). CLI:
+    // `zac-dest sweep --open-loop 5e4,2e5`.
+    use zac_dest::system::{run_loadgen, LoadGenSpec};
+    let lg = LoadGenSpec::from_sweep(&sweep_spec, vec![1e5, 1e9])?;
+    let curve = run_loadgen(&lg, &Trace::from_bytes(trace.bytes()[..16 * 1024].to_vec()))?;
+    println!("\n{}", curve.render_table());
     Ok(())
 }

@@ -17,7 +17,11 @@
 //! * `run --config`  — full run from a TOML config file
 //! * `sweep`         — multi-channel scenario grid (channels × scheme ×
 //!                     knobs) over the sharded channel array, emitting
-//!                     `BENCH_system.json`; honors `ZAC_CHANNELS` and
+//!                     `BENCH_system.json`; cells fan across a
+//!                     work-stealing pool (`--workers`/`ZAC_SWEEP_WORKERS`),
+//!                     `--resume` skips already-completed cells, and
+//!                     `--open-loop <rates>` drives the load generator
+//!                     (`BENCH_loadgen.json`); honors `ZAC_CHANNELS` and
 //!                     `ZAC_BENCH_BYTES`
 //! * `circuit`       — §VI circuit-overhead report
 //! * `artifacts`     — list/verify the AOT artifacts
@@ -176,9 +180,29 @@ fn app() -> Command {
                     "-",
                     "telemetry JSON path ('-' = skip; implies telemetry)",
                 )
+                .opt(
+                    "workers",
+                    "",
+                    "worker threads for grid cells: N or 'auto' (default: env/spec)",
+                )
+                .flag("resume", "load --out and skip already-completed cells")
+                .opt(
+                    "open-loop",
+                    "",
+                    "offered rates in lines/sec, e.g. 5e4,2e5 (runs the load generator)",
+                )
+                .opt(
+                    "loadgen-out",
+                    "BENCH_loadgen.json",
+                    "load-generator JSON path ('-' = skip)",
+                )
                 .env(
                     "ZAC_CHANNELS",
                     "default channel counts for sweep + e2e example (comma-separated)",
+                )
+                .env(
+                    "ZAC_SWEEP_WORKERS",
+                    "default sweep worker count: N or 'auto' (flag wins)",
                 )
                 .env(
                     "ZAC_BENCH_BYTES",
@@ -630,8 +654,9 @@ fn cmd_trace_info(m: &zac_dest::util::cli::Matches) -> Result<()> {
 
 fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     use zac_dest::system::{
-        bench_bytes_from_env, channels_from_env, parse_channel_list, run_sweep, sweep_trace_bytes,
-        SweepSpec,
+        bench_bytes_from_env, channels_from_env, parse_channel_list, parse_rates, parse_workers,
+        run_loadgen, run_sweep_resume, sweep_trace, sweep_workers_from_env, LoadGenSpec,
+        SweepReport, SweepSpec,
     };
     let mut spec = match m.get_or("spec", "-") {
         "-" => SweepSpec::default(),
@@ -684,24 +709,57 @@ fn cmd_sweep(m: &zac_dest::util::cli::Matches) -> Result<()> {
     if metrics_out != "-" || zac_dest::obs::metrics_from_env()? {
         spec.telemetry = true;
     }
-    let trace = sweep_trace_bytes(&spec)?;
+    // Worker precedence mirrors the other knobs: flag > env > spec.
+    match m.get_or("workers", "") {
+        "" => {
+            if let Some(w) = sweep_workers_from_env()? {
+                spec.workers = w;
+            }
+        }
+        text => spec.workers = parse_workers(text)?,
+    }
+    let trace = sweep_trace(&spec)?;
     eprintln!(
-        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}, address {:?}",
+        "[sweep] {:?}: channels {:?}, {} B trace, baseline {}, faults {:?}, address {:?}, workers {}",
         spec.name,
         spec.channels,
-        trace.len(),
+        trace.byte_len(),
         spec.baseline,
         spec.faults.iter().map(|f| f.label()).collect::<Vec<_>>(),
-        spec.address.iter().map(|a| a.label()).collect::<Vec<_>>()
+        spec.address.iter().map(|a| a.label()).collect::<Vec<_>>(),
+        spec.workers
     );
-    let report = run_sweep(&spec, &trace)?;
-    println!("{}", report.render_table());
     let out = m.get_or("out", "BENCH_system.json");
+    // `--resume` reloads the previous `--out` file and skips every cell
+    // whose fingerprint already appears there; a missing file just means
+    // a fresh run, not an error.
+    let prior = if m.flag("resume") && out != "-" {
+        if std::path::Path::new(out).exists() {
+            Some(SweepReport::from_json_file(out)?)
+        } else {
+            eprintln!("[sweep] --resume: no prior report at {out}, running from scratch");
+            None
+        }
+    } else {
+        None
+    };
+    let report = run_sweep_resume(&spec, &trace, prior.as_ref())?;
+    println!("{}", report.render_table());
     if out != "-" {
         report.write_json(out)?;
     }
     if metrics_out != "-" {
         report.write_metrics(metrics_out)?;
+    }
+    let rates_flag = m.get_or("open-loop", "");
+    if !rates_flag.is_empty() {
+        let lg = LoadGenSpec::from_sweep(&spec, parse_rates(rates_flag)?)?;
+        let lg_report = run_loadgen(&lg, &trace)?;
+        println!("{}", lg_report.render_table());
+        let lg_out = m.get_or("loadgen-out", "BENCH_loadgen.json");
+        if lg_out != "-" {
+            lg_report.write_json(lg_out)?;
+        }
     }
     Ok(())
 }
@@ -909,6 +967,32 @@ mod tests {
         let m = matches("encode --simd banana");
         let err = simd_pref(&m).unwrap_err().to_string();
         assert!(err.contains("banana"), "{err}");
+    }
+
+    #[test]
+    fn sweep_worker_resume_and_loadgen_flags_parse() {
+        use zac_dest::system::{parse_rates, parse_workers};
+        // --workers: explicit N, 'auto', and the default empty string
+        // (which defers to ZAC_SWEEP_WORKERS / the spec).
+        let m = matches("sweep --workers 4");
+        assert_eq!(parse_workers(m.get_or("workers", "")).unwrap(), 4);
+        let m = matches("sweep --workers auto");
+        assert!(parse_workers(m.get_or("workers", "")).unwrap() >= 1);
+        let m = matches("sweep");
+        assert_eq!(m.get_or("workers", ""), "");
+        assert!(parse_workers("0").is_err());
+        assert!(parse_workers("lots").is_err());
+        // --resume is a bare flag.
+        assert!(matches("sweep --resume").flag("resume"));
+        assert!(!matches("sweep").flag("resume"));
+        // --open-loop carries the offered-rate list; --loadgen-out the
+        // artifact path.
+        let m = matches("sweep --open-loop 5e4,2e5 --loadgen-out LG.json");
+        assert_eq!(parse_rates(m.get_or("open-loop", "")).unwrap(), vec![5e4, 2e5]);
+        assert_eq!(m.get_or("loadgen-out", "BENCH_loadgen.json"), "LG.json");
+        let m = matches("sweep");
+        assert_eq!(m.get_or("open-loop", ""), "");
+        assert_eq!(m.get_or("loadgen-out", "BENCH_loadgen.json"), "BENCH_loadgen.json");
     }
 
     #[test]

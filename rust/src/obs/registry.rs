@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::util::json_lite::{num, obj, s, Json};
+use crate::util::json_lite::{num, obj, Json};
 use crate::util::table::TextTable;
 
 use super::hist::Histogram;
@@ -202,6 +202,43 @@ impl TelemetrySnapshot {
         ])
     }
 
+    /// Parse a snapshot back out of its JSON form — the read half of
+    /// [`Self::to_json`], used when `sweep --resume` carries a prior
+    /// run's rows (telemetry included) into the merged report. The
+    /// derived `lines_per_sec` key is recomputed, not stored.
+    pub fn from_json(j: &Json) -> anyhow::Result<TelemetrySnapshot> {
+        let shards = j
+            .get("shards")?
+            .as_arr()?
+            .iter()
+            .map(|sh| {
+                let stages = sh.get("stage_ns")?;
+                let mut stage_ns = [0u64; 5];
+                for &st in Stage::ALL.iter() {
+                    stage_ns[st as usize] = stages.get(st.label())?.as_usize()? as u64;
+                }
+                Ok(ShardSnapshot {
+                    stage_ns,
+                    batches: sh.get("batches")?.as_usize()? as u64,
+                    mailbox_depth: sh.get("mailbox_depth")?.as_usize()? as u64,
+                    mailbox_max_depth: sh.get("mailbox_max_depth")?.as_usize()? as u64,
+                    send_block_ns: sh.get("send_block_ns")?.as_usize()? as u64,
+                    blocked_sends: sh.get("blocked_sends")?.as_usize()? as u64,
+                    service_count: sh.get("service_count")?.as_usize()? as u64,
+                    service_p50_ns: sh.get("service_p50_ns")?.as_usize()? as u64,
+                    service_p95_ns: sh.get("service_p95_ns")?.as_usize()? as u64,
+                    service_p99_ns: sh.get("service_p99_ns")?.as_usize()? as u64,
+                    service_max_ns: sh.get("service_max_ns")?.as_usize()? as u64,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(TelemetrySnapshot {
+            wall_ns: j.get("wall_ns")?.as_usize()? as u64,
+            lines: j.get("lines")?.as_usize()? as u64,
+            shards,
+        })
+    }
+
     /// Human-readable telemetry section for the rendered reports.
     pub fn render_table(&self) -> String {
         let mut t = TextTable::new(&[
@@ -312,6 +349,30 @@ mod tests {
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_bit_identical() {
+        // The resume contract: parse(serialize(snap)) re-serializes
+        // byte-for-byte, so a resumed row's telemetry section is
+        // indistinguishable from the original run's.
+        let reg = MetricsRegistry::new(true, 2);
+        let m0 = reg.shard(0);
+        m0.stages.add(Stage::Encode, 1_000);
+        m0.stages.add_batch();
+        m0.depth.set(3);
+        m0.send_block_ns.add(42);
+        m0.blocked_sends.add(1);
+        m0.service.record(500);
+        m0.service.record(1_500);
+        let snap = reg.snapshot(512);
+        let text = snap.to_json().to_string();
+        let back = TelemetrySnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.shards[0].stage_ns, snap.shards[0].stage_ns);
+        assert_eq!(back.shards[0].service_p99_ns, snap.shards[0].service_p99_ns);
+        // Malformed input is an error, not a default.
+        assert!(TelemetrySnapshot::from_json(&Json::Null).is_err());
     }
 
     #[test]

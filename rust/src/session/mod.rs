@@ -415,6 +415,24 @@ impl Session {
         })
     }
 
+    /// Construct the sharded [`ChannelArray`] this session's `Sharded`
+    /// runs drive — codec sets, mailbox capacity, fault model, address
+    /// policy and telemetry all resolved from the session. Public for
+    /// open-loop callers (the load generator) that pace `push_chunk`
+    /// themselves instead of pushing the whole store at once.
+    pub fn sharded_array(&self) -> anyhow::Result<ChannelArray> {
+        let sets = (0..self.channels)
+            .map(|_| self.build_codecs())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ChannelArray::with_codec_sets_faults_address_and_telemetry(
+            sets,
+            self.capacity,
+            &self.faults,
+            &self.address,
+            self.telemetry,
+        ))
+    }
+
     /// Drive `trace` through the configured codec/channel topology.
     /// Every execution borrows zero-copy [`LineChunk`] views of the
     /// trace's shared line store — no per-hop cloning of line data.
@@ -477,16 +495,7 @@ impl Session {
                 Ok(report)
             }
             Execution::Sharded => {
-                let sets = (0..self.channels)
-                    .map(|_| self.build_codecs())
-                    .collect::<anyhow::Result<Vec<_>>>()?;
-                let mut a = ChannelArray::with_codec_sets_faults_address_and_telemetry(
-                    sets,
-                    self.capacity,
-                    &self.faults,
-                    &self.address,
-                    self.telemetry,
-                );
+                let mut a = self.sharded_array()?;
                 a.push_store(&trace.line_store(), approx);
                 Ok(RunReport::from_system(a.finish(trace.byte_len())))
             }
@@ -536,16 +545,7 @@ impl Session {
             Execution::Batch | Execution::Pipelined => false,
         };
         if sharded {
-            let sets = (0..self.channels)
-                .map(|_| self.build_codecs())
-                .collect::<anyhow::Result<Vec<_>>>()?;
-            let mut a = ChannelArray::with_codec_sets_faults_address_and_telemetry(
-                sets,
-                self.capacity,
-                &self.faults,
-                &self.address,
-                self.telemetry,
-            );
+            let mut a = self.sharded_array()?;
             for i in 0..file.frame_count() {
                 let approx = stream_approx && file.frame_approx(i);
                 a.push_chunk(&file.chunk_as(i, approx)?);

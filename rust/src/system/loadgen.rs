@@ -1,0 +1,496 @@
+//! Open-loop load generator: replay a trace into a sharded
+//! [`ChannelArray`](crate::system::array::ChannelArray) at a target
+//! offered rate (lines/sec) and measure what the load does to service
+//! latency and mailbox depth — the closed-loop sweep engine pushes as
+//! fast as the mailboxes drain, so it can never see where the queues
+//! back up.
+//!
+//! Open-loop means arrivals are scheduled by the clock, not by
+//! completions: chunk *i* is offered at `i × gap ± jitter` regardless
+//! of how far behind the shards are. Below saturation the producer
+//! sleeps between sends; past the knee the mailboxes fill, sends
+//! block, and the per-shard `service_p99_ns` / `mailbox_max_depth`
+//! telemetry captures the queueing delay — one [`LoadGenStep`] row per
+//! offered-rate step lands in `BENCH_loadgen.json`, so the knee of the
+//! latency curve is a committed artifact.
+//!
+//! The arrival schedule is deterministic for a fixed seed and rate
+//! ([`arrival_schedule`] is a pure function of both), and the encoded
+//! figures (energy counts, bytes) are identical at every offered rate
+//! — pacing changes *when* chunks arrive, never *what* they carry.
+
+use std::time::Instant;
+
+use crate::channel::EnergyCounts;
+use crate::encoding::{CodecSpec, ENCODE_BATCH};
+use crate::faults::FaultSpec;
+use crate::obs::TelemetrySnapshot;
+use crate::session::{Execution, Session, Trace, TrafficClass};
+use crate::system::address::AddressSpec;
+use crate::system::scenario::SweepSpec;
+use crate::trace::LineChunk;
+use crate::util::json_lite::{self, num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::util::table::{f, TextTable};
+
+/// One open-loop experiment: a single grid cell driven at each offered
+/// rate in `rates`.
+#[derive(Clone, Debug)]
+pub struct LoadGenSpec {
+    pub name: String,
+    /// The codec under load.
+    pub spec: CodecSpec,
+    pub channels: usize,
+    pub approx: bool,
+    pub faults: FaultSpec,
+    pub address: AddressSpec,
+    /// Arrival-jitter seed (mixed with each rate's bits, so steps get
+    /// decorrelated but reproducible schedules).
+    pub seed: u64,
+    /// Offered rates in lines/sec — one [`LoadGenStep`] per entry.
+    pub rates: Vec<f64>,
+    /// Lines per arrival (one mailbox chunk; default [`ENCODE_BATCH`]).
+    pub chunk_lines: usize,
+    /// Uniform jitter amplitude as a fraction of the inter-arrival gap
+    /// (0 = strictly periodic arrivals).
+    pub jitter_frac: f64,
+}
+
+impl LoadGenSpec {
+    /// Derive the load-generator config from a sweep spec: the first
+    /// cell of the expanded grid (its codec, channel count, fault model
+    /// and address policy) is the system under load, so `sweep
+    /// --open-loop` needs no second config format.
+    pub fn from_sweep(spec: &SweepSpec, rates: Vec<f64>) -> anyhow::Result<LoadGenSpec> {
+        let sc = spec
+            .scenarios()?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty sweep grid"))?;
+        let lg = LoadGenSpec {
+            name: format!("{}-loadgen", spec.name),
+            spec: sc.spec,
+            channels: sc.channels,
+            approx: spec.approx,
+            faults: sc.faults,
+            address: sc.address,
+            seed: spec.seed,
+            rates,
+            chunk_lines: ENCODE_BATCH,
+            jitter_frac: 0.2,
+        };
+        lg.validate()?;
+        Ok(lg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.rates.is_empty(), "no offered rates");
+        anyhow::ensure!(
+            self.rates.iter().all(|&r| r.is_finite() && r > 0.0),
+            "offered rates must be finite and positive, got {:?}",
+            self.rates
+        );
+        anyhow::ensure!(self.chunk_lines >= 1, "chunk_lines must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.jitter_frac),
+            "jitter_frac must be in 0..=1, got {}",
+            self.jitter_frac
+        );
+        Ok(())
+    }
+
+    /// Cell label, same shape as a sweep scenario's.
+    pub fn label(&self) -> String {
+        let mut l = format!("{}@{}ch", self.spec.label(), self.channels);
+        if !self.faults.is_perfect() {
+            l.push_str(&format!("+{}", self.faults.label()));
+        }
+        if !self.address.is_round_robin() {
+            l.push_str(&format!("+{}", self.address.label()));
+        }
+        l
+    }
+}
+
+/// Parse a comma-separated offered-rate list (lines/sec), e.g.
+/// `"50000,200000,1e6"`.
+pub fn parse_rates(text: &str) -> anyhow::Result<Vec<f64>> {
+    let rates: Vec<f64> = text
+        .split(',')
+        .map(|p| {
+            let p = p.trim();
+            p.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad offered rate {p:?}: {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!rates.is_empty(), "empty rate list");
+    anyhow::ensure!(
+        rates.iter().all(|&r| r.is_finite() && r > 0.0),
+        "offered rates must be finite and positive, got {rates:?}"
+    );
+    Ok(rates)
+}
+
+/// The deterministic open-loop arrival schedule: chunk `i`'s offered
+/// time (seconds from step start) is `i × gap` plus a uniform jitter of
+/// ±`jitter_frac/2 × gap`, where `gap = chunk_lines / rate`. A pure
+/// function of `(rate, seed)` — the same inputs give the same schedule
+/// on every host, which is what pins the load generator reproducible.
+pub fn arrival_schedule(
+    rate: f64,
+    chunks: usize,
+    chunk_lines: usize,
+    jitter_frac: f64,
+    seed: u64,
+) -> Vec<f64> {
+    let gap = chunk_lines as f64 / rate;
+    let mut rng = Rng::new(seed ^ rate.to_bits());
+    (0..chunks)
+        .map(|i| {
+            let jitter = (rng.f64() - 0.5) * jitter_frac * gap;
+            (i as f64 * gap + jitter).max(0.0)
+        })
+        .collect()
+}
+
+/// One offered-rate step's measured outcome. The percentile fields are
+/// the worst shard's (max across shards — the latency a line routed to
+/// the hottest shard sees); `blocked_sends`/`send_block_ns` sum over
+/// shards (total producer backpressure).
+#[derive(Clone, Debug)]
+pub struct LoadGenStep {
+    pub offered_lines_per_sec: f64,
+    /// Lines actually retired per wall-clock second of the step. Tracks
+    /// the offered rate below saturation; flattens at the knee.
+    pub achieved_lines_per_sec: f64,
+    pub lines: usize,
+    pub chunks: usize,
+    pub wall_s: f64,
+    pub service_p50_ns: u64,
+    pub service_p95_ns: u64,
+    pub service_p99_ns: u64,
+    /// High-water mailbox depth over all shards — the queueing signal.
+    pub peak_mailbox_depth: u64,
+    pub blocked_sends: u64,
+    pub send_block_ns: u64,
+    /// Energy counts — identical at every offered rate (pacing changes
+    /// arrival times, never content).
+    pub counts: EnergyCounts,
+    /// The full per-shard snapshot behind the summary columns.
+    pub telemetry: TelemetrySnapshot,
+}
+
+impl LoadGenStep {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("offered_lines_per_sec", num(self.offered_lines_per_sec)),
+            ("achieved_lines_per_sec", num(self.achieved_lines_per_sec)),
+            ("lines", num(self.lines as f64)),
+            ("chunks", num(self.chunks as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("service_p50_ns", num(self.service_p50_ns as f64)),
+            ("service_p95_ns", num(self.service_p95_ns as f64)),
+            ("service_p99_ns", num(self.service_p99_ns as f64)),
+            ("peak_mailbox_depth", num(self.peak_mailbox_depth as f64)),
+            ("blocked_sends", num(self.blocked_sends as f64)),
+            ("send_block_ns", num(self.send_block_ns as f64)),
+            ("termination_ones", num(self.counts.termination_ones as f64)),
+            (
+                "switching_transitions",
+                num(self.counts.switching_transitions as f64),
+            ),
+            ("transfers", num(self.counts.transfers as f64)),
+            ("telemetry", self.telemetry.to_json()),
+        ])
+    }
+}
+
+/// Full load-generator result: one step per offered rate, plus the
+/// config that produced it (the `BENCH_loadgen.json` artifact).
+#[derive(Clone, Debug)]
+pub struct LoadGenReport {
+    pub name: String,
+    /// The cell under load ([`LoadGenSpec::label`]).
+    pub label: String,
+    pub trace_bytes: usize,
+    pub trace_lines: usize,
+    pub chunk_lines: usize,
+    pub jitter_frac: f64,
+    pub seed: u64,
+    pub steps: Vec<LoadGenStep>,
+}
+
+impl LoadGenReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("label", s(&self.label)),
+            ("trace_bytes", num(self.trace_bytes as f64)),
+            ("trace_lines", num(self.trace_lines as f64)),
+            ("chunk_lines", num(self.chunk_lines as f64)),
+            ("jitter_frac", num(self.jitter_frac)),
+            ("seed", num(self.seed as f64)),
+            (
+                "steps",
+                Json::Arr(self.steps.iter().map(|st| st.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Persist as pretty JSON (the `BENCH_loadgen.json` artifact).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        json_lite::write_file(path, &self.to_json())?;
+        eprintln!("loadgen report -> {path}");
+        Ok(())
+    }
+
+    /// Human-readable latency curve, one row per offered-rate step.
+    pub fn render_table(&self) -> String {
+        let mut t = TextTable::new(&[
+            "offered l/s",
+            "achieved l/s",
+            "svc p50",
+            "svc p95",
+            "svc p99",
+            "peak mbox",
+            "blocked",
+        ]);
+        for st in &self.steps {
+            t.row(vec![
+                f(st.offered_lines_per_sec, 0),
+                f(st.achieved_lines_per_sec, 0),
+                format!("{}ns", st.service_p50_ns),
+                format!("{}ns", st.service_p95_ns),
+                format!("{}ns", st.service_p99_ns),
+                st.peak_mailbox_depth.to_string(),
+                st.blocked_sends.to_string(),
+            ]);
+        }
+        format!(
+            "loadgen {:?}: {} over {} lines ({} B), chunk {} lines, jitter {:.0}%, seed {}\n{}",
+            self.name,
+            self.label,
+            self.trace_lines,
+            self.trace_bytes,
+            self.chunk_lines,
+            100.0 * self.jitter_frac,
+            self.seed,
+            t.render()
+        )
+    }
+}
+
+/// Run the open-loop experiment: for each offered rate, pace the
+/// trace's chunks into a fresh sharded array along the deterministic
+/// [`arrival_schedule`] and reduce the run's telemetry to one
+/// [`LoadGenStep`]. Telemetry is forced on — latency under load is the
+/// entire output.
+pub fn run_loadgen(spec: &LoadGenSpec, trace: &Trace) -> anyhow::Result<LoadGenReport> {
+    spec.validate()?;
+    anyhow::ensure!(trace.line_count() > 0, "empty trace");
+    let session = Session::builder()
+        .codec(spec.spec.clone())
+        .channels(spec.channels)
+        .traffic(TrafficClass::from_approx_flag(spec.approx))
+        .execution(Execution::Sharded)
+        .faults(spec.faults)
+        .address(spec.address.clone())
+        .telemetry(true)
+        .build()?;
+    let store = trace.line_store();
+    let nlines = trace.line_count();
+    let nchunks = nlines.div_ceil(spec.chunk_lines);
+    let mut steps = Vec::with_capacity(spec.rates.len());
+    for &rate in &spec.rates {
+        let schedule =
+            arrival_schedule(rate, nchunks, spec.chunk_lines, spec.jitter_frac, spec.seed);
+        let mut array = session.sharded_array()?;
+        let t0 = Instant::now();
+        for (i, &due) in schedule.iter().enumerate() {
+            let now = t0.elapsed().as_secs_f64();
+            if due > now {
+                std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
+            }
+            let start = i * spec.chunk_lines;
+            let len = (nlines - start).min(spec.chunk_lines);
+            array.push_chunk(&LineChunk::window(store.clone(), start, len, spec.approx));
+        }
+        let out = array.finish(trace.byte_len());
+        let wall = t0.elapsed().as_secs_f64();
+        let counts = out.counts;
+        let telemetry = out
+            .telemetry
+            .ok_or_else(|| anyhow::anyhow!("load generator requires telemetry"))?;
+        let achieved = if wall > 0.0 {
+            nlines as f64 / wall
+        } else {
+            0.0
+        };
+        let shard_max = |f: fn(&crate::obs::ShardSnapshot) -> u64| {
+            telemetry.shards.iter().map(f).max().unwrap_or(0)
+        };
+        steps.push(LoadGenStep {
+            offered_lines_per_sec: rate,
+            achieved_lines_per_sec: achieved,
+            lines: nlines,
+            chunks: nchunks,
+            wall_s: wall,
+            service_p50_ns: shard_max(|sh| sh.service_p50_ns),
+            service_p95_ns: shard_max(|sh| sh.service_p95_ns),
+            service_p99_ns: shard_max(|sh| sh.service_p99_ns),
+            peak_mailbox_depth: telemetry
+                .shards
+                .iter()
+                .map(|sh| sh.mailbox_max_depth)
+                .max()
+                .unwrap_or(0),
+            blocked_sends: telemetry.shards.iter().map(|sh| sh.blocked_sends).sum(),
+            send_block_ns: telemetry.shards.iter().map(|sh| sh.send_block_ns).sum(),
+            counts,
+            telemetry,
+        });
+    }
+    Ok(LoadGenReport {
+        name: spec.name.clone(),
+        label: spec.label(),
+        trace_bytes: trace.byte_len(),
+        trace_lines: nlines,
+        chunk_lines: spec.chunk_lines,
+        jitter_frac: spec.jitter_frac,
+        seed: spec.seed,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::scenario::synthetic_trace;
+
+    fn quick_spec(rates: Vec<f64>) -> LoadGenSpec {
+        LoadGenSpec {
+            name: "unit".into(),
+            spec: CodecSpec::named("BDE"),
+            channels: 2,
+            approx: true,
+            faults: FaultSpec::perfect(),
+            address: AddressSpec::round_robin(),
+            seed: 42,
+            rates,
+            chunk_lines: 64,
+            jitter_frac: 0.2,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_and_rate() {
+        let a = arrival_schedule(1e5, 50, 256, 0.2, 42);
+        let b = arrival_schedule(1e5, 50, 256, 0.2, 42);
+        assert_eq!(a, b, "same seed+rate must give the same schedule");
+        assert_ne!(a, arrival_schedule(1e5, 50, 256, 0.2, 43));
+        assert_ne!(a, arrival_schedule(2e5, 50, 256, 0.2, 42));
+        // Offsets are non-negative and track i × gap within the jitter
+        // envelope (gap = 256/1e5 = 2.56ms, jitter ±10%).
+        let gap = 256.0 / 1e5;
+        for (i, &t) in a.iter().enumerate() {
+            assert!(t >= 0.0);
+            assert!((t - i as f64 * gap).abs() <= 0.5 * 0.2 * gap + 1e-12, "chunk {i}");
+        }
+        // Zero jitter is strictly periodic.
+        let flat = arrival_schedule(1e5, 10, 256, 0.0, 42);
+        for (i, &t) in flat.iter().enumerate() {
+            assert!((t - i as f64 * gap).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rates_parse_and_reject_garbage() {
+        assert_eq!(parse_rates("50000,2e5").unwrap(), vec![50000.0, 2e5]);
+        assert_eq!(parse_rates(" 1e6 ").unwrap(), vec![1e6]);
+        assert!(parse_rates("").is_err());
+        assert!(parse_rates("fast").is_err());
+        assert!(parse_rates("0").is_err());
+        assert!(parse_rates("-5").is_err());
+        assert!(parse_rates("inf").is_err());
+    }
+
+    #[test]
+    fn from_sweep_takes_the_first_grid_cell() {
+        let sweep = SweepSpec::default();
+        let lg = LoadGenSpec::from_sweep(&sweep, vec![1e5]).unwrap();
+        let first = sweep.scenarios().unwrap().into_iter().next().unwrap();
+        assert_eq!(lg.spec, first.spec);
+        assert_eq!(lg.channels, first.channels);
+        assert_eq!(lg.chunk_lines, ENCODE_BATCH);
+        assert!(LoadGenSpec::from_sweep(&sweep, vec![]).is_err());
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_knobs() {
+        assert!(quick_spec(vec![1e5]).validate().is_ok());
+        assert!(quick_spec(vec![]).validate().is_err());
+        assert!(quick_spec(vec![0.0]).validate().is_err());
+        assert!(quick_spec(vec![f64::INFINITY]).validate().is_err());
+        let mut bad = quick_spec(vec![1e5]);
+        bad.chunk_lines = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = quick_spec(vec![1e5]);
+        bad.jitter_frac = 1.5;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn loadgen_runs_a_step_per_rate_with_identical_content_figures() {
+        // Huge offered rates → every arrival is already due, no
+        // sleeping: the test runs at full speed.
+        let spec = quick_spec(vec![1e12, 2e12]);
+        let trace = Trace::from_bytes(synthetic_trace(16384, 7));
+        let report = run_loadgen(&spec, &trace).unwrap();
+        assert_eq!(report.steps.len(), 2);
+        assert_eq!(report.label, "BDE@2ch");
+        for st in &report.steps {
+            assert_eq!(st.lines, trace.line_count());
+            assert_eq!(st.chunks, trace.line_count().div_ceil(64));
+            assert!(st.wall_s > 0.0);
+            assert!(st.achieved_lines_per_sec > 0.0);
+            assert_eq!(st.telemetry.shards.len(), 2);
+            assert!(st.telemetry.shards.iter().any(|sh| sh.service_count > 0));
+        }
+        // Pacing changes arrival times, never content: both steps (and
+        // a plain closed-loop session run) agree on every energy count.
+        assert_eq!(report.steps[0].counts, report.steps[1].counts);
+        let closed = Session::builder()
+            .codec(spec.spec.clone())
+            .channels(spec.channels)
+            .traffic(TrafficClass::Approximate)
+            .execution(Execution::Sharded)
+            .build()
+            .unwrap()
+            .run(&trace)
+            .unwrap();
+        assert_eq!(report.steps[0].counts, closed.counts);
+    }
+
+    #[test]
+    fn loadgen_json_carries_the_grep_keys() {
+        let spec = quick_spec(vec![1e12]);
+        let trace = Trace::from_bytes(synthetic_trace(8192, 3));
+        let report = run_loadgen(&spec, &trace).unwrap();
+        let text = report.to_json().to_pretty();
+        for key in [
+            "\"offered_lines_per_sec\"",
+            "\"achieved_lines_per_sec\"",
+            "\"service_p50_ns\"",
+            "\"service_p95_ns\"",
+            "\"service_p99_ns\"",
+            "\"peak_mailbox_depth\"",
+            "\"blocked_sends\"",
+            "\"telemetry\"",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+        let table = report.render_table();
+        assert!(table.contains("svc p99"), "{table}");
+        assert!(table.contains("peak mbox"), "{table}");
+    }
+}

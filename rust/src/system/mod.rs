@@ -3,7 +3,7 @@
 //! engine (ROADMAP: "shard the line stream across multiple 8-chip
 //! channels, async service loop over the chunked queues").
 //!
-//! Four pieces:
+//! Five pieces:
 //!
 //! * [`address`] — [`AddressMap`]: the pluggable line-placement policy
 //!   ([`RoundRobin`](address::RoundRobin) default,
@@ -30,6 +30,11 @@
 //! * [`report`] — [`SweepReport`]: per-scenario energy savings, outcome
 //!   mix and trace-level quality, rendered as a text table and persisted
 //!   as machine-readable `BENCH_system.json`.
+//! * [`loadgen`] — the open-loop load generator: replay a trace into a
+//!   [`ChannelArray`] at a target lines/sec with deterministic seeded
+//!   arrival jitter and commit the latency curve (p50/p95/p99 service
+//!   latency, peak mailbox depth per offered-rate step) to
+//!   `BENCH_loadgen.json`.
 //!
 //! Physical model note: each channel owns its encoder tables and line
 //! state, so a shard behaves exactly like a single-channel
@@ -41,13 +46,18 @@
 
 pub mod address;
 pub mod array;
+pub mod loadgen;
 pub mod report;
 pub mod scenario;
 
 pub use address::{AddressMap, AddressPolicy, AddressSpec, Inverse, PageHeat};
 pub use array::{load_imbalance, shard_of_line, ChannelArray, ShardReport, SystemOutput};
+pub use loadgen::{
+    arrival_schedule, parse_rates, run_loadgen, LoadGenReport, LoadGenSpec, LoadGenStep,
+};
 pub use report::{ScenarioResult, SweepReport};
 pub use scenario::{
-    bench_bytes_from_env, channels_from_env, parse_bench_bytes, parse_channel_list,
-    resolve_scheme_name, run_sweep, sweep_trace_bytes, synthetic_trace, Scenario, SweepSpec,
+    bench_bytes_from_env, cell_fingerprint, channels_from_env, fnv1a, parse_bench_bytes,
+    parse_channel_list, parse_workers, resolve_scheme_name, run_sweep, run_sweep_resume,
+    sweep_trace, sweep_trace_bytes, sweep_workers_from_env, synthetic_trace, Scenario, SweepSpec,
 };

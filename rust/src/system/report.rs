@@ -13,6 +13,11 @@ use crate::util::table::{f, pct, TextTable};
 pub struct ScenarioResult {
     /// Human label, e.g. `ZAC(L80,T0,O0)@2ch`.
     pub label: String,
+    /// Stable cell fingerprint ([`cell_fingerprint`]
+    /// (crate::system::cell_fingerprint)): the resume key `sweep
+    /// --resume` matches completed cells on. Empty in reports written
+    /// before the resume engine — such rows are never resumed.
+    pub fingerprint: String,
     /// Scheme label (Table I name).
     pub scheme: String,
     /// Channel (shard) count the scenario ran on.
@@ -71,9 +76,12 @@ pub struct ScenarioResult {
 }
 
 impl ScenarioResult {
-    fn to_json(&self) -> Json {
+    /// One row of `BENCH_system.json`; [`Self::from_json`] is the exact
+    /// inverse (the resume round-trip depends on it).
+    pub fn to_json(&self) -> Json {
         obj(vec![
             ("label", s(&self.label)),
+            ("fingerprint", s(&self.fingerprint)),
             ("scheme", s(&self.scheme)),
             ("channels", num(self.channels as f64)),
             ("limit", num(self.limit as f64)),
@@ -127,6 +135,71 @@ impl ScenarioResult {
         let idx = Outcome::all().iter().position(|&x| x == o).unwrap();
         self.outcome_fracs[idx]
     }
+
+    /// Parse one scenario row back out of `BENCH_system.json` — the
+    /// read half of [`Self::to_json`], used by `sweep --resume` to
+    /// carry completed cells across process restarts. `json_lite`
+    /// numbers round-trip exactly (shortest-repr f64), so a resumed
+    /// row re-serializes bit-identical to the original.
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioResult> {
+        let psnr_db = match j.get("psnr_db")? {
+            Json::Null => None,
+            v => Some(v.as_f64()?),
+        };
+        let telemetry = match j.get("telemetry") {
+            Err(_) | Ok(Json::Null) => None,
+            Ok(v) => Some(TelemetrySnapshot::from_json(v)?),
+        };
+        Ok(ScenarioResult {
+            label: j.get("label")?.as_str()?.to_string(),
+            // Pre-resume reports carry no fingerprint key; empty means
+            // "never matches", so such rows re-run rather than resume.
+            fingerprint: j
+                .get("fingerprint")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            scheme: j.get("scheme")?.as_str()?.to_string(),
+            channels: j.get("channels")?.as_usize()?,
+            limit: j.get("limit")?.as_usize()? as u32,
+            truncation_bits: j.get("truncation_bits")?.as_usize()? as u32,
+            tolerance_bits: j.get("tolerance_bits")?.as_usize()? as u32,
+            fault_label: j.get("faults")?.as_str()?.to_string(),
+            address: j.get("address")?.as_str()?.to_string(),
+            table_hit_rate: j.get("table_hit_rate")?.as_f64()?,
+            load_imbalance: j.get("load_imbalance")?.as_f64()?,
+            injected_bits: j.get("injected_bits")?.as_usize()? as u64,
+            injected_words: j.get("injected_words")?.as_usize()? as u64,
+            observed_error_bits: j.get("observed_error_bits")?.as_usize()? as u64,
+            corrected_bits: j.get("corrected_bits")?.as_usize()? as u64,
+            detected_bits: j.get("detected_bits")?.as_usize()? as u64,
+            residual_error_bits: j.get("residual_error_bits")?.as_usize()? as u64,
+            counts: EnergyCounts {
+                termination_ones: j.get("termination_ones")?.as_usize()? as u64,
+                switching_transitions: j.get("switching_transitions")?.as_usize()? as u64,
+                transfers: j.get("transfers")?.as_usize()? as u64,
+            },
+            term_savings_pct: j.get("term_savings_pct")?.as_f64()?,
+            switch_savings_pct: j.get("switch_savings_pct")?.as_f64()?,
+            outcome_fracs: [
+                j.get("zero_frac")?.as_f64()?,
+                j.get("ohe_frac")?.as_f64()?,
+                j.get("bde_frac")?.as_f64()?,
+                j.get("unencoded_frac")?.as_f64()?,
+            ],
+            quality_ratio: j.get("quality_ratio")?.as_f64()?,
+            psnr_db,
+            wall_ms: j.get("wall_ms")?.as_f64()?,
+            bytes_per_sec: j.get("bytes_per_sec")?.as_f64()?,
+            shard_lines: j
+                .get("shard_lines")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<anyhow::Result<_>>()?,
+            telemetry,
+        })
+    }
 }
 
 /// Full sweep result: every scenario over one trace.
@@ -137,6 +210,14 @@ pub struct SweepReport {
     pub trace_bytes: usize,
     /// Baseline scheme label the savings columns reference.
     pub baseline: String,
+    /// Worker-pool degree the grid cells fanned across (1 = sequential).
+    pub workers: usize,
+    /// Cells executed in this run vs carried over from a `--resume`
+    /// prior report (`cells_run + cells_skipped == scenarios.len()`).
+    pub cells_run: usize,
+    pub cells_skipped: usize,
+    /// Wall clock of the whole sweep (baselines + cells), seconds.
+    pub wall_s: f64,
     pub scenarios: Vec<ScenarioResult>,
 }
 
@@ -146,11 +227,49 @@ impl SweepReport {
             ("name", s(&self.name)),
             ("trace_bytes", num(self.trace_bytes as f64)),
             ("baseline", s(&self.baseline)),
+            ("workers", num(self.workers as f64)),
+            ("cells_run", num(self.cells_run as f64)),
+            ("cells_skipped", num(self.cells_skipped as f64)),
+            ("wall_s", num(self.wall_s)),
             (
                 "scenarios",
                 Json::Arr(self.scenarios.iter().map(|r| r.to_json()).collect()),
             ),
         ])
+    }
+
+    /// Parse a report back out of its JSON form — the read half of
+    /// [`Self::to_json`]. The wall-clock fields default for reports
+    /// written before the parallel engine, so `--resume` still accepts
+    /// them (their rows just carry no fingerprints and re-run).
+    pub fn from_json(j: &Json) -> anyhow::Result<SweepReport> {
+        Ok(SweepReport {
+            name: j.get("name")?.as_str()?.to_string(),
+            trace_bytes: j.get("trace_bytes")?.as_usize()?,
+            baseline: j.get("baseline")?.as_str()?.to_string(),
+            workers: j.get("workers").and_then(|v| v.as_usize()).unwrap_or(1),
+            cells_run: j.get("cells_run").and_then(|v| v.as_usize()).unwrap_or(0),
+            cells_skipped: j
+                .get("cells_skipped")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            wall_s: j.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            scenarios: j
+                .get("scenarios")?
+                .as_arr()?
+                .iter()
+                .map(ScenarioResult::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+
+    /// Load a previously written `BENCH_system.json` (the `--resume`
+    /// entry point). Errors name the file.
+    pub fn from_json_file(path: &str) -> anyhow::Result<SweepReport> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        Self::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))
     }
 
     /// Persist as pretty JSON (the `BENCH_system.json` artifact). The
@@ -217,11 +336,16 @@ impl SweepReport {
             ]);
         }
         let mut out = format!(
-            "sweep {:?}: {} scenarios over {} B (savings vs {} at equal channel count)\n{}",
+            "sweep {:?}: {} scenarios over {} B (savings vs {} at equal channel count; \
+             workers={}, {} run + {} resumed in {:.2}s)\n{}",
             self.name,
             self.scenarios.len(),
             self.trace_bytes,
             self.baseline,
+            self.workers,
+            self.cells_run,
+            self.cells_skipped,
+            self.wall_s,
             t.render()
         );
         for r in &self.scenarios {
@@ -242,8 +366,13 @@ mod tests {
             name: "unit".into(),
             trace_bytes: 4096,
             baseline: "BDE".into(),
+            workers: 2,
+            cells_run: 1,
+            cells_skipped: 0,
+            wall_s: 0.75,
             scenarios: vec![ScenarioResult {
                 label: "ZAC(L80,T0,O0)@2ch".into(),
+                fingerprint: "00c0ffee00c0ffee".into(),
                 scheme: "OHE".into(),
                 channels: 2,
                 limit: 80,
@@ -394,5 +523,59 @@ mod tests {
         let r = &sample().scenarios[0];
         assert_eq!(r.fraction(Outcome::ZeroSkip), 0.1);
         assert_eq!(r.fraction(Outcome::Raw), 0.2);
+    }
+
+    #[test]
+    fn report_parses_back_bit_identical() {
+        // The resume contract: parse(serialize(report)) re-serializes
+        // byte-for-byte, telemetry included — json_lite's shortest-repr
+        // f64 makes the round trip exact, so a resumed row is
+        // indistinguishable from the original run's row.
+        let mut rpt = sample();
+        rpt.scenarios[0].telemetry = Some(snapshot());
+        let text = rpt.to_json().to_string();
+        let back = SweepReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.workers, 2);
+        assert_eq!(back.cells_run, 1);
+        assert_eq!(back.wall_s, 0.75);
+        assert_eq!(back.scenarios[0].fingerprint, "00c0ffee00c0ffee");
+        assert_eq!(back.scenarios[0].psnr_db, Some(41.5));
+    }
+
+    #[test]
+    fn report_parse_tolerates_pre_resume_files() {
+        // A report written before the parallel engine has no workers /
+        // cells / wall_s / fingerprint keys: it must still load (with
+        // defaults), its rows simply never match a resume fingerprint.
+        let mut j = sample().to_json();
+        if let Json::Obj(m) = &mut j {
+            for k in ["workers", "cells_run", "cells_skipped", "wall_s"] {
+                m.remove(k);
+            }
+            if let Json::Arr(rows) = m.get_mut("scenarios").unwrap() {
+                if let Json::Obj(r) = &mut rows[0] {
+                    r.remove("fingerprint");
+                }
+            }
+        }
+        let back = SweepReport::from_json(&j).unwrap();
+        assert_eq!(back.workers, 1);
+        assert_eq!(back.cells_run, 0);
+        assert_eq!(back.wall_s, 0.0);
+        assert_eq!(back.scenarios[0].fingerprint, "");
+        // Corrupt files are named errors, not defaults.
+        assert!(SweepReport::from_json(&Json::Null).is_err());
+        let err = SweepReport::from_json_file("/nonexistent/bench.json")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent/bench.json"), "{err}");
+    }
+
+    #[test]
+    fn table_header_carries_workers_cells_and_wall() {
+        let out = sample().render_table();
+        assert!(out.contains("workers=2"), "{out}");
+        assert!(out.contains("1 run + 0 resumed"), "{out}");
     }
 }

@@ -23,17 +23,28 @@
 //! scenario's savings are measured against the baseline scheme run at
 //! the *same* channel count (sharding changes per-table history, so the
 //! baseline must shard identically to be comparable).
+//!
+//! Execution is parallel and resumable: grid cells fan across a
+//! work-stealing worker pool (`workers` in the TOML, `--workers`,
+//! `ZAC_SWEEP_WORKERS`; 1 = the sequential engine, pinned
+//! bit-identical), every [`ScenarioResult`] carries a stable
+//! [`cell_fingerprint`], and [`run_sweep_resume`] skips cells whose
+//! fingerprints already sit in a prior report, merging old and new
+//! rows in grid order.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::channel::EnergyCounts;
 use crate::encoding::{default_registry, CodecSpec, Outcome, Scheme};
 use crate::faults::FaultSpec;
+use crate::obs::TelemetrySnapshot;
 use crate::quality::psnr_u8;
 use crate::session::{Execution, RunReport, Session, Trace, TrafficClass};
 use crate::system::address::AddressSpec;
 use crate::system::array::load_imbalance;
 use crate::system::report::{ScenarioResult, SweepReport};
+use crate::util::par::par_map;
 use crate::util::toml_lite;
 
 /// A declarative sweep: the grid axes plus trace parameters.
@@ -76,6 +87,11 @@ pub struct SweepSpec {
     /// Collect runtime telemetry (per-stage timings, mailbox pressure,
     /// service latency) for every cell and carry it into the report.
     pub telemetry: bool,
+    /// Worker threads the grid cells fan across (work-stealing over
+    /// the scenario list). 1 = the sequential engine, pinned
+    /// bit-identical; every figure except wall clock and telemetry is
+    /// bit-identical at any degree.
+    pub workers: usize,
 }
 
 impl Default for SweepSpec {
@@ -97,6 +113,7 @@ impl Default for SweepSpec {
             address: vec![AddressSpec::round_robin()],
             baseline: "BDE".into(),
             telemetry: false,
+            workers: 1,
         }
     }
 }
@@ -143,6 +160,10 @@ impl SweepSpec {
                     crate::util::json_lite::Json::Bool(b) => spec.telemetry = *b,
                     other => anyhow::bail!("telemetry must be true/false, got {other:?}"),
                 },
+                "workers" => {
+                    spec.workers = validate_workers(v.as_usize()?)
+                        .map_err(|e| anyhow::anyhow!("workers: {e}"))?;
+                }
                 "grid" => {
                     for (gk, gv) in v.as_obj()? {
                         match gk.as_str() {
@@ -225,6 +246,7 @@ impl SweepSpec {
         for a in &self.address {
             a.validate()?;
         }
+        validate_workers(self.workers)?;
         if self.schemes.iter().any(|s| takes_zac_grid(s)) {
             anyhow::ensure!(!self.limits.is_empty(), "ZAC in grid but no limits");
             anyhow::ensure!(!self.truncations.is_empty(), "ZAC in grid but no truncations");
@@ -369,18 +391,98 @@ pub fn bench_bytes_from_env() -> anyhow::Result<Option<usize>> {
     }
 }
 
+/// Bound a sweep worker count (1..=512; 0 would silently mean
+/// "sequential", which a caller asking for parallelism must not get).
+fn validate_workers(n: usize) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        (1..=512).contains(&n),
+        "worker count must be in 1..=512, got {n}"
+    );
+    Ok(n)
+}
+
+/// Parse a `--workers` / `ZAC_SWEEP_WORKERS` value: a positive thread
+/// count, or `auto` for this host's available parallelism.
+pub fn parse_workers(text: &str) -> anyhow::Result<usize> {
+    let t = text.trim();
+    if t.eq_ignore_ascii_case("auto") {
+        return validate_workers(crate::util::par::default_threads());
+    }
+    let n: usize = t
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad worker count {text:?}: {e}"))?;
+    validate_workers(n)
+}
+
+/// The `ZAC_SWEEP_WORKERS` override (sweep worker-pool degree).
+/// `Ok(None)` when unset; a set-but-malformed value is an error, never
+/// a silent fallback.
+pub fn sweep_workers_from_env() -> anyhow::Result<Option<usize>> {
+    match std::env::var("ZAC_SWEEP_WORKERS") {
+        Err(_) => Ok(None),
+        Ok(v) => parse_workers(&v)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("ZAC_SWEEP_WORKERS: {e}")),
+    }
+}
+
+/// FNV-1a 64-bit: the stable zero-dependency content hash under cell
+/// fingerprints (byte-order independent, identical across runs,
+/// platforms and worker counts).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable fingerprint of one grid cell over one trace: a 16-hex-digit
+/// FNV-1a hash of the canonical cell description — codec label (scheme
+/// + every knob), channel count, fault spec (label + seed), address
+/// policy, traffic class, baseline scheme, and the trace content hash
+/// + length. Two cells collide only if they would produce identical
+/// figures, so `sweep --resume` can key completed work on it across
+/// process restarts.
+pub fn cell_fingerprint(
+    sc: &Scenario,
+    spec: &SweepSpec,
+    trace_hash: u64,
+    trace_len: usize,
+) -> String {
+    let canon = format!(
+        "zacfp1|{}|{}|ch={}|faults={}@{}|addr={}|approx={}|base={}|trace={:016x}:{}",
+        sc.spec.scheme,
+        sc.spec.label(),
+        sc.channels,
+        sc.faults.label(),
+        sc.faults.seed,
+        sc.address.label(),
+        spec.approx,
+        spec.baseline,
+        trace_hash,
+        trace_len,
+    );
+    format!("{:016x}", fnv1a(canon.as_bytes()))
+}
+
 /// Resolve a sweep's traffic source: the recorded `.zactrace` its
 /// `trace` key names (structure and every frame CRC checked at the
 /// ingestion boundary), or the standard synthetic trace sized by
-/// `bytes`/`seed`. Shared by `zac-dest sweep --trace` and the TOML key.
-pub fn sweep_trace_bytes(spec: &SweepSpec) -> anyhow::Result<Vec<u8>> {
+/// `bytes`/`seed`. Shared by `zac-dest sweep --trace` and the TOML
+/// key. The returned [`Trace`] owns the one and only copy of the
+/// stream: every grid cell shares its `Arc`-backed line store.
+pub fn sweep_trace(spec: &SweepSpec) -> anyhow::Result<Trace> {
     match &spec.trace {
-        Some(path) => {
-            let t = Trace::from_file(path).map_err(|e| anyhow::anyhow!("trace file {path}: {e}"))?;
-            Ok(t.bytes().to_vec())
-        }
-        None => Ok(synthetic_trace(spec.bytes, spec.seed)),
+        Some(path) => Trace::from_file(path).map_err(|e| anyhow::anyhow!("trace file {path}: {e}")),
+        None => Ok(Trace::from_bytes(synthetic_trace(spec.bytes, spec.seed))),
     }
+}
+
+/// Byte view of [`sweep_trace`] for callers that only need the stream.
+pub fn sweep_trace_bytes(spec: &SweepSpec) -> anyhow::Result<Vec<u8>> {
+    Ok(sweep_trace(spec)?.bytes().to_vec())
 }
 
 /// The standard image-like synthetic trace (slowly varying byte walk)
@@ -418,83 +520,198 @@ fn run_cell(
         .run(trace)
 }
 
+/// One executed cell's deterministic figures, with the receiver-side
+/// byte stream already reduced to its quality metrics. The cell's
+/// [`RunReport`] — `bytes` vector included — is dropped inside
+/// [`measure_cell`], so a sweep (and its baseline map) holds O(cells)
+/// memory, not O(cells × trace bytes).
+#[derive(Clone, Debug)]
+struct CellOutcome {
+    table_hit_rate: f64,
+    load_imbalance: f64,
+    injected_bits: u64,
+    injected_words: u64,
+    observed_error_bits: u64,
+    corrected_bits: u64,
+    detected_bits: u64,
+    residual_error_bits: u64,
+    counts: EnergyCounts,
+    outcome_fracs: [f64; 4],
+    mae: f64,
+    psnr_db: Option<f64>,
+    wall: f64,
+    shard_lines: Vec<usize>,
+    telemetry: Option<TelemetrySnapshot>,
+}
+
+/// Run one cell and reduce its report to figures: the decoded stream
+/// is compared against the source (MAE / PSNR) and then dropped right
+/// here — received bytes never outlive the cell that produced them.
+fn measure_cell(
+    spec: &CodecSpec,
+    channels: usize,
+    approx: bool,
+    faults: &FaultSpec,
+    address: &AddressSpec,
+    telemetry: bool,
+    trace: &Trace,
+) -> anyhow::Result<CellOutcome> {
+    let t0 = Instant::now();
+    let out = run_cell(spec, channels, approx, faults, address, telemetry, trace)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let src = trace.bytes();
+    let mae = if src.is_empty() {
+        0.0
+    } else {
+        src.iter()
+            .zip(&out.bytes)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .sum::<f64>()
+            / src.len() as f64
+    };
+    let psnr = psnr_u8(src, &out.bytes);
+    Ok(CellOutcome {
+        table_hit_rate: out.stats.table_hit_rate(),
+        load_imbalance: load_imbalance(&out.shards),
+        injected_bits: out.faults.injected_bits,
+        injected_words: out.faults.injected_words,
+        observed_error_bits: out.faults.observed_error_bits,
+        corrected_bits: out.faults.corrected_bits,
+        detected_bits: out.faults.detected_bits,
+        residual_error_bits: out.faults.residual_error_bits,
+        counts: out.counts,
+        outcome_fracs: Outcome::all().map(|o| out.stats.fraction(o)),
+        mae,
+        psnr_db: psnr.is_finite().then_some(psnr),
+        wall,
+        shard_lines: out.shards.iter().map(|s| s.lines).collect(),
+        telemetry: out.telemetry,
+    })
+}
+
 /// Run every scenario of the grid over `trace`, measuring energy savings
 /// against the baseline scheme at the same channel count and address
 /// policy plus the trace-level quality of the reconstructed stream.
 /// Every cell runs through the unified [`Session`] API over the sharded
-/// channel array.
-pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> {
-    let scenarios = spec.scenarios()?;
-    let trace_obj = Trace::from_bytes(trace.to_vec());
+/// channel array; cells fan across `spec.workers` work-stealing
+/// threads (1 = sequential, pinned bit-identical on every figure).
+pub fn run_sweep(spec: &SweepSpec, trace: &Trace) -> anyhow::Result<SweepReport> {
+    run_sweep_resume(spec, trace, None)
+}
 
-    // One baseline run per (channel count, address policy): sharding
-    // and placement both shape the per-table history, so the fair
-    // baseline shards and places the same way. The full report (+ wall
-    // time) is kept so a grid scenario that IS the baseline config
-    // reuses it instead of simulating twice.
+/// [`run_sweep`] with resume: cells whose [`cell_fingerprint`] already
+/// sits in `prior` are carried over verbatim (figures, wall clock and
+/// telemetry of the original run) instead of re-executing; only the
+/// missing cells run. Merge rules: the merged report contains exactly
+/// the current grid's cells in grid order — prior rows outside the
+/// grid (or with no fingerprint, e.g. from a pre-fingerprint report)
+/// are dropped, and a fully completed prior report re-runs zero cells
+/// (including zero baseline runs).
+pub fn run_sweep_resume(
+    spec: &SweepSpec,
+    trace: &Trace,
+    prior: Option<&SweepReport>,
+) -> anyhow::Result<SweepReport> {
+    let t_start = Instant::now();
+    let scenarios = spec.scenarios()?;
+    let workers = spec.workers.max(1);
+    let trace_hash = fnv1a(trace.bytes());
+    let prints: Vec<String> = scenarios
+        .iter()
+        .map(|sc| cell_fingerprint(sc, spec, trace_hash, trace.byte_len()))
+        .collect();
+    let done: BTreeMap<&str, &ScenarioResult> = prior
+        .map(|p| {
+            p.scenarios
+                .iter()
+                .filter(|r| !r.fingerprint.is_empty())
+                .map(|r| (r.fingerprint.as_str(), r))
+                .collect()
+        })
+        .unwrap_or_default();
+    let jobs: Vec<usize> = (0..scenarios.len())
+        .filter(|&i| !done.contains_key(prints[i].as_str()))
+        .collect();
+
+    // One baseline run per (channel count, address policy) the pending
+    // cells reference: sharding and placement both shape the per-table
+    // history, so the fair baseline shards and places the same way.
+    // Baselines run once up front (across the same worker pool) and
+    // are shared immutably by every cell worker; a grid cell that IS
+    // the baseline config reuses the outcome instead of simulating
+    // twice. A fully resumed sweep has no pending cells and therefore
+    // runs no baselines either.
     let base_spec = CodecSpec::named(&spec.baseline);
-    let mut baselines: BTreeMap<(usize, String), (RunReport, f64)> = BTreeMap::new();
-    for &c in &spec.channels {
-        for a in &spec.address {
-            let key = (c, a.label());
-            if baselines.contains_key(&key) {
-                continue;
-            }
-            let t0 = Instant::now();
-            let out = run_cell(
-                &base_spec,
-                c,
-                spec.approx,
-                &FaultSpec::perfect(),
-                a,
-                spec.telemetry,
-                &trace_obj,
-            )?;
-            baselines.insert(key, (out, t0.elapsed().as_secs_f64()));
+    let mut base_keys: Vec<(usize, AddressSpec)> = Vec::new();
+    for &i in &jobs {
+        let sc = &scenarios[i];
+        if !base_keys
+            .iter()
+            .any(|(c, a)| *c == sc.channels && a.label() == sc.address.label())
+        {
+            base_keys.push((sc.channels, sc.address.clone()));
         }
     }
+    let base_outs = par_map(base_keys.clone(), workers, |(c, a)| {
+        measure_cell(
+            &base_spec,
+            c,
+            spec.approx,
+            &FaultSpec::perfect(),
+            &a,
+            spec.telemetry,
+            trace,
+        )
+    });
+    let mut baselines: BTreeMap<(usize, String), CellOutcome> = BTreeMap::new();
+    for ((c, a), out) in base_keys.into_iter().zip(base_outs) {
+        baselines.insert((c, a.label()), out?);
+    }
 
-    let mut results = Vec::with_capacity(scenarios.len());
-    for sc in &scenarios {
-        let base_key = (sc.channels, sc.address.label());
+    // Fan the pending cells across the pool. Each index is one unit of
+    // work-stealing (cells vary wildly in cost), results come back in
+    // grid order, and a worker panic re-raises its original payload.
+    let cell_outs = par_map(jobs.clone(), workers, |i| {
+        let sc = &scenarios[i];
         // A cell that IS the baseline config may reuse the baseline run
         // — but only on a perfect channel: a faulty cell has different
         // receiver-side bytes (energy would match, quality would not).
-        let (out, wall) = if sc.spec == base_spec && sc.faults.is_perfect() {
-            let (o, w) = &baselines[&base_key];
-            (o.clone(), *w)
+        if sc.spec == base_spec && sc.faults.is_perfect() {
+            Ok(baselines[&(sc.channels, sc.address.label())].clone())
         } else {
-            let t0 = Instant::now();
-            let o = run_cell(
+            measure_cell(
                 &sc.spec,
                 sc.channels,
                 spec.approx,
                 &sc.faults,
                 &sc.address,
                 spec.telemetry,
-                &trace_obj,
-            )?;
-            (o, t0.elapsed().as_secs_f64())
-        };
-        let base = &baselines[&base_key].0.counts;
-        let mae = if trace.is_empty() {
-            0.0
-        } else {
-            trace
-                .iter()
-                .zip(&out.bytes)
-                .map(|(&a, &b)| (a as f64 - b as f64).abs())
-                .sum::<f64>()
-                / trace.len() as f64
-        };
-        let psnr = psnr_u8(trace, &out.bytes);
-        let fracs = Outcome::all().map(|o| out.stats.fraction(o));
+                trace,
+            )
+        }
+    });
+    let mut computed: BTreeMap<usize, CellOutcome> = BTreeMap::new();
+    for (&i, out) in jobs.iter().zip(cell_outs) {
+        computed.insert(i, out?);
+    }
+
+    let mut results = Vec::with_capacity(scenarios.len());
+    for (i, sc) in scenarios.iter().enumerate() {
+        if let Some(prev) = done.get(prints[i].as_str()) {
+            results.push((*prev).clone());
+            continue;
+        }
+        let out = computed
+            .remove(&i)
+            .expect("every pending cell was executed");
+        let base = &baselines[&(sc.channels, sc.address.label())].counts;
         let (limit, trunc, tol) = match sc.spec.zac_knobs() {
             Some(k) => (k.similarity_limit_pct, k.truncation_bits, k.tolerance_bits),
             None => (0, 0, 0),
         };
         results.push(ScenarioResult {
             label: sc.label(),
+            fingerprint: prints[i].clone(),
             scheme: sc.spec.scheme.clone(),
             channels: sc.channels,
             limit,
@@ -502,34 +719,38 @@ pub fn run_sweep(spec: &SweepSpec, trace: &[u8]) -> anyhow::Result<SweepReport> 
             tolerance_bits: tol,
             fault_label: sc.faults.label(),
             address: sc.address.label(),
-            table_hit_rate: out.stats.table_hit_rate(),
-            load_imbalance: load_imbalance(&out.shards),
-            injected_bits: out.faults.injected_bits,
-            injected_words: out.faults.injected_words,
-            observed_error_bits: out.faults.observed_error_bits,
-            corrected_bits: out.faults.corrected_bits,
-            detected_bits: out.faults.detected_bits,
-            residual_error_bits: out.faults.residual_error_bits,
+            table_hit_rate: out.table_hit_rate,
+            load_imbalance: out.load_imbalance,
+            injected_bits: out.injected_bits,
+            injected_words: out.injected_words,
+            observed_error_bits: out.observed_error_bits,
+            corrected_bits: out.corrected_bits,
+            detected_bits: out.detected_bits,
+            residual_error_bits: out.residual_error_bits,
             counts: out.counts,
             term_savings_pct: out.counts.termination_savings_vs(base),
             switch_savings_pct: out.counts.switching_savings_vs(base),
-            outcome_fracs: fracs,
-            quality_ratio: 1.0 - mae / 255.0,
-            psnr_db: psnr.is_finite().then_some(psnr),
-            wall_ms: wall * 1e3,
-            bytes_per_sec: if wall > 0.0 {
-                trace.len() as f64 / wall
+            outcome_fracs: out.outcome_fracs,
+            quality_ratio: 1.0 - out.mae / 255.0,
+            psnr_db: out.psnr_db,
+            wall_ms: out.wall * 1e3,
+            bytes_per_sec: if out.wall > 0.0 {
+                trace.byte_len() as f64 / out.wall
             } else {
                 0.0
             },
-            shard_lines: out.shards.iter().map(|s| s.lines).collect(),
-            telemetry: out.telemetry.clone(),
+            shard_lines: out.shard_lines,
+            telemetry: out.telemetry,
         });
     }
     Ok(SweepReport {
         name: spec.name.clone(),
-        trace_bytes: trace.len(),
+        trace_bytes: trace.byte_len(),
         baseline: spec.baseline.clone(),
+        workers,
+        cells_run: jobs.len(),
+        cells_skipped: scenarios.len() - jobs.len(),
+        wall_s: t_start.elapsed().as_secs_f64(),
         scenarios: results,
     })
 }
@@ -671,7 +892,7 @@ mod tests {
             ..SweepSpec::default()
         };
         let trace = synthetic_trace(spec.bytes, spec.seed);
-        let report = run_sweep(&spec, &trace).unwrap();
+        let report = run_sweep(&spec, &Trace::from_bytes(trace.clone())).unwrap();
         assert!(report.scenarios.len() >= 6);
         // Baseline scenario at its own channel count saves ~0% vs itself.
         let bde = report
@@ -740,7 +961,7 @@ mod tests {
             faults: vec![FaultSpec::perfect(), FaultSpec::uniform(1e-2)],
             ..SweepSpec::default()
         };
-        let trace = synthetic_trace(spec.bytes, spec.seed);
+        let trace = Trace::from_bytes(synthetic_trace(spec.bytes, spec.seed));
         let report = run_sweep(&spec, &trace).unwrap();
         assert_eq!(report.scenarios.len(), 2);
         let perfect = &report.scenarios[0];
@@ -797,7 +1018,7 @@ mod tests {
             ..SweepSpec::default()
         };
         let trace = synthetic_trace(spec.bytes, 31);
-        let report = run_sweep(&spec, &trace).unwrap();
+        let report = run_sweep(&spec, &Trace::from_bytes(trace.clone())).unwrap();
         let rr = report
             .scenarios
             .iter()
@@ -880,7 +1101,7 @@ mod tests {
             faults: vec![FaultSpec::parse("voltage:1050").unwrap()],
             ..SweepSpec::default()
         };
-        let trace = synthetic_trace(spec.bytes, spec.seed);
+        let trace = Trace::from_bytes(synthetic_trace(spec.bytes, spec.seed));
         let report = run_sweep(&spec, &trace).unwrap();
         let bde = report.scenarios.iter().find(|r| r.scheme == "BDE").unwrap();
         let ecc = report
@@ -913,7 +1134,7 @@ mod tests {
             channels: vec![2],
             ..SweepSpec::default()
         };
-        let trace = synthetic_trace(spec.bytes, 7);
+        let trace = Trace::from_bytes(synthetic_trace(spec.bytes, 7));
         let report = run_sweep(&spec, &trace).unwrap();
         let zac = report
             .scenarios
@@ -925,5 +1146,127 @@ mod tests {
             "ZAC L75 should save termination energy vs BDE, got {}",
             zac.term_savings_pct
         );
+    }
+
+    #[test]
+    fn workers_key_parses_and_rejects_out_of_range() {
+        assert_eq!(SweepSpec::default().workers, 1, "parallelism must be opt-in");
+        let spec = SweepSpec::from_toml("workers = 4\n").unwrap();
+        assert_eq!(spec.workers, 4);
+        assert!(SweepSpec::from_toml("workers = 0\n").is_err());
+        assert!(SweepSpec::from_toml("workers = 1000\n").is_err());
+        assert_eq!(parse_workers("8").unwrap(), 8);
+        assert_eq!(parse_workers(" 2 ").unwrap(), 2);
+        assert!(parse_workers("auto").unwrap() >= 1);
+        assert!(parse_workers("0").is_err());
+        assert!(parse_workers("lots").is_err());
+        assert!(parse_workers("").is_err());
+    }
+
+    #[test]
+    fn cell_fingerprints_are_stable_distinct_and_trace_sensitive() {
+        let spec = SweepSpec {
+            bytes: 4096,
+            faults: vec![FaultSpec::perfect(), FaultSpec::uniform(1e-3)],
+            ..SweepSpec::default()
+        };
+        let scenarios = spec.scenarios().unwrap();
+        let h = fnv1a(b"trace");
+        let prints: Vec<String> = scenarios
+            .iter()
+            .map(|sc| cell_fingerprint(sc, &spec, h, 4096))
+            .collect();
+        // Stable across calls — the resume key must survive a restart.
+        let again: Vec<String> = scenarios
+            .iter()
+            .map(|sc| cell_fingerprint(sc, &spec, h, 4096))
+            .collect();
+        assert_eq!(prints, again);
+        // 16 lowercase hex digits each, all distinct within one grid.
+        let set: std::collections::BTreeSet<&String> = prints.iter().collect();
+        assert_eq!(set.len(), prints.len(), "fingerprint collision inside a grid");
+        assert!(prints
+            .iter()
+            .all(|p| p.len() == 16 && p.chars().all(|c| c.is_ascii_hexdigit())));
+        // Sensitive to trace content, trace length and the baseline.
+        assert_ne!(cell_fingerprint(&scenarios[0], &spec, fnv1a(b"other"), 4096), prints[0]);
+        assert_ne!(cell_fingerprint(&scenarios[0], &spec, h, 8192), prints[0]);
+        let other_base = SweepSpec {
+            baseline: "ORG".into(),
+            ..spec.clone()
+        };
+        assert_ne!(cell_fingerprint(&scenarios[0], &other_base, h, 4096), prints[0]);
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_sequential() {
+        // Quick pin; the full multi-scheme × faults × address grid at
+        // workers = 2 and 4 lives in tests/sweep_parallel.rs.
+        let seq = SweepSpec {
+            bytes: 8192,
+            ..SweepSpec::default()
+        };
+        let par = SweepSpec {
+            workers: 4,
+            ..seq.clone()
+        };
+        let trace = Trace::from_bytes(synthetic_trace(seq.bytes, seq.seed));
+        let a = run_sweep(&seq, &trace).unwrap();
+        let b = run_sweep(&par, &trace).unwrap();
+        assert_eq!(a.workers, 1);
+        assert_eq!(b.workers, 4);
+        assert_eq!(a.scenarios.len(), b.scenarios.len());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.label, y.label, "grid order must not depend on workers");
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.counts, y.counts, "{}", x.label);
+            assert_eq!(x.term_savings_pct, y.term_savings_pct, "{}", x.label);
+            assert_eq!(x.quality_ratio, y.quality_ratio, "{}", x.label);
+            assert_eq!(x.table_hit_rate, y.table_hit_rate, "{}", x.label);
+            assert_eq!(x.shard_lines, y.shard_lines, "{}", x.label);
+        }
+        assert_eq!(b.cells_run, b.scenarios.len());
+        assert_eq!(b.cells_skipped, 0);
+        assert!(b.wall_s > 0.0);
+    }
+
+    #[test]
+    fn resume_skips_completed_cells_and_merges_in_grid_order() {
+        let spec = SweepSpec {
+            bytes: 8192,
+            ..SweepSpec::default()
+        };
+        let trace = Trace::from_bytes(synthetic_trace(spec.bytes, spec.seed));
+        let full = run_sweep(&spec, &trace).unwrap();
+        // A completed prior report re-runs zero cells (and zero
+        // baselines — resume over finished work must cost nothing).
+        let resumed = run_sweep_resume(&spec, &trace, Some(&full)).unwrap();
+        assert_eq!(resumed.cells_run, 0);
+        assert_eq!(resumed.cells_skipped, full.scenarios.len());
+        // An interrupted report (first 3 cells survived) re-runs
+        // exactly the missing cells; the merge equals a from-scratch
+        // run figure for figure, in grid order.
+        let mut partial = full.clone();
+        partial.scenarios.truncate(3);
+        let merged = run_sweep_resume(&spec, &trace, Some(&partial)).unwrap();
+        assert_eq!(merged.cells_skipped, 3);
+        assert_eq!(merged.cells_run, full.scenarios.len() - 3);
+        assert_eq!(merged.scenarios.len(), full.scenarios.len());
+        for (x, y) in full.scenarios.iter().zip(&merged.scenarios) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.counts, y.counts, "{}", x.label);
+            assert_eq!(x.quality_ratio, y.quality_ratio, "{}", x.label);
+            assert_eq!(x.term_savings_pct, y.term_savings_pct, "{}", x.label);
+        }
+        // A prior row with no fingerprint (pre-resume report format)
+        // is ignored, not trusted.
+        let mut legacy = full.clone();
+        for r in &mut legacy.scenarios {
+            r.fingerprint.clear();
+        }
+        let refreshed = run_sweep_resume(&spec, &trace, Some(&legacy)).unwrap();
+        assert_eq!(refreshed.cells_run, full.scenarios.len());
+        assert_eq!(refreshed.cells_skipped, 0);
     }
 }

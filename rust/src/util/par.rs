@@ -1,5 +1,6 @@
 //! Scoped-thread fan-out helpers (offline stand-in for `rayon`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
 
@@ -25,11 +26,18 @@ pub fn join_all_reraise<T>(workers: Vec<JoinHandle<T>>) -> Vec<T> {
 
 /// Map `f` over `items` on up to `threads` OS threads, preserving order.
 ///
-/// Work distribution is a shared stack of *chunked ranges* over the
-/// input/output slices: each worker pops a whole chunk (one lock per
-/// chunk, not per item) and fills the matching output chunk in place.
-/// Chunks are ~4 per thread, coarse enough that the queue lock stays
-/// cold yet fine enough to balance uneven per-item cost.
+/// Work distribution is a shared atomic cursor over the item list:
+/// every worker claims the next unclaimed index with one `fetch_add`
+/// and runs that single item — work-stealing at item granularity. The
+/// previous fixed pre-chunking parceled ~4 ranges per thread up front,
+/// so one expensive item (a 4-channel ECC cell under MRAM faults next
+/// to a 1-channel OHE cell) stranded its whole chunk behind it while
+/// sibling workers idled; with the cursor, a worker that finishes a
+/// cheap item immediately steals the next pending one. The per-slot
+/// mutexes are uncontended by construction (an index is claimed
+/// exactly once) — they exist only to share the in/out slots across
+/// the scope without `unsafe`, which this repo confines to
+/// `encoding/simd.rs`.
 ///
 /// If `f` panics on any item, the siblings drain the remaining work,
 /// and the *original* panic payload is re-raised at the call site —
@@ -47,45 +55,42 @@ where
     if threads <= 1 || n <= 1 {
         return items.into_iter().map(f).collect();
     }
-    let mut inputs: Vec<Option<T>> = items.into_iter().map(Some).collect();
-    let mut outputs: Vec<Option<U>> = std::iter::repeat_with(|| None).take(n).collect();
-    let chunk = n.div_ceil(threads * 4).max(1);
-    let work: Mutex<Vec<(&mut [Option<T>], &mut [Option<U>])>> = Mutex::new(
-        inputs
-            .chunks_mut(chunk)
-            .zip(outputs.chunks_mut(chunk))
-            .collect(),
-    );
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let outputs: Vec<Mutex<Option<U>>> =
+        std::iter::repeat_with(|| Mutex::new(None)).take(n).collect();
+    let next = AtomicUsize::new(0);
     // First worker panic payload, captured (not propagated through the
     // scope, which would replace it with a generic message).
     let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let unit = work.lock().unwrap().pop();
-                let Some((ins, outs)) = unit else { break };
-                for (i, o) in ins.iter_mut().zip(outs.iter_mut()) {
-                    let item = i.take().unwrap();
-                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item))) {
-                        Ok(v) => *o = Some(v),
-                        Err(p) => {
-                            let mut first = panicked.lock().unwrap();
-                            if first.is_none() {
-                                *first = Some(p);
-                            }
-                            // This worker stops; siblings drain the rest.
-                            return;
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().expect("index claimed once");
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item))) {
+                    Ok(v) => *outputs[i].lock().unwrap() = Some(v),
+                    Err(p) => {
+                        let mut first = panicked.lock().unwrap();
+                        if first.is_none() {
+                            *first = Some(p);
                         }
+                        // This worker stops; siblings drain the rest.
+                        return;
                     }
                 }
             });
         }
     });
-    drop(work);
     if let Some(p) = panicked.into_inner().unwrap() {
         std::panic::resume_unwind(p);
     }
-    outputs.into_iter().map(|o| o.unwrap()).collect()
+    outputs
+        .into_iter()
+        .map(|o| o.into_inner().unwrap().unwrap())
+        .collect()
 }
 
 /// Reasonable worker count for this host.
@@ -164,6 +169,20 @@ mod tests {
         }));
         let payload = caught.unwrap_err();
         assert_eq!(payload.downcast_ref::<&str>(), Some(&"item 33 exploded"));
+    }
+
+    #[test]
+    fn uneven_item_costs_complete_in_order() {
+        // One pathological item (index 0) costs ~50x its neighbours.
+        // Under the old fixed pre-chunking its whole chunk queued
+        // behind it; the atomic cursor hands every other item to the
+        // free workers. Correctness pin: all items complete, in order.
+        let out = par_map((0..32).collect::<Vec<_>>(), 4, |x| {
+            let ms = if x == 0 { 50 } else { 1 };
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            x * 3
+        });
+        assert_eq!(out, (0..32).map(|x| x * 3).collect::<Vec<_>>());
     }
 
     #[test]
